@@ -1,0 +1,101 @@
+"""Paper Figs. 2-3: precision vs online speedup, synthetic data.
+
+Sweeps each method's knob and reports (speedup, precision@K) pairs:
+  * BOUNDEDME — eps knob (the paper's contribution: an explicit guarantee)
+  * LSH-MIPS  — (a, b) grid        * GREEDY-MIPS — budget B
+  * PCA-MIPS  — tree depth/spill
+Speedup is FLOP-count based (naive nN multiplies / method query multiplies)
+— the quantity the theory bounds; preprocessing is ignored (favouring the
+baselines), exactly as in the paper.  Scaled shapes for CPU runtime.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from repro.baselines import (build_greedy, build_lsh, build_pca_tree,
+                             exact_mips, greedy_mips, lsh_mips, pca_mips)
+from repro.core import bounded_me, reward_matrix
+from repro.data.synthetic import gaussian_dataset, uniform_dataset
+
+N, DIM, K, QUERIES = 2000, 20_000, 5, 3
+
+
+def precision(returned, truth) -> float:
+    return len(set(np.asarray(returned).tolist())
+               & set(truth.tolist())) / len(truth)
+
+
+def run(dist: str = "gaussian", csv: bool = True):
+    gen = gaussian_dataset if dist == "gaussian" else uniform_dataset
+    rng = np.random.default_rng(0)
+    V, _ = gen(N, DIM, seed=0)
+    queries = [gen(1, DIM, seed=100 + i)[1] for i in range(QUERIES)]
+    naive = N * DIM
+    rows = []
+
+    for eps in (0.05, 0.1, 0.2, 0.4, 0.7, 1.0):
+        precs, speeds, t0 = [], [], time.time()
+        for q in queries:
+            truth = exact_mips(V, q, K).topk
+            vr = float(np.abs(V).max() * np.abs(q).max())
+            R = reward_matrix(V, q, rng)
+            res = bounded_me(R, K=K, eps=eps * vr, delta=0.1,
+                             value_range=2 * vr)
+            precs.append(precision(res.topk, truth))
+            speeds.append(naive / max(1, res.total_pulls))
+        rows.append((f"boundedme_eps{eps}", np.mean(speeds), np.mean(precs),
+                     (time.time() - t0) / QUERIES * 1e6))
+
+    lsh_idx = {}
+    for a, b in ((12, 8), (8, 8), (6, 16), (4, 32)):
+        if (a, b) not in lsh_idx:
+            lsh_idx[(a, b)] = build_lsh(V, a=a, b=b, seed=1)
+        precs, speeds, t0 = [], [], time.time()
+        for q in queries:
+            truth = exact_mips(V, q, K).topk
+            r = lsh_mips(lsh_idx[(a, b)], q, K)
+            precs.append(precision(r.topk, truth))
+            speeds.append(naive / max(1, r.query_multiplies))
+        rows.append((f"lsh_a{a}_b{b}", np.mean(speeds), np.mean(precs),
+                     (time.time() - t0) / QUERIES * 1e6))
+
+    gidx = build_greedy(V)
+    for budget in (20, 100, 400, 1600):
+        precs, speeds, t0 = [], [], time.time()
+        for q in queries:
+            truth = exact_mips(V, q, K).topk
+            r = greedy_mips(gidx, q, K, budget=budget)
+            precs.append(precision(r.topk, truth))
+            speeds.append(naive / max(1, r.query_multiplies))
+        rows.append((f"greedy_B{budget}", np.mean(speeds), np.mean(precs),
+                     (time.time() - t0) / QUERIES * 1e6))
+
+    tree = build_pca_tree(V, depth=8)
+    for spill in (0.0, 0.05, 0.2, 0.5):
+        precs, speeds, t0 = [], [], time.time()
+        for q in queries:
+            truth = exact_mips(V, q, K).topk
+            r = pca_mips(tree, q, K, spill=spill)
+            precs.append(precision(r.topk, truth))
+            speeds.append(naive / max(1, r.query_multiplies))
+        rows.append((f"pca_spill{spill}", np.mean(speeds), np.mean(precs),
+                     (time.time() - t0) / QUERIES * 1e6))
+
+    if csv:
+        print("name,us_per_call,derived")
+        for name, sp, pr, us in rows:
+            print(f"fig23_{dist}_{name},{us:.0f},"
+                  f"speedup={sp:.2f};precision={pr:.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dist", default="gaussian",
+                    choices=["gaussian", "uniform"])
+    args = ap.parse_args()
+    run(args.dist)

@@ -1,0 +1,34 @@
+"""Benchmark driver: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows per benchmark, then the
+roofline table from the dry-run artifacts (if present).
+"""
+
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from benchmarks import (fig1_guarantee, fig23_synthetic, fig4_real,
+                            table1_complexity)
+    print("== table1: complexity/guarantees ==")
+    table1_complexity.run()
+    print("== fig1: guarantee validation (adversarial) ==")
+    fig1_guarantee.run()
+    print("== fig2: synthetic gaussian ==")
+    fig23_synthetic.run("gaussian")
+    print("== fig3: synthetic uniform ==")
+    fig23_synthetic.run("uniform")
+    print("== fig4: real-world proxy (MF embeddings) ==")
+    fig4_real.run()
+    print("== roofline (from dry-run artifacts) ==")
+    try:
+        from benchmarks import roofline
+        roofline.main()
+    except Exception as e:  # dry-run may not have been executed yet
+        print(f"roofline skipped: {e}")
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,65 @@
+"""End-to-end serving driver: batched requests, BoundedME logit search.
+
+Trains nothing; loads a randomly initialized small model, prefills a batch
+of prompts, and decodes greedily with the paper's bandit replacing the
+final (d x vocab) matvec.  Compares against exact decode token-for-token.
+
+    PYTHONPATH=src python examples/serve_decode_mips.py
+"""
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import REGISTRY
+from repro.models.model import init_params
+from repro.models.steps import decode_step, prefill_step
+
+
+def main():
+    # a small-but-real config: qwen1.5 family at reduced width, full vocab
+    cfg = dataclasses.replace(
+        REGISTRY["qwen1.5-0.5b"].smoke(),
+        vocab=151_936, vocab_pad=2048, d_model=256, n_heads=8, d_head=32,
+        n_kv_heads=8)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    B, P, T = 8, 12, 20
+    prompts = jnp.asarray(rng.integers(0, cfg.vocab, (B, P)), jnp.int32)
+
+    results = {}
+    for mode, eps in (("exact", None), ("boundedme", 0.1),
+                      ("boundedme", 0.4)):
+        c = dataclasses.replace(cfg, mips_mode=mode,
+                                mips_eps=eps or cfg.mips_eps)
+        _, caches = prefill_step(params, c, prompts, cache_len=P + T)
+        dfn = jax.jit(lambda p, ca, t, pos, k, c=c: decode_step(
+            p, c, ca, t, pos, key=k))
+        tok = prompts[:, -1:]
+        toks = []
+        t0 = time.time()
+        for i in range(T):
+            nxt, caches = dfn(params, caches, tok, jnp.int32(P + i),
+                              jax.random.PRNGKey(i))
+            toks.append(np.asarray(nxt))
+            tok = nxt[:, None]
+        dt = time.time() - t0
+        tag = mode if eps is None else f"{mode}(eps={eps})"
+        results[tag] = np.stack(toks, 1)
+        print(f"{tag:22s}: {T} tokens x {B} requests in {dt:.2f}s")
+
+    ref = results["exact"]
+    for tag, toks in results.items():
+        if tag == "exact":
+            continue
+        agree = float((toks == ref).mean())
+        print(f"{tag:22s}: token agreement with exact = {agree:.3f}")
+    print("vocab =", cfg.vocab, "| the bandit searched",
+          cfg.padded_vocab, "padded rows with zero preprocessing")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""End-to-end training driver: a ~100M-param LM for a few hundred steps.
+
+Thin wrapper over the production launcher (`repro.launch.train`) with a
+~100M-parameter config (mamba2-130m family at its published size is the
+cheapest assigned arch; pass --arch to pick another).  On CPU this runs a
+reduced-width variant by default; pass --full on real hardware.
+
+    PYTHONPATH=src python examples/train_lm.py --steps 200
+"""
+
+import argparse
+import subprocess
+import sys
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mamba2-130m")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--full", action="store_true",
+                    help="published size (needs accelerators)")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    args = ap.parse_args()
+
+    cmd = [sys.executable, "-m", "repro.launch.train",
+           "--arch", args.arch, "--steps", str(args.steps),
+           "--ckpt-dir", args.ckpt_dir, "--ckpt-every", "100",
+           "--batch", "8", "--seq", "128", "--lr", "3e-3"]
+    if not args.full:
+        cmd.append("--smoke")
+    print("+", " ".join(cmd))
+    raise SystemExit(subprocess.call(cmd))
+
+
+if __name__ == "__main__":
+    main()

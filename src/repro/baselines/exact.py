@@ -1,0 +1,26 @@
+"""Exhaustive MIPS baseline with explicit cost accounting."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import numpy as np
+
+__all__ = ["SearchResult", "exact_mips"]
+
+
+@dataclasses.dataclass
+class SearchResult:
+    topk: np.ndarray        # (K,) indices, best first
+    scores: np.ndarray      # (K,) inner products (NOT divided by N)
+    query_multiplies: int   # multiply count attributable to this query
+    preprocess_multiplies: int = 0
+    candidates: int = 0     # size of the exactly-rescored candidate set
+
+
+def exact_mips(V: np.ndarray, q: np.ndarray, K: int = 1) -> SearchResult:
+    scores = V @ q
+    order = np.argsort(-scores)[:K]
+    return SearchResult(order, scores[order], V.shape[0] * V.shape[1],
+                        candidates=V.shape[0])

@@ -1,0 +1,94 @@
+"""PCA-MIPS baseline (Bachrach et al., RecSys 2014).
+
+MIPS -> Euclidean NNS via the same augmentation as LSH-MIPS, then a PCA tree:
+at depth t the data are split at the median of their projection onto the t-th
+principal component.  A query descends to one leaf (optionally spilling to
+sibling leaves within ``spill`` of the split) and exactly rescores the leaf.
+Preprocessing: O(N^2 n) for the PCA + O(n log n) tree build (Table 1).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import numpy as np
+
+from repro.baselines.exact import SearchResult
+from repro.baselines.lsh_mips import _transform_data, _transform_query
+
+__all__ = ["PCATree", "build_pca_tree", "pca_mips"]
+
+
+@dataclasses.dataclass
+class _Node:
+    depth: int
+    ids: Optional[np.ndarray] = None      # leaf only
+    threshold: float = 0.0
+    left: Optional["_Node"] = None
+    right: Optional["_Node"] = None
+
+
+@dataclasses.dataclass
+class PCATree:
+    components: np.ndarray   # (depth, N+1) principal directions
+    root: _Node
+    V: np.ndarray
+    depth: int
+    preprocess_multiplies: int
+
+
+def _build(ids: np.ndarray, proj: np.ndarray, depth: int, max_depth: int) -> _Node:
+    if depth >= max_depth or ids.size <= 1:
+        return _Node(depth, ids=ids)
+    vals = proj[ids, depth]
+    thr = float(np.median(vals))
+    left_mask = vals <= thr
+    # guard degenerate splits (all-equal projections)
+    if left_mask.all() or not left_mask.any():
+        return _Node(depth, ids=ids)
+    node = _Node(depth, threshold=thr)
+    node.left = _build(ids[left_mask], proj, depth + 1, max_depth)
+    node.right = _build(ids[~left_mask], proj, depth + 1, max_depth)
+    return node
+
+
+def build_pca_tree(V: np.ndarray, depth: int = 6) -> PCATree:
+    Vt, _ = _transform_data(V)
+    mu = Vt.mean(axis=0)
+    X = Vt - mu
+    # top-`depth` principal components via SVD
+    _, _, vt = np.linalg.svd(X, full_matrices=False)
+    comps = vt[:depth]
+    proj = X @ comps.T  # (n, depth)
+    root = _build(np.arange(V.shape[0]), proj, 0, depth)
+    d = Vt.shape[1]
+    pre = d * d * V.shape[0] + depth * V.shape[0] * d
+    return PCATree(comps, root, V, depth, pre)
+
+
+def pca_mips(tree: PCATree, q: np.ndarray, K: int = 1,
+             spill: float = 0.0) -> SearchResult:
+    qt = _transform_query(q)
+    # queries are projected against the same centered components
+    qproj = tree.components @ qt
+    cost = tree.components.size
+    leaves: List[np.ndarray] = []
+
+    def descend(node: _Node):
+        if node.ids is not None:
+            leaves.append(node.ids)
+            return
+        v = qproj[node.depth]
+        if v <= node.threshold + spill:
+            descend(node.left)
+        if v > node.threshold - spill:
+            descend(node.right)
+
+    descend(tree.root)
+    ids = np.unique(np.concatenate(leaves)) if leaves else np.empty(0, np.int64)
+    scores = tree.V[ids] @ q
+    cost += ids.size * q.size
+    order = np.argsort(-scores)[:K]
+    return SearchResult(ids[order], scores[order], cost,
+                        tree.preprocess_multiplies, ids.size)

@@ -1,0 +1,45 @@
+"""Assigned-architecture registry: --arch <id> resolves here."""
+
+from repro.configs.base import ArchConfig, RunShape, SHAPES
+
+from repro.configs.qwen3_moe_30b_a3b import CONFIG as _qwen3_moe
+from repro.configs.grok_1_314b import CONFIG as _grok1
+from repro.configs.qwen2_5_3b import CONFIG as _qwen25_3b
+from repro.configs.qwen1_5_0_5b import CONFIG as _qwen15_05b
+from repro.configs.command_r_35b import CONFIG as _command_r
+from repro.configs.tinyllama_1_1b import CONFIG as _tinyllama
+from repro.configs.mamba2_130m import CONFIG as _mamba2
+from repro.configs.whisper_medium import CONFIG as _whisper
+from repro.configs.internvl2_26b import CONFIG as _internvl2
+from repro.configs.jamba_v0_1_52b import CONFIG as _jamba
+
+REGISTRY = {c.name: c for c in (
+    _qwen3_moe, _grok1, _qwen25_3b, _qwen15_05b, _command_r,
+    _tinyllama, _mamba2, _whisper, _internvl2, _jamba,
+)}
+
+SHAPE_REGISTRY = {s.name: s for s in SHAPES}
+
+
+def get_config(name: str) -> ArchConfig:
+    if name not in REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(REGISTRY)}")
+    return REGISTRY[name]
+
+
+def get_shape(name: str) -> RunShape:
+    if name not in SHAPE_REGISTRY:
+        raise KeyError(f"unknown shape {name!r}; have {sorted(SHAPE_REGISTRY)}")
+    return SHAPE_REGISTRY[name]
+
+
+def cells():
+    """All 40 (arch x shape) dry-run cells, with skip reasons where N/A."""
+    out = []
+    for cfg in REGISTRY.values():
+        for shp in SHAPES:
+            skip = None
+            if shp.name == "long_500k" and not cfg.supports_long:
+                skip = "full quadratic attention at 512k context (DESIGN.md §5)"
+            out.append((cfg, shp, skip))
+    return out

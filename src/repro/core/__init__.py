@@ -1,0 +1,23 @@
+"""Core of the paper: MAB-BP bounds, schedules, BoundedME, MIPS API."""
+
+from repro.core.bounds import (
+    rho_m, u_term, m_required, deviation_bound, hoeffding_required,
+    lil_required,
+)
+from repro.core.schedule import Round, Schedule, make_schedule
+from repro.core.boundedme import BoundedMEResult, bounded_me, reward_matrix
+from repro.core.boundedme_jax import (
+    BlockedPlan, make_plan, bounded_me_blocked, bounded_me_batched,
+)
+from repro.core.mips import mips_topk, nns_topk, sharded_mips_topk, exact_topk
+from repro.core.median_elim import median_elimination, successive_elimination
+from repro.core.bounded_se import bounded_se
+
+__all__ = [
+    "rho_m", "u_term", "m_required", "deviation_bound", "hoeffding_required",
+    "lil_required", "Round", "Schedule", "make_schedule", "BoundedMEResult",
+    "bounded_me", "reward_matrix", "BlockedPlan", "make_plan",
+    "bounded_me_blocked", "bounded_me_batched", "mips_topk", "nns_topk",
+    "sharded_mips_topk", "exact_topk", "median_elimination",
+    "successive_elimination", "bounded_se",
+]

@@ -1,0 +1,103 @@
+"""Static elimination schedules for BoundedME.
+
+The key systems observation (DESIGN.md §3): lines 7-11 of Algorithm 1 reference
+only (|S_l|, K, eps_l, delta_l, N) — never the data.  Given (n, N, K, eps,
+delta) the entire round structure (survivor counts, cumulative pull counts) is
+therefore *data independent* and can be computed at trace time.  The jitted
+TPU program becomes a fixed cascade of static-shape matmuls + top-k masks.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Tuple
+
+from repro.core import bounds
+
+__all__ = ["Round", "Schedule", "make_schedule"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Round:
+    """One elimination round of Algorithm 1 (static view)."""
+
+    index: int          # l (1-based)
+    n_arms: int         # |S_l| at the start of the round
+    n_keep: int         # |S_{l+1}| = K + floor((|S_l|-K)/2)
+    t_cum: int          # t_l: cumulative pulls per surviving arm
+    t_new: int          # t_l - t_{l-1}: pulls issued this round
+    eps_l: float
+    delta_l: float
+
+
+@dataclasses.dataclass(frozen=True)
+class Schedule:
+    """The full static pull/elimination plan."""
+
+    n: int              # number of arms (may be a tile count on the TPU path)
+    N: int              # reward-list length (may be a block count)
+    K: int
+    eps: float
+    delta: float
+    value_range: float
+    rounds: Tuple[Round, ...]  # tuple => hashable => usable as a jit static
+
+    @property
+    def total_pulls(self) -> int:
+        """Exact sample complexity (sum over rounds of survivors x new pulls)."""
+        return sum(r.n_arms * r.t_new for r in self.rounds)
+
+    @property
+    def naive_pulls(self) -> int:
+        return self.n * self.N
+
+    @property
+    def speedup(self) -> float:
+        """Pull-count speedup over exhaustive search (>= 1 by Corollary 2)."""
+        return self.naive_pulls / max(1, self.total_pulls)
+
+    @property
+    def final_pulls(self) -> int:
+        return self.rounds[-1].t_cum if self.rounds else 0
+
+
+def _round_pulls(n_l: int, K: int, eps_l: float, delta_l: float, N: int,
+                 value_range: float) -> int:
+    """t_l of Algorithm 1, line 7 (expanded per the Lemma 4 proof).
+
+    Each arm needs an (eps_l/2, delta'_l/2)-accurate estimate where
+    ``delta'_l = delta_l (floor((n_l-K)/2)+1) / (n_l-K)`` is the per-arm
+    budget and the factor 2 covers the two one-sided deviation events.
+    """
+    gap = n_l - K
+    if gap <= 0:
+        return 0
+    delta_eff = delta_l * (gap // 2 + 1) / (2.0 * gap)
+    # deviation eps_l/2, confidence delta_eff
+    return bounds.m_required(eps_l / 2.0, delta_eff, N, value_range)
+
+
+def make_schedule(n: int, N: int, K: int = 1, eps: float = 0.1,
+                  delta: float = 0.05, value_range: float = 1.0) -> Schedule:
+    """Build the static round plan of Algorithm 1.
+
+    eps_1 = eps/4, delta_1 = delta/2; eps_{l+1} = 3/4 eps_l,
+    delta_{l+1} = delta_l/2; each round keeps K + floor((|S_l|-K)/2) arms.
+    Cumulative pull counts are clamped to be nondecreasing and <= N.
+    """
+    if n < 1 or N < 1:
+        raise ValueError(f"need n,N >= 1, got n={n} N={N}")
+    if K >= n:
+        return Schedule(n, N, K, eps, delta, value_range, ())
+    rounds: List[Round] = []
+    n_l, eps_l, delta_l, t_prev, l = n, eps / 4.0, delta / 2.0, 0, 1
+    while n_l > K:
+        t_l = _round_pulls(n_l, K, eps_l, delta_l, N, value_range)
+        t_l = min(N, max(t_l, t_prev))  # nondecreasing, saturates at N
+        n_keep = K + (n_l - K) // 2
+        rounds.append(Round(index=l, n_arms=n_l, n_keep=n_keep, t_cum=t_l,
+                            t_new=t_l - t_prev, eps_l=eps_l, delta_l=delta_l))
+        n_l, t_prev, l = n_keep, t_l, l + 1
+        eps_l, delta_l = 0.75 * eps_l, 0.5 * delta_l
+    return Schedule(n, N, K, eps, delta, value_range, tuple(rounds))

@@ -1,0 +1,112 @@
+"""Logical-axis sharding: rules + a no-op-safe constraint helper.
+
+Model code annotates activations/params with *logical* axes ('batch',
+'vocab', 'ff', 'heads', 'experts', 'kvseq', ...).  The launcher binds a mesh
+and a logical->mesh translation; smoke tests bind nothing and every
+annotation becomes a no-op.  This keeps the model definition identical from
+1 CPU device to the 512-chip multi-pod mesh.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "LOGICAL_RULES", "logical_mesh", "current_mesh", "shard", "spec_of",
+    "named_sharding",
+]
+
+AxisBinding = Union[str, Tuple[str, ...], None]
+
+# default logical axis -> mesh axis binding for the production meshes
+LOGICAL_RULES: Dict[str, AxisBinding] = {
+    "batch": ("pod", "data"),   # 'pod' silently dropped on single-pod meshes
+    "vocab": "model",
+    "heads": "model",
+    "kv_heads": None,           # GQA kv counts rarely divide the model axis
+    "ff": "model",
+    "experts": "model",
+    "expert_cap": None,
+    "kvseq": "model",           # sequence-sharded KV cache at decode
+    "seq": None,
+    "embed": None,
+    "state": None,
+    "dinner": "model",          # mamba inner dim (bound per-config)
+}
+
+
+class _Ctx(threading.local):
+    mesh: Optional[Mesh] = None
+    rules: Dict[str, AxisBinding] = {}
+
+
+_CTX = _Ctx()
+
+
+@contextlib.contextmanager
+def logical_mesh(mesh: Mesh, rules: Optional[Dict[str, AxisBinding]] = None):
+    """Bind a mesh + logical rules for `shard` annotations (and pjit specs)."""
+    prev = (_CTX.mesh, _CTX.rules)
+    merged = dict(LOGICAL_RULES)
+    if rules:
+        merged.update(rules)
+    # drop bindings to axes the mesh doesn't have (e.g. 'pod' on single pod)
+    def _filter(b: AxisBinding) -> AxisBinding:
+        names = mesh.axis_names
+        if b is None:
+            return None
+        if isinstance(b, str):
+            return b if b in names else None
+        kept = tuple(a for a in b if a in names)
+        return kept or None
+    _CTX.mesh = mesh
+    _CTX.rules = {k: _filter(v) for k, v in merged.items()}
+    try:
+        yield
+    finally:
+        _CTX.mesh, _CTX.rules = prev
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _CTX.mesh
+
+
+def spec_of(*logical_axes: Optional[str]) -> P:
+    """Translate logical axes to a PartitionSpec under the bound rules.
+
+    A mesh axis may appear only once in a spec; if two logical axes bind to
+    the same mesh axis (e.g. 'experts' and 'ff' both on 'model'), the first
+    keeps it and later ones are replicated.
+    """
+    used: set = set()
+    out = []
+    for a in logical_axes:
+        b = _CTX.rules.get(a) if a else None
+        if b is None:
+            out.append(None)
+            continue
+        bt = (b,) if isinstance(b, str) else tuple(b)
+        bt = tuple(x for x in bt if x not in used)
+        used.update(bt)
+        out.append(bt if len(bt) > 1 else (bt[0] if bt else None))
+    return P(*out)
+
+
+def shard(x, *logical_axes: Optional[str]):
+    """with_sharding_constraint if a mesh is bound; identity otherwise."""
+    if _CTX.mesh is None:
+        return x
+    if len(logical_axes) != x.ndim:
+        raise ValueError(f"{len(logical_axes)} axes for rank-{x.ndim} array")
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(_CTX.mesh, spec_of(*logical_axes)))
+
+
+def named_sharding(*logical_axes: Optional[str]) -> NamedSharding:
+    assert _CTX.mesh is not None, "no mesh bound"
+    return NamedSharding(_CTX.mesh, spec_of(*logical_axes))

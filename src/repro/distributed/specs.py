@@ -1,0 +1,130 @@
+"""PartitionSpec trees for params / optimizer / caches / batches.
+
+Name+shape-based rules over the flattened param paths.  2D "FSDP-style"
+sharding for very large models (weights sharded over *both* data and model)
+is applied when the per-chip bf16 param bytes would otherwise exceed
+``fsdp_threshold`` — this is what lets grok-1-314B's optimizer state fit a
+v5e (DESIGN.md §6).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+
+__all__ = ["param_pspecs", "batch_pspecs", "cache_pspecs", "tree_pspecs",
+           "batch_axes"]
+
+
+def batch_axes(mesh: Mesh, global_batch: int):
+    """('pod','data') filtered to the mesh, dropped if batch not divisible."""
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    size = int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+    if axes and global_batch % size == 0:
+        return axes
+    # try data-only (e.g. batch 16 on a (2,16,16) mesh)
+    if "data" in mesh.axis_names and global_batch % mesh.shape["data"] == 0:
+        return ("data",)
+    return None
+
+
+def _key_str(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                    for p in path)
+
+
+def param_pspecs(cfg: ArchConfig, abstract_params, mesh: Mesh,
+                 fsdp: bool = False):
+    """P-spec tree matching init_params(cfg) structure."""
+    msize = mesh.shape["model"]
+    ep_ok = cfg.n_experts > 0 and cfg.n_experts % msize == 0
+    di_ok = cfg.ssm_heads > 0 and cfg.d_inner % msize == 0 \
+        and cfg.ssm_heads % msize == 0
+    fsdp_axis = "data" if (fsdp and "data" in mesh.axis_names) else None
+
+    def spec(path, leaf):
+        key = _key_str(path)
+        name = key.split("/")[-1]
+        r = leaf.ndim
+        lead = lambda k: (None,) * (r - k)  # leading stack dims
+        is_expert = "moe" in key or (cfg.family == "moe"
+                                     and name in ("w_gate", "w_up", "w_down",
+                                                  "router"))
+        if name in ("embed", "unembed"):
+            return P("model", fsdp_axis)
+        if name == "enc_pos":
+            return P(None, None)
+        if name.endswith("wq") or name == "bq":
+            return P(*lead(2), fsdp_axis, "model") if r >= 2 \
+                else P(*lead(1), "model")
+        if name.endswith(("wk", "wv")) or name in ("bk", "bv"):
+            # kv head counts rarely divide the model axis: replicate heads
+            return P(*lead(2), fsdp_axis, None) if r >= 2 else P(*lead(1), None)
+        if name.endswith("wo"):
+            return P(*lead(2), "model", fsdp_axis)
+        if is_expert:
+            if name == "router":
+                return P(*lead(2), None, None)
+            if name in ("w_gate", "w_up"):        # (..., E, d, ff)
+                return (P(*lead(3), "model", fsdp_axis, None) if ep_ok
+                        else P(*lead(3), None, fsdp_axis, "model"))
+            if name == "w_down":                  # (..., E, ff, d)
+                return (P(*lead(3), "model", None, fsdp_axis) if ep_ok
+                        else P(*lead(3), None, "model", fsdp_axis))
+        if name in ("w_gate", "w_up"):            # dense mlp (..., d, ff)
+            return P(*lead(2), fsdp_axis, "model")
+        if name == "w_down":                      # (..., ff, d)
+            return P(*lead(2), "model", fsdp_axis)
+        if name == "b_up":
+            return P(*lead(1), "model")
+        if name in ("wz", "wx"):                  # mamba (..., d, di)
+            return P(*lead(2), fsdp_axis, "model" if di_ok else None)
+        if name == "out_proj":                    # (..., di, d)
+            return P(*lead(2), "model" if di_ok else None, fsdp_axis)
+        if name == "norm_w" and "layers" not in key.split("/")[-2:]:
+            pass
+        return P(*(None,) * r)
+
+    return jax.tree_util.tree_map_with_path(spec, abstract_params)
+
+
+def batch_pspecs(mesh: Mesh, global_batch: int, batch: dict):
+    axes = batch_axes(mesh, global_batch)
+
+    def spec(path, leaf):
+        return P(axes, *(None,) * (leaf.ndim - 1))
+    return jax.tree_util.tree_map_with_path(spec, batch)
+
+
+def cache_pspecs(mesh: Mesh, global_batch: int, abstract_caches,
+                 seq_axes=None):
+    """Caches: batch-shard dim B; KV sequence on `seq_axes` (default model)."""
+    baxes = batch_axes(mesh, global_batch)
+    kvseq = seq_axes if seq_axes is not None else (
+        "model" if "model" in mesh.axis_names else None)
+
+    def spec(path, leaf):
+        key = _key_str(path)
+        name = key.split("/")[-1]
+        r = leaf.ndim
+        if name in ("k", "v"):      # (L, B, S, KV, D) or (periods, B, S, KV, D)
+            return P(*(None,) * (r - 4), baxes, kvseq, None, None)
+        if name in ("ck", "cv"):    # (L, B, S_enc, H, D)
+            return P(*(None,) * (r - 4), baxes, None, "model", None)
+        if name == "h":             # (L, B, H, Sd, P) / (periods, nm, B, ...)
+            b_at = 1 if r == 5 else 2
+            return P(*(None,) * b_at, baxes, *(None,) * (r - b_at - 1))
+        return P(*(None,) * r)
+
+    return jax.tree_util.tree_map_with_path(spec, abstract_caches)
+
+
+def tree_pspecs(tree, like_specs=None, default=P()):
+    """Replicated specs for everything (scalars, schedules, rng)."""
+    return jax.tree.map(lambda leaf: P(*(None,) * getattr(leaf, "ndim", 0)),
+                        tree)

@@ -1,0 +1,1 @@
+"""Pallas TPU kernels for the MIPS hot loops (+ jnp oracles in ref.py)."""

@@ -1,0 +1,53 @@
+"""Pallas TPU kernel: exact blocked logit matvec (the exhaustive baseline).
+
+out = W @ q for W (n, d): grid (n/TN, d/TD), f32 VMEM accumulation.  Used by
+the exact decode path and as the roofline's memory-bound comparator for the
+bandit kernel (same tiles, no early stopping).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["blocked_matvec_pallas"]
+
+
+def _kernel(W_ref, q_ref, out_ref):
+    j = pl.program_id(1)
+    part = jnp.dot(W_ref[...], q_ref[...], preferred_element_type=jnp.float32)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = part
+
+    @pl.when(j != 0)
+    def _acc():
+        out_ref[...] += part
+
+
+@functools.partial(jax.jit, static_argnames=("tile_n", "tile_d", "interpret"))
+def blocked_matvec_pallas(W: jnp.ndarray, q: jnp.ndarray, *,
+                          tile_n: int = 256, tile_d: int = 512,
+                          interpret: bool = False) -> jnp.ndarray:
+    n, d = W.shape
+    tile_n = min(tile_n, n)
+    tile_d = min(tile_d, d)
+    if n % tile_n or d % tile_d:
+        raise ValueError(f"(n={n}, d={d}) not divisible by tiles "
+                         f"({tile_n}, {tile_d}); pad upstream")
+    grid = (n // tile_n, d // tile_d)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_n, tile_d), lambda i, j: (i, j)),
+            pl.BlockSpec((tile_d,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((tile_n,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=interpret,
+    )(W, q)

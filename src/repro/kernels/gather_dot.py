@@ -1,0 +1,69 @@
+"""Pallas TPU kernel: the BoundedME pull hot loop.
+
+Computes partial inner products for the surviving arm tiles over this
+round's coordinate blocks:
+
+    out[t, :] = sum_b  V4[idx[t], cols[b]] @ qsel[b]        (T, R) float32
+
+The gather is done by the *grid*, not by data movement: ``idx`` and ``cols``
+are scalar-prefetched (SMEM) and the BlockSpec index_map dereferences them,
+so each grid step DMAs exactly one (R, C) tile of V from HBM into VMEM —
+only the bytes the bandit actually pulls ever cross the memory bus.  This is
+the TPU-native analogue of the paper's "pull one coordinate" primitive
+(DESIGN.md §3): one pull = one (R, C) MXU tile-dot.
+
+Grid: (T, dt) with the block axis innermost; the output block for a fixed
+tile is revisited across the inner axis and accumulated in VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["gather_block_dot_pallas"]
+
+
+def _kernel(idx_ref, cols_ref, V_ref, q_ref, out_ref):
+    # V_ref: (1, 1, R, C) VMEM tile; q_ref: (1, C); out_ref: (1, R) f32
+    j = pl.program_id(1)
+    v = V_ref[0, 0]                      # (R, C)
+    q = q_ref[0]                         # (C,)
+    part = jnp.dot(v, q, preferred_element_type=jnp.float32)  # (R,)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[0] = part
+
+    @pl.when(j != 0)
+    def _acc():
+        out_ref[0] += part
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def gather_block_dot_pallas(V4: jnp.ndarray, idx: jnp.ndarray,
+                            cols: jnp.ndarray, qsel: jnp.ndarray,
+                            *, interpret: bool = False) -> jnp.ndarray:
+    n_tiles, n_blocks, R, C = V4.shape
+    T, dt = idx.shape[0], cols.shape[0]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,  # idx, cols land in SMEM before the grid runs
+        grid=(T, dt),
+        in_specs=[
+            pl.BlockSpec((1, 1, R, C),
+                         lambda i, j, idx_ref, cols_ref:
+                         (idx_ref[i], cols_ref[j], 0, 0)),
+            pl.BlockSpec((1, C), lambda i, j, idx_ref, cols_ref: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, R), lambda i, j, idx_ref, cols_ref: (i, 0)),
+    )
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((T, R), jnp.float32),
+        interpret=interpret,
+    )(idx.astype(jnp.int32), cols.astype(jnp.int32), V4, qsel)

@@ -1,0 +1,33 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+On non-TPU backends (this CPU container) the kernels run in interpret mode,
+which executes the kernel body in Python for correctness validation; on TPU
+they lower to Mosaic.  The pure-jnp oracles live in ``repro.kernels.ref``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.gather_dot import gather_block_dot_pallas
+from repro.kernels.blocked_matvec import blocked_matvec_pallas
+from repro.kernels import ref
+
+__all__ = ["gather_block_dot", "blocked_matvec", "on_tpu"]
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def gather_block_dot(V4, idx, cols, qsel):
+    """BoundedME pull step: see `repro.kernels.gather_dot`."""
+    return gather_block_dot_pallas(V4, idx, cols, qsel,
+                                   interpret=not on_tpu())
+
+
+def blocked_matvec(W, q, *, tile_n: int = 256, tile_d: int = 512):
+    """Exact blocked logit matvec: see `repro.kernels.blocked_matvec`."""
+    return blocked_matvec_pallas(W, q, tile_n=tile_n, tile_d=tile_d,
+                                 interpret=not on_tpu())

@@ -1,0 +1,27 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose reference)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["gather_block_dot_ref", "blocked_matvec_ref"]
+
+
+def gather_block_dot_ref(V4: jnp.ndarray, idx: jnp.ndarray,
+                         cols: jnp.ndarray, qsel: jnp.ndarray) -> jnp.ndarray:
+    """Partial inner products for surviving arm tiles over selected blocks.
+
+    V4:   (n_tiles, n_blocks, R, C) tile-major data
+    idx:  (T,)  surviving tile ids
+    cols: (dt,) coordinate-block ids to pull this round
+    qsel: (dt, C) the query restricted to those blocks
+    out:  (T, R) float32 partial sums  sum_b  V4[idx_t, cols_b] @ qsel_b
+    """
+    Vsel = V4[idx[:, None], cols[None, :]]        # (T, dt, R, C)
+    return jnp.einsum("tbrc,bc->tr", Vsel, qsel,
+                      preferred_element_type=jnp.float32)
+
+
+def blocked_matvec_ref(W: jnp.ndarray, q: jnp.ndarray) -> jnp.ndarray:
+    """Exact logit matvec oracle: (n, d) @ (d,) -> (n,) in float32."""
+    return jnp.dot(W, q, preferred_element_type=jnp.float32)

@@ -1,0 +1,265 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) on the
+production meshes, record memory/cost/collective analysis.
+
+This is the proof that the distribution config is coherent without real
+hardware: a sharding mismatch, compile-time OOM, or unsupported collective
+is a bug.  Results are cached as JSON under results/dryrun/.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch tinyllama-1.1b \
+      --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+
+import argparse
+import functools
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import REGISTRY, SHAPES, cells, get_config, get_shape
+from repro.configs.base import ArchConfig, RunShape
+from repro.distributed.sharding import logical_mesh, spec_of
+from repro.distributed.specs import (batch_axes, batch_pspecs, cache_pspecs,
+                                     param_pspecs, tree_pspecs)
+from repro.launch.hlo_analysis import collective_bytes
+from repro.launch.mesh import make_production_mesh
+from repro.models.model import forward, init_params
+from repro.models.steps import decode_step, prefill_step, train_step
+from repro.optim.adamw import AdamWConfig, init_opt
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+# models whose f32 optimizer moments would blow past a v5e's HBM
+_BF16_MOMENTS_ABOVE = 50e9
+_FSDP_ABOVE = 8e9
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_sds(cfg: ArchConfig, shape: RunShape) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    b = {"tokens": _sds((B, S), jnp.int32), "labels": _sds((B, S), jnp.int32)}
+    if cfg.family == "vlm":
+        b["patch_embeds"] = _sds((B, cfg.n_patches, cfg.d_model),
+                                 jnp.dtype(cfg.dtype))
+    if cfg.family == "encdec":
+        b["enc_frames"] = _sds((B, cfg.encoder_seq, cfg.d_model),
+                               jnp.dtype(cfg.dtype))
+    return b
+
+
+def rules_for(cfg: ArchConfig, shape: RunShape, mesh) -> Dict[str, Any]:
+    """Per-cell logical-axis overrides (DESIGN.md §6)."""
+    rules: Dict[str, Any] = {}
+    baxes = batch_axes(mesh, shape.global_batch)
+    rules["batch"] = baxes
+    if shape.name == "long_500k":
+        # batch=1: parallelize over the sequence instead
+        rules["kvseq"] = tuple(a for a in ("data", "model")
+                               if a in mesh.axis_names)
+        rules["seq"] = "data" if "data" in mesh.axis_names else None
+    if cfg.ssm_heads and (cfg.ssm_heads % mesh.shape["model"]
+                          or cfg.d_inner % mesh.shape["model"]):
+        rules["dinner"] = None
+    if cfg.n_experts and cfg.n_experts % mesh.shape["model"]:
+        rules["experts"] = None  # TP-inside-experts instead (param specs)
+    return rules
+
+
+def lower_cell(cfg: ArchConfig, shape: RunShape, mesh,
+               mips_mode: Optional[str] = None, unroll: bool = False):
+    """Returns (lowered, meta) for one (arch x shape x mesh) cell."""
+    import dataclasses
+    if mips_mode is not None:
+        cfg = dataclasses.replace(cfg, mips_mode=mips_mode)
+    if unroll:
+        # full layer unroll: cost_analysis counts scan bodies once, so the
+        # roofline runs lower with unrolled stacks for true HLO FLOPs
+        cfg = dataclasses.replace(cfg, scan_unroll=0)
+    key = jax.random.PRNGKey(0)
+    abstract_params = jax.eval_shape(functools.partial(init_params, cfg), key)
+    fsdp = cfg.n_params() * 2 > _FSDP_ABOVE and shape.kind == "train"
+    pspecs = param_pspecs(cfg, abstract_params, mesh, fsdp=fsdp)
+    psh = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs)
+    rules = rules_for(cfg, shape, mesh)
+    B, S = shape.global_batch, shape.seq_len
+
+    with logical_mesh(mesh, rules):
+        if shape.kind == "train":
+            moments = (jnp.bfloat16 if cfg.n_params() > _BF16_MOMENTS_ABOVE
+                       else jnp.float32)
+            opt_cfg = AdamWConfig()
+            abstract_opt = jax.eval_shape(
+                functools.partial(init_opt, moments_dtype=moments,
+                                  with_err=False), abstract_params)
+            # opt moments inherit param sharding; step scalar replicated
+            opt_specs = abstract_opt._replace(
+                step=P(), mu=pspecs, nu=pspecs, err=None)
+            osh = jax.tree.map(lambda s: NamedSharding(mesh, s), opt_specs)
+            b = batch_sds(cfg, shape)
+            bsh = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                               batch_pspecs(mesh, B, b))
+            fn = functools.partial(train_step, cfg=cfg, opt_cfg=opt_cfg)
+            jfn = jax.jit(fn, in_shardings=(psh, osh, bsh),
+                          out_shardings=(psh, osh, None))
+            lowered = jfn.lower(abstract_params, abstract_opt, b)
+        elif shape.kind == "prefill":
+            b = batch_sds(cfg, shape)
+            tokens = b["tokens"]
+            bsh = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                               batch_pspecs(mesh, B, b))
+            extra_names = sorted(k for k in b if k not in ("labels", "tokens"))
+            extra_vals = [b[k] for k in extra_names]
+            extra_sh = [bsh[k] for k in extra_names]
+
+            def pf(p, t, *extra):
+                kw = dict(zip(extra_names, extra))
+                return prefill_step(p, cfg, t, cache_len=S, **kw)
+            jfn = jax.jit(pf, in_shardings=(psh, bsh["tokens"], *extra_sh),
+                          out_shardings=None)
+            lowered = jfn.lower(abstract_params, tokens, *extra_vals)
+        else:  # decode
+            b = batch_sds(cfg, shape)
+            extras = {k: v for k, v in b.items()
+                      if k not in ("labels", "tokens")}
+            # cache structure from an abstract prefill of the full context
+            _, abstract_caches = jax.eval_shape(
+                functools.partial(forward, cfg=cfg, cache_len=S),
+                abstract_params,
+                tokens=_sds((B, S), jnp.int32),
+                **{k: v for k, v in extras.items()
+                   if k in ("patch_embeds",)},
+                **({"enc_frames": extras["enc_frames"]}
+                   if "enc_frames" in extras else {}))
+            seq_axes = rules.get("kvseq", "model")
+            csh = jax.tree.map(
+                lambda s: NamedSharding(mesh, s),
+                cache_pspecs(mesh, B, abstract_caches, seq_axes=seq_axes))
+            tok = _sds((B, 1), jnp.int32)
+            tok_sh = NamedSharding(mesh, P(batch_axes(mesh, B), None))
+            pos_sh = NamedSharding(mesh, P())
+            def df(p, c, t, pos):
+                return decode_step(p, cfg, c, t, pos)
+            jfn = jax.jit(df, in_shardings=(psh, csh, tok_sh, pos_sh),
+                          out_shardings=(None, csh))
+            lowered = jfn.lower(abstract_params, abstract_caches, tok,
+                                _sds((), jnp.int32))
+    meta = {"fsdp": fsdp, "rules": {k: str(v) for k, v in rules.items()}}
+    return lowered, meta
+
+
+def run_cell(cfg: ArchConfig, shape: RunShape, mesh_name: str,
+             mips_mode: Optional[str] = None, unroll: bool = False,
+             save: bool = True) -> Dict[str, Any]:
+    mesh = make_production_mesh(multi_pod=(mesh_name == "multi"))
+    tag = f"{cfg.name}_{shape.name}_{mesh_name}" + (
+        f"_{mips_mode}" if mips_mode else "") + ("_unrolled" if unroll
+                                                 else "")
+    out_path = os.path.join(RESULTS_DIR, tag + ".json")
+    if save and os.path.exists(out_path):
+        with open(out_path) as f:
+            prev = json.load(f)
+        if prev.get("ok"):          # never cache failures
+            return prev
+    rec: Dict[str, Any] = {
+        "arch": cfg.name, "shape": shape.name, "mesh": mesh_name,
+        "kind": shape.kind, "mips_mode": mips_mode or cfg.mips_mode,
+        "n_devices": int(np.prod(list(mesh.shape.values()))),
+    }
+    rec["unrolled"] = unroll
+    t0 = time.time()
+    try:
+        lowered, meta = lower_cell(cfg, shape, mesh, mips_mode=mips_mode,
+                                   unroll=unroll)
+        rec.update(meta)
+        rec["lower_s"] = round(time.time() - t0, 1)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 1)
+        cost = compiled.cost_analysis() or {}
+        rec["flops"] = float(cost.get("flops", -1))
+        rec["hlo_bytes_accessed"] = float(cost.get("bytes accessed", -1))
+        mem = compiled.memory_analysis()
+        if mem is not None:
+            for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                         "temp_size_in_bytes", "generated_code_size_in_bytes",
+                         "alias_size_in_bytes"):
+                rec[attr] = int(getattr(mem, attr, -1))
+        rec["collectives"] = collective_bytes(compiled.as_text())
+        rec["ok"] = True
+    except Exception as e:  # a failure here is a bug in the system
+        rec["ok"] = False
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    rec["total_s"] = round(time.time() - t0, 1)
+    if save:
+        os.makedirs(RESULTS_DIR, exist_ok=True)
+        with open(out_path, "w") as f:
+            json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi",
+                                                         "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--mips-mode", default=None,
+                    choices=[None, "exact", "boundedme"])
+    ap.add_argument("--unroll", action="store_true",
+                    help="fully unroll layer scans for exact HLO FLOPs")
+    args = ap.parse_args()
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    todo = []
+    for cfg, shp, skip in cells():
+        if args.arch and cfg.name != args.arch:
+            continue
+        if args.shape and shp.name != args.shape:
+            continue
+        if not args.all and not (args.arch or args.shape):
+            continue
+        todo.append((cfg, shp, skip))
+    if not todo:
+        ap.error("nothing selected: pass --all or --arch/--shape")
+
+    n_ok = n_fail = n_skip = 0
+    for cfg, shp, skip in todo:
+        for mesh_name in meshes:
+            tag = f"{cfg.name} x {shp.name} x {mesh_name}"
+            if skip:
+                print(f"[skip] {tag}: {skip}", flush=True)
+                n_skip += 1
+                continue
+            rec = run_cell(cfg, shp, mesh_name, mips_mode=args.mips_mode,
+                           unroll=args.unroll)
+            if rec["ok"]:
+                n_ok += 1
+                print(f"[ok]   {tag}: flops={rec['flops']:.3e} "
+                      f"coll={rec['collectives']['total_bytes']:.3e}B "
+                      f"lower={rec.get('lower_s')}s "
+                      f"compile={rec.get('compile_s')}s", flush=True)
+            else:
+                n_fail += 1
+                print(f"[FAIL] {tag}: {rec['error']}", flush=True)
+    print(f"done: ok={n_ok} fail={n_fail} skip={n_skip}")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,66 @@
+"""Parse compiled/lowered HLO text for collective traffic + roofline terms.
+
+cost_analysis() gives FLOPs and touched bytes, but not collective bytes —
+those are summed here from the operand shapes of every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute in the
+(post-SPMD) HLO.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+__all__ = ["collective_bytes", "DTYPE_BYTES", "shape_bytes"]
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\(?[^=]*?\)?)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+
+
+def shape_bytes(shape_str: str) -> int:
+    """Total bytes of e.g. 'bf16[256,4096]' or a tuple '(f32[8], f32[8])'."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Bytes moved per collective kind (output-shape accounting).
+
+    '-start' ops are counted, their '-done' twins skipped, so async
+    collectives are not double counted.
+    """
+    out = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        if "-done(" in line:
+            continue
+        shape_str, kind = m.group(1), m.group(2)
+        out[kind] += shape_bytes(shape_str)
+        counts[kind] += 1
+    out_total = {f"{k}_bytes": v for k, v in out.items()}
+    out_total.update({f"{k}_count": c for k, c in counts.items()})
+    out_total["total_bytes"] = sum(out.values())
+    return out_total

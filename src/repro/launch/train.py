@@ -1,0 +1,129 @@
+"""Training launcher: data-parallel+TP training with checkpoint/restart.
+
+Production use (per-host, multi-pod) would run this under the cluster's
+process launcher with jax.distributed.initialize(); on this container it
+runs the smoke-scale config on local devices.  Fault tolerance: on start it
+restores the latest checkpoint (if any) and resumes at exactly the right
+data batch (the stream is step-indexable); checkpoints are atomic.
+Straggler mitigation is checkpoint-restart at the step granularity plus a
+per-step wall-clock deadline alarm (SIGALRM) that aborts a hung collective
+so the job controller can reschedule — see README §Fault tolerance.
+
+  PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b \
+      --smoke --steps 100 --ckpt-dir /tmp/ckpt
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import signal
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+
+from repro.checkpoint.checkpointer import (latest_step, restore_checkpoint,
+                                           save_checkpoint)
+from repro.configs import get_config
+from repro.data.synthetic import LMStream
+from repro.distributed.sharding import logical_mesh
+from repro.distributed.specs import batch_pspecs, param_pspecs
+from repro.launch.mesh import make_local_mesh
+from repro.models.model import init_params
+from repro.models.steps import train_step
+from repro.optim.adamw import AdamWConfig, init_opt
+
+
+class StepDeadline:
+    """SIGALRM-based per-step deadline: a hung collective (dead peer,
+    straggler) raises instead of blocking forever, so the controller can
+    restart from the last checkpoint."""
+
+    def __init__(self, seconds: int):
+        self.seconds = seconds
+
+    def __enter__(self):
+        if self.seconds > 0:
+            signal.signal(signal.SIGALRM,
+                          lambda *a: (_ for _ in ()).throw(
+                              TimeoutError("step deadline exceeded")))
+            signal.alarm(self.seconds)
+        return self
+
+    def __exit__(self, *exc):
+        if self.seconds > 0:
+            signal.alarm(0)
+        return False
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced same-family config (CPU-friendly)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--compress", action="store_true",
+                    help="bf16+error-feedback gradient compression")
+    ap.add_argument("--data-par", type=int, default=1)
+    ap.add_argument("--model-par", type=int, default=1)
+    ap.add_argument("--step-deadline", type=int, default=0,
+                    help="seconds; 0 disables the straggler alarm")
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = cfg.smoke()
+    mesh = make_local_mesh(args.data_par, args.model_par)
+    opt_cfg = AdamWConfig(lr=args.lr, warmup_steps=min(20, args.steps // 5),
+                          total_steps=args.steps)
+    stream = LMStream(cfg.vocab, batch=args.batch, seq=args.seq, seed=0)
+
+    with logical_mesh(mesh):
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        pspecs = param_pspecs(cfg, params, mesh)
+        psh = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs)
+        params = jax.device_put(params, psh)
+        opt = init_opt(params, with_err=args.compress)
+        start = 0
+        if args.ckpt_dir and latest_step(args.ckpt_dir) is not None:
+            restored, start = restore_checkpoint(args.ckpt_dir,
+                                                 {"params": params,
+                                                  "opt": opt})
+            params, opt = restored["params"], restored["opt"]
+            params = jax.device_put(params, psh)
+            print(f"[train] resumed from step {start}")
+
+        fn = jax.jit(lambda p, o, b: train_step(p, o, b, cfg, opt_cfg,
+                                                compress=args.compress))
+        t0 = time.time()
+        for step in range(start, args.steps):
+            b = {k: jnp.asarray(v) for k, v in stream.batch_at(step).items()}
+            with StepDeadline(args.step_deadline):
+                params, opt, m = fn(params, opt, b)
+            if step % args.log_every == 0 or step == args.steps - 1:
+                print(f"[train] step={step} loss={float(m['loss']):.4f} "
+                      f"acc={float(m['acc']):.3f} "
+                      f"gnorm={float(m['grad_norm']):.2f} "
+                      f"lr={float(m['lr']):.2e} "
+                      f"({(time.time()-t0):.1f}s)", flush=True)
+            if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
+                save_checkpoint(args.ckpt_dir, step + 1,
+                                {"params": params, "opt": opt})
+        if args.ckpt_dir:
+            save_checkpoint(args.ckpt_dir, args.steps,
+                            {"params": params, "opt": opt})
+        print(f"[train] done: {args.steps} steps in {time.time()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

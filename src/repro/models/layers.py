@@ -1,0 +1,452 @@
+"""Model building blocks: norms, RoPE, GQA attention, MLP, MoE, Mamba2 SSD.
+
+Pure functional JAX.  Params are plain dicts of arrays (stackable over the
+layer axis for lax.scan).  Sharding is expressed through logical-axis
+annotations (`repro.distributed.sharding.shard`) which are no-ops when no
+mesh is bound — the same code runs on 1 CPU device and on the 512-chip mesh.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import shard
+
+Params = Dict[str, jnp.ndarray]
+
+
+# ----------------------------------------------------------------- norms ---
+
+def rms_norm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * w).astype(dt)
+
+
+def layer_norm(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+               eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    return ((x - mu) * jax.lax.rsqrt(var + eps) * w + b).astype(dt)
+
+
+def norm(x: jnp.ndarray, p: Params, cfg: ArchConfig, name: str) -> jnp.ndarray:
+    if cfg.norm == "ln":
+        return layer_norm(x, p[f"{name}_w"], p[f"{name}_b"])
+    return rms_norm(x, p[f"{name}_w"])
+
+
+# ------------------------------------------------------------------ rope ---
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, H, D); positions: (..., S) int32."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = jnp.exp(-math.log(theta) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------- attention ---
+
+def _qkv(x: jnp.ndarray, p: Params, cfg: ArchConfig, prefix: str = ""
+         ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    B, S, _ = x.shape
+    H, KV, D = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = jnp.einsum("bsd,dh->bsh", x, p[f"{prefix}wq"])
+    k = jnp.einsum("bsd,dh->bsh", x, p[f"{prefix}wk"])
+    v = jnp.einsum("bsd,dh->bsh", x, p[f"{prefix}wv"])
+    if cfg.qkv_bias:
+        q, k, v = (q + p[f"{prefix}bq"], k + p[f"{prefix}bk"],
+                   v + p[f"{prefix}bv"])
+    q = shard(q.reshape(B, S, H, D), "batch", "seq", "heads", None)
+    k = shard(k.reshape(B, S, KV, D), "batch", "seq", "kv_heads", None)
+    v = shard(v.reshape(B, S, KV, D), "batch", "seq", "kv_heads", None)
+    return q, k, v
+
+
+def _sdpa_chunked(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                  causal: bool, q_offset: int = 0,
+                  chunk: int = 512) -> jnp.ndarray:
+    """Chunked softmax attention: full rows per q-chunk (bounded memory).
+
+    q: (B, Sq, H, D); k/v: (B, Sk, KV, D) with H = G*KV.  Each q-chunk
+    computes complete softmax rows over all Sk keys, so no running-max
+    rescaling is needed; peak memory is (B, H, chunk, Sk) per step.
+    """
+    B, Sq, H, D = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    scale = 1.0 / math.sqrt(D)
+    kq = k.reshape(B, -1, KV, 1, D)
+    vq = v.reshape(B, -1, KV, 1, D)
+    Sk = k.shape[1]
+
+    def one_chunk(qc: jnp.ndarray, start) -> jnp.ndarray:
+        # qc: (B, c, H, D) -> (B, c, KV, G, D)
+        c = qc.shape[1]
+        qg = qc.reshape(B, c, KV, G, D)
+        s = jnp.einsum("bckgd,bskzd->bckgs", qg, kq,
+                       preferred_element_type=jnp.float32) * scale
+        if causal:
+            qpos = start + jnp.arange(c)[:, None]
+            kpos = jnp.arange(Sk)[None, :]
+            mask = (kpos <= qpos + q_offset)[None, :, None, None, :]
+            s = jnp.where(mask, s, -1e30)
+        w = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bckgs,bskzd->bckgd", w.astype(v.dtype), vq,
+                       preferred_element_type=jnp.float32)
+        return o.reshape(B, c, H, D).astype(q.dtype)
+
+    if Sq <= chunk or Sq % chunk:
+        # ragged query lengths (e.g. whisper's 1500-frame encoder): one chunk
+        return one_chunk(q, 0)
+    n_chunks = Sq // chunk
+
+    if causal and q_offset == 0 and Sq == Sk:
+        # static causal chunking: q-chunk i attends to k[: (i+1)*chunk] —
+        # all slice bounds are python ints, so no masked upper-triangle MACs
+        # and no S^2 `where`; only the diagonal block needs a mask.
+        # Halves attention FLOPs vs full-row chunking (§Perf iteration 3).
+        outs = []
+        diag = jnp.tril(jnp.ones((chunk, chunk), bool))
+        for i in range(n_chunks):
+            qg = q[:, i * chunk:(i + 1) * chunk].reshape(B, chunk, KV, G, D)
+            ctx = (i + 1) * chunk
+            s = jnp.einsum("bckgd,bskzd->bckgs", qg, kq[:, :ctx],
+                           preferred_element_type=jnp.float32) * scale
+            s = s.at[..., i * chunk:].set(
+                jnp.where(diag[None, :, None, None, :],
+                          s[..., i * chunk:], -1e30))
+            w = jax.nn.softmax(s, axis=-1)
+            o = jnp.einsum("bckgs,bskzd->bckgd", w.astype(v.dtype),
+                           vq[:, :ctx], preferred_element_type=jnp.float32)
+            outs.append(o.reshape(B, chunk, H, D).astype(q.dtype))
+        return jnp.concatenate(outs, axis=1)
+
+    qs = q.reshape(B, n_chunks, chunk, H, D)
+    outs = jax.lax.map(
+        lambda args: one_chunk(args[0], args[1]),
+        (qs.transpose(1, 0, 2, 3, 4),
+         jnp.arange(n_chunks) * chunk))
+    return outs.transpose(1, 0, 2, 3, 4).reshape(B, Sq, H, D)
+
+
+def attention(x: jnp.ndarray, p: Params, cfg: ArchConfig, *,
+              positions: jnp.ndarray, causal: bool = True,
+              cache: Optional[Dict[str, jnp.ndarray]] = None,
+              cache_len: Optional[int] = None, pos=None,
+              kv_override: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
+              prefix: str = "", rope_on: bool = True,
+              ) -> Tuple[jnp.ndarray, Optional[Dict[str, jnp.ndarray]]]:
+    """GQA attention for train / prefill / decode.
+
+    * train:    cache=None, cache_len=None           -> (y, None)
+    * prefill:  cache_len=S_max                      -> (y, new cache)
+    * decode:   cache={'k','v'} + pos (scalar)       -> (y, updated cache)
+    * cross-attention: kv_override=(k, v) from the encoder (no cache).
+    """
+    B, S, _ = x.shape
+    H, KV, D = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+
+    if kv_override is not None:
+        q = jnp.einsum("bsd,dh->bsh", x, p[f"{prefix}wq"]).reshape(B, S, H, D)
+        k, v = kv_override
+        o = _sdpa_chunked(q, k, v, causal=False)
+        y = jnp.einsum("bshd,hdf->bsf", o, p[f"{prefix}wo"].reshape(H, D, -1))
+        return y.astype(x.dtype), None
+
+    q, k, v = _qkv(x, p, cfg, prefix)
+    if rope_on:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+
+    new_cache = None
+    if cache is None and cache_len is None:            # train
+        o = _sdpa_chunked(q, k, v, causal=causal)
+    elif cache_len is not None:                        # prefill
+        kf = jnp.zeros((B, cache_len, KV, D), k.dtype).at[:, :S].set(k)
+        vf = jnp.zeros((B, cache_len, KV, D), v.dtype).at[:, :S].set(v)
+        kf = shard(kf, "batch", "kvseq", "kv_heads", None)
+        vf = shard(vf, "batch", "kvseq", "kv_heads", None)
+        new_cache = {"k": kf, "v": vf}
+        o = _sdpa_chunked(q, k, v, causal=causal)
+    else:                                              # decode
+        pos = jnp.asarray(pos, jnp.int32)
+        kf = jax.lax.dynamic_update_slice(cache["k"], k, (0, pos, 0, 0))
+        vf = jax.lax.dynamic_update_slice(cache["v"], v, (0, pos, 0, 0))
+        kf = shard(kf, "batch", "kvseq", "kv_heads", None)
+        vf = shard(vf, "batch", "kvseq", "kv_heads", None)
+        new_cache = {"k": kf, "v": vf}
+        # causal mask with offset also masks the empty tail of the cache
+        o = _sdpa_chunked(q, kf, vf, causal=True, q_offset=pos)
+    y = jnp.einsum("bshd,hdf->bsf", o,
+                   p[f"{prefix}wo"].reshape(H, D, -1))
+    y = shard(y, "batch", "seq", None)
+    return y.astype(x.dtype), new_cache
+
+
+# ------------------------------------------------------------------- mlp ---
+
+def mlp(x: jnp.ndarray, p: Params, cfg: ArchConfig,
+        prefix: str = "") -> jnp.ndarray:
+    """SwiGLU (rms-norm archs) / GELU (ln archs, whisper-style)."""
+    if cfg.norm == "ln":
+        h = jnp.einsum("bsd,df->bsf", x, p[f"{prefix}w_up"])
+        h = jax.nn.gelu(h + p[f"{prefix}b_up"])
+        h = shard(h, "batch", "seq", "ff")
+        y = jnp.einsum("bsf,fd->bsd", h, p[f"{prefix}w_down"])
+        return (y + p[f"{prefix}b_down"]).astype(x.dtype)
+    g = jnp.einsum("bsd,df->bsf", x, p[f"{prefix}w_gate"])
+    u = jnp.einsum("bsd,df->bsf", x, p[f"{prefix}w_up"])
+    h = shard(jax.nn.silu(g) * u, "batch", "seq", "ff")
+    y = jnp.einsum("bsf,fd->bsd", h, p[f"{prefix}w_down"])
+    return y.astype(x.dtype)
+
+
+# ------------------------------------------------------------------- moe ---
+
+def moe_layer(x: jnp.ndarray, p: Params, cfg: ArchConfig) -> jnp.ndarray:
+    """Top-k routed MoE: expert-parallel shard_map path or GSPMD fallback.
+
+    With a bound mesh and E divisible by the model axis, uses the
+    redundant-routing EP kernel (`_moe_ep_shardmap`): every model rank
+    routes all of its batch shard's tokens, keeps only the assignments to
+    its local E/m experts, and the partial outputs are merged with ONE bf16
+    psum per layer.  This avoids the involuntary f32 dispatch-buffer
+    all-reduce GSPMD emits for scatter-into-expert-sharded buffers
+    (EXPERIMENTS.md §Perf iteration 2).  Otherwise falls back to the
+    vmapped sort-based dispatch with sharding constraints.
+    """
+    from repro.distributed.sharding import current_mesh
+
+    mesh = current_mesh()
+    E = cfg.n_experts
+    if (mesh is not None and "model" in mesh.axis_names
+            and mesh.shape["model"] > 1 and E % mesh.shape["model"] == 0):
+        return _moe_ep_shardmap(x, p, cfg, mesh)
+    return _moe_gspmd(x, p, cfg)
+
+
+def _moe_ep_shardmap(x: jnp.ndarray, p: Params, cfg: ArchConfig,
+                     mesh) -> jnp.ndarray:
+    from jax.sharding import PartitionSpec as P
+    from repro.distributed.sharding import spec_of
+
+    E, k = cfg.n_experts, cfg.experts_per_token
+    msize = mesh.shape["model"]
+    E_loc = E // msize
+    B, S, d = x.shape
+    baxes = spec_of("batch")[0]
+
+    def local(x_l, router, wg, wu, wd):
+        B_l, S_l, _ = x_l.shape
+        T = B_l * S_l
+        cap = max(8, int(-(-T * k * cfg.capacity_factor // E)))
+        cap = min(cap, T * k)
+        xf = x_l.reshape(T, d)
+        logits = (xf @ router).astype(jnp.float32)        # (T, E) tiny
+        gates, eidx = jax.lax.top_k(jax.nn.softmax(logits, -1), k)
+        gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+        m = jax.lax.axis_index("model")
+        off = eidx - m * E_loc                             # (T, k)
+        is_local = (off >= 0) & (off < E_loc)
+        flat_e = jnp.where(is_local, off, E_loc).reshape(-1)
+        order = jnp.argsort(flat_e, stable=True)
+        sorted_e = flat_e[order]
+        rank = jnp.arange(T * k) - jnp.searchsorted(sorted_e, sorted_e,
+                                                    side="left")
+        token = order // k
+        dest = jnp.where((rank < cap) & (sorted_e < E_loc),
+                         sorted_e * cap + rank, E_loc * cap)
+        buf = jnp.zeros((E_loc * cap + 1, d), xf.dtype).at[dest].set(
+            xf[token], mode="drop")
+        be = buf[: E_loc * cap].reshape(E_loc, cap, d)
+        g = jnp.einsum("ecd,edf->ecf", be, wg)
+        u = jnp.einsum("ecd,edf->ecf", be, wu)
+        h = jax.nn.silu(g) * u
+        out = jnp.einsum("ecf,efd->ecd", h, wd).astype(xf.dtype)
+        flat = jnp.concatenate([out.reshape(E_loc * cap, d),
+                                jnp.zeros((1, d), out.dtype)])
+        vals = flat[dest]                                  # (T*k, d)
+        w = gates.reshape(-1)[order].astype(out.dtype)
+        y_l = jnp.zeros((T, d), out.dtype).at[token].add(vals * w[:, None])
+        y_l = jax.lax.psum(y_l, "model")                   # ONE bf16 psum
+        return y_l.reshape(B_l, S_l, d)
+
+    fn = jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(P(baxes, None, None), P(None, None),
+                  P("model", None, None), P("model", None, None),
+                  P("model", None, None)),
+        out_specs=P(baxes, None, None), check_vma=False)
+    return fn(x, p["router"], p["w_gate"], p["w_up"], p["w_down"])
+
+
+def _moe_gspmd(x: jnp.ndarray, p: Params, cfg: ArchConfig) -> jnp.ndarray:
+    """Fallback: per-batch-row sort-based capacity dispatch under GSPMD.
+
+    Dispatch is computed independently per batch row (vmapped sort /
+    searchsorted / scatter), so with batch sharded on (pod, data) the whole
+    routing stage is collective-free; the buffer re-shard for the
+    expert-sharded FFN einsum is left to the compiler.  Overflow beyond
+    capacity is dropped (standard dropping MoE).
+    """
+    B, S, d = x.shape
+    E, k = cfg.n_experts, cfg.experts_per_token
+    cap = max(8, int(-(-S * k * cfg.capacity_factor // E)))
+    cap = min(cap, S * k)
+
+    logits = jnp.einsum("bsd,de->bse", x, p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, eidx = jax.lax.top_k(probs, k)                    # (B, S, k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    def dispatch_row(xr, er):  # xr: (S, d); er: (S, k)
+        flat_e = er.reshape(-1)                              # (S*k,)
+        order = jnp.argsort(flat_e, stable=True)
+        sorted_e = flat_e[order]
+        rank = jnp.arange(S * k) - jnp.searchsorted(sorted_e, sorted_e,
+                                                    side="left")
+        token = order // k
+        dest = jnp.where(rank < cap, sorted_e * cap + rank, E * cap)
+        buf = jnp.zeros((E * cap + 1, d), xr.dtype).at[dest].set(
+            xr[token], mode="drop")
+        return buf[: E * cap].reshape(E, cap, d), dest, token, order
+
+    buf, dest, token, order = jax.vmap(dispatch_row)(
+        x, eidx)                                             # (B, E, cap, d)
+    buf = shard(buf, "batch", "experts", "expert_cap", None)
+
+    g = jnp.einsum("becd,edf->becf", buf, p["w_gate"])
+    u = jnp.einsum("becd,edf->becf", buf, p["w_up"])
+    h = shard(jax.nn.silu(g) * u, "batch", "experts", "expert_cap", "ff")
+    out = jnp.einsum("becf,efd->becd", h, p["w_down"]).astype(x.dtype)
+    out = shard(out, "batch", "experts", "expert_cap", None)
+
+    def combine_row(out_r, dest_r, token_r, order_r, gates_r):
+        flat = jnp.concatenate(
+            [out_r.reshape(E * cap, d), jnp.zeros((1, d), out_r.dtype)])
+        vals = flat[dest_r]                                  # (S*k, d) sorted
+        w = gates_r.reshape(-1)[order_r]                     # (S*k,)
+        y = jnp.zeros((S, d), out_r.dtype).at[token_r].add(
+            vals * w[:, None].astype(out_r.dtype))
+        return y
+
+    y = jax.vmap(combine_row)(out, dest, token, order, gates)
+    return shard(y, "batch", "seq", None)
+
+
+# ---------------------------------------------------------- mamba2 (SSD) ---
+
+def _ssd_chunk_scan(xh, dt, A, Bm, Cm, chunk: int):
+    """Chunked SSD scan (Dao & Gu 2024), per-head scalar decay.
+
+    xh: (B, S, H, P)   dt: (B, S, H)    A: (H,) (negative)
+    Bm/Cm: (B, S, Sdim)                 returns (B, S, H, P)
+    """
+    Bsz, S, H, P = xh.shape
+    Sdim = Bm.shape[-1]
+    S0 = S
+    if S % chunk:  # ragged tail: zero-pad (la=0, xs=0 leaves state untouched)
+        padlen = chunk - S % chunk
+        pad = lambda t: jnp.pad(t, ((0, 0), (0, padlen)) + ((0, 0),) * (t.ndim - 2))
+        xh, dt, Bm, Cm = pad(xh), pad(dt), pad(Bm), pad(Cm)
+        S = S + padlen
+    nc = S // chunk
+    la = (dt * A[None, None, :]).astype(jnp.float32)         # log-decay <= 0
+    xs = (xh * dt[..., None]).astype(jnp.float32)            # dt-scaled input
+
+    def reshape_c(t):
+        return t.reshape((Bsz, nc, chunk) + t.shape[2:]).transpose(
+            (1, 0, 2) + tuple(range(3, t.ndim + 1)))
+
+    la_c, xs_c = reshape_c(la), reshape_c(xs)
+    B_c, C_c = reshape_c(Bm.astype(jnp.float32)), reshape_c(Cm.astype(jnp.float32))
+
+    def chunk_step(h, inp):
+        la_i, xs_i, B_i, C_i = inp          # (B,c,H) (B,c,H,P) (B,c,Sd) (B,c,Sd)
+        cum = jnp.cumsum(la_i, axis=1)                        # (B,c,H)
+        # intra-chunk: y[t] = sum_{s<=t} C_t.B_s x_s exp(cum_t - cum_s)
+        gsb = jnp.einsum("bts,bcs->btc", C_i, B_i)            # (B,c,c)
+        decay = cum[:, :, None, :] - cum[:, None, :, :]       # (B,t,s,H)
+        tmask = jnp.tril(jnp.ones((chunk, chunk), bool))
+        decay = jnp.where(tmask[None, :, :, None], decay, -jnp.inf)
+        w = gsb[..., None] * jnp.exp(decay)                   # (B,t,s,H)
+        y_intra = jnp.einsum("btsh,bshp->bthp", w, xs_i)
+        # inter-chunk: y[t] += C_t . h_in * exp(cum_t)
+        y_inter = jnp.einsum("bts,bhsp,bth->bthp",
+                             C_i, h, jnp.exp(cum))
+        # state update: h_out = exp(cum_T) h_in + sum_s exp(cum_T-cum_s) B_s x_s
+        tail = jnp.exp(cum[:, -1:, :] - cum)                  # (B,c,H)
+        dh = jnp.einsum("bcs,bchp,bch->bhsp", B_i, xs_i, tail)
+        h = h * jnp.exp(cum[:, -1, :])[:, :, None, None] + dh
+        return h, y_intra + y_inter
+
+    h0 = jnp.zeros((Bsz, H, Sdim, P), jnp.float32)
+    h_fin, ys = jax.lax.scan(chunk_step, h0, (la_c, xs_c, B_c, C_c))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(Bsz, S, H, P)[:, :S0]
+    return y.astype(xh.dtype), h_fin
+
+
+def mamba2_layer(x: jnp.ndarray, p: Params, cfg: ArchConfig, *,
+                 cache: Optional[Dict[str, jnp.ndarray]] = None,
+                 mode: str = "train",
+                 ) -> Tuple[jnp.ndarray, Optional[Dict[str, jnp.ndarray]]]:
+    """Mamba2 SSD mixer.
+
+    mode='train'  : chunked scan, no state returned
+    mode='prefill': chunked scan, returns final state {'h': (B,H,Sd,P)}
+    mode='decode' : sequential step(s) from cache['h']
+    """
+    B, S, d = x.shape
+    di, H, P, Sd = cfg.d_inner, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    z = jnp.einsum("bsd,de->bse", x, p["wz"])
+    xin = shard(jnp.einsum("bsd,de->bse", x, p["wx"]), "batch", "seq", "dinner")
+    Bm = jnp.einsum("bsd,dn->bsn", x, p["wB"])
+    Cm = jnp.einsum("bsd,dn->bsn", x, p["wC"])
+    dt = jax.nn.softplus(
+        jnp.einsum("bsd,dh->bsh", x, p["wdt"]).astype(jnp.float32)
+        + p["dt_bias"])
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))              # (H,) negative
+    xh = xin.reshape(B, S, H, P)
+
+    new_cache = None
+    if mode in ("train", "prefill"):
+        y, h_fin = _ssd_chunk_scan(xh, dt, A, Bm, Cm,
+                                   min(cfg.ssm_chunk, S))
+        if mode == "prefill":
+            new_cache = {"h": h_fin}
+    else:
+        h = (cache["h"] if cache is not None and "h" in cache
+             else jnp.zeros((B, H, Sd, P), jnp.float32))
+        def step(h, inp):
+            x_t, dt_t, B_t, C_t = inp
+            decay = jnp.exp(dt_t * A)                         # (B,H)
+            dx = jnp.einsum("bn,bhp,bh->bhnp", B_t, x_t, dt_t)
+            h = h * decay[..., None, None] + dx
+            y_t = jnp.einsum("bn,bhnp->bhp", C_t, h)
+            return h, y_t
+        seq = (xh.transpose(1, 0, 2, 3).astype(jnp.float32),
+               dt.transpose(1, 0, 2), Bm.transpose(1, 0, 2).astype(jnp.float32),
+               Cm.transpose(1, 0, 2).astype(jnp.float32))
+        h, ys = jax.lax.scan(step, h, seq)
+        y = ys.transpose(1, 0, 2, 3).astype(x.dtype)
+        new_cache = {"h": h}
+    y = y + xh * p["D"][None, None, :, None].astype(x.dtype)
+    y = y.reshape(B, S, di)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                 p["norm_w"])
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    return shard(out, "batch", "seq", None).astype(x.dtype), new_cache

@@ -1,0 +1,427 @@
+"""Model assembly: init + forward for all assigned architecture families.
+
+Families: dense, moe, ssm (mamba2), hybrid (jamba), encdec (whisper),
+vlm (internvl backbone + stubbed patch embeddings).  Homogeneous stacks are
+scanned (stacked layer params) with optional remat; the hybrid family scans
+over its repeating period.  The same code path serves train (no cache),
+prefill (builds cache) and decode (updates cache).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import shard
+from repro.models import layers as L
+
+Params = Dict[str, Any]
+
+
+# ------------------------------------------------------------------ init ---
+
+def _dtype(cfg: ArchConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def _dense(key, shape, fan_in, dtype):
+    return (jax.random.normal(key, shape, jnp.float32)
+            / jnp.sqrt(jnp.float32(max(1, fan_in)))).astype(dtype)
+
+
+def _attn_params(key, cfg: ArchConfig, n: int, prefix: str = "",
+                 kv_heads: Optional[int] = None) -> Params:
+    """n stacked attention layers (n==0 -> unstacked single layer)."""
+    H, D = cfg.n_heads, cfg.head_dim
+    KV = cfg.n_kv_heads if kv_heads is None else kv_heads
+    d = cfg.d_model
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 4)
+    lead = (n,) if n else ()
+    p = {
+        f"{prefix}wq": _dense(ks[0], lead + (d, H * D), d, dt),
+        f"{prefix}wk": _dense(ks[1], lead + (d, KV * D), d, dt),
+        f"{prefix}wv": _dense(ks[2], lead + (d, KV * D), d, dt),
+        f"{prefix}wo": _dense(ks[3], lead + (H * D, d), H * D, dt),
+    }
+    if cfg.qkv_bias and not prefix:
+        p[f"{prefix}bq"] = jnp.zeros(lead + (H * D,), dt)
+        p[f"{prefix}bk"] = jnp.zeros(lead + (KV * D,), dt)
+        p[f"{prefix}bv"] = jnp.zeros(lead + (KV * D,), dt)
+    return p
+
+
+def _mlp_params(key, cfg: ArchConfig, n: int, prefix: str = "") -> Params:
+    d, f, dt = cfg.d_model, cfg.d_ff, _dtype(cfg)
+    ks = jax.random.split(key, 3)
+    lead = (n,) if n else ()
+    if cfg.norm == "ln":
+        return {
+            f"{prefix}w_up": _dense(ks[0], lead + (d, f), d, dt),
+            f"{prefix}b_up": jnp.zeros(lead + (f,), dt),
+            f"{prefix}w_down": _dense(ks[1], lead + (f, d), f, dt),
+            f"{prefix}b_down": jnp.zeros(lead + (d,), dt),
+        }
+    return {
+        f"{prefix}w_gate": _dense(ks[0], lead + (d, f), d, dt),
+        f"{prefix}w_up": _dense(ks[1], lead + (d, f), d, dt),
+        f"{prefix}w_down": _dense(ks[2], lead + (f, d), f, dt),
+    }
+
+
+def _moe_params(key, cfg: ArchConfig, n: int) -> Params:
+    d, f, E, dt = cfg.d_model, cfg.d_ff, cfg.n_experts, _dtype(cfg)
+    ks = jax.random.split(key, 4)
+    lead = (n,) if n else ()
+    return {
+        "router": _dense(ks[0], lead + (d, E), d, jnp.float32),
+        "w_gate": _dense(ks[1], lead + (E, d, f), d, dt),
+        "w_up": _dense(ks[2], lead + (E, d, f), d, dt),
+        "w_down": _dense(ks[3], lead + (E, f, d), f, dt),
+    }
+
+
+def _mamba_params(key, cfg: ArchConfig, n: int) -> Params:
+    d, di, H, Sd, dt = (cfg.d_model, cfg.d_inner, cfg.ssm_heads,
+                        cfg.ssm_state, _dtype(cfg))
+    ks = jax.random.split(key, 7)
+    lead = (n,) if n else ()
+    return {
+        "wz": _dense(ks[0], lead + (d, di), d, dt),
+        "wx": _dense(ks[1], lead + (d, di), d, dt),
+        "wB": _dense(ks[2], lead + (d, Sd), d, dt),
+        "wC": _dense(ks[3], lead + (d, Sd), d, dt),
+        "wdt": _dense(ks[4], lead + (d, H), d, dt),
+        "dt_bias": jnp.zeros(lead + (H,), jnp.float32),
+        "A_log": jnp.zeros(lead + (H,), jnp.float32),
+        "D": jnp.ones(lead + (H,), jnp.float32),
+        "out_proj": _dense(ks[5], lead + (di, d), di, dt),
+        "norm_w": jnp.ones(lead + (di,), jnp.float32),
+    }
+
+
+def _norm_params(cfg: ArchConfig, n: int, names=("ln1", "ln2")) -> Params:
+    d = cfg.d_model
+    lead = (n,) if n else ()
+    p = {}
+    for nm in names:
+        p[f"{nm}_w"] = jnp.ones(lead + (d,), jnp.float32)
+        if cfg.norm == "ln":
+            p[f"{nm}_b"] = jnp.zeros(lead + (d,), jnp.float32)
+    return p
+
+
+def init_params(cfg: ArchConfig, key: jax.Array) -> Params:
+    d, Vp, dt = cfg.d_model, cfg.padded_vocab, _dtype(cfg)
+    keys = jax.random.split(key, 8)
+    params: Params = {
+        "embed": (jax.random.normal(keys[0], (Vp, d), jnp.float32) * 0.02
+                  ).astype(dt),
+    }
+    params.update({k: v for k, v in _norm_params(cfg, 0, ("final",)).items()})
+    if not cfg.tie_embeddings:
+        params["unembed"] = (
+            jax.random.normal(keys[1], (Vp, d), jnp.float32) * 0.02).astype(dt)
+
+    Lk = keys[2]
+    n = cfg.n_layers
+    if cfg.family in ("dense", "vlm"):
+        lp = {}
+        lp.update(_attn_params(jax.random.fold_in(Lk, 0), cfg, n))
+        lp.update(_mlp_params(jax.random.fold_in(Lk, 1), cfg, n))
+        lp.update(_norm_params(cfg, n))
+        params["layers"] = lp
+    elif cfg.family == "moe":
+        lp = {}
+        lp.update(_attn_params(jax.random.fold_in(Lk, 0), cfg, n))
+        lp.update(_moe_params(jax.random.fold_in(Lk, 1), cfg, n))
+        lp.update(_norm_params(cfg, n))
+        params["layers"] = lp
+    elif cfg.family == "ssm":
+        lp = {}
+        lp.update(_mamba_params(jax.random.fold_in(Lk, 0), cfg, n))
+        lp.update(_norm_params(cfg, n, ("ln1",)))
+        params["layers"] = lp
+    elif cfg.family == "hybrid":
+        period = cfg.attn_period
+        n_periods = n // period
+        n_mamba = period - 1
+        n_moe = period // 2
+        n_mlp = period - n_moe
+        pp = {
+            "mamba": _stack_over(
+                lambda k: _mamba_params(k, cfg, n_mamba),
+                jax.random.fold_in(Lk, 0), n_periods),
+            "attn": _stack_over(
+                lambda k: _attn_params(k, cfg, 0),
+                jax.random.fold_in(Lk, 1), n_periods),
+            "moe": _stack_over(
+                lambda k: _moe_params(k, cfg, n_moe),
+                jax.random.fold_in(Lk, 2), n_periods),
+            "mlp": _stack_over(
+                lambda k: _mlp_params(k, cfg, n_mlp),
+                jax.random.fold_in(Lk, 3), n_periods),
+            "norms": _stack_over(
+                lambda k: _norm_params(cfg, period),
+                jax.random.fold_in(Lk, 4), n_periods),
+        }
+        params["periods"] = pp
+    elif cfg.family == "encdec":
+        enc = {}
+        enc.update(_attn_params(jax.random.fold_in(Lk, 0), cfg,
+                                cfg.encoder_layers, kv_heads=cfg.n_heads))
+        enc.update(_mlp_params(jax.random.fold_in(Lk, 1), cfg,
+                               cfg.encoder_layers))
+        enc.update(_norm_params(cfg, cfg.encoder_layers))
+        params["enc_layers"] = enc
+        params["enc_pos"] = (jax.random.normal(
+            keys[3], (cfg.encoder_seq, d), jnp.float32) * 0.02).astype(dt)
+        dec = {}
+        dec.update(_attn_params(jax.random.fold_in(Lk, 2), cfg, n))
+        dec.update(_attn_params(jax.random.fold_in(Lk, 3), cfg, n,
+                                prefix="c", kv_heads=cfg.n_heads))
+        dec.update(_mlp_params(jax.random.fold_in(Lk, 4), cfg, n))
+        dec.update(_norm_params(cfg, n, ("ln1", "ln2", "ln3")))
+        params["layers"] = dec
+    else:
+        raise ValueError(f"unknown family {cfg.family}")
+    return params
+
+
+def _stack_over(fn, key, n):
+    trees = [fn(jax.random.fold_in(key, i)) for i in range(n)]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+# --------------------------------------------------------------- forward ---
+
+def _maybe_remat(fn, cfg: ArchConfig):
+    return jax.checkpoint(fn) if cfg.remat else fn
+
+
+def _unroll(cfg: ArchConfig, n: int) -> int:
+    # 0 = full unroll (dry-run exact-FLOPs mode; cost_analysis counts scan
+    # bodies once, so rooflines lower with unrolled stacks)
+    return n if cfg.scan_unroll == 0 else min(cfg.scan_unroll, n)
+
+
+def _dense_block(x, lp, cfg, positions, cache, cache_len, pos, moe: bool):
+    h, new_kv = L.attention(L.norm(x, lp, cfg, "ln1"), lp, cfg,
+                            positions=positions, cache=cache,
+                            cache_len=cache_len, pos=pos)
+    x = x + h
+    h2 = L.norm(x, lp, cfg, "ln2")
+    x = x + (L.moe_layer(h2, lp, cfg) if moe else L.mlp(h2, lp, cfg))
+    return x, new_kv
+
+
+def _stack_apply(x, stacked, cfg, positions, caches, cache_len, pos,
+                 block_fn):
+    """lax.scan over stacked layer params (+ per-layer caches)."""
+    def body(carry, per):
+        lp, lcache = per
+        y, new_cache = block_fn(carry, lp, cfg, positions, lcache,
+                                cache_len, pos)
+        return y, new_cache
+    body = _maybe_remat(body, cfg)
+    n = jax.tree.leaves(stacked)[0].shape[0]
+    x, new_caches = jax.lax.scan(body, x, (stacked, caches),
+                                 unroll=_unroll(cfg, n))
+    return x, new_caches
+
+
+def _empty_caches(cfg, n, like):
+    return None if like is None else jax.tree.map(
+        lambda t: jnp.broadcast_to(t, (n,) + t.shape), like)
+
+
+def forward(params: Params, cfg: ArchConfig, tokens: jnp.ndarray, *,
+            caches=None, cache_len: Optional[int] = None,
+            pos=None, patch_embeds=None, enc_frames=None,
+            ) -> Tuple[jnp.ndarray, Any]:
+    """Run the backbone; returns (final hidden states (B,S,d), new caches).
+
+    * train:   caches=None, cache_len=None, pos=None
+    * prefill: cache_len=S_max  -> caches returned
+    * decode:  caches=..., pos=scalar position
+    """
+    B, S = tokens.shape
+    x = params["embed"][tokens].astype(_dtype(cfg))
+    if cfg.family == "vlm" and patch_embeds is not None and pos is None:
+        # stubbed vision frontend: prepend patch embeddings, keep length S
+        # (patches only enter at train/prefill; decode steps are text-only)
+        npatch = patch_embeds.shape[1]
+        x = jnp.concatenate([patch_embeds.astype(x.dtype), x[:, npatch:]], 1)
+    x = shard(x, "batch", "seq", None)
+    if pos is None:
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    else:
+        positions = pos + jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+    if cfg.family in ("dense", "vlm", "moe"):
+        moe = cfg.family == "moe"
+        block = functools.partial(_dense_block, moe=moe)
+        x, new_caches = _stack_apply(x, params["layers"], cfg, positions,
+                                     caches, cache_len, pos, block)
+    elif cfg.family == "ssm":
+        mode = ("train" if cache_len is None and pos is None
+                else "prefill" if cache_len is not None else "decode")
+
+        def block(x, lp, cfg_, positions_, lcache, cache_len_, pos_):
+            h, nc = L.mamba2_layer(L.norm(x, lp, cfg_, "ln1"), lp, cfg_,
+                                   cache=lcache, mode=mode)
+            return x + h, nc
+        if mode == "decode" and caches is None:
+            caches = {"h": jnp.zeros(
+                (cfg.n_layers, B, cfg.ssm_heads, cfg.ssm_state,
+                 cfg.ssm_head_dim), jnp.float32)}
+        x, new_caches = _stack_apply(x, params["layers"], cfg, positions,
+                                     caches, cache_len, pos, block)
+    elif cfg.family == "hybrid":
+        x, new_caches = _hybrid_forward(params, cfg, x, positions,
+                                        caches, cache_len, pos)
+    elif cfg.family == "encdec":
+        x, new_caches = _encdec_forward(params, cfg, x, positions,
+                                        caches, cache_len, pos, enc_frames)
+    else:
+        raise ValueError(cfg.family)
+
+    x = L.norm(x, params, cfg, "final")
+    return x, new_caches
+
+
+def _hybrid_forward(params, cfg, x, positions, caches, cache_len, pos):
+    period = cfg.attn_period
+    n_moe = period // 2
+
+    def period_block(x, pp, cfg_, positions_, pcache, cache_len_, pos_):
+        m_i, d_i = 0, 0
+        new_cache = {"h": [], "k": None, "v": None}
+        for i in range(period):
+            nm = {k: v[i] for k, v in pp["norms"].items()}
+            h_in = L.norm(x, {**nm}, cfg_, "ln1")
+            mode = ("train" if cache_len_ is None and pos_ is None
+                    else "prefill" if cache_len_ is not None else "decode")
+            if i == period - 1:  # attention layer
+                kv = (None if pcache is None or "k" not in pcache
+                      else {"k": pcache["k"], "v": pcache["v"]})
+                h, kv_new = L.attention(h_in, pp["attn"], cfg_,
+                                        positions=positions_, cache=kv,
+                                        cache_len=cache_len_, pos=pos_)
+                if kv_new is not None:
+                    new_cache["k"], new_cache["v"] = kv_new["k"], kv_new["v"]
+            else:
+                mp = {k: v[m_i] for k, v in pp["mamba"].items()}
+                hc = (None if pcache is None or "h" not in pcache
+                      else {"h": pcache["h"][m_i]})
+                h, hc_new = L.mamba2_layer(h_in, mp, cfg_, cache=hc,
+                                           mode=mode)
+                if hc_new is not None:
+                    new_cache["h"].append(hc_new["h"])
+                m_i += 1
+            x = x + h
+            h2 = L.norm(x, {**nm}, cfg_, "ln2")
+            if i % 2 == 1:  # MoE every other layer
+                k_moe = (i // 2) % max(1, n_moe)
+                ep = {k: v[k_moe] for k, v in pp["moe"].items()}
+                x = x + L.moe_layer(h2, ep, cfg_)
+            else:
+                k_mlp = (i // 2) % max(1, period - n_moe)
+                fp = {k: v[k_mlp] for k, v in pp["mlp"].items()}
+                x = x + L.mlp(h2, fp, cfg_)
+        out_cache = None
+        if new_cache["h"] or new_cache["k"] is not None:
+            out_cache = {}
+            if new_cache["h"]:
+                out_cache["h"] = jnp.stack(new_cache["h"])
+            if new_cache["k"] is not None:
+                out_cache["k"], out_cache["v"] = new_cache["k"], new_cache["v"]
+        return x, out_cache
+
+    def body(carry, per):
+        pp, pcache = per
+        return period_block(carry, pp, cfg, positions, pcache,
+                            cache_len, pos)
+    body = _maybe_remat(body, cfg)
+    n = jax.tree.leaves(params["periods"])[0].shape[0]
+    x, new_caches = jax.lax.scan(body, x, (params["periods"], caches),
+                                 unroll=_unroll(cfg, n))
+    return x, new_caches
+
+
+def _encdec_forward(params, cfg, x, positions, caches, cache_len, pos,
+                    enc_frames):
+    B = x.shape[0]
+    # ---- encoder (runs at train + prefill; cached as cross-kv at decode)
+    if caches is None or "ck" not in caches:
+        assert enc_frames is not None, "encdec needs enc_frames"
+        e = enc_frames.astype(x.dtype) + params["enc_pos"][None]
+        e = shard(e, "batch", "seq", None)
+        epos = jnp.broadcast_to(jnp.arange(e.shape[1])[None],
+                                (B, e.shape[1]))
+
+        def enc_block(carry, lp):
+            h, _ = L.attention(L.norm(carry, lp, cfg, "ln1"), lp, cfg,
+                               positions=epos, causal=False)
+            carry = carry + h
+            carry = carry + L.mlp(L.norm(carry, lp, cfg, "ln2"), lp, cfg)
+            return carry, None
+        enc_out, _ = jax.lax.scan(
+            _maybe_remat(enc_block, cfg), e, params["enc_layers"],
+            unroll=_unroll(cfg, cfg.encoder_layers))
+        # per-decoder-layer cross kv
+        H, D = cfg.n_heads, cfg.head_dim
+
+        def cross_kv(lp):
+            ck = jnp.einsum("bsd,dh->bsh", enc_out, lp["cwk"])
+            cv = jnp.einsum("bsd,dh->bsh", enc_out, lp["cwv"])
+            S_e = enc_out.shape[1]
+            return (ck.reshape(B, S_e, H, D), cv.reshape(B, S_e, H, D))
+        cks, cvs = jax.vmap(cross_kv)(params["layers"])  # stacked over L
+    else:
+        cks, cvs = caches["ck"], caches["cv"]
+
+    self_caches = None
+    if caches is not None and "k" in caches:
+        self_caches = {"k": caches["k"], "v": caches["v"]}
+
+    def dec_block(carry, per):
+        lp, lc, ck, cv = per
+        h, kv_new = L.attention(L.norm(carry, lp, cfg, "ln1"), lp, cfg,
+                                positions=positions, cache=lc,
+                                cache_len=cache_len, pos=pos)
+        carry = carry + h
+        h2, _ = L.attention(L.norm(carry, lp, cfg, "ln2"), lp, cfg,
+                            positions=positions, kv_override=(ck, cv),
+                            prefix="c")
+        carry = carry + h2
+        carry = carry + L.mlp(L.norm(carry, lp, cfg, "ln3"), lp, cfg)
+        return carry, kv_new
+
+    x, new_kv = jax.lax.scan(_maybe_remat(dec_block, cfg), x,
+                             (params["layers"], self_caches, cks, cvs),
+                             unroll=_unroll(cfg, cfg.n_layers))
+    new_caches = None
+    if new_kv is not None and (cache_len is not None or pos is not None):
+        new_caches = {"k": new_kv["k"], "v": new_kv["v"],
+                      "ck": cks, "cv": cvs}
+    return x, new_caches
+
+
+# ---------------------------------------------------------------- logits ---
+
+def logits_from_hidden(params: Params, cfg: ArchConfig,
+                       hidden: jnp.ndarray) -> jnp.ndarray:
+    """(B, S, d) -> (B, S, Vp) with padded-vocab masking."""
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    logits = jnp.einsum("bsd,vd->bsv", hidden, table,
+                        preferred_element_type=jnp.float32)
+    logits = shard(logits, "batch", "seq", "vocab")
+    if cfg.padded_vocab != cfg.vocab:
+        mask = jnp.arange(cfg.padded_vocab) < cfg.vocab
+        logits = jnp.where(mask[None, None, :], logits, -1e30)
+    return logits

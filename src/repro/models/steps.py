@@ -1,0 +1,114 @@
+"""Train / prefill / decode step functions (the pjit entry points).
+
+`decode_step` is where the paper lands in the serving stack: with
+``cfg.mips_mode='boundedme'`` the greedy next-token argmax over the (large,
+vocab-sharded) unembedding runs as a BoundedME bandit instead of a full
+matvec + argmax — zero preprocessing, per-query (eps, delta) knob.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core.boundedme_jax import bounded_me_batched, make_plan
+from repro.distributed.sharding import current_mesh, shard
+from repro.models.model import forward, logits_from_hidden
+from repro.optim.adamw import (AdamWConfig, OptState, apply_updates,
+                               compress_grads)
+
+__all__ = ["loss_fn", "train_step", "prefill_step", "decode_step",
+           "make_mips_plan"]
+
+
+def loss_fn(params, cfg: ArchConfig, batch: Dict[str, jnp.ndarray]):
+    h, _ = forward(params, cfg, batch["tokens"],
+                   patch_embeds=batch.get("patch_embeds"),
+                   enc_frames=batch.get("enc_frames"))
+    logits = logits_from_hidden(params, cfg, h)          # (B,S,Vp) f32
+    labels = batch["labels"]
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    loss = jnp.mean(nll)
+    acc = jnp.mean(jnp.argmax(logits, -1) == labels)
+    return loss, {"loss": loss, "acc": acc}
+
+
+def train_step(params, opt_state: OptState, batch, cfg: ArchConfig,
+               opt_cfg: AdamWConfig, compress: bool = False):
+    (loss, metrics), grads = jax.value_and_grad(
+        lambda p: loss_fn(p, cfg, batch), has_aux=True)(params)
+    err = opt_state.err
+    if compress and err is not None:
+        grads, err = compress_grads(grads, err, enabled=True)
+    params, opt_state, opt_metrics = apply_updates(params, grads, opt_state,
+                                                   opt_cfg)
+    opt_state = opt_state._replace(err=err)
+    metrics.update(opt_metrics)
+    return params, opt_state, metrics
+
+
+def prefill_step(params, cfg: ArchConfig, tokens, cache_len: int,
+                 patch_embeds=None, enc_frames=None):
+    """Process the prompt, return (last-position hidden, caches)."""
+    h, caches = forward(params, cfg, tokens, cache_len=cache_len,
+                        patch_embeds=patch_embeds, enc_frames=enc_frames)
+    return h[:, -1], caches
+
+
+def make_mips_plan(cfg: ArchConfig, K: int = 1):
+    """Static BoundedME plan for the unembedding MIPS (trace-time)."""
+    return make_plan(cfg.padded_vocab, cfg.d_model, K=K, eps=cfg.mips_eps,
+                     delta=cfg.mips_delta, value_range=4.0,
+                     tile=8, block=min(512, cfg.d_model))
+
+
+def decode_step(params, cfg: ArchConfig, caches, tokens, pos,
+                key: Optional[jax.Array] = None):
+    """One greedy decode step: returns (next_token (B,), new caches).
+
+    mips_mode='exact'     -> full (d x Vp) matvec + argmax (the baseline)
+    mips_mode='boundedme' -> the paper's bandit over the unembedding rows
+    """
+    B = tokens.shape[0]
+    h, new_caches = forward(params, cfg, tokens, caches=caches, pos=pos)
+    hid = h[:, -1]                                        # (B, d)
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    if cfg.mips_mode == "boundedme":
+        if key is None:
+            key = jax.random.PRNGKey(0)
+        keys = jax.random.split(jax.random.fold_in(key, 1), B)
+        mesh = current_mesh()
+        if (mesh is not None and "model" in mesh.axis_names
+                and cfg.padded_vocab % mesh.shape["model"] == 0):
+            # distributed MIPS: shard-local bandits + K-merge (the GSPMD
+            # fallback involuntarily replicates the gathered working set —
+            # see EXPERIMENTS.md §Perf iteration 1)
+            from repro.core.mips import sharded_mips_topk
+            from repro.distributed.sharding import spec_of
+            baxes = spec_of("batch")[0]
+            ids, _ = sharded_mips_topk(
+                table, hid.astype(table.dtype), keys, K=1, mesh=mesh,
+                batch_axes=baxes, n_valid=cfg.vocab,
+                eps=cfg.mips_eps, delta=cfg.mips_delta,
+                value_range=4.0, block=min(512, cfg.d_model),
+                final_exact=True)
+        else:
+            plan = make_mips_plan(cfg, K=1)
+            ids, _ = bounded_me_batched(table, hid, keys, plan=plan,
+                                        final_exact=True)
+        next_tok = ids[:, 0]
+    else:
+        logits = jnp.einsum("bd,vd->bv", hid, table,
+                            preferred_element_type=jnp.float32)
+        logits = shard(logits, "batch", "vocab")
+        if cfg.padded_vocab != cfg.vocab:
+            mask = jnp.arange(cfg.padded_vocab) < cfg.vocab
+            logits = jnp.where(mask[None], logits, -1e30)
+        next_tok = jnp.argmax(logits, axis=-1)
+    return next_tok.astype(jnp.int32), new_caches

@@ -1,0 +1,69 @@
+"""MIPS baselines: correctness limits + cost accounting sanity."""
+
+import numpy as np
+import pytest
+
+from repro.baselines import (build_greedy, build_lsh, build_pca_tree,
+                             exact_mips, greedy_mips, lsh_mips, pca_mips)
+
+
+@pytest.fixture(scope="module")
+def data():
+    rng = np.random.default_rng(0)
+    V = rng.normal(size=(1500, 96)).astype(np.float64)
+    q = rng.normal(size=96)
+    return V, q
+
+
+def test_exact_is_argmax(data):
+    V, q = data
+    r = exact_mips(V, q, K=3)
+    assert r.topk[0] == np.argmax(V @ q)
+    assert r.query_multiplies == V.size
+
+
+def test_greedy_full_budget_is_exact(data):
+    V, q = data
+    idx = build_greedy(V)
+    r = greedy_mips(idx, q, K=5, budget=V.shape[0])
+    assert set(r.topk.tolist()) == set(exact_mips(V, q, 5).topk.tolist())
+
+
+def test_greedy_budget_tradeoff(data):
+    V, q = data
+    idx = build_greedy(V)
+    truth = set(exact_mips(V, q, 5).topk.tolist())
+    prec = []
+    for budget in (10, 100, 1000):
+        r = greedy_mips(idx, q, K=5, budget=budget)
+        prec.append(len(set(r.topk.tolist()) & truth) / 5)
+    assert prec[-1] >= prec[0]
+    assert prec[-1] >= 0.8  # large budget ~ exact
+
+
+def test_lsh_high_params_high_recall(data):
+    V, q = data
+    idx = build_lsh(V, a=4, b=48, seed=1)
+    truth = exact_mips(V, q, 1).topk[0]
+    r = lsh_mips(idx, q, K=1)
+    # OR-amplified 48 tables at 4 bits: the argmax bucket almost surely hits
+    assert truth in r.topk or r.candidates > 0
+    assert r.preprocess_multiplies == V.shape[0] * (V.shape[1] + 1) * 4 * 48
+
+
+def test_pca_spill_recovers_truth(data):
+    V, q = data
+    tree = build_pca_tree(V, depth=4)
+    truth = exact_mips(V, q, 1).topk[0]
+    r = pca_mips(tree, q, K=1, spill=1e9)  # full spill == exhaustive
+    assert r.topk[0] == truth
+    r0 = pca_mips(tree, q, K=1, spill=0.0)
+    assert r0.candidates <= r.candidates
+
+
+def test_costs_monotone_in_candidates(data):
+    V, q = data
+    tree = build_pca_tree(V, depth=6)
+    r_narrow = pca_mips(tree, q, K=1, spill=0.0)
+    r_wide = pca_mips(tree, q, K=1, spill=0.5)
+    assert r_narrow.query_multiplies <= r_wide.query_multiplies

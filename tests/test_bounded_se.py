@@ -1,0 +1,70 @@
+"""BoundedSE (beyond-paper anytime variant): guarantee + adaptivity."""
+
+import numpy as np
+import pytest
+
+from repro.core import bounded_me
+from repro.core.bounded_se import bounded_se
+from repro.data.synthetic import adversarial_dataset
+
+
+def _easy_instance(n, N, gap=0.3, seed=0):
+    """One clearly-best arm: large-gap (easy) MAB-BP instance."""
+    rng = np.random.default_rng(seed)
+    means = np.full(n, 0.3)
+    means[0] = 0.3 + gap
+    R = (rng.uniform(0, 1, (n, N)) < means[:, None]).astype(np.float32)
+    # random oracle order is fine here (not adversarial)
+    return R, means
+
+
+def test_guarantee_value_adversarial_uniform_order():
+    """Adversarial VALUES, uniform pull order (the MIPS model: the
+    algorithm draws coordinates in its own random order).  The anytime
+    radius requires this; order-adversaries need BoundedME (docstring)."""
+    eps, delta = 0.2, 0.2
+    rng = np.random.default_rng(99)
+    fails = 0
+    trials = 20
+    for s in range(trials):
+        R = adversarial_dataset(300, 3000, seed=s)
+        R = rng.permuted(R, axis=1)          # algorithm-controlled order
+        means = R.mean(axis=1)
+        res = bounded_se(R, K=1, eps=eps, delta=delta)
+        if means.max() - means[res.topk[0]] >= eps:
+            fails += 1
+    assert fails / trials <= delta + 0.12
+
+
+def test_order_adversary_documented_failure_mode():
+    """Under the paper's order-adversary the anytime variant may return a
+    tied-looking arm early — this is the documented reason BoundedME (not
+    BoundedSE) is the order-robust default.  We only assert it never
+    exceeds the exhaustive budget there."""
+    R = adversarial_dataset(300, 3000, seed=0)
+    res = bounded_se(R, K=1, eps=0.2, delta=0.2)
+    assert res.total_pulls <= R.size
+
+
+def test_adaptively_beats_boundedme_on_easy_instances():
+    R, means = _easy_instance(500, 5000, gap=0.35)
+    se = bounded_se(R, K=1, eps=0.05, delta=0.1)
+    me = bounded_me(R, K=1, eps=0.05, delta=0.1)
+    assert se.topk[0] == 0 and me.topk[0] == 0
+    # the anytime radius stops early once the gap is resolved
+    assert se.total_pulls < me.total_pulls
+
+
+def test_never_exceeds_exhaustive():
+    R = adversarial_dataset(200, 1000, seed=3)
+    res = bounded_se(R, K=1, eps=1e-6, delta=0.05)
+    assert res.total_pulls <= R.size
+    # eps -> 0: must identify the exact best arm (radius hits 0 at m=N)
+    assert res.topk[0] == np.argmax(R.mean(axis=1))
+
+
+def test_topk():
+    R, means = _easy_instance(300, 4000, gap=0.25, seed=7)
+    means[1] = 0.5
+    res = bounded_se(R, K=2, eps=0.3, delta=0.1)
+    assert 0 in res.topk.tolist()

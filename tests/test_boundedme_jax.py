@@ -1,0 +1,89 @@
+"""Blocked/tiled jitted BoundedME: correctness vs exact, pallas parity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bounded_me_blocked, bounded_me_batched, make_plan
+
+
+def _data(n, N, seed=0):
+    rng = np.random.default_rng(seed)
+    return (rng.normal(size=(n, N)).astype(np.float32),
+            rng.normal(size=N).astype(np.float32))
+
+
+class TestBlocked:
+    def test_exact_recovery_small_eps(self):
+        V, q = _data(2048, 4096)
+        ids, scores, plan = bounded_me_blocked(
+            V, q, jax.random.PRNGKey(0), K=5, eps=1e-4, delta=0.05,
+            value_range=8.0, block=256, final_exact=True)
+        true = np.argsort(-(V @ q))[:5]
+        assert set(np.asarray(ids).tolist()) == set(true.tolist())
+
+    def test_score_estimates_mean_product(self):
+        V, q = _data(512, 2048, seed=1)
+        ids, scores, _ = bounded_me_blocked(
+            V, q, jax.random.PRNGKey(1), K=3, eps=1e-4, delta=0.05,
+            value_range=8.0, final_exact=True)
+        for i, s in zip(np.asarray(ids), np.asarray(scores)):
+            assert abs(s - float(V[i] @ q) / V.shape[1]) < 1e-3
+
+    def test_plan_flop_accounting(self):
+        plan = make_plan(10_000, 100_000, K=1, eps=0.3, delta=0.1,
+                         value_range=1.0, block=512)
+        assert plan.total_multiplies <= plan.naive_multiplies
+        assert plan.speedup >= 1.0
+
+    @given(st.integers(9, 600), st.integers(65, 3000), st.integers(1, 6))
+    @settings(max_examples=12, deadline=None)
+    def test_ragged_shapes_no_crash(self, n, N, K):
+        """Property: arbitrary (non-multiple) n, N, K are handled by padding."""
+        V, q = _data(n, N, seed=n + N)
+        ids, scores, _ = bounded_me_blocked(
+            V, q, jax.random.PRNGKey(2), K=min(K, n), eps=0.2, delta=0.2,
+            value_range=8.0, tile=8, block=64, final_exact=True)
+        ids = np.asarray(ids)
+        assert ids.shape[0] == min(K, n)
+        assert (0 <= ids).all() and (ids < n).all()
+        assert len(set(ids.tolist())) == ids.shape[0]  # no padded dupes
+
+    def test_top1_quality_moderate_eps(self):
+        V, q = _data(4096, 16384, seed=2)
+        hits = 0
+        for s in range(5):
+            ids, _, _ = bounded_me_blocked(
+                V, q, jax.random.PRNGKey(s), K=1, eps=0.4, delta=0.1,
+                value_range=8.0, final_exact=True)
+            hits += int(ids[0]) == int(np.argmax(V @ q))
+        assert hits >= 4  # eps=0.4 @ delta=0.1 should nearly always get top-1
+
+    def test_batched_matches_single(self):
+        V, q = _data(1024, 2048, seed=3)
+        Q = np.stack([q, -q, q * 0.5])
+        plan = make_plan(1024, 2048, K=2, eps=0.1, delta=0.1,
+                         value_range=8.0)
+        keys = jax.random.split(jax.random.PRNGKey(0), 3)
+        ids_b, scores_b = bounded_me_batched(V, Q, keys, plan=plan,
+                                             final_exact=True)
+        for i in range(3):
+            ids_s, scores_s, _ = bounded_me_blocked(
+                V, Q[i], keys[i], plan=plan, final_exact=True)
+            assert np.array_equal(np.asarray(ids_b[i]), np.asarray(ids_s))
+
+
+class TestPallasParity:
+    @pytest.mark.parametrize("block,tile", [(128, 8), (256, 8), (64, 4)])
+    def test_pallas_equals_einsum_path(self, block, tile):
+        V, q = _data(512, 2048, seed=4)
+        kw = dict(K=3, eps=0.3, delta=0.1, value_range=8.0, tile=tile,
+                  block=block)
+        i1, s1, _ = bounded_me_blocked(V, q, jax.random.PRNGKey(7),
+                                       use_pallas=True, **kw)
+        i2, s2, _ = bounded_me_blocked(V, q, jax.random.PRNGKey(7),
+                                       use_pallas=False, **kw)
+        assert np.array_equal(np.asarray(i1), np.asarray(i2))
+        np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-5)

@@ -1,0 +1,85 @@
+"""Unit + property tests for the without-replacement concentration bounds."""
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bounds
+
+
+class TestRho:
+    def test_rho_decreases_to_zero(self):
+        N = 100
+        vals = [bounds.rho_m(m, N) for m in range(1, N + 1)]
+        assert all(v >= -1e-12 for v in vals)
+        assert vals[-1] <= 1.0 / N + 1e-12  # nearly 0 at m=N
+        assert all(a >= b - 1e-12 for a, b in zip(vals, vals[1:]))
+
+    def test_rho_at_one_is_one(self):
+        assert bounds.rho_m(1, 1000) == pytest.approx(1.0, abs=1e-9)
+
+    @given(st.integers(2, 10_000), st.integers(1, 10_000))
+    @settings(max_examples=200, deadline=None)
+    def test_rho_in_unit_interval(self, N, m):
+        m = min(m, N)
+        assert -1e-12 <= bounds.rho_m(m, N) <= 1.0 + 1e-12
+
+
+class TestMRequired:
+    @given(st.floats(1e-3, 0.99), st.floats(1e-3, 0.5),
+           st.integers(2, 1_000_000))
+    @settings(max_examples=300, deadline=None)
+    def test_never_exceeds_N(self, eps, delta, N):
+        assert 1 <= bounds.m_required(eps, delta, N) <= N
+
+    def test_saturates_as_eps_to_zero(self):
+        N = 1000
+        assert bounds.m_required(1e-9, 0.1, N) == N
+
+    def test_monotone_in_eps(self):
+        N = 100_000
+        ms = [bounds.m_required(e, 0.1, N) for e in (0.5, 0.2, 0.1, 0.05)]
+        assert ms == sorted(ms)
+
+    def test_beats_hoeffding(self):
+        # the whole point of MAB-BP: m(u) <= min(N, Hoeffding m)
+        for eps in (0.01, 0.05, 0.2):
+            for N in (100, 10_000):
+                m_wr = bounds.m_required(eps, 0.1, N)
+                m_h = bounds.hoeffding_required(eps, 0.1)
+                assert m_wr <= min(N, m_h) + 1
+
+    def test_satisfies_corollary_inequality(self):
+        # plugging m back in: deviation at m samples should be <= eps
+        for eps in (0.02, 0.1, 0.3):
+            for N in (500, 50_000):
+                m = bounds.m_required(eps, 0.05, N)
+                if m < N:
+                    assert bounds.deviation_bound(m, N, 0.05) <= eps * 1.01
+
+
+class TestEmpiricalCoverage:
+    """Statistical validation of Corollary 1 on real sampling."""
+
+    @pytest.mark.parametrize("eps,delta", [(0.1, 0.1), (0.05, 0.2)])
+    def test_without_replacement_coverage(self, eps, delta):
+        rng = np.random.default_rng(0)
+        N = 2000
+        x = rng.uniform(0, 1, N)
+        mu = x.mean()
+        m = bounds.m_required(eps, delta, N)
+        trials = 400
+        fails = 0
+        for t in range(trials):
+            sample = rng.choice(x, size=m, replace=False)
+            if sample.mean() - mu > eps:
+                fails += 1
+        # failure rate must respect delta (generous slack for 400 trials)
+        assert fails / trials <= delta + 0.05
+
+    def test_exact_at_full_sample(self):
+        rng = np.random.default_rng(1)
+        x = rng.uniform(0, 1, 512)
+        assert bounds.deviation_bound(512, 512, 0.01) == 0.0

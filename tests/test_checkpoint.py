@@ -1,0 +1,60 @@
+"""Checkpointer: roundtrip, atomicity, retention, resume semantics."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpointer import (latest_step, list_steps,
+                                           restore_checkpoint,
+                                           save_checkpoint)
+
+
+def _tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {"a": jnp.asarray(rng.normal(size=(4, 8)), jnp.float32),
+            "nested": {"b": jnp.asarray(rng.normal(size=(3,)), jnp.bfloat16)},
+            "step": jnp.int32(7)}
+
+
+def test_roundtrip(tmp_path):
+    t = _tree()
+    save_checkpoint(str(tmp_path), 10, t)
+    restored, step = restore_checkpoint(str(tmp_path), t)
+    assert step == 10
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_keep_last(tmp_path):
+    t = _tree()
+    for s in (1, 2, 3, 4, 5):
+        save_checkpoint(str(tmp_path), s, t, keep_last=2)
+    assert list_steps(str(tmp_path)) == [4, 5]
+    assert latest_step(str(tmp_path)) == 5
+
+
+def test_partial_write_invisible(tmp_path):
+    """A crashed (un-renamed) tmp dir must never be restored from."""
+    t = _tree()
+    save_checkpoint(str(tmp_path), 3, t)
+    os.makedirs(tmp_path / "step_00000009.tmp")  # simulated crash
+    assert latest_step(str(tmp_path)) == 3
+    _, step = restore_checkpoint(str(tmp_path), t)
+    assert step == 3
+
+
+def test_shape_mismatch_raises(tmp_path):
+    t = _tree()
+    save_checkpoint(str(tmp_path), 1, t)
+    bad = dict(t, a=jnp.zeros((5, 8)))
+    with pytest.raises(ValueError):
+        restore_checkpoint(str(tmp_path), bad)
+
+
+def test_restore_empty_raises(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        restore_checkpoint(str(tmp_path), _tree())

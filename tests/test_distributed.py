@@ -1,0 +1,125 @@
+"""Distributed (shard_map) paths vs single-device references.
+
+Run on 8 fake CPU devices in a subprocess so the main pytest process keeps
+its 1-device view (per the dry-run isolation rule).
+"""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+_ENV_CODE_PREAMBLE = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np
+"""
+
+
+def _run(code: str, timeout=480):
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    r = subprocess.run([sys.executable, "-c", _ENV_CODE_PREAMBLE + code],
+                       env=env, capture_output=True, text=True,
+                       timeout=timeout)
+    assert "OK" in r.stdout, r.stdout + "\n" + r.stderr
+
+
+@pytest.mark.slow
+def test_sharded_mips_matches_exact():
+    _run(r"""
+from repro.core.mips import sharded_mips_topk
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+rng = np.random.default_rng(0)
+n, N, B, K = 1024, 1024, 4, 3
+table = jnp.asarray(rng.normal(size=(n, N)), jnp.float32)
+Q = jnp.asarray(rng.normal(size=(B, N)), jnp.float32)
+keys = jax.random.split(jax.random.PRNGKey(0), B)
+ids, scores = jax.jit(lambda t, q, k: sharded_mips_topk(
+    t, q, k, K=K, mesh=mesh, batch_axes="data", eps=1e-4, delta=0.05,
+    value_range=8.0, block=128, final_exact=True))(table, Q, keys)
+truth = np.argsort(-(np.asarray(table) @ np.asarray(Q).T), axis=0)[:K].T
+for b in range(B):
+    assert set(np.asarray(ids)[b].tolist()) == set(truth[b].tolist()), b
+print("OK")
+""")
+
+
+@pytest.mark.slow
+def test_sharded_mips_masks_padded_vocab():
+    _run(r"""
+from repro.core.mips import sharded_mips_topk
+mesh = jax.make_mesh((1, 8), ("data", "model"))
+rng = np.random.default_rng(1)
+n, n_valid, N = 1024, 900, 512
+table = jnp.asarray(-np.abs(rng.normal(size=(n, N))), jnp.float32)
+table = table.at[n_valid:].set(0.0)       # zero pad rows would win (score 0)
+Q = jnp.asarray(np.abs(rng.normal(size=(2, N))), jnp.float32)
+keys = jax.random.split(jax.random.PRNGKey(0), 2)
+ids, _ = jax.jit(lambda t, q, k: sharded_mips_topk(
+    t, q, k, K=2, mesh=mesh, batch_axes=None, n_valid=n_valid, eps=1e-4,
+    delta=0.05, value_range=8.0, block=128, final_exact=True))(table, Q, keys)
+assert int(np.asarray(ids).max()) < n_valid, np.asarray(ids)
+print("OK")
+""")
+
+
+@pytest.mark.slow
+def test_ep_moe_matches_fallback():
+    _run(r"""
+import dataclasses
+from repro.configs import REGISTRY
+from repro.distributed.sharding import logical_mesh
+from repro.models import layers as L
+from repro.models.model import init_params
+cfg = dataclasses.replace(REGISTRY["qwen3-moe-30b-a3b"].smoke(),
+                          capacity_factor=16.0)
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+params = init_params(cfg, jax.random.PRNGKey(0))
+lp = {k: v[0] for k, v in params["layers"].items()
+      if k in ("router", "w_gate", "w_up", "w_down")}
+x = jax.random.normal(jax.random.PRNGKey(1), (4, 32, cfg.d_model),
+                      jnp.float32)
+y_ref = L.moe_layer(x, lp, cfg)       # no mesh bound: GSPMD/vmapped path
+with logical_mesh(mesh):
+    y_ep = jax.jit(lambda x, lp: L.moe_layer(x, lp, cfg))(x, lp)
+err = float(jnp.abs(y_ref - y_ep).max() / (jnp.abs(y_ref).max() + 1e-9))
+assert err < 2e-5, err
+print("OK")
+""")
+
+
+@pytest.mark.slow
+def test_boundedme_decode_sharded_vs_exact():
+    """decode_step with vocab-sharded table + shard_map bandit == exact."""
+    _run(r"""
+import dataclasses
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.configs import REGISTRY
+from repro.distributed.sharding import logical_mesh
+from repro.distributed.specs import param_pspecs
+from repro.models.model import init_params
+from repro.models.steps import decode_step, prefill_step
+cfg = dataclasses.replace(REGISTRY["qwen1.5-0.5b"].smoke(), vocab_pad=64,
+                          mips_eps=0.01)
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+params = init_params(cfg, jax.random.PRNGKey(0))
+tok = jnp.asarray(np.random.default_rng(0).integers(0, cfg.vocab, (4, 8)),
+                  jnp.int32)
+with logical_mesh(mesh):
+    psh = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                       param_pspecs(cfg, params, mesh))
+    params = jax.device_put(params, psh)
+    _, caches = prefill_step(params, cfg, tok, cache_len=16)
+    cfg_b = dataclasses.replace(cfg, mips_mode="boundedme")
+    cfg_e = dataclasses.replace(cfg, mips_mode="exact")
+    tb, _ = jax.jit(lambda p, c, t: decode_step(
+        p, cfg_b, c, t, jnp.int32(8), key=jax.random.PRNGKey(1)))(
+        params, caches, tok[:, -1:])
+    te, _ = jax.jit(lambda p, c, t: decode_step(
+        p, cfg_e, c, t, jnp.int32(8)))(params, caches, tok[:, -1:])
+assert np.array_equal(np.asarray(tb), np.asarray(te)), (tb, te)
+print("OK")
+""")

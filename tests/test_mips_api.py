@@ -1,0 +1,53 @@
+"""Public MIPS/NNS API behaviour."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import exact_topk, mips_topk, nns_topk
+
+
+@pytest.fixture(scope="module")
+def data():
+    rng = np.random.default_rng(0)
+    return (rng.normal(size=(800, 1024)).astype(np.float32),
+            rng.normal(size=1024).astype(np.float32))
+
+
+def test_exact_topk(data):
+    V, q = data
+    ids, scores = exact_topk(jnp.asarray(V), jnp.asarray(q), K=4)
+    truth = np.argsort(-(V @ q))[:4]
+    np.testing.assert_array_equal(np.asarray(ids), truth)
+    np.testing.assert_allclose(np.asarray(scores),
+                               (V @ q)[truth] / V.shape[1], rtol=1e-5)
+
+
+def test_mips_topk_boundedme_matches_exact_small_eps(data):
+    V, q = data
+    ids, _ = mips_topk(V, q, K=3, method="boundedme", eps=1e-4, delta=0.05,
+                       key=jax.random.PRNGKey(0), final_exact=True)
+    truth = np.argsort(-(V @ q))[:3]
+    assert set(np.asarray(ids).tolist()) == set(truth.tolist())
+
+
+def test_mips_topk_rejects_unknown_method(data):
+    V, q = data
+    with pytest.raises(ValueError):
+        mips_topk(V, q, method="annoy")
+
+
+def test_nns_reduction(data):
+    V, q = data
+    ids, _ = nns_topk(V, q, K=1, method="boundedme", eps=1e-4, delta=0.05,
+                      key=jax.random.PRNGKey(1), final_exact=True)
+    truth = np.argmin(((V - q[None]) ** 2).sum(1))
+    assert int(ids[0]) == int(truth)
+
+
+def test_nns_exact_mode(data):
+    V, q = data
+    ids, _ = nns_topk(V, q, K=1, method="exact")
+    truth = np.argmin(((V - q[None]) ** 2).sum(1))
+    assert int(ids[0]) == int(truth)

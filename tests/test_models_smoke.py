@@ -1,0 +1,122 @@
+"""Per-arch smoke tests: reduced config, one forward + one train step on CPU.
+
+The FULL configs are exercised only via the dry-run (ShapeDtypeStruct, no
+allocation); these instantiate the same family at reduced width/depth and
+assert output shapes + finiteness.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import REGISTRY
+from repro.models.model import forward, init_params, logits_from_hidden
+from repro.models.steps import decode_step, loss_fn, prefill_step, train_step
+from repro.optim.adamw import AdamWConfig, init_opt
+
+ARCHS = sorted(REGISTRY)
+
+
+def _batch(cfg, B=2, S=32, seed=0):
+    rng = np.random.default_rng(seed)
+    b = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32),
+         "labels": jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32)}
+    if cfg.family == "vlm":
+        b["patch_embeds"] = jnp.asarray(
+            rng.normal(size=(B, cfg.n_patches, cfg.d_model)), jnp.float32)
+    if cfg.family == "encdec":
+        b["enc_frames"] = jnp.asarray(
+            rng.normal(size=(B, cfg.encoder_seq, cfg.d_model)), jnp.float32)
+    return b
+
+
+@pytest.fixture(scope="module")
+def smoke_state():
+    cache = {}
+
+    def get(name):
+        if name not in cache:
+            cfg = REGISTRY[name].smoke()
+            params = init_params(cfg, jax.random.PRNGKey(0))
+            cache[name] = (cfg, params)
+        return cache[name]
+    return get
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_shapes_finite(arch, smoke_state):
+    cfg, params = smoke_state(arch)
+    b = _batch(cfg)
+    h, _ = forward(params, cfg, b["tokens"],
+                   patch_embeds=b.get("patch_embeds"),
+                   enc_frames=b.get("enc_frames"))
+    assert h.shape == (2, 32, cfg.d_model)
+    logits = logits_from_hidden(params, cfg, h)
+    assert logits.shape == (2, 32, cfg.padded_vocab)
+    assert bool(jnp.isfinite(logits[..., :cfg.vocab]).all())
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_one_train_step(arch, smoke_state):
+    cfg, params = smoke_state(arch)
+    b = _batch(cfg)
+    opt = init_opt(params)
+    p2, opt2, metrics = train_step(params, opt, b, cfg, AdamWConfig(lr=1e-3))
+    assert bool(jnp.isfinite(metrics["loss"]))
+    assert bool(jnp.isfinite(metrics["grad_norm"]))
+    # params actually moved
+    moved = any(
+        not np.allclose(np.asarray(a, np.float32), np.asarray(bb, np.float32))
+        for a, bb in zip(jax.tree.leaves(params), jax.tree.leaves(p2)))
+    assert moved
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_decode_roundtrip(arch, smoke_state):
+    cfg, params = smoke_state(arch)
+    b = _batch(cfg)
+    kw = {k: b[k] for k in ("patch_embeds", "enc_frames") if k in b}
+    hid, caches = prefill_step(params, cfg, b["tokens"][:, :16],
+                               cache_len=32, **kw)
+    assert hid.shape == (2, cfg.d_model)
+    tok, caches = decode_step(params, cfg, caches, b["tokens"][:, 15:16],
+                              jnp.int32(16))
+    assert tok.shape == (2,)
+    assert bool((tok >= 0).all()) and bool((tok < cfg.vocab).all())
+
+
+@pytest.mark.parametrize("arch", ["qwen1.5-0.5b", "command-r-35b",
+                                  "qwen3-moe-30b-a3b"])
+def test_boundedme_decode_agrees_with_exact(arch, smoke_state):
+    cfg, params = smoke_state(arch)
+    b = _batch(cfg)
+    _, caches = prefill_step(params, cfg, b["tokens"][:, :16], cache_len=32)
+    cfg_b = dataclasses.replace(cfg, mips_mode="boundedme", mips_eps=0.05)
+    cfg_e = dataclasses.replace(cfg, mips_mode="exact")
+    tok_b, _ = decode_step(params, cfg_b, caches, b["tokens"][:, 15:16],
+                           jnp.int32(16), key=jax.random.PRNGKey(3))
+    tok_e, _ = decode_step(params, cfg_e, caches, b["tokens"][:, 15:16],
+                           jnp.int32(16))
+    assert np.array_equal(np.asarray(tok_b), np.asarray(tok_e))
+
+
+def test_decode_consistency_all_families(smoke_state):
+    """Cached decode == uncached forward (cf high to disable MoE drops)."""
+    for arch in ("tinyllama-1.1b", "mamba2-130m", "whisper-medium",
+                 "jamba-v0.1-52b", "qwen3-moe-30b-a3b", "internvl2-26b"):
+        cfg, _ = smoke_state(arch)
+        cfg = dataclasses.replace(cfg, capacity_factor=16.0)
+        params = init_params(cfg, jax.random.PRNGKey(1))
+        b = _batch(cfg)
+        kw = {k: b[k] for k in ("patch_embeds", "enc_frames") if k in b}
+        S = 32
+        h_full, _ = forward(params, cfg, b["tokens"], **kw)
+        _, caches = forward(params, cfg, b["tokens"][:, :S - 1],
+                            cache_len=S, **kw)
+        h_dec, _ = forward(params, cfg, b["tokens"][:, S - 1:],
+                           caches=caches, pos=jnp.int32(S - 1), **kw)
+        err = float(jnp.abs(h_full[:, -1] - h_dec[:, 0]).max())
+        assert err < 5e-4, f"{arch}: decode mismatch {err}"

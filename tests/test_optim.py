@@ -1,0 +1,72 @@
+"""Optimizer + gradient-compression unit tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim.adamw import (AdamWConfig, apply_updates, compress_grads,
+                               cosine_schedule, global_norm, init_opt)
+
+
+def test_adamw_minimizes_quadratic():
+    target = jnp.asarray(np.random.default_rng(0).normal(size=(16,)),
+                         jnp.float32)
+    params = {"w": jnp.zeros(16)}
+    cfg = AdamWConfig(lr=0.05, weight_decay=0.0, warmup_steps=1,
+                      total_steps=400)
+    opt = init_opt(params)
+    loss0 = None
+    for i in range(300):
+        g = {"w": params["w"] - target}
+        params, opt, m = apply_updates(params, g, opt, cfg)
+        if loss0 is None:
+            loss0 = float(jnp.sum((params["w"] - target) ** 2))
+    lossT = float(jnp.sum((params["w"] - target) ** 2))
+    assert lossT < loss0 * 1e-3
+
+
+def test_clip_bounds_update():
+    params = {"w": jnp.zeros(4)}
+    cfg = AdamWConfig(lr=1.0, clip_norm=1e-3, weight_decay=0.0,
+                      warmup_steps=0)
+    opt = init_opt(params)
+    g = {"w": jnp.full(4, 1e6)}
+    p2, opt, m = apply_updates(params, g, opt, cfg)
+    assert float(m["grad_norm"]) > 1e5  # raw norm reported
+    assert float(jnp.abs(p2["w"]).max()) < 10.0  # but update clipped
+
+
+def test_schedule_warmup_and_decay():
+    cfg = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                      min_lr_ratio=0.1)
+    lrs = [float(cosine_schedule(cfg, jnp.int32(s))) for s in range(100)]
+    assert lrs[0] < lrs[9] <= 1.0 + 1e-6
+    assert lrs[-1] < 0.2
+    assert min(lrs[10:]) >= 0.1 * 1.0 - 1e-6
+
+
+def test_compress_error_feedback_unbiased():
+    """Accumulated compressed grads converge to accumulated true grads."""
+    rng = np.random.default_rng(1)
+    g_true = {"w": jnp.asarray(rng.normal(size=(64,)) * 1e-3, jnp.float32)}
+    err = {"w": jnp.zeros(64)}
+    acc = jnp.zeros(64)
+    for _ in range(200):
+        gc, err = compress_grads(g_true, err)
+        acc = acc + gc["w"]
+    expected = g_true["w"] * 200
+    rel = float(jnp.abs(acc - expected).max() / jnp.abs(expected).max())
+    assert rel < 0.01  # error feedback keeps the long-run sum faithful
+
+
+def test_bf16_moments_supported():
+    params = {"w": jnp.zeros((8, 8), jnp.bfloat16)}
+    opt = init_opt(params, moments_dtype=jnp.bfloat16, with_err=False)
+    assert opt.mu["w"].dtype == jnp.bfloat16
+    assert opt.err is None
+    cfg = AdamWConfig(lr=1e-2, warmup_steps=0)
+    g = {"w": jnp.ones((8, 8), jnp.bfloat16)}
+    p2, opt2, _ = apply_updates(params, g, opt, cfg)
+    assert opt2.mu["w"].dtype == jnp.bfloat16
+    assert p2["w"].dtype == jnp.bfloat16
+    assert not np.allclose(np.asarray(p2["w"], np.float32), 0.0)

@@ -1,0 +1,51 @@
+"""Static elimination schedule invariants (Algorithm 1, lines 4-11)."""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.schedule import make_schedule
+
+
+@given(st.integers(2, 5000), st.integers(2, 100_000), st.integers(1, 16),
+       st.floats(0.01, 0.9), st.floats(0.01, 0.4))
+@settings(max_examples=200, deadline=None)
+def test_schedule_invariants(n, N, K, eps, delta):
+    K = min(K, n - 1)
+    s = make_schedule(n, N, K=K, eps=eps, delta=delta)
+    assert s.rounds, "n > K must yield at least one round"
+    # survivor counts strictly decrease to K
+    sizes = [r.n_arms for r in s.rounds] + [s.rounds[-1].n_keep]
+    assert all(a > b for a, b in zip(sizes, sizes[1:])) or len(sizes) == 2
+    assert s.rounds[-1].n_keep == K
+    # cumulative pulls nondecreasing, bounded by N (Corollary 2)
+    ts = [r.t_cum for r in s.rounds]
+    assert all(a <= b for a, b in zip(ts, ts[1:]))
+    assert ts[-1] <= N
+    # never slower than exhaustive search
+    assert s.total_pulls <= s.naive_pulls
+    # halving: each round keeps K + floor((n_l - K)/2)
+    for r in s.rounds:
+        assert r.n_keep == r.K if False else r.n_keep == s.K + (r.n_arms - s.K) // 2
+
+
+def test_k_geq_n_short_circuits():
+    s = make_schedule(5, 100, K=5)
+    assert not s.rounds and s.total_pulls == 0
+
+
+def test_round_count_logarithmic():
+    s = make_schedule(2 ** 16, 10 ** 5, K=1, eps=0.2, delta=0.1)
+    assert len(s.rounds) <= 17
+
+
+def test_eps_delta_budgets():
+    # sum eps_l <= eps, sum delta_l <= delta (Theorem 1's telescoping)
+    s = make_schedule(1000, 10 ** 5, K=1, eps=0.3, delta=0.2)
+    assert sum(r.eps_l for r in s.rounds) <= 0.3 + 1e-9
+    assert sum(r.delta_l for r in s.rounds) <= 0.2 + 1e-9
+
+
+def test_speedup_grows_with_eps():
+    sp = [make_schedule(10_000, 10 ** 5, eps=e, delta=0.1).speedup
+          for e in (0.05, 0.1, 0.3, 0.6)]
+    assert all(a <= b + 1e-9 for a, b in zip(sp, sp[1:]))
