@@ -1,0 +1,141 @@
+"""PR-1 perf benchmarks: fused cascade + batched decode vs the seed paths.
+
+Emits the machine-readable rows for ``BENCH_PR1.json`` (via
+`benchmarks.run`): per-benchmark ``us_per_call``, schedule pull-count
+speedup, and kernel dispatch counts, so the perf trajectory stays
+comparable across PRs.  The seed per-query vmap path (one
+(T, dt, R, C)-materializing gather einsum per round, vmapped over the
+batch) is reconstructed here verbatim as the frozen baseline.
+"""
+
+from __future__ import annotations
+
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.boundedme_jax import (_pad_operands, _run_blocked,
+                                      _tile_major, bounded_me_decode,
+                                      make_plan)
+
+# acceptance geometry: B=32, n=32768, N=4096 (ISSUE 1)
+_B, _N_ARMS, _DIM = 32, 32768, 4096
+
+
+@functools.partial(jax.jit, static_argnames=("plan",))
+def _seed_run_blocked(V, q, key, *, plan):
+    """The PR-0 single-query path, frozen: per-round 4-D gather einsum."""
+    R, C = plan.tile, plan.block
+    V, q = _pad_operands(V, q, plan)
+    V4 = _tile_major(V, plan)
+    qb = q.reshape(plan.n_blocks, C)
+    perm = jax.random.permutation(key, plan.n_blocks)
+    arm_ids0 = jnp.arange(plan.n_tiles * R).reshape(plan.n_tiles, R)
+    valid0 = (arm_ids0 < plan.n).astype(V.dtype)
+    idx = jnp.arange(plan.n_tiles)
+    sums = jnp.zeros((plan.n_tiles, R), dtype=jnp.float32)
+    t_prev = 0
+    neg = jnp.asarray(-jnp.inf, dtype=jnp.float32)
+    for rnd in plan.schedule.rounds:
+        if rnd.t_new > 0:
+            cols = jax.lax.slice_in_dim(perm, t_prev, rnd.t_cum)
+            qsel = qb[cols]
+            Vsel = V4[idx[:, None], cols[None, :]]        # (T, dt, R, C)
+            sums = sums + jnp.einsum("tbrc,bc->tr", Vsel, qsel,
+                                     preferred_element_type=jnp.float32)
+        t_prev = rnd.t_cum
+        means = sums / jnp.float32(t_prev * C)
+        tile_score = jnp.where(valid0[idx] > 0, means, neg).max(axis=1)
+        _, keep = jax.lax.top_k(tile_score, rnd.n_keep)
+        idx, sums = idx[keep], sums[keep]
+    scores = sums / jnp.float32(max(1, t_prev) * C)
+    flat = jnp.where(valid0[idx] > 0, scores, neg).reshape(-1)
+    top_vals, top_pos = jax.lax.top_k(flat, plan.K)
+    return arm_ids0[idx].reshape(-1)[top_pos], top_vals
+
+
+def _seed_vmap_batched(V, Q, keys, *, plan):
+    """The PR-0 batched decode path: vmap of the per-query cascade."""
+    fn = functools.partial(_seed_run_blocked, plan=plan)
+    return jax.vmap(fn, in_axes=(None, 0, 0))(V, Q, keys)
+
+
+def _time_us(fn, *args, reps: int = 3, warmup: int = 1) -> float:
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run(csv: bool = True) -> dict:
+    out = {}
+    rng = np.random.default_rng(0)
+
+    # --- batched decode: new shared-perm MXU fallback vs seed vmap path ---
+    plan = make_plan(_N_ARMS, _DIM, K=1, eps=0.1, delta=0.05,
+                     value_range=4.0, tile=8, block=512)
+    V = jnp.asarray(rng.normal(size=(_N_ARMS, _DIM)), jnp.float32)
+    Q = jnp.asarray(rng.normal(size=(_B, _DIM)), jnp.float32)
+    key = jax.random.PRNGKey(0)
+    keys = jax.random.split(key, _B)
+
+    us_new = _time_us(
+        lambda: bounded_me_decode(V, Q, key, plan=plan, final_exact=False,
+                                  use_pallas=False))
+    us_seed = _time_us(
+        lambda: _seed_vmap_batched(V, Q, keys, plan=plan), reps=1)
+    speedup = us_seed / us_new
+    out["decode_batched_fallback"] = {
+        "us_per_call": us_new,
+        "geometry": {"B": _B, "n": _N_ARMS, "N": _DIM, "block": 512}}
+    out["seed_vmap_path"] = {"us_per_call": us_seed,
+                             "geometry": out["decode_batched_fallback"]
+                             ["geometry"]}
+    out["decode_batched_vs_seed_vmap"] = {"speedup": speedup,
+                                          "acceptance_min": 2.0}
+
+    # --- fused cascade kernel: dispatch count + interpret-mode latency ---
+    plan_s = make_plan(2048, _DIM, K=4, eps=0.3, delta=0.1, value_range=8.0,
+                       tile=8, block=256)
+    Vs = jnp.asarray(rng.normal(size=(2048, _DIM)), jnp.float32)
+    qs = jnp.asarray(rng.normal(size=_DIM), jnp.float32)
+
+    def fused(V, q, k):
+        return _run_blocked(V, q, k, plan=plan_s, use_pallas=True)
+
+    from repro.kernels.ops import count_pallas_calls
+    n_disp = count_pallas_calls(jax.make_jaxpr(fused)(Vs, qs, key).jaxpr)
+    us_fused = _time_us(lambda: fused(Vs, qs, key), reps=1)
+    out["fused_cascade_single_query"] = {
+        "us_per_call": us_fused,  # interpret mode on CPU: NOT a TPU number
+        "dispatch_count": n_disp,
+        "rounds": len(plan_s.schedule.rounds),
+        "dispatch_count_per_round_path": len(plan_s.schedule.rounds),
+        "backend": jax.default_backend()}
+
+    # --- schedule-level pull savings at a non-saturated geometry ---
+    plan_w = make_plan(_N_ARMS, 131072, K=1, eps=0.1, delta=0.05,
+                       value_range=4.0, tile=8, block=512)
+    out["pull_speedup"] = {
+        "saturated_serving_geometry": plan.schedule.speedup,
+        "wide_geometry_n131072": plan_w.schedule.speedup,
+        "wide_total_pulls": plan_w.schedule.total_pulls,
+        "wide_naive_pulls": plan_w.schedule.naive_pulls}
+
+    if csv:
+        print(f"decode_batched_fallback,{us_new:.0f},"
+              f"B={_B};n={_N_ARMS};N={_DIM}")
+        print(f"seed_vmap_path,{us_seed:.0f},same_geometry")
+        print(f"decode_batched_vs_seed_vmap,,speedup={speedup:.2f}x"
+              f";acceptance>=2x")
+        print(f"fused_cascade_single_query,{us_fused:.0f},"
+              f"dispatches={n_disp};rounds={len(plan_s.schedule.rounds)}"
+              f";interpret={jax.default_backend() != 'tpu'}")
+        print(f"pull_speedup,,wide={plan_w.schedule.speedup:.2f}x")
+    return out

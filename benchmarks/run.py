@@ -1,17 +1,34 @@
 """Benchmark driver: one function per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV rows per benchmark, then the
-roofline table from the dry-run artifacts (if present).
+roofline table from the dry-run artifacts (if present).  Also writes
+``BENCH_PR1.json`` (per-benchmark us_per_call, pull-count speedup, kernel
+dispatch counts) so the perf trajectory is machine-comparable across PRs.
 """
 
 from __future__ import annotations
 
+import json
+import os
 import sys
+
+BENCH_JSON = os.path.join(os.path.dirname(os.path.dirname(__file__)),
+                          "BENCH_PR1.json")
 
 
 def main() -> None:
-    from benchmarks import (fig1_guarantee, fig23_synthetic, fig4_real,
-                            table1_complexity)
+    from benchmarks import (bench_fused, fig1_guarantee, fig23_synthetic,
+                            fig4_real, table1_complexity)
+    print("== fused cascade / batched decode (PR 1) ==")
+    import jax
+    payload = {
+        "meta": {"backend": jax.default_backend(),
+                 "devices": jax.device_count()},
+        "benchmarks": bench_fused.run(),
+    }
+    with open(BENCH_JSON, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"[bench] wrote {BENCH_JSON}")
     print("== table1: complexity/guarantees ==")
     table1_complexity.run()
     print("== fig1: guarantee validation (adversarial) ==")

@@ -4,20 +4,26 @@ from repro.core.bounds import (
     rho_m, u_term, m_required, deviation_bound, hoeffding_required,
     lil_required,
 )
-from repro.core.schedule import Round, Schedule, make_schedule
+from repro.core.schedule import (
+    FlatSchedule, Round, Schedule, flatten_schedule, make_schedule,
+)
 from repro.core.boundedme import BoundedMEResult, bounded_me, reward_matrix
 from repro.core.boundedme_jax import (
     BlockedPlan, make_plan, bounded_me_blocked, bounded_me_batched,
+    bounded_me_decode,
 )
-from repro.core.mips import mips_topk, nns_topk, sharded_mips_topk, exact_topk
+from repro.core.mips import (
+    default_value_range, exact_topk, mips_topk, nns_topk, sharded_mips_topk,
+)
 from repro.core.median_elim import median_elimination, successive_elimination
 from repro.core.bounded_se import bounded_se
 
 __all__ = [
     "rho_m", "u_term", "m_required", "deviation_bound", "hoeffding_required",
-    "lil_required", "Round", "Schedule", "make_schedule", "BoundedMEResult",
-    "bounded_me", "reward_matrix", "BlockedPlan", "make_plan",
-    "bounded_me_blocked", "bounded_me_batched", "mips_topk", "nns_topk",
-    "sharded_mips_topk", "exact_topk", "median_elimination",
+    "lil_required", "Round", "Schedule", "FlatSchedule", "make_schedule",
+    "flatten_schedule", "BoundedMEResult", "bounded_me", "reward_matrix",
+    "BlockedPlan", "make_plan", "bounded_me_blocked", "bounded_me_batched",
+    "bounded_me_decode", "mips_topk", "nns_topk", "sharded_mips_topk",
+    "exact_topk", "default_value_range", "median_elimination",
     "successive_elimination", "bounded_se",
 ]

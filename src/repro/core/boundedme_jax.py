@@ -5,6 +5,18 @@ schedule is computed at *trace time* (it is data-independent), so the whole
 bandit compiles to a fixed cascade of gather + tile-matmul + top_k ops with
 static shapes — jit/pjit/vmap-able and shardable.
 
+Two execution strategies share the same static plan:
+
+  * ``use_pallas=True`` — the whole cascade (every pull round, every tile
+    elimination, the final top-K) runs as ONE fused Pallas kernel
+    (`repro.kernels.fused_cascade`): dispatch count per query is 1
+    regardless of round count, and the accumulator/survivor state stays
+    on-chip across rounds;
+  * ``use_pallas=False`` — a pure-jnp fallback that walks the same
+    flattened schedule with a `lax.scan` over each round's coordinate
+    blocks.  It gathers one (T, R, C) slab per block and never materializes
+    the old (T, dt, R, C) per-round gather.
+
 Adaptations versus the reference (`repro.core.boundedme`):
   * a pull = one coordinate *block* of ``block`` (default 512) entries,
     computed as an MXU tile-dot; the without-replacement bound applies with
@@ -27,9 +39,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.schedule import Schedule, make_schedule
+from repro.core.schedule import (Schedule, flatten_schedule, make_schedule)
 
-__all__ = ["BlockedPlan", "make_plan", "bounded_me_blocked", "bounded_me_batched"]
+__all__ = ["BlockedPlan", "make_plan", "bounded_me_blocked",
+           "bounded_me_batched", "bounded_me_decode"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -47,8 +60,9 @@ class BlockedPlan:
 
     @property
     def k_tiles(self) -> int:
-        # keep K whole tiles: in the worst case each top-K arm sits in its
-        # own tile, so ceil(K/tile) tiles could lose true winners
+        # keep K whole tiles: in the worst case each of the top-K arms sits
+        # in its own tile, so min(n_tiles, K) tiles must survive to the end
+        # (ceil(K/tile) would lose winners under adversarial placement)
         return min(self.n_tiles, self.K)
 
     @property
@@ -107,12 +121,50 @@ def _pad_operands(V: jnp.ndarray, q: jnp.ndarray, plan: BlockedPlan
     padding is masked out of every top-k via the validity mask.
     """
     n_pad = plan.n_tiles * plan.tile - V.shape[0]
-    c_pad = plan.n_blocks * plan.block - V.shape[1]
+    c_pad = plan.n_blocks * plan.block - V.shape[-1]
     if n_pad or c_pad:
         V = jnp.pad(V, ((0, n_pad), (0, c_pad)))
     if c_pad:
-        q = jnp.pad(q, (0, c_pad))
+        q = jnp.pad(q, [(0, 0)] * (q.ndim - 1) + [(0, c_pad)])
     return V, q
+
+
+def _tile_major(V: jnp.ndarray, plan: BlockedPlan) -> jnp.ndarray:
+    """(n_tiles*R, n_blocks*C) -> (n_tiles, n_blocks, R, C)."""
+    R, C = plan.tile, plan.block
+    return V.reshape(plan.n_tiles, R, plan.n_blocks, C).transpose(0, 2, 1, 3)
+
+
+def _fused_call(V4, qb_or_Qb, perm_or_perms, *, plan: BlockedPlan,
+                final_exact: bool, batched: bool):
+    """Dispatch the whole cascade as exactly one Pallas kernel launch."""
+    from repro.kernels import ops as _kops
+
+    flat = flatten_schedule(plan.schedule, final_coverage=final_exact)
+    slotcode, rmeta = flat.packed()
+    bpos = jnp.asarray(flat.bpos)
+    fn = _kops.fused_cascade_batched if batched else _kops.fused_cascade
+    cols = perm_or_perms[..., bpos] if batched else perm_or_perms[bpos]
+    return fn(V4, qb_or_Qb, jnp.asarray(slotcode), jnp.asarray(rmeta), cols,
+              n_arms=plan.n, K=plan.K, t_final=flat.t_final,
+              n_final=flat.n_final)
+
+
+def _scan_pulls(sums, V4, qb, idx, cols):
+    """One round of pulls as a scan over its coordinate blocks.
+
+    Gathers a single (T, R, C) slab per block — the (T, dt, R, C) gather of
+    the pre-fused implementation never exists.  Accumulation order (blocks
+    in permutation order) matches the fused kernel's grid order, which is
+    what keeps the two paths bitwise-comparable in interpret mode.
+    """
+    def body(s, col):
+        part = jnp.einsum("trc,c->tr", V4[idx, col], qb[col],
+                          preferred_element_type=jnp.float32)
+        return s + part, None
+
+    sums, _ = jax.lax.scan(body, sums, cols)
+    return sums
 
 
 @functools.partial(jax.jit, static_argnames=("plan", "final_exact", "use_pallas"))
@@ -121,11 +173,17 @@ def _run_blocked(V: jnp.ndarray, q: jnp.ndarray, key: jax.Array, *,
                  use_pallas: bool = False) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Returns (topk_ids (K,), topk_scores (K,)) — scores are mean products."""
     R, C = plan.tile, plan.block
-    V, q = _pad_operands(V, q, plan)
-    # tile-major layout: (n_tiles, n_blocks, tile, block)
-    V4 = V.reshape(plan.n_tiles, R, plan.n_blocks, C).transpose(0, 2, 1, 3)
+    V, q = _pad_operands(jnp.asarray(V), jnp.asarray(q), plan)
+    V4 = _tile_major(V, plan)
     qb = q.reshape(plan.n_blocks, C)
     perm = jax.random.permutation(key, plan.n_blocks)
+    # undo the zero-padding rescale so scores estimate (q . v)/N
+    scale = (plan.n_blocks * C) / plan.N
+
+    if use_pallas:
+        ids, vals = _fused_call(V4, qb, perm, plan=plan,
+                                final_exact=final_exact, batched=False)
+        return ids, vals * jnp.float32(scale)
 
     arm_ids0 = jnp.arange(plan.n_tiles * R).reshape(plan.n_tiles, R)
     valid0 = (arm_ids0 < plan.n).astype(V.dtype)
@@ -135,40 +193,32 @@ def _run_blocked(V: jnp.ndarray, q: jnp.ndarray, key: jax.Array, *,
     t_prev = 0
     neg = jnp.asarray(-jnp.inf, dtype=jnp.float32)
 
-    if use_pallas:
-        from repro.kernels import ops as _kops
-
     for rnd in plan.schedule.rounds:
         if rnd.t_new > 0:
-            cols = jax.lax.slice_in_dim(perm, t_prev, rnd.t_cum)  # static slice
-            qsel = qb[cols]                                        # (dt, C)
-            if use_pallas:
-                part = _kops.gather_block_dot(V4, idx, cols, qsel)
-            else:
-                Vsel = V4[idx[:, None], cols[None, :]]             # (T, dt, R, C)
-                part = jnp.einsum("tbrc,bc->tr", Vsel, qsel,
-                                  preferred_element_type=jnp.float32)
-            sums = sums + part
+            cols = jax.lax.slice_in_dim(perm, t_prev, rnd.t_cum)  # static
+            sums = _scan_pulls(sums, V4, qb, idx, cols)
         t_prev = rnd.t_cum
         means = sums / jnp.float32(t_prev * C)
         valid = valid0[idx]
         tile_score = jnp.where(valid > 0, means, neg).max(axis=1)
-        _, keep = jax.lax.top_k(tile_score, rnd.n_keep)            # static size
+        _, keep = jax.lax.top_k(tile_score, rnd.n_keep)            # static
         idx, sums = idx[keep], sums[keep]
 
     valid = valid0[idx]
     if final_exact:
-        # exact rescore of the few survivors: (T_f*R, N) x (N,)
+        # exact rescore of the few survivors: (T_f*R, N') x (N',); divide by
+        # the padded width N' = n_blocks*C so the caller-side rescale by
+        # N'/N lands on (q . v)/N (dividing by N here double-counted the
+        # rescale whenever N % block != 0)
         Vfin = V4[idx].transpose(0, 2, 1, 3).reshape(idx.shape[0] * R, -1)
-        scores = (Vfin @ q).astype(jnp.float32) / jnp.float32(plan.N)
+        scores = (Vfin @ q).astype(jnp.float32) / jnp.float32(
+            plan.n_blocks * C)
         scores = scores.reshape(idx.shape[0], R)
     else:
         scores = sums / jnp.float32(max(1, t_prev) * C)
     flat = jnp.where(valid > 0, scores, neg).reshape(-1)
     top_vals, top_pos = jax.lax.top_k(flat, plan.K)
     arm_ids = arm_ids0[idx].reshape(-1)[top_pos]
-    # undo the zero-padding rescale so scores estimate (q . v)/N
-    scale = (plan.n_blocks * C) / plan.N
     return arm_ids, top_vals * jnp.float32(scale)
 
 
@@ -180,7 +230,8 @@ def bounded_me_blocked(V, q, key, *, K: int = 1, eps: float = 0.1,
     """Top-K MIPS over rows of ``V`` for query ``q`` (single query).
 
     Returns ``(ids (K,), scores (K,), plan)`` where scores estimate
-    ``(q . v)/N``.  All shapes are static; safe under jit/pjit.
+    ``(q . v)/N``.  All shapes are static; safe under jit/pjit.  With
+    ``use_pallas=True`` the entire cascade is one kernel dispatch.
     """
     n, N = V.shape
     if plan is None:
@@ -191,10 +242,135 @@ def bounded_me_blocked(V, q, key, *, K: int = 1, eps: float = 0.1,
     return ids, scores, plan
 
 
+@functools.partial(jax.jit, static_argnames=("plan", "final_exact"))
+def _run_batched_fused(V, Q, keys, *, plan: BlockedPlan, final_exact: bool):
+    """Per-query-key batch as ONE batched kernel dispatch (B in the grid)."""
+    C = plan.block
+    B = Q.shape[0]
+    V, Q = _pad_operands(jnp.asarray(V), jnp.asarray(Q), plan)
+    V4 = _tile_major(V, plan)
+    Qb = Q.reshape(B, plan.n_blocks, C)
+    perms = jax.vmap(
+        lambda k: jax.random.permutation(k, plan.n_blocks))(keys)
+    ids, vals = _fused_call(V4, Qb, perms, plan=plan,
+                            final_exact=final_exact, batched=True)
+    scale = (plan.n_blocks * C) / plan.N
+    return ids, vals * jnp.float32(scale)
+
+
 def bounded_me_batched(V, Q, keys, *, plan: BlockedPlan,
                        final_exact: bool = False, use_pallas: bool = False):
-    """vmapped BoundedME over a batch of queries ``Q`` (B, N)."""
+    """BoundedME over a batch of queries ``Q`` (B, N) with per-query keys.
+
+    Results match a loop of single-query calls with the same keys.  With
+    ``use_pallas=True`` the whole batch is ONE batched fused-kernel dispatch
+    (query axis in the grid); otherwise the scan fallback is vmapped.  For
+    the decode serving hot path prefer `bounded_me_decode`, which shares the
+    block permutation across the batch so early rounds become dense MXU
+    tile-matmuls even without Pallas.
+    """
+    if use_pallas:
+        return _run_batched_fused(jnp.asarray(V), jnp.asarray(Q), keys,
+                                  plan=plan, final_exact=final_exact)
     fn = functools.partial(_run_blocked, plan=plan, final_exact=final_exact,
-                           use_pallas=use_pallas)
+                           use_pallas=False)
     return jax.vmap(fn, in_axes=(None, 0, 0))(jnp.asarray(V), jnp.asarray(Q),
                                               keys)
+
+
+@functools.partial(jax.jit, static_argnames=("plan", "final_exact",
+                                             "use_pallas"))
+def _run_decode(V, Q, key, *, plan: BlockedPlan, final_exact: bool,
+                use_pallas: bool):
+    R, C = plan.tile, plan.block
+    B = Q.shape[0]
+    V, Q = _pad_operands(jnp.asarray(V), jnp.asarray(Q), plan)
+    V4 = _tile_major(V, plan)
+    Qb = Q.reshape(B, plan.n_blocks, C)
+    # ONE permutation shared by the whole batch: identical pull columns per
+    # round let round pulls fuse into (n_tiles*R, C) x (C, B) MXU matmuls
+    # (marginally each query still samples uniformly without replacement)
+    perm = jax.random.permutation(key, plan.n_blocks)
+    scale = (plan.n_blocks * C) / plan.N
+
+    if use_pallas:
+        perms = jnp.broadcast_to(perm, (B, plan.n_blocks))
+        ids, vals = _fused_call(V4, Qb, perms, plan=plan,
+                                final_exact=final_exact, batched=True)
+        return ids, vals * jnp.float32(scale)
+
+    arm_ids0 = jnp.arange(plan.n_tiles * R).reshape(plan.n_tiles, R)
+    valid0 = (arm_ids0 < plan.n).astype(V.dtype)
+    brange = jnp.arange(B)[:, None]
+
+    idx = jnp.broadcast_to(jnp.arange(plan.n_tiles), (B, plan.n_tiles))
+    sums = jnp.zeros((B, plan.n_tiles, R), dtype=jnp.float32)
+    t_prev = 0
+    neg = jnp.asarray(-jnp.inf, dtype=jnp.float32)
+
+    for rnd in plan.schedule.rounds:
+        if rnd.t_new > 0:
+            cols = jax.lax.slice_in_dim(perm, t_prev, rnd.t_cum)   # (dt,)
+            qsel = jnp.moveaxis(Qb[:, cols], 0, 1)                 # (dt,B,C)
+            if B * rnd.n_arms >= plan.n_tiles:
+                # early rounds: survivor union ~ every tile, so a dense
+                # (n_tiles*R, C) x (C, B) tile-matmul per block beats any
+                # gather; eliminated tiles accumulate garbage that is never
+                # read back (survivor gathers go through `idx`)
+                def dense(s, xs):
+                    col, qcol = xs
+                    part = jnp.einsum("trc,bc->btr", V4[:, col], qcol,
+                                      preferred_element_type=jnp.float32)
+                    return s + part, None
+                sums, _ = jax.lax.scan(dense, sums, (cols, qsel))
+            else:
+                # late rounds: few survivors per query — per-query gather
+                # scans, sequential over the batch to bound the working set
+                def one(args):
+                    idx_i, Qb_i = args
+                    s0 = jnp.zeros((rnd.n_arms, R), jnp.float32)
+                    return _scan_pulls(s0, V4, Qb_i, idx_i, cols)
+                parts = jax.lax.map(one, (idx, Qb))        # (B, T, R)
+                sums = sums.at[brange, idx].add(parts)
+        t_prev = rnd.t_cum
+        means = jnp.take_along_axis(sums, idx[..., None], axis=1)
+        means = means / jnp.float32(t_prev * C)
+        valid = valid0[idx]
+        tile_score = jnp.where(valid > 0, means, neg).max(axis=-1)  # (B, T)
+        _, keep = jax.lax.top_k(tile_score, rnd.n_keep)
+        idx = jnp.take_along_axis(idx, keep, axis=1)
+
+    valid = valid0[idx]
+    if final_exact:
+        Vfin = V4[idx]                                 # (B, Tf, nb, R, C)
+        scores = jnp.einsum("btnrc,bnc->btr", Vfin, Qb,
+                            preferred_element_type=jnp.float32)
+        scores = scores / jnp.float32(plan.n_blocks * C)
+    else:
+        scores = jnp.take_along_axis(sums, idx[..., None], axis=1)
+        scores = scores / jnp.float32(max(1, t_prev) * C)
+    flat = jnp.where(valid > 0, scores, neg).reshape(B, -1)
+    top_vals, top_pos = jax.lax.top_k(flat, plan.K)
+    arm_ids = jnp.take_along_axis(arm_ids0[idx].reshape(B, -1), top_pos,
+                                  axis=1)
+    return arm_ids, top_vals * jnp.float32(scale)
+
+
+def bounded_me_decode(V, Q, key, *, plan: BlockedPlan,
+                      final_exact: bool = True,
+                      use_pallas: Optional[bool] = None):
+    """Batched-decode BoundedME: one dispatch for a whole (B, N) batch.
+
+    The serving hot path (DESIGN.md §3).  All queries share one block
+    permutation so every round's pulls are identical columns across the
+    batch: with ``use_pallas`` the batched fused kernel serves the batch in
+    a single `pallas_call`; the jnp fallback turns early rounds into dense
+    (n_tiles*R, C) x (C, B) MXU tile-matmuls instead of the per-query
+    gather einsum the vmapped path pays.  Survivor sets and eliminations
+    stay fully per-query.  Returns ``(ids (B, K), scores (B, K))``.
+    """
+    if use_pallas is None:
+        from repro.kernels import ops as _kops
+        use_pallas = _kops.on_tpu()
+    return _run_decode(jnp.asarray(V), jnp.asarray(Q), key, plan=plan,
+                       final_exact=final_exact, use_pallas=use_pallas)

@@ -10,15 +10,18 @@ single all-gather — the distributed form used inside `serve_step`.
 from __future__ import annotations
 
 import functools
+import weakref
 from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.boundedme_jax import BlockedPlan, bounded_me_blocked, make_plan
+from repro.core.boundedme_jax import (BlockedPlan, bounded_me_batched,
+                                      bounded_me_blocked, make_plan)
 
-__all__ = ["mips_topk", "nns_topk", "sharded_mips_topk", "exact_topk"]
+__all__ = ["mips_topk", "nns_topk", "sharded_mips_topk", "exact_topk",
+           "default_value_range", "table_abs_max"]
 
 
 def exact_topk(V, q, K: int = 1) -> Tuple[jnp.ndarray, jnp.ndarray]:
@@ -26,6 +29,61 @@ def exact_topk(V, q, K: int = 1) -> Tuple[jnp.ndarray, jnp.ndarray]:
     scores = (V @ q).astype(jnp.float32) / jnp.float32(V.shape[1])
     vals, ids = jax.lax.top_k(scores, K)
     return ids, vals
+
+
+class _TableMaxCache:
+    """Host-side cache of max|V| per table object.
+
+    The fallback product-range bound needs an O(nN) reduction over the
+    table; before PR 1 it was re-issued on every `mips_topk` call, which
+    dominated the hot path for repeated queries against the same store.
+    Keyed by ``id(table)`` with a weakref guard against id reuse; the rare
+    non-weakref-able table type falls back to a strong ref, so the dict is
+    evicted FIFO past ``_CAP`` tables to bound that case.
+    """
+
+    _CAP = 16
+
+    def __init__(self):
+        self._entries = {}
+
+    def get(self, V) -> float:
+        key = id(V)
+        hit = self._entries.get(key)
+        if hit is not None:
+            ref, vmax = hit
+            if ref() is not None:
+                return vmax
+            del self._entries[key]
+        vmax = float(jnp.max(jnp.abs(jnp.asarray(V))))
+        try:
+            ref = weakref.ref(V)
+        except TypeError:                    # non-weakref-able table type
+            ref = (lambda strong=V: strong)  # strong ref; FIFO-evicted
+        if len(self._entries) >= self._CAP:
+            self._entries.pop(next(iter(self._entries)))
+        self._entries[key] = (ref, vmax)
+        return vmax
+
+
+_TABLE_MAX = _TableMaxCache()
+
+
+def table_abs_max(V) -> float:
+    """max|V_ij| as a host float, computed once per table and cached."""
+    return _TABLE_MAX.get(V)
+
+
+def default_value_range(V, q) -> float:
+    """Conservative data-derived product range 2 max|q| max|V|.
+
+    The per-table reduction is cached host-side; the per-query max is O(N)
+    and cheap.  Hot-path callers (serving loops, benchmarks) should still
+    pass an explicit ``value_range`` bound instead — this helper exists for
+    the zero-configuration path only (the paper assumes rewards in [0, 1]).
+    """
+    vr = 2.0 * float(jnp.max(jnp.abs(jnp.asarray(q)))) * table_abs_max(V)
+    return max(vr, 1e-12)
 
 
 def mips_topk(V, q, K: int = 1, *, method: str = "boundedme",
@@ -47,10 +105,7 @@ def mips_topk(V, q, K: int = 1, *, method: str = "boundedme",
     if key is None:
         key = jax.random.PRNGKey(0)
     if value_range is None:
-        # conservative data-derived product range; callers on a hot path
-        # should pass a precomputed bound instead (the paper assumes [0,1])
-        value_range = float(2.0 * jnp.max(jnp.abs(q)) * jnp.max(jnp.abs(V)))
-        value_range = max(value_range, 1e-12)
+        value_range = default_value_range(V, q)
     ids, scores, _ = bounded_me_blocked(
         V, q, key, K=K, eps=eps, delta=delta, value_range=value_range,
         tile=tile, block=block, final_exact=final_exact, use_pallas=use_pallas)
@@ -79,7 +134,8 @@ def sharded_mips_topk(table, queries, keys, K: int, *, mesh,
                       plan: Optional[BlockedPlan] = None, eps: float = 0.05,
                       delta: float = 0.05, value_range: float = 4.0,
                       tile: int = 8, block: int = 512,
-                      final_exact: bool = True, use_pallas: bool = False):
+                      final_exact: bool = True,
+                      use_pallas: Optional[bool] = None):
     """Distributed batched MIPS via shard_map: shard-local bandits, K-merge.
 
     ``table`` (n, N) is sharded on rows over ``model_axis``; each shard runs
@@ -90,10 +146,19 @@ def sharded_mips_topk(table, queries, keys, K: int, *, mesh,
     replication GSPMD produces for a vocab-sharded gather (measured 54.5 GB
     -> ~100 KB on command-r decode_32k; EXPERIMENTS.md §Perf iteration 1).
 
+    Each shard serves its whole query batch with a single dispatch: one
+    batched fused-cascade `pallas_call` on TPU (``use_pallas=None`` =>
+    auto), or one vmapped scan program otherwise.
+
     queries: (B, N); keys: (B,) PRNG keys.  Returns (ids (B,K), scores).
     """
     from jax.sharding import PartitionSpec as P
 
+    from repro.distributed.sharding import shard_map_compat
+
+    if use_pallas is None:
+        from repro.kernels import ops as _kops
+        use_pallas = _kops.on_tpu()
     n_shards = mesh.shape[model_axis]
     n, N = table.shape
     assert n % n_shards == 0, (n, n_shards)
@@ -103,12 +168,9 @@ def sharded_mips_topk(table, queries, keys, K: int, *, mesh,
                          value_range=value_range, tile=tile, block=block)
 
     def local(table_l, q_l, keys_l):
-        def one(q_i, k_i):
-            from repro.core.boundedme_jax import _run_blocked
-            return _run_blocked(table_l, q_i, k_i, plan=plan,
-                                final_exact=final_exact,
-                                use_pallas=use_pallas)
-        ids, scores = jax.vmap(one)(q_l, keys_l)          # (B_loc, K)
+        ids, scores = bounded_me_batched(table_l, q_l, keys_l, plan=plan,
+                                         final_exact=final_exact,
+                                         use_pallas=use_pallas)  # (B_loc, K)
         shard = jax.lax.axis_index(model_axis)
         gids = ids + shard * n_local
         if n_valid is not None and n_valid < n:
@@ -124,7 +186,7 @@ def sharded_mips_topk(table, queries, keys, K: int, *, mesh,
     q_spec = P(batch_axes, None)
     k_spec = P(batch_axes, None)
     out_spec = (P(batch_axes, None), P(batch_axes, None))
-    fn = jax.shard_map(local, mesh=mesh,
-                       in_specs=(P(model_axis, None), q_spec, k_spec),
-                       out_specs=out_spec, check_vma=False)
+    fn = shard_map_compat(local, mesh=mesh,
+                          in_specs=(P(model_axis, None), q_spec, k_spec),
+                          out_specs=out_spec)
     return fn(table, queries, keys)

@@ -13,9 +13,18 @@ import dataclasses
 import math
 from typing import List, Tuple
 
+import numpy as np
+
 from repro.core import bounds
 
-__all__ = ["Round", "Schedule", "make_schedule"]
+__all__ = ["Round", "Schedule", "FlatSchedule", "make_schedule",
+           "flatten_schedule", "SLOT_MASK", "END_BIT", "PULL_BIT"]
+
+# bit-packing of the per-step word handed to the fused kernel (SMEM is the
+# scarcest resource on-chip: one int32 per step instead of a wide row)
+SLOT_MASK = (1 << 29) - 1   # survivor-slot index (n_tiles << 2^29 always)
+END_BIT = 1 << 29           # eliminate after this step
+PULL_BIT = 1 << 30          # step performs a pull (0 on saturated rounds)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -60,6 +69,116 @@ class Schedule:
     @property
     def final_pulls(self) -> int:
         return self.rounds[-1].t_cum if self.rounds else 0
+
+
+@dataclasses.dataclass(frozen=True)
+class FlatSchedule:
+    """The schedule unrolled to one row per kernel grid step (DESIGN.md §3).
+
+    The fused cascade kernel runs the entire multi-round pull program as a
+    single Pallas grid; these arrays are scalar-prefetched into SMEM so the
+    kernel can tell, at every step, which survivor slot to pull, which
+    position of the block permutation to read, and whether an elimination
+    happens after the step.  Everything here is host-side numpy computed at
+    trace time — no traced values.
+
+    Step layout per round: blocks outermost, survivor slots innermost, so a
+    given arm tile accumulates its coordinate blocks in permutation order
+    (the same order the `lax.scan` fallback uses, which is what makes
+    interpret-mode kernel results bitwise-comparable to the fallback).
+    Rounds whose pull budget is already saturated (``t_new == 0``) still
+    eliminate, so they emit one no-pull step carrying the round-end flag.
+
+    With ``final_coverage=True`` extra pull steps are appended that complete
+    every final survivor to full coverage (``t -> N``): the final scores are
+    then *exact* inner products, the single-dispatch analogue of the
+    ``final_exact`` rescore on the unfused path.
+    """
+
+    slot: np.ndarray      # (S,) int32  survivor-slot pulled this step
+    bpos: np.ndarray      # (S,) int32  index into the block permutation
+    is_pull: np.ndarray   # (S,) int32  0 on no-op steps (saturated rounds)
+    is_end: np.ndarray    # (S,) int32  1 => eliminate after this step
+    t_cum: np.ndarray     # (S,) int32  cumulative pulls of the current round
+    n_surv: np.ndarray    # (S,) int32  survivors during this step's round
+    n_keep: np.ndarray    # (S,) int32  survivors kept at the elimination
+    t_final: int          # pulls per survivor entering the final top-K
+    n_final: int          # survivor count entering the final top-K
+
+    @property
+    def n_steps(self) -> int:
+        return int(self.slot.shape[0])
+
+    def stacked(self) -> np.ndarray:
+        """(S, 7) int32 view — handy for oracles and debugging."""
+        return np.stack([self.slot, self.bpos, self.is_pull, self.is_end,
+                         self.t_cum, self.n_surv, self.n_keep],
+                        axis=1).astype(np.int32)
+
+    def packed(self) -> Tuple[np.ndarray, np.ndarray]:
+        """SMEM-frugal kernel operands.
+
+        Returns ``(slotcode (S,), rounds_meta (n_rounds+1, 3))``: the
+        per-step word packs slot | PULL_BIT | END_BIT; the per-round rows
+        are ``(t_cum, n_surv, n_keep)`` consumed in order at end-flagged
+        steps (the kernel keeps a round cursor in SMEM).  The pad row keeps
+        the array non-empty for schedules with no elimination rounds.
+        """
+        code = (self.slot.astype(np.int64)
+                | self.is_pull.astype(np.int64) * PULL_BIT
+                | self.is_end.astype(np.int64) * END_BIT)
+        ends = np.nonzero(self.is_end)[0]
+        meta = np.stack([self.t_cum[ends], self.n_surv[ends],
+                         self.n_keep[ends]], axis=1).reshape(-1, 3)
+        meta = np.concatenate([meta, np.zeros((1, 3), np.int64)], axis=0)
+        return code.astype(np.int32), meta.astype(np.int32)
+
+
+def flatten_schedule(sched: Schedule, *,
+                     final_coverage: bool = False) -> FlatSchedule:
+    """Unroll ``sched`` into the per-step arrays of :class:`FlatSchedule`."""
+    slot: List[int] = []
+    bpos: List[int] = []
+    is_pull: List[int] = []
+    is_end: List[int] = []
+    t_cum: List[int] = []
+    n_surv: List[int] = []
+    n_keep: List[int] = []
+
+    def emit(s, p, pull, end, t, T, k):
+        slot.append(s); bpos.append(p); is_pull.append(pull)
+        is_end.append(end); t_cum.append(t); n_surv.append(T); n_keep.append(k)
+
+    t_prev = 0
+    for r in sched.rounds:
+        if r.t_new == 0:
+            emit(0, 0, 0, 1, r.t_cum, r.n_arms, r.n_keep)
+        else:
+            for p in range(t_prev, r.t_cum):
+                for s in range(r.n_arms):
+                    last = (p == r.t_cum - 1) and (s == r.n_arms - 1)
+                    emit(s, p, 1, 1 if last else 0, r.t_cum, r.n_arms,
+                         r.n_keep)
+        t_prev = r.t_cum
+
+    n_final = sched.rounds[-1].n_keep if sched.rounds else sched.n
+    t_final = t_prev
+    if final_coverage and t_prev < sched.N:
+        for p in range(t_prev, sched.N):
+            for s in range(n_final):
+                emit(s, p, 1, 0, sched.N, n_final, n_final)
+        t_final = sched.N
+    if not slot:  # degenerate: no rounds, no coverage — one no-op step so
+        emit(0, 0, 0, 0, 0, n_final, n_final)  # the kernel still finalizes
+
+    return FlatSchedule(
+        slot=np.asarray(slot, np.int32), bpos=np.asarray(bpos, np.int32),
+        is_pull=np.asarray(is_pull, np.int32),
+        is_end=np.asarray(is_end, np.int32),
+        t_cum=np.asarray(t_cum, np.int32),
+        n_surv=np.asarray(n_surv, np.int32),
+        n_keep=np.asarray(n_keep, np.int32),
+        t_final=t_final, n_final=n_final)
 
 
 def _round_pulls(n_l: int, K: int, eps_l: float, delta_l: float, N: int,

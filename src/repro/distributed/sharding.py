@@ -18,8 +18,24 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 __all__ = [
     "LOGICAL_RULES", "logical_mesh", "current_mesh", "shard", "spec_of",
-    "named_sharding",
+    "named_sharding", "shard_map_compat",
 ]
+
+
+def shard_map_compat(f, *, mesh, in_specs, out_specs):
+    """`jax.shard_map` across jax versions.
+
+    Newer jax exposes it at top level with a ``check_vma`` kwarg; 0.4.x only
+    has `jax.experimental.shard_map.shard_map` with ``check_rep``.  Every
+    shard_map in this repo goes through here so version skew is handled in
+    one place.
+    """
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=False)
 
 AxisBinding = Union[str, Tuple[str, ...], None]
 

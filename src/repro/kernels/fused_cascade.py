@@ -1,0 +1,276 @@
+"""Pallas TPU kernel: the whole BoundedME cascade in ONE dispatch.
+
+The per-round `gather_block_dot` kernel still pays one launch + an XLA-level
+top-k + survivor reshuffle per elimination round; at decode batch sizes that
+dispatch overhead eats the sample-complexity savings the schedule buys.
+Because the round structure is data-independent (`repro.core.schedule`), the
+*entire* multi-round pull program can be flattened host-side
+(`flatten_schedule`) and executed as a single grid (DESIGN.md §3):
+
+  * the (n_tiles, R) f32 accumulator and the survivor index set stay
+    VMEM/SMEM-resident across all rounds — they never round-trip to HBM;
+  * each grid step manually DMAs exactly one surviving (R, C) tile of V
+    from HBM (double-buffered: the next step's tile is prefetched while the
+    current MXU tile-dot runs).  Only the bytes the bandit pulls ever cross
+    the memory bus, and the survivor indices live in SMEM, so the
+    "gather" costs no HBM traffic at all;
+  * at round boundaries the tile elimination (masked tile-max + iterative
+    top-k extraction, lowest-index tie-break — exactly `lax.top_k`
+    semantics) runs *inside* the kernel, updating the SMEM survivor list;
+  * the final top-K arms are extracted in-kernel and returned as (ids,
+    scores) — dispatch count per query drops from O(rounds) to 1.
+
+The batched variant puts the query axis in the grid: one launch serves a
+(B, N) decode batch, with per-query accumulator/survivor state re-initialized
+at each query's first step.
+
+Scalar-prefetch operands (SMEM):
+  slotcode (S,)           packed slot | PULL_BIT | END_BIT per step
+  rounds_meta (rounds+1,3) (t_cum, n_surv, n_keep) consumed at end steps
+  cols (S,) / (B, S)      column-block id pulled per step (perm[bpos])
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.schedule import END_BIT, PULL_BIT, SLOT_MASK
+
+__all__ = ["fused_cascade_pallas", "fused_cascade_batched_pallas"]
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def _make_kernel(*, n_arms, R, C, K, n_tiles, t_final, n_final, S, Pw, B):
+    """Build the kernel body.  B is None for the single-query variant."""
+    batched = B is not None
+
+    def kernel(code_ref, rmeta_ref, cols_ref, V_ref, q_ref, ids_ref, vals_ref,
+               acc, vbuf, surv, tmp, scorebuf, rnd, sem):
+        # constants must be materialized inside the traced body
+        _NEG = jnp.float32(-jnp.inf)
+        denom_final = jnp.float32(max(1, t_final) * C)
+        if batched:
+            b, i = pl.program_id(0), pl.program_id(1)
+        else:
+            b, i = 0, pl.program_id(0)
+        code = code_ref[i]
+        slot = code & SLOT_MASK
+        pull = (code & PULL_BIT) != 0
+        end = (code & END_BIT) != 0
+        col = cols_ref[b, i] if batched else cols_ref[i]
+        dslot = jax.lax.rem(i, 2)
+        colid = jax.lax.broadcasted_iota(jnp.int32, (1, Pw), 1)
+
+        @pl.when(i == 0)
+        def _init():  # per-query state (re-entered at each b in the batch)
+            acc[:] = jnp.zeros_like(acc)
+            rnd[0] = 0
+
+            def w(j, _):
+                surv[j] = j
+                return 0
+            jax.lax.fori_loop(0, n_tiles, w, 0)
+
+        first = jnp.logical_and(b == 0, i == 0) if batched else i == 0
+
+        @pl.when(jnp.logical_and(first, pull))
+        def _start_first():  # every later step is prefetched by the previous
+            tile = surv[slot]
+            pltpu.make_async_copy(V_ref.at[tile, col], vbuf.at[0],
+                                  sem.at[0]).start()
+
+        @pl.when(pull)
+        def _pull():
+            tile = surv[slot]
+            pltpu.make_async_copy(V_ref.at[tile, col], vbuf.at[dslot],
+                                  sem.at[dslot]).wait()
+            qcol = (q_ref[0, pl.ds(col, 1), :] if batched
+                    else q_ref[pl.ds(col, 1), :])          # (1, C)
+            part = jnp.dot(vbuf[dslot], qcol[0],
+                           preferred_element_type=jnp.float32)  # (R,)
+            acc[pl.ds(tile, 1), :] = acc[pl.ds(tile, 1), :] + part[None]
+
+        @pl.when(end)
+        def _eliminate():
+            r = rnd[0]
+            denom = (rmeta_ref[r, 0] * C).astype(jnp.float32)
+            T, keep = rmeta_ref[r, 1], rmeta_ref[r, 2]
+
+            def score_body(s, _):  # slot-ordered masked tile-max means
+                tile = surv[s]
+                means = acc[pl.ds(tile, 1), :] / denom          # (1, R)
+                rowids = tile * R + jax.lax.broadcasted_iota(
+                    jnp.int32, (1, R), 1)
+                scorebuf[0, s] = jnp.max(
+                    jnp.where(rowids < n_arms, means, _NEG))
+                return 0
+            jax.lax.fori_loop(0, T, score_body, 0)
+            scorebuf[:] = jnp.where(colid < T, scorebuf[:], _NEG)
+
+            def extract(j, _):  # descending, lowest-index tie-break
+                sc = scorebuf[:]
+                m = jnp.max(sc)
+                arg = jnp.min(jnp.where(sc == m, colid, Pw))
+                tmp[j] = surv[arg]
+                scorebuf[0, arg] = _NEG
+                return 0
+            jax.lax.fori_loop(0, keep, extract, 0)
+
+            def writeback(j, _):
+                surv[j] = tmp[j]
+                return 0
+            jax.lax.fori_loop(0, keep, writeback, 0)
+            rnd[0] = r + 1
+
+        # prefetch the next step's tile (post-elimination survivor indices)
+        @pl.when(i < S - 1)
+        def _warm():
+            ncode = code_ref[i + 1]
+
+            @pl.when((ncode & PULL_BIT) != 0)
+            def _():
+                ntile = surv[ncode & SLOT_MASK]
+                ncol = cols_ref[b, i + 1] if batched else cols_ref[i + 1]
+                pltpu.make_async_copy(V_ref.at[ntile, ncol],
+                                      vbuf.at[1 - dslot],
+                                      sem.at[1 - dslot]).start()
+
+        if batched:
+            @pl.when(jnp.logical_and(i == S - 1, b < B - 1))
+            def _warm_next_query():  # next query restarts on identity slots
+                ncode = code_ref[0]
+
+                @pl.when((ncode & PULL_BIT) != 0)
+                def _():
+                    pltpu.make_async_copy(
+                        V_ref.at[ncode & SLOT_MASK, cols_ref[b + 1, 0]],
+                        vbuf.at[0], sem.at[0]).start()
+
+        @pl.when(i == S - 1)
+        def _finalize():
+            def score_body(s, _):
+                tile = surv[s]
+                means = acc[pl.ds(tile, 1), :] / denom_final    # (1, R)
+                rowids = tile * R + jax.lax.broadcasted_iota(
+                    jnp.int32, (1, R), 1)
+                scorebuf[0, pl.ds(s * R, R)] = jnp.where(
+                    rowids < n_arms, means, _NEG)[0]
+                return 0
+            jax.lax.fori_loop(0, n_final, score_body, 0)
+            scorebuf[:] = jnp.where(colid < n_final * R, scorebuf[:], _NEG)
+
+            def extract(j, _):
+                sc = scorebuf[:]
+                m = jnp.max(sc)
+                arg = jnp.min(jnp.where(sc == m, colid, Pw))
+                s_idx = arg // R
+                ids_ref[0, j] = surv[s_idx] * R + (arg - s_idx * R)
+                vals_ref[0, j] = m
+                scorebuf[0, arg] = _NEG
+                return 0
+            jax.lax.fori_loop(0, K, extract, 0)
+
+    return kernel
+
+
+def _scratch(n_tiles, R, C, Pw, vdtype):
+    return [
+        pltpu.VMEM((n_tiles, R), jnp.float32),   # accumulator, all rounds
+        pltpu.VMEM((2, R, C), vdtype),           # double-buffered tile DMA
+        pltpu.SMEM((n_tiles,), jnp.int32),       # survivor tile ids
+        pltpu.SMEM((n_tiles,), jnp.int32),       # elimination staging
+        pltpu.VMEM((1, Pw), jnp.float32),        # score workspace
+        pltpu.SMEM((1,), jnp.int32),             # round cursor
+        pltpu.SemaphoreType.DMA((2,)),
+    ]
+
+
+@functools.partial(jax.jit, static_argnames=("n_arms", "K", "t_final",
+                                             "n_final", "interpret"))
+def fused_cascade_pallas(V4, qb, slotcode, rounds_meta, cols, *, n_arms: int,
+                         K: int, t_final: int, n_final: int,
+                         interpret: bool = False):
+    """Single-query fused cascade: ONE pallas_call for all rounds.
+
+    V4:  (n_tiles, n_blocks, R, C) tile-major data (stays in HBM)
+    qb:  (n_blocks, C) blocked query (VMEM-resident)
+    slotcode/rounds_meta/cols: see `FlatSchedule.packed`
+    Returns (ids (K,) int32, vals (K,) f32) — vals are unscaled block means,
+    identical to the unfused path before its padding rescale.
+    """
+    n_tiles, n_blocks, R, C = V4.shape
+    S = slotcode.shape[0]
+    Pw = _round_up(max(n_tiles, n_final * R, 1), 128)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(S,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.ANY),     # V4: manual tile DMA
+            pl.BlockSpec(memory_space=pltpu.VMEM),    # qb: fully resident
+        ],
+        out_specs=(
+            pl.BlockSpec((1, K), lambda i, *_: (0, 0)),
+            pl.BlockSpec((1, K), lambda i, *_: (0, 0)),
+        ),
+        scratch_shapes=_scratch(n_tiles, R, C, Pw, V4.dtype),
+    )
+    kernel = _make_kernel(n_arms=n_arms, R=R, C=C, K=K, n_tiles=n_tiles,
+                          t_final=t_final, n_final=n_final, S=S, Pw=Pw,
+                          B=None)
+    ids, vals = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=(jax.ShapeDtypeStruct((1, K), jnp.int32),
+                   jax.ShapeDtypeStruct((1, K), jnp.float32)),
+        interpret=interpret,
+    )(slotcode.astype(jnp.int32), rounds_meta.astype(jnp.int32),
+      cols.astype(jnp.int32), V4, qb)
+    return ids[0], vals[0]
+
+
+@functools.partial(jax.jit, static_argnames=("n_arms", "K", "t_final",
+                                             "n_final", "interpret"))
+def fused_cascade_batched_pallas(V4, Qb, slotcode, rounds_meta, cols, *,
+                                 n_arms: int, K: int, t_final: int,
+                                 n_final: int, interpret: bool = False):
+    """Batched fused cascade: the query axis rides in the grid.
+
+    Qb: (B, n_blocks, C) blocked queries; cols: (B, S) per-query pull
+    columns.  One dispatch serves the whole decode batch; per-query state is
+    re-initialized at each query's first grid step.
+    Returns (ids (B, K) int32, vals (B, K) f32), unscaled.
+    """
+    n_tiles, n_blocks, R, C = V4.shape
+    B, S = cols.shape
+    Pw = _round_up(max(n_tiles, n_final * R, 1), 128)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(B, S),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            pl.BlockSpec((1, n_blocks, C), lambda b, i, *_: (b, 0, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((1, K), lambda b, i, *_: (b, 0)),
+            pl.BlockSpec((1, K), lambda b, i, *_: (b, 0)),
+        ),
+        scratch_shapes=_scratch(n_tiles, R, C, Pw, V4.dtype),
+    )
+    kernel = _make_kernel(n_arms=n_arms, R=R, C=C, K=K, n_tiles=n_tiles,
+                          t_final=t_final, n_final=n_final, S=S, Pw=Pw, B=B)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=(jax.ShapeDtypeStruct((B, K), jnp.int32),
+                   jax.ShapeDtypeStruct((B, K), jnp.float32)),
+        interpret=interpret,
+    )(slotcode.astype(jnp.int32), rounds_meta.astype(jnp.int32),
+      cols.astype(jnp.int32), V4, Qb)

@@ -12,19 +12,69 @@ import jax.numpy as jnp
 
 from repro.kernels.gather_dot import gather_block_dot_pallas
 from repro.kernels.blocked_matvec import blocked_matvec_pallas
+from repro.kernels.fused_cascade import (fused_cascade_pallas,
+                                         fused_cascade_batched_pallas)
 from repro.kernels import ref
 
-__all__ = ["gather_block_dot", "blocked_matvec", "on_tpu"]
+__all__ = ["gather_block_dot", "blocked_matvec", "fused_cascade",
+           "fused_cascade_batched", "on_tpu", "count_pallas_calls"]
 
 
 def on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+def count_pallas_calls(jaxpr) -> int:
+    """Kernel dispatches reachable from ``jaxpr`` (through jit/scan/etc.).
+
+    The PR-1 acceptance metric: the fused path must show exactly one
+    `pallas_call` regardless of round count.  Shared by the test suite and
+    `benchmarks/bench_fused.py` so the two can't drift apart.
+    """
+    from jax.core import ClosedJaxpr, Jaxpr
+
+    def sub(params):
+        for v in params.values():
+            stack = [v]
+            while stack:
+                x = stack.pop()
+                if isinstance(x, ClosedJaxpr):
+                    yield x.jaxpr
+                elif isinstance(x, Jaxpr):
+                    yield x
+                elif isinstance(x, (list, tuple)):
+                    stack.extend(x)
+
+    total = 0
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "pallas_call":
+            total += 1
+        for j in sub(eqn.params):
+            total += count_pallas_calls(j)
+    return total
+
+
 def gather_block_dot(V4, idx, cols, qsel):
-    """BoundedME pull step: see `repro.kernels.gather_dot`."""
+    """Per-round BoundedME pull step: see `repro.kernels.gather_dot`."""
     return gather_block_dot_pallas(V4, idx, cols, qsel,
                                    interpret=not on_tpu())
+
+
+def fused_cascade(V4, qb, slotcode, rounds_meta, cols, *, n_arms, K,
+                  t_final, n_final):
+    """Whole-cascade single dispatch: see `repro.kernels.fused_cascade`."""
+    return fused_cascade_pallas(V4, qb, slotcode, rounds_meta, cols,
+                                n_arms=n_arms, K=K, t_final=t_final,
+                                n_final=n_final, interpret=not on_tpu())
+
+
+def fused_cascade_batched(V4, Qb, slotcode, rounds_meta, cols, *, n_arms, K,
+                          t_final, n_final):
+    """Batched whole-cascade dispatch: query axis in the kernel grid."""
+    return fused_cascade_batched_pallas(V4, Qb, slotcode, rounds_meta, cols,
+                                        n_arms=n_arms, K=K, t_final=t_final,
+                                        n_final=n_final,
+                                        interpret=not on_tpu())
 
 
 def blocked_matvec(W, q, *, tile_n: int = 256, tile_d: int = 512):

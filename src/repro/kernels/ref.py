@@ -1,10 +1,11 @@
-"""Pure-jnp oracles for every Pallas kernel (the allclose reference)."""
+"""Pure oracles for every Pallas kernel (the allclose reference)."""
 
 from __future__ import annotations
 
 import jax.numpy as jnp
+import numpy as np
 
-__all__ = ["gather_block_dot_ref", "blocked_matvec_ref"]
+__all__ = ["gather_block_dot_ref", "blocked_matvec_ref", "fused_cascade_ref"]
 
 
 def gather_block_dot_ref(V4: jnp.ndarray, idx: jnp.ndarray,
@@ -25,3 +26,57 @@ def gather_block_dot_ref(V4: jnp.ndarray, idx: jnp.ndarray,
 def blocked_matvec_ref(W: jnp.ndarray, q: jnp.ndarray) -> jnp.ndarray:
     """Exact logit matvec oracle: (n, d) @ (d,) -> (n,) in float32."""
     return jnp.dot(W, q, preferred_element_type=jnp.float32)
+
+
+def fused_cascade_ref(V4, qb, flat, cols, *, n_arms: int, K: int):
+    """Step-accurate numpy simulation of the fused cascade kernel.
+
+    Walks the same FlatSchedule the kernel prefetches, one grid step at a
+    time: pull -> accumulate, eliminate at round-end flags (tile-max means,
+    iterative max-extraction with lowest-index tie-break), final top-K over
+    the surviving arms.  Slow and deliberately naive — the point is that it
+    shares no code with either the kernel or the `lax.scan` fallback.
+
+    V4: (n_tiles, n_blocks, R, C); qb: (n_blocks, C); flat: FlatSchedule;
+    cols: (S,) column-block id per step (i.e. perm[flat.bpos]).
+    Returns (ids (K,), vals (K,)) — vals unscaled, like the kernel.
+    """
+    V4 = np.asarray(V4, np.float32)
+    qb = np.asarray(qb, np.float32)
+    cols = np.asarray(cols)
+    n_tiles, n_blocks, R, C = V4.shape
+    acc = np.zeros((n_tiles, R), np.float32)
+    surv = np.arange(n_tiles)
+
+    def masked_means(tile, denom):
+        rowids = tile * R + np.arange(R)
+        return np.where(rowids < n_arms, acc[tile] / denom, -np.inf)
+
+    for i in range(flat.n_steps):
+        if flat.is_pull[i]:
+            tile = surv[flat.slot[i]]
+            col = int(cols[i])
+            acc[tile] = acc[tile] + V4[tile, col] @ qb[col]
+        if flat.is_end[i]:
+            T, keep = int(flat.n_surv[i]), int(flat.n_keep[i])
+            denom = np.float32(int(flat.t_cum[i]) * C)
+            scores = np.array([masked_means(surv[s], denom).max()
+                               for s in range(T)], np.float32)
+            new = []
+            for _ in range(keep):
+                a = int(np.argmax(scores))      # first max == lowest index
+                new.append(surv[a])
+                scores[a] = -np.inf
+            surv = np.asarray(new)
+
+    denom = np.float32(max(1, flat.t_final) * C)
+    flat_scores = np.concatenate([masked_means(surv[s], denom)
+                                  for s in range(flat.n_final)])
+    ids, vals = [], []
+    for _ in range(K):
+        a = int(np.argmax(flat_scores))
+        s, r = divmod(a, R)
+        ids.append(surv[s] * R + r)
+        vals.append(flat_scores[a])
+        flat_scores[a] = -np.inf
+    return np.asarray(ids, np.int32), np.asarray(vals, np.float32)

@@ -43,6 +43,21 @@ def main():
     cfg = dataclasses.replace(cfg, mips_mode=args.mips, mips_eps=args.eps,
                               mips_delta=args.delta)
 
+    if cfg.mips_mode == "boundedme":
+        # the decode hot path runs the whole bandit as ONE fused kernel
+        # dispatch per batch (DESIGN.md §3); surface the static plan so the
+        # (eps, delta) <-> pull-count trade is visible at launch
+        from repro.core.schedule import flatten_schedule
+        from repro.kernels.ops import on_tpu
+        from repro.models.steps import make_mips_plan
+        plan = make_mips_plan(cfg, K=1)
+        flat = flatten_schedule(plan.schedule, final_coverage=True)
+        path = ("fused pallas_call, dispatches_per_decode_batch=1"
+                if on_tpu() else "jnp scan fallback (non-TPU backend)")
+        print(f"[serve] fused cascade: rounds={len(plan.schedule.rounds)} "
+              f"grid_steps={flat.n_steps} "
+              f"pull_speedup={plan.schedule.speedup:.2f}x path={path}")
+
     params = init_params(cfg, jax.random.PRNGKey(0))
     rng = np.random.default_rng(0)
     B, P = args.batch, args.prompt_len

@@ -285,12 +285,13 @@ def _moe_ep_shardmap(x: jnp.ndarray, p: Params, cfg: ArchConfig,
         y_l = jax.lax.psum(y_l, "model")                   # ONE bf16 psum
         return y_l.reshape(B_l, S_l, d)
 
-    fn = jax.shard_map(
+    from repro.distributed.sharding import shard_map_compat
+    fn = shard_map_compat(
         local, mesh=mesh,
         in_specs=(P(baxes, None, None), P(None, None),
                   P("model", None, None), P("model", None, None),
                   P("model", None, None)),
-        out_specs=P(baxes, None, None), check_vma=False)
+        out_specs=P(baxes, None, None))
     return fn(x, p["router"], p["w_gate"], p["w_up"], p["w_down"])
 
 

@@ -15,7 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
-from repro.core.boundedme_jax import bounded_me_batched, make_plan
+from repro.core.boundedme_jax import bounded_me_decode, make_plan
 from repro.distributed.sharding import current_mesh, shard
 from repro.models.model import forward, logits_from_hidden
 from repro.optim.adamw import (AdamWConfig, OptState, apply_updates,
@@ -99,9 +99,12 @@ def decode_step(params, cfg: ArchConfig, caches, tokens, pos,
                 value_range=4.0, block=min(512, cfg.d_model),
                 final_exact=True)
         else:
+            # batched decode path: the whole (B,) batch is served by one
+            # dispatch (one fused pallas_call on TPU; one dense-round scan
+            # program otherwise) instead of a vmapped per-query cascade
             plan = make_mips_plan(cfg, K=1)
-            ids, _ = bounded_me_batched(table, hid, keys, plan=plan,
-                                        final_exact=True)
+            ids, _ = bounded_me_decode(table, hid, keys[0], plan=plan,
+                                       final_exact=True)
         next_tok = ids[:, 0]
     else:
         logits = jnp.einsum("bd,vd->bv", hid, table,

@@ -1,0 +1,150 @@
+"""Fused-path BoundedME and the batched decode path (no hypothesis dep).
+
+Covers the PR-1 acceptance criteria that must run from a clean checkout:
+bitwise fused-vs-fallback parity, batched-vs-loop equivalence, the K > tile
+adversarial-placement regression, and the final_exact rescale fix for
+ragged N.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.boundedme_jax import (bounded_me_batched, bounded_me_blocked,
+                                      bounded_me_decode, make_plan)
+
+
+def _data(n, N, seed=0):
+    rng = np.random.default_rng(seed)
+    return (rng.normal(size=(n, N)).astype(np.float32),
+            rng.normal(size=N).astype(np.float32))
+
+
+class TestFusedPath:
+    @pytest.mark.parametrize("n,N,tile,block,K", [
+        (512, 2048, 8, 128, 3),
+        (517, 2100, 8, 256, 12),     # ragged + K > tile
+        (123, 300, 8, 64, 5),
+    ])
+    def test_fused_matches_fallback_bitwise(self, n, N, tile, block, K):
+        """Same PRNG key => identical ids AND bit-identical scores: the
+        kernel accumulates blocks in the exact order of the scan fallback."""
+        V, q = _data(n, N, seed=n)
+        kw = dict(K=K, eps=0.25, delta=0.1, value_range=8.0, tile=tile,
+                  block=block)
+        i_f, s_f, _ = bounded_me_blocked(V, q, jax.random.PRNGKey(7),
+                                         use_pallas=True, **kw)
+        i_j, s_j, _ = bounded_me_blocked(V, q, jax.random.PRNGKey(7),
+                                         use_pallas=False, **kw)
+        np.testing.assert_array_equal(np.asarray(i_f), np.asarray(i_j))
+        np.testing.assert_array_equal(np.asarray(s_f), np.asarray(s_j))
+
+    def test_fused_final_exact_allclose(self):
+        V, q = _data(517, 2100, seed=2)
+        kw = dict(K=4, eps=0.2, delta=0.1, value_range=8.0, block=256,
+                  final_exact=True)
+        i_f, s_f, _ = bounded_me_blocked(V, q, jax.random.PRNGKey(3),
+                                         use_pallas=True, **kw)
+        i_j, s_j, _ = bounded_me_blocked(V, q, jax.random.PRNGKey(3),
+                                         use_pallas=False, **kw)
+        np.testing.assert_array_equal(np.asarray(i_f), np.asarray(i_j))
+        np.testing.assert_allclose(np.asarray(s_f), np.asarray(s_j),
+                                   rtol=2e-5, atol=1e-6)
+
+    def test_batched_fused_matches_loop(self):
+        V, q = _data(300, 900, seed=4)
+        Q = np.stack([q, -q, 0.5 * q])
+        plan = make_plan(300, 900, K=2, eps=0.2, delta=0.1, value_range=8.0,
+                         block=64)
+        keys = jax.random.split(jax.random.PRNGKey(0), 3)
+        ids_b, sc_b = bounded_me_batched(V, Q, keys, plan=plan,
+                                         use_pallas=True)
+        for b in range(3):
+            ids_s, sc_s, _ = bounded_me_blocked(V, Q[b], keys[b], plan=plan,
+                                                use_pallas=True)
+            np.testing.assert_array_equal(np.asarray(ids_b[b]),
+                                          np.asarray(ids_s))
+            np.testing.assert_array_equal(np.asarray(sc_b[b]),
+                                          np.asarray(sc_s))
+
+
+class TestDecodeBatched:
+    def test_pallas_and_jnp_decode_agree(self):
+        V, q = _data(256, 1024, seed=5)
+        Q = np.stack([q, -q, 0.3 * q, _data(1, 1024, seed=9)[1]])
+        plan = make_plan(256, 1024, K=2, eps=0.2, delta=0.1, value_range=8.0,
+                         block=128)
+        key = jax.random.PRNGKey(11)
+        ids_p, sc_p = bounded_me_decode(V, Q, key, plan=plan,
+                                        final_exact=False, use_pallas=True)
+        ids_j, sc_j = bounded_me_decode(V, Q, key, plan=plan,
+                                        final_exact=False, use_pallas=False)
+        np.testing.assert_array_equal(np.asarray(ids_p), np.asarray(ids_j))
+        np.testing.assert_array_equal(np.asarray(sc_p), np.asarray(sc_j))
+
+    def test_decode_recovers_exact_topk_small_eps(self):
+        V, q = _data(1024, 2048, seed=6)
+        B = 5
+        rng = np.random.default_rng(7)
+        Q = rng.normal(size=(B, 2048)).astype(np.float32)
+        K = 3
+        plan = make_plan(1024, 2048, K=K, eps=1e-4, delta=0.05,
+                         value_range=8.0, block=256)
+        ids, scores = bounded_me_decode(V, Q, jax.random.PRNGKey(0),
+                                        plan=plan, final_exact=True,
+                                        use_pallas=False)
+        truth = np.argsort(-(V @ Q.T), axis=0)[:K].T
+        for b in range(B):
+            assert (set(np.asarray(ids)[b].tolist())
+                    == set(truth[b].tolist())), b
+
+    def test_decode_scores_estimate_mean_product_ragged(self):
+        """final_exact scores must estimate (q.v)/N even when N % block != 0
+        (regression: the rescale used to be applied twice on this path)."""
+        V, q = _data(200, 1000, seed=8)          # 1000 % 256 != 0
+        Q = np.stack([q, -0.5 * q])
+        plan = make_plan(200, 1000, K=2, eps=1e-4, delta=0.05,
+                         value_range=8.0, block=256)
+        ids, scores = bounded_me_decode(V, Q, jax.random.PRNGKey(1),
+                                        plan=plan, final_exact=True,
+                                        use_pallas=False)
+        for b in range(2):
+            for i, s in zip(np.asarray(ids)[b], np.asarray(scores)[b]):
+                assert abs(s - float(V[i] @ Q[b]) / 1000.0) < 1e-5
+
+    def test_single_query_final_exact_scores_ragged(self):
+        """Same regression on the single-query path, fused and fallback."""
+        V, q = _data(200, 1000, seed=12)
+        for use_pallas in (False, True):
+            ids, scores, _ = bounded_me_blocked(
+                V, q, jax.random.PRNGKey(2), K=3, eps=1e-4, delta=0.05,
+                value_range=8.0, block=256, final_exact=True,
+                use_pallas=use_pallas)
+            for i, s in zip(np.asarray(ids), np.asarray(scores)):
+                assert abs(s - float(V[i] @ q) / 1000.0) < 1e-5, use_pallas
+
+
+class TestKTilesRegression:
+    def test_k_tiles_is_min_n_tiles_K(self):
+        plan = make_plan(128, 512, K=12, tile=8, block=64)
+        assert plan.k_tiles == 12            # NOT ceil(K/tile) == 2
+        plan = make_plan(16, 512, K=12, tile=8, block=64)
+        assert plan.k_tiles == plan.n_tiles  # capped at the tile count
+
+    def test_adversarial_winner_placement_K_gt_tile(self):
+        """Top-K arms spread one-per-tile: only min(n_tiles, K) surviving
+        tiles can hold them all (ceil(K/tile) tiles would drop winners)."""
+        n, N, K, tile = 128, 512, 12, 8
+        rng = np.random.default_rng(42)
+        V = 0.01 * rng.normal(size=(n, N)).astype(np.float32)
+        q = np.ones(N, np.float32)
+        # winner i lives in tile i at row i: one winner per tile
+        for i in range(K):
+            V[i * tile + i % tile] = 1.0 - 0.01 * i
+        ids, _, plan = bounded_me_blocked(
+            V, q, jax.random.PRNGKey(0), K=K, eps=1e-4, delta=0.05,
+            value_range=4.0, tile=tile, block=64, final_exact=True)
+        assert plan.k_tiles == K
+        expect = {i * tile + i % tile for i in range(K)}
+        assert set(np.asarray(ids).tolist()) == expect

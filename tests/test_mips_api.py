@@ -51,3 +51,22 @@ def test_nns_exact_mode(data):
     ids, _ = nns_topk(V, q, K=1, method="exact")
     truth = np.argmin(((V - q[None]) ** 2).sum(1))
     assert int(ids[0]) == int(truth)
+
+
+def test_default_value_range_cached_per_table(data):
+    """The O(nN) table reduction runs once per table object, not per call."""
+    from repro.core import mips
+
+    V, q = data
+    Vj = jnp.asarray(V)
+    v1 = mips.table_abs_max(Vj)
+    key = id(Vj)
+    assert key in mips._TABLE_MAX._entries
+    # poison the cached value: a second call must hit the cache, not recompute
+    ref, _ = mips._TABLE_MAX._entries[key]
+    mips._TABLE_MAX._entries[key] = (ref, 123.5)
+    assert mips.table_abs_max(Vj) == 123.5
+    del mips._TABLE_MAX._entries[key]
+    assert abs(v1 - float(np.abs(V).max())) < 1e-6
+    vr = mips.default_value_range(Vj, jnp.asarray(q))
+    assert vr >= 2.0 * abs(q).max() * v1 * 0.999

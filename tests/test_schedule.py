@@ -1,7 +1,10 @@
 """Static elimination schedule invariants (Algorithm 1, lines 4-11)."""
 
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from conftest import optional_hypothesis
+
+given, settings, st = optional_hypothesis()
 
 from repro.core.schedule import make_schedule
 

@@ -1,0 +1,74 @@
+"""FlatSchedule invariants: the flattening consumed by the fused kernel."""
+
+import numpy as np
+import pytest
+
+from repro.core.schedule import (END_BIT, PULL_BIT, SLOT_MASK,
+                                 flatten_schedule, make_schedule)
+
+
+def _flat(n=50, N=40, K=2, eps=0.2, delta=0.1, **kw):
+    return make_schedule(n, N, K=K, eps=eps, delta=delta), kw
+
+
+@pytest.mark.parametrize("n,N,K,eps", [(50, 40, 2, 0.2), (400, 4, 1, 0.05),
+                                       (7, 100, 3, 0.4), (64, 64, 8, 0.1)])
+def test_flatten_invariants(n, N, K, eps):
+    sched = make_schedule(n, N, K=K, eps=eps, delta=0.1)
+    flat = flatten_schedule(sched)
+    # one end flag per round, in order
+    assert int(flat.is_end.sum()) == len(sched.rounds)
+    # pull steps count = total sample complexity of the schedule
+    assert int(flat.is_pull.sum()) == sched.total_pulls
+    # slots stay inside the round's survivor count
+    assert (flat.slot < flat.n_surv).all()
+    # block positions stay inside the reward list
+    assert (flat.bpos >= 0).all() and (flat.bpos < N).all()
+    # survivor counts per round follow the elimination chain
+    ends = np.nonzero(flat.is_end)[0]
+    for j, r in zip(ends, sched.rounds):
+        assert flat.n_surv[j] == r.n_arms
+        assert flat.n_keep[j] == r.n_keep
+        assert flat.t_cum[j] == r.t_cum
+    assert flat.n_final == (sched.rounds[-1].n_keep if sched.rounds
+                            else sched.n)
+    assert flat.t_final == (sched.rounds[-1].t_cum if sched.rounds else 0)
+
+
+def test_flatten_saturated_round_emits_noop_end_step():
+    sched = make_schedule(400, 4, K=1, eps=0.05, delta=0.1)
+    assert any(r.t_new == 0 for r in sched.rounds)
+    flat = flatten_schedule(sched)
+    noop_ends = (flat.is_pull == 0) & (flat.is_end == 1)
+    assert noop_ends.sum() == sum(r.t_new == 0 for r in sched.rounds)
+
+
+def test_flatten_final_coverage_completes_to_N():
+    sched = make_schedule(64, 32, K=2, eps=0.3, delta=0.1)
+    flat = flatten_schedule(sched, final_coverage=True)
+    assert flat.t_final == sched.N
+    # coverage pulls touch every survivor for every remaining block
+    extra = flat.n_steps - flatten_schedule(sched).n_steps
+    t_last = sched.rounds[-1].t_cum
+    assert extra == (sched.N - t_last) * flat.n_final
+
+
+def test_flatten_degenerate_no_rounds():
+    sched = make_schedule(8, 16, K=8)          # K >= n: nothing to eliminate
+    assert not sched.rounds
+    flat = flatten_schedule(sched)
+    assert flat.n_steps == 1                   # single no-op finalize step
+    assert int(flat.is_pull.sum()) == 0 and int(flat.is_end.sum()) == 0
+
+
+def test_packed_roundtrip():
+    sched = make_schedule(50, 40, K=2, eps=0.2, delta=0.1)
+    flat = flatten_schedule(sched, final_coverage=True)
+    code, meta = flat.packed()
+    assert code.dtype == np.int32 and meta.dtype == np.int32
+    np.testing.assert_array_equal(code & SLOT_MASK, flat.slot)
+    np.testing.assert_array_equal((code & PULL_BIT) != 0, flat.is_pull == 1)
+    np.testing.assert_array_equal((code & END_BIT) != 0, flat.is_end == 1)
+    assert meta.shape == (len(sched.rounds) + 1, 3)
+    for j, r in enumerate(sched.rounds):
+        assert tuple(meta[j]) == (r.t_cum, r.n_arms, r.n_keep)
