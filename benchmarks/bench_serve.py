@@ -1,0 +1,93 @@
+"""PR-2 serve-loop benchmark: micro-batch throughput vs batch deadline.
+
+Emits the rows for ``BENCH_PR2.json`` (via `benchmarks.run`): for each
+batch size B in {1, 8, 32} and each batch deadline, the request-loop
+throughput, achieved batch occupancy, and latency percentiles, driven by
+`simulate_stream`'s virtual clock (arrival spacing + *measured* compute
+per flush — no sleeps, so the numbers are stable on shared CI hardware).
+A second table measures the quantized-query LRU under a repeat-heavy
+stream.
+
+Geometry is CPU-feasible on purpose; the trends (occupancy rises with the
+deadline, per-request cost falls with B) are what's tracked across PRs,
+not the absolute numbers of this container.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.launch.serve import MIPSServeEngine, simulate_stream
+
+# serve-bench geometry: big enough that a flush is real MXU work, small
+# enough that 9 sweep cells finish in CI minutes on CPU
+_N_ARMS, _DIM, _K = 8192, 1024, 4
+_REQUESTS = 192
+_INTERARRIVAL_MS = 0.3
+_BATCHES = (1, 8, 32)
+_DEADLINES_MS = (0.5, 2.0, 8.0)
+
+
+def _make_engine(batch_size: int, deadline_ms: float, table,
+                 cache_entries: int = 0) -> MIPSServeEngine:
+    return MIPSServeEngine(
+        table, K=_K, eps=0.2, delta=0.1, value_range=8.0, block=256,
+        batch_size=batch_size, deadline_ms=deadline_ms,
+        cache_entries=cache_entries, recall_sample_rate=0.05)
+
+
+def run(csv: bool = True) -> dict:
+    """Run the sweep; returns the BENCH_PR2 payload dict."""
+    rng = np.random.default_rng(0)
+    table = rng.normal(size=(_N_ARMS, _DIM)).astype(np.float32)
+    queries = rng.normal(size=(_REQUESTS, _DIM)).astype(np.float32)
+
+    out = {"geometry": {"n": _N_ARMS, "N": _DIM, "K": _K,
+                        "requests": _REQUESTS,
+                        "interarrival_ms": _INTERARRIVAL_MS},
+           "throughput_vs_deadline": []}
+    for B in _BATCHES:
+        for dl in _DEADLINES_MS:
+            eng = _make_engine(B, dl, table)
+            # warm the jit cache so compile time doesn't pollute the clock
+            eng.submit(queries[0], now=-1e3)
+            eng.drain(now=-1e3)
+            stats = simulate_stream(eng, queries,
+                                    interarrival_ms=_INTERARRIVAL_MS)
+            row = {
+                "batch_size": B,
+                "deadline_ms": dl,
+                "throughput_rps": stats["throughput_rps"],
+                "mean_batch_occupancy": stats["mean_batch_occupancy"],
+                "full_flushes": stats["full_flushes"],
+                "deadline_flushes": stats["deadline_flushes"],
+                "latency_ms_p50": stats["latency_ms"]["p50"],
+                "latency_ms_p95": stats["latency_ms"]["p95"],
+                "recall_mean": stats["recall"]["mean"],
+            }
+            out["throughput_vs_deadline"].append(row)
+            if csv:
+                print(f"serve_loop,B={B};deadline={dl}ms,"
+                      f"rps={row['throughput_rps']:.0f}"
+                      f";occ={row['mean_batch_occupancy']:.1f}"
+                      f";p95={row['latency_ms_p95']:.2f}ms")
+
+    # LRU under a repeat-heavy stream (half the queries repeat an earlier
+    # one): hits bypass the flush entirely
+    eng = _make_engine(8, 2.0, table, cache_entries=256)
+    eng.submit(queries[0], now=-1e3)
+    eng.drain(now=-1e3)
+    reps = queries.copy()
+    reps[_REQUESTS // 2:] = queries[:_REQUESTS - _REQUESTS // 2]
+    stats = simulate_stream(eng, reps, interarrival_ms=_INTERARRIVAL_MS)
+    out["lru_repeat_stream"] = {
+        "repeat_rate": 0.5,
+        "cache_hit_rate": stats["cache"]["hit_rate"],
+        "throughput_rps": stats["throughput_rps"],
+        "latency_ms_p50": stats["latency_ms"]["p50"],
+    }
+    if csv:
+        print(f"serve_loop_lru,repeat=0.5,"
+              f"hit_rate={stats['cache']['hit_rate']:.2f}"
+              f";rps={stats['throughput_rps']:.0f}")
+    return out

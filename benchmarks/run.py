@@ -1,9 +1,12 @@
 """Benchmark driver: one function per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV rows per benchmark, then the
-roofline table from the dry-run artifacts (if present).  Also writes
-``BENCH_PR1.json`` (per-benchmark us_per_call, pull-count speedup, kernel
-dispatch counts) so the perf trajectory is machine-comparable across PRs.
+roofline table from the dry-run artifacts (if present).  Also writes the
+machine-readable perf trajectories: ``BENCH_PR1.json`` (fused cascade /
+batched decode: us_per_call, pull-count speedup, kernel dispatch counts)
+and ``BENCH_PR2.json`` (serve-loop micro-batching: throughput vs batch
+deadline at B in {1, 8, 32}, LRU hit rates) so numbers stay comparable
+across PRs.
 """
 
 from __future__ import annotations
@@ -12,23 +15,27 @@ import json
 import os
 import sys
 
-BENCH_JSON = os.path.join(os.path.dirname(os.path.dirname(__file__)),
-                          "BENCH_PR1.json")
+_ROOT = os.path.dirname(os.path.dirname(__file__))
+BENCH_JSON = os.path.join(_ROOT, "BENCH_PR1.json")
+BENCH2_JSON = os.path.join(_ROOT, "BENCH_PR2.json")
 
 
 def main() -> None:
-    from benchmarks import (bench_fused, fig1_guarantee, fig23_synthetic,
-                            fig4_real, table1_complexity)
+    from benchmarks import (bench_fused, bench_serve, fig1_guarantee,
+                            fig23_synthetic, fig4_real, table1_complexity)
     print("== fused cascade / batched decode (PR 1) ==")
     import jax
-    payload = {
-        "meta": {"backend": jax.default_backend(),
-                 "devices": jax.device_count()},
-        "benchmarks": bench_fused.run(),
-    }
+    meta = {"backend": jax.default_backend(),
+            "devices": jax.device_count()}
+    payload = {"meta": meta, "benchmarks": bench_fused.run()}
     with open(BENCH_JSON, "w") as f:
         json.dump(payload, f, indent=2)
     print(f"[bench] wrote {BENCH_JSON}")
+    print("== serve-loop micro-batching (PR 2) ==")
+    payload2 = {"meta": meta, "benchmarks": bench_serve.run()}
+    with open(BENCH2_JSON, "w") as f:
+        json.dump(payload2, f, indent=2)
+    print(f"[bench] wrote {BENCH2_JSON}")
     print("== table1: complexity/guarantees ==")
     table1_complexity.run()
     print("== fig1: guarantee validation (adversarial) ==")

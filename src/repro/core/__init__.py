@@ -13,7 +13,8 @@ from repro.core.boundedme_jax import (
     bounded_me_decode,
 )
 from repro.core.mips import (
-    default_value_range, exact_topk, mips_topk, nns_topk, sharded_mips_topk,
+    default_value_range, exact_topk, mips_topk, nns_topk,
+    sharded_bounded_me_decode, sharded_mips_topk,
 )
 from repro.core.median_elim import median_elimination, successive_elimination
 from repro.core.bounded_se import bounded_se
@@ -24,6 +25,7 @@ __all__ = [
     "flatten_schedule", "BoundedMEResult", "bounded_me", "reward_matrix",
     "BlockedPlan", "make_plan", "bounded_me_blocked", "bounded_me_batched",
     "bounded_me_decode", "mips_topk", "nns_topk", "sharded_mips_topk",
-    "exact_topk", "default_value_range", "median_elimination",
+    "sharded_bounded_me_decode", "exact_topk", "default_value_range",
+    "median_elimination",
     "successive_elimination", "bounded_se",
 ]

@@ -60,10 +60,25 @@ class BlockedPlan:
 
     @property
     def k_tiles(self) -> int:
-        # keep K whole tiles: in the worst case each of the top-K arms sits
-        # in its own tile, so min(n_tiles, K) tiles must survive to the end
-        # (ceil(K/tile) would lose winners under adversarial placement)
+        """Arm tiles that must survive to the final round: min(n_tiles, K).
+
+        In the worst case each of the top-K arms sits in its own tile, so
+        min(n_tiles, K) tiles must survive to the end (ceil(K/tile) would
+        lose winners under adversarial placement).
+        """
         return min(self.n_tiles, self.K)
+
+    @property
+    def k_out_cap(self) -> int:
+        """Widest final extraction the cascade supports (`k_out` upper bound).
+
+        The final top-K scans the ``n_final`` surviving tiles, i.e.
+        ``n_final * tile`` candidate rows; no more than that many candidates
+        exist to extract (padding rows included — callers mask those).
+        """
+        n_final = (self.schedule.rounds[-1].n_keep if self.schedule.rounds
+                   else self.n_tiles)
+        return n_final * self.tile
 
     @property
     def total_multiplies(self) -> int:
@@ -73,10 +88,12 @@ class BlockedPlan:
 
     @property
     def naive_multiplies(self) -> int:
+        """FLOPs of the exhaustive (n x N) matvec baseline."""
         return self.n * self.N
 
     @property
     def speedup(self) -> float:
+        """FLOP-level speedup of the blocked schedule over exhaustive."""
         return self.naive_multiplies / max(1, self.total_multiplies)
 
 
@@ -136,7 +153,8 @@ def _tile_major(V: jnp.ndarray, plan: BlockedPlan) -> jnp.ndarray:
 
 
 def _fused_call(V4, qb_or_Qb, perm_or_perms, *, plan: BlockedPlan,
-                final_exact: bool, batched: bool):
+                final_exact: bool, batched: bool, k_out: Optional[int] = None,
+                n_valid=None):
     """Dispatch the whole cascade as exactly one Pallas kernel launch."""
     from repro.kernels import ops as _kops
 
@@ -147,7 +165,7 @@ def _fused_call(V4, qb_or_Qb, perm_or_perms, *, plan: BlockedPlan,
     cols = perm_or_perms[..., bpos] if batched else perm_or_perms[bpos]
     return fn(V4, qb_or_Qb, jnp.asarray(slotcode), jnp.asarray(rmeta), cols,
               n_arms=plan.n, K=plan.K, t_final=flat.t_final,
-              n_final=flat.n_final)
+              n_final=flat.n_final, k_out=k_out, n_valid=n_valid)
 
 
 def _scan_pulls(sums, V4, qb, idx, cols):
@@ -279,9 +297,9 @@ def bounded_me_batched(V, Q, keys, *, plan: BlockedPlan,
 
 
 @functools.partial(jax.jit, static_argnames=("plan", "final_exact",
-                                             "use_pallas"))
-def _run_decode(V, Q, key, *, plan: BlockedPlan, final_exact: bool,
-                use_pallas: bool):
+                                             "use_pallas", "k_out"))
+def _run_decode(V, Q, key, n_valid, *, plan: BlockedPlan, final_exact: bool,
+                use_pallas: bool, k_out: int):
     R, C = plan.tile, plan.block
     B = Q.shape[0]
     V, Q = _pad_operands(jnp.asarray(V), jnp.asarray(Q), plan)
@@ -296,11 +314,12 @@ def _run_decode(V, Q, key, *, plan: BlockedPlan, final_exact: bool,
     if use_pallas:
         perms = jnp.broadcast_to(perm, (B, plan.n_blocks))
         ids, vals = _fused_call(V4, Qb, perms, plan=plan,
-                                final_exact=final_exact, batched=True)
+                                final_exact=final_exact, batched=True,
+                                k_out=k_out, n_valid=n_valid)
         return ids, vals * jnp.float32(scale)
 
     arm_ids0 = jnp.arange(plan.n_tiles * R).reshape(plan.n_tiles, R)
-    valid0 = (arm_ids0 < plan.n).astype(V.dtype)
+    valid0 = (arm_ids0 < n_valid).astype(V.dtype)
     brange = jnp.arange(B)[:, None]
 
     idx = jnp.broadcast_to(jnp.arange(plan.n_tiles), (B, plan.n_tiles))
@@ -350,7 +369,7 @@ def _run_decode(V, Q, key, *, plan: BlockedPlan, final_exact: bool,
         scores = jnp.take_along_axis(sums, idx[..., None], axis=1)
         scores = scores / jnp.float32(max(1, t_prev) * C)
     flat = jnp.where(valid > 0, scores, neg).reshape(B, -1)
-    top_vals, top_pos = jax.lax.top_k(flat, plan.K)
+    top_vals, top_pos = jax.lax.top_k(flat, k_out)
     arm_ids = jnp.take_along_axis(arm_ids0[idx].reshape(B, -1), top_pos,
                                   axis=1)
     return arm_ids, top_vals * jnp.float32(scale)
@@ -358,7 +377,9 @@ def _run_decode(V, Q, key, *, plan: BlockedPlan, final_exact: bool,
 
 def bounded_me_decode(V, Q, key, *, plan: BlockedPlan,
                       final_exact: bool = True,
-                      use_pallas: Optional[bool] = None):
+                      use_pallas: Optional[bool] = None,
+                      k_out: Optional[int] = None,
+                      n_valid=None):
     """Batched-decode BoundedME: one dispatch for a whole (B, N) batch.
 
     The serving hot path (DESIGN.md §3).  All queries share one block
@@ -367,10 +388,43 @@ def bounded_me_decode(V, Q, key, *, plan: BlockedPlan,
     a single `pallas_call`; the jnp fallback turns early rounds into dense
     (n_tiles*R, C) x (C, B) MXU tile-matmuls instead of the per-query
     gather einsum the vmapped path pays.  Survivor sets and eliminations
-    stay fully per-query.  Returns ``(ids (B, K), scores (B, K))``.
+    stay fully per-query.
+
+    Args:
+      V: (n, N) item/arm matrix (rows are arms); any float dtype.
+      Q: (B, N) query batch, same trailing dim as ``V``.
+      key: PRNG key for the shared block permutation.
+      plan: static :class:`BlockedPlan` from :func:`make_plan` — carries the
+        (eps, delta) calibration; must match ``V``'s (n, N).
+      final_exact: complete final survivors to full coverage so returned
+        scores are exact mean products (q . v)/N, not block-mean estimates.
+      use_pallas: force/deny the fused kernel (default: auto, TPU only).
+      k_out: how many candidates to return per query (default ``plan.K``).
+        The cascade still targets ``plan.K`` (the elimination keeps
+        ``plan.k_tiles`` tiles); ``k_out`` only widens the final extraction
+        so shard-local callers get a threshold candidate for bound gaps.
+        Must satisfy ``plan.K <= k_out <= plan.k_out_cap``.
+      n_valid: rows >= n_valid are masked out of every ranking *inside*
+        the cascade (default ``plan.n``): caller-padding rows (padded
+        vocab, ragged shard) can then never occupy survivor or candidate
+        slots.  Accepts a traced scalar (per-shard under shard_map).
+
+    Returns:
+      ``(ids (B, k_out) int32, scores (B, k_out) f32)`` sorted by descending
+      score.  Entries past the number of real arms (if ``n < k_out``) carry
+      ``-inf`` scores and padding ids.
     """
     if use_pallas is None:
         from repro.kernels import ops as _kops
         use_pallas = _kops.on_tpu()
-    return _run_decode(jnp.asarray(V), jnp.asarray(Q), key, plan=plan,
-                       final_exact=final_exact, use_pallas=use_pallas)
+    if k_out is None:
+        k_out = plan.K
+    if not plan.K <= k_out <= plan.k_out_cap:
+        raise ValueError(f"k_out={k_out} outside [K={plan.K}, "
+                         f"k_out_cap={plan.k_out_cap}]")
+    if n_valid is None:
+        n_valid = plan.n
+    return _run_decode(jnp.asarray(V), jnp.asarray(Q), key,
+                       jnp.asarray(n_valid, jnp.int32), plan=plan,
+                       final_exact=final_exact, use_pallas=use_pallas,
+                       k_out=k_out)

@@ -4,7 +4,10 @@
 (eps, delta) suboptimality knob (Motivation I + II).  ``sharded_mips_topk``
 runs the identical static schedule independently on each shard of an
 arm-sharded store (e.g. a vocab-sharded unembedding) and merges with a
-single all-gather — the distributed form used inside `serve_step`.
+single all-gather — the distributed form used inside `decode_step`.  The
+multi-device *serving* hot path (shared permutation, bound gaps, ragged
+shard support) is ``sharded_bounded_me_decode``, re-exported here from
+`repro.distributed.sharding` (DESIGN.md §7).
 """
 
 from __future__ import annotations
@@ -19,9 +22,11 @@ import numpy as np
 
 from repro.core.boundedme_jax import (BlockedPlan, bounded_me_batched,
                                       bounded_me_blocked, make_plan)
+from repro.distributed.sharding import sharded_bounded_me_decode
 
 __all__ = ["mips_topk", "nns_topk", "sharded_mips_topk", "exact_topk",
-           "default_value_range", "table_abs_max"]
+           "sharded_bounded_me_decode", "default_value_range",
+           "table_abs_max"]
 
 
 def exact_topk(V, q, K: int = 1) -> Tuple[jnp.ndarray, jnp.ndarray]:
@@ -94,9 +99,36 @@ def mips_topk(V, q, K: int = 1, *, method: str = "boundedme",
               use_pallas: bool = False):
     """Top-K maximum inner product search over the rows of ``V``.
 
-    method='exact' ignores (eps, delta); method='boundedme' guarantees
-    eps-optimality of (q.v)/N with probability >= 1-delta (block-mean
-    granularity on this path; see DESIGN.md §3/§8).
+    Zero preprocessing: ``V`` can be hot-swapped between calls with no
+    index rebuild (the per-table max used by the default ``value_range`` is
+    the only cached state, keyed on object identity).
+
+    Args:
+      V: (n, N) float array — the item/arm matrix, rows are arms.
+      q: (N,) float query.
+      K: number of results, 1 <= K <= n.
+      method: 'boundedme' (the paper's bandit) or 'exact' (full matvec
+        baseline; ignores every knob below).
+      eps / delta: suboptimality knob — returned arms are eps-optimal on
+        the mean-product scale (q . v)/N with probability >= 1 - delta,
+        at block-mean granularity on this path (DESIGN.md §3/§9).
+      value_range: a-priori bound on per-coordinate products q_j * v_ij
+        (the paper's rewards-in-[0, 1] assumption generalized).  Defaults
+        to the conservative data-derived `default_value_range`; hot-path
+        callers should pass an explicit bound.
+      key: PRNG key for the block permutation (default PRNGKey(0)).
+      tile / block: TPU geometry — arm-tile rows (elimination granularity)
+        and coordinate-block width (pull granularity).
+      final_exact: exactly rescore the final survivors so returned scores
+        carry no estimation error.
+      use_pallas: run the fused single-dispatch kernel (TPU; interpret
+        mode elsewhere — slow, tests only).
+
+    Returns:
+      ``(ids (K,) int32, scores (K,) f32)``; scores estimate (q . v)/N.
+
+    Raises:
+      ValueError: unknown ``method``.
     """
     if method == "exact":
         return exact_topk(V, q, K)
@@ -150,7 +182,22 @@ def sharded_mips_topk(table, queries, keys, K: int, *, mesh,
     batched fused-cascade `pallas_call` on TPU (``use_pallas=None`` =>
     auto), or one vmapped scan program otherwise.
 
-    queries: (B, N); keys: (B,) PRNG keys.  Returns (ids (B,K), scores).
+    Args:
+      table: (n, N) float arm matrix; n must divide evenly by the
+        ``model_axis`` extent (asserted) — use `sharded_bounded_me_decode`
+        for ragged tables.
+      queries: (B, N) query batch; keys: (B,) per-query PRNG keys (each
+        query samples its own block permutation — contrast with the
+        shared-permutation decode engine).
+      K / eps / delta / value_range / tile / block / final_exact: as in
+        `mips_topk`; delta is split across shards by union bound.
+      mesh / model_axis / batch_axes: device mesh, arm-sharding axis name,
+        and optional query-batch sharding axes.
+      n_valid: real row count when ``table`` carries padding rows (e.g. a
+        padded vocab); padding is masked out of the merge.
+
+    Returns:
+      ``(ids (B, K) int32, scores (B, K) f32)``.
     """
     from jax.sharding import PartitionSpec as P
 

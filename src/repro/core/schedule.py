@@ -59,6 +59,7 @@ class Schedule:
 
     @property
     def naive_pulls(self) -> int:
+        """Pulls of the exhaustive baseline: every arm's full reward list."""
         return self.n * self.N
 
     @property
@@ -68,6 +69,7 @@ class Schedule:
 
     @property
     def final_pulls(self) -> int:
+        """Cumulative pulls per arm surviving to the last round (t_L)."""
         return self.rounds[-1].t_cum if self.rounds else 0
 
 
@@ -107,6 +109,7 @@ class FlatSchedule:
 
     @property
     def n_steps(self) -> int:
+        """Total kernel grid steps (pull + no-op elimination steps)."""
         return int(self.slot.shape[0])
 
     def stacked(self) -> np.ndarray:

@@ -1,10 +1,18 @@
-"""Logical-axis sharding: rules + a no-op-safe constraint helper.
+"""Logical-axis sharding, shard_map compat, and the sharded decode engine.
 
 Model code annotates activations/params with *logical* axes ('batch',
 'vocab', 'ff', 'heads', 'experts', 'kvseq', ...).  The launcher binds a mesh
 and a logical->mesh translation; smoke tests bind nothing and every
 annotation becomes a no-op.  This keeps the model definition identical from
 1 CPU device to the 512-chip multi-pod mesh.
+
+This module also hosts :func:`sharded_bounded_me_decode` — the multi-device
+serving primitive (DESIGN.md §7): each shard of an arm-sharded item matrix
+runs the PR-1 fused cascade locally under `shard_map` (its own flat
+schedule, survivor set and accumulator stay on-chip), emits its top-K
+candidates with exact scores and bound gaps, and a cheap all-gather merge
+takes the global top-K over exact scores so the (eps, delta) guarantee
+holds globally, not per shard.
 """
 
 from __future__ import annotations
@@ -14,11 +22,13 @@ import threading
 from typing import Dict, Optional, Tuple, Union
 
 import jax
+import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 __all__ = [
     "LOGICAL_RULES", "logical_mesh", "current_mesh", "shard", "spec_of",
-    "named_sharding", "shard_map_compat",
+    "named_sharding", "shard_map_compat", "sharded_bounded_me_decode",
+    "make_shard_plan",
 ]
 
 
@@ -89,6 +99,7 @@ def logical_mesh(mesh: Mesh, rules: Optional[Dict[str, AxisBinding]] = None):
 
 
 def current_mesh() -> Optional[Mesh]:
+    """The mesh bound by the innermost `logical_mesh`, or None."""
     return _CTX.mesh
 
 
@@ -124,5 +135,189 @@ def shard(x, *logical_axes: Optional[str]):
 
 
 def named_sharding(*logical_axes: Optional[str]) -> NamedSharding:
+    """NamedSharding for the bound mesh; requires `logical_mesh` active."""
     assert _CTX.mesh is not None, "no mesh bound"
     return NamedSharding(_CTX.mesh, spec_of(*logical_axes))
+
+
+# ---------------------------------------------------------------------------
+# Sharded serving engine: shard-local fused cascades + exact cross-shard merge
+# ---------------------------------------------------------------------------
+
+
+def make_shard_plan(n: int, N: int, n_shards: int, *, K: int = 1,
+                    eps: float = 0.05, delta: float = 0.05,
+                    value_range: float = 4.0, tile: int = 8,
+                    block: int = 512):
+    """Shard-local BlockedPlan + padding geometry for an arm-sharded table.
+
+    Splits an (n, N) item matrix into ``n_shards`` row shards of
+    ``n_local = ceil(n / n_shards)`` arms (the last shard is padded with
+    ``n_pad = n_shards * n_local - n`` zero rows when n is ragged) and
+    calibrates the per-shard cascade so the *global* (eps, delta) guarantee
+    survives sharding (DESIGN.md §7):
+
+    * ``delta`` is split across shards by union bound (each shard runs at
+      ``delta / n_shards``);
+    * padding rows (ragged zero rows, and any caller padding past
+      ``n_valid`` such as a padded vocab) are masked *inside* each shard's
+      cascade via the dynamic ``n_valid`` bound of `bounded_me_decode`, so
+      they can never occupy survivor or candidate slots — no shard-local K
+      inflation is needed;
+    * ``k_out`` asks each shard for one candidate beyond its top-K so the
+      merge can report per-candidate bound gaps (margin over the best
+      non-returned survivor).
+
+    Returns ``(plan, n_local, n_pad, k_out)``.
+    """
+    from repro.core.boundedme_jax import make_plan
+
+    if not 1 <= n_shards:
+        raise ValueError(f"need n_shards >= 1, got {n_shards}")
+    if not 1 <= K <= n:
+        raise ValueError(f"need 1 <= K <= n, got K={K} n={n}")
+    n_local = -(-n // n_shards)
+    n_pad = n_shards * n_local - n
+    K_local = min(K, n_local)
+    plan = make_plan(n_local, N, K=K_local, eps=eps, delta=delta / n_shards,
+                     value_range=value_range, tile=tile, block=block)
+    k_out = max(K_local, min(K_local + 1, plan.k_out_cap, n_local))
+    return plan, n_local, n_pad, k_out
+
+
+def sharded_bounded_me_decode(table, Q, key, *, mesh: Mesh, K: int = 1,
+                              model_axis: str = "model", batch_axes=None,
+                              n_valid: Optional[int] = None,
+                              eps: float = 0.05, delta: float = 0.05,
+                              value_range: float = 4.0, tile: int = 8,
+                              block: int = 512, final_exact: bool = True,
+                              use_pallas: Optional[bool] = None,
+                              return_candidates: bool = False):
+    """Multi-device batched-decode MIPS: per-shard fused cascade + exact merge.
+
+    The serving engine's distributed hot path (DESIGN.md §7).  The item
+    matrix ``table`` (n, N) is sharded on rows over ``model_axis``; under
+    `shard_map` each shard runs the single-dispatch fused BoundedME cascade
+    (`bounded_me_decode`) on its own ``n_local`` arms — per-shard flat
+    schedule, survivor set and accumulator never leave the device — and
+    emits its local top-K candidate ids, *exact* scores and bound gaps.
+    The merge all-gathers only those O(shards * K) floats per query and
+    takes the global top-K over exact scores.
+
+    Why the global (eps, delta) guarantee holds: the shard owning the
+    global optimum returns a candidate within eps of it with probability
+    >= 1 - delta/shards (union bound over shards); candidate scores
+    entering the merge are exact inner products (the flat schedule's
+    coverage completion when ``final_exact=True``, or an explicit dense
+    rescore of the k_out candidates otherwise), so the cross-shard argmax
+    introduces no additional estimation error.
+
+    Args:
+      table: (n, N) float item matrix, rows = arms.  n need not divide the
+        shard count — ragged tables are zero-padded to
+        ``shards * ceil(n/shards)`` rows and padding can never win (see
+        :func:`make_shard_plan`).
+      Q: (B, N) query batch; B must be divisible by the ``batch_axes``
+        mesh extent when batch-sharded.
+      key: PRNG key; one block permutation is shared by the whole batch
+        and all shards (identical columns per round => dense MXU rounds).
+      mesh: the device mesh; ``model_axis`` names the arm-sharding axis.
+      K: global top-K to return.
+      batch_axes: mesh axis (or tuple) to shard the query batch over, or
+        None for a replicated batch.
+      n_valid: number of *real* rows if the caller already padded ``table``
+        (e.g. a padded vocab); defaults to n.  Rows past it are masked out
+        of the merge.
+      eps / delta / value_range / tile / block: cascade calibration knobs,
+        as in `make_plan`; delta is split across shards internally.
+      final_exact: complete survivors to full coverage on-shard so merge
+        scores are exact (default).  With False, an explicit (B, k_out, N)
+        gather-rescore supplies the exact merge scores instead — cheaper
+        per shard when N is huge and the schedule saturates early.
+      use_pallas: force/deny the fused kernel (default auto: TPU only).
+      return_candidates: also return the pre-merge per-shard candidate
+        sets — a dict of ``ids/scores/gaps`` arrays shaped
+        (B, shards, k_out) — for diagnostics and tests.
+
+    Returns:
+      ``(ids (B, K) int32, scores (B, K) f32, gaps (B, K) f32)`` — scores
+      are exact mean products (q . v)/N; ``gaps[b, j]`` is candidate j's
+      margin over its *source shard's* best non-returned survivor (+inf
+      when the shard had no spare survivor), a per-candidate certificate of
+      how decisively it won shard-locally.  With ``return_candidates=True``
+      a 4th element (the candidates dict) is appended.
+    """
+    from repro.core.boundedme_jax import bounded_me_decode
+
+    if use_pallas is None:
+        from repro.kernels import ops as _kops
+        use_pallas = _kops.on_tpu()
+    table = jnp.asarray(table)
+    Q = jnp.asarray(Q)
+    n, N = table.shape
+    if n_valid is None:
+        n_valid = n
+    n_shards = mesh.shape[model_axis]
+    plan, n_local, n_pad, k_out = make_shard_plan(
+        n, N, n_shards, K=K, eps=eps, delta=delta, value_range=value_range,
+        tile=tile, block=block)
+    if n_pad:
+        table = jnp.pad(table, ((0, n_pad), (0, 0)))
+    key = jnp.asarray(key)
+    neg = jnp.float32(-jnp.inf)
+
+    def local(table_l, Q_l, key_l):
+        shard_i = jax.lax.axis_index(model_axis)
+        # rows of this shard past the global n_valid boundary (ragged zero
+        # padding and caller padding, e.g. a padded vocab) are masked
+        # *inside* the cascade: they can never evict a true winner from
+        # the survivor set, so no shard-local K inflation is needed
+        n_valid_l = jnp.clip(n_valid - shard_i * n_local, 0, n_local)
+        ids, scores = bounded_me_decode(
+            table_l, Q_l, key_l, plan=plan, final_exact=final_exact,
+            use_pallas=use_pallas, k_out=k_out,
+            n_valid=n_valid_l)                            # (B_loc, k_out)
+        if not final_exact:
+            # exact cross-shard rescore: merge decisions must compare exact
+            # inner products, never block-mean estimates
+            safe = jnp.clip(ids, 0, table_l.shape[0] - 1)
+            scores = jnp.einsum("bkc,bc->bk", table_l[safe], Q_l,
+                                preferred_element_type=jnp.float32)
+            scores = scores / jnp.float32(N)
+        gids = ids + shard_i * n_local
+        # bound gap: margin over the shard's best non-returned survivor
+        if k_out > plan.K:
+            thr = scores[:, k_out - 1:k_out]               # (B_loc, 1)
+            gaps = scores - thr
+        else:
+            gaps = jnp.full_like(scores, jnp.inf)
+        # belt-and-braces for the merge: in-cascade masking already keeps
+        # padding out of the candidates, but a shard with fewer than k_out
+        # valid arms still emits filler entries — keep them at -inf
+        valid = jnp.logical_and(ids < n_valid_l, gids < n_valid)
+        scores = jnp.where(valid, scores, neg)
+        B_loc = ids.shape[0]
+        all_ids = jax.lax.all_gather(gids, model_axis, axis=1)
+        all_sc = jax.lax.all_gather(scores, model_axis, axis=1)
+        all_gap = jax.lax.all_gather(gaps, model_axis, axis=1)
+        cands = (all_ids, all_sc, all_gap)                 # (B_loc, S, k_out)
+        flat_ids = all_ids.reshape(B_loc, -1)
+        flat_sc = all_sc.reshape(B_loc, -1)
+        flat_gap = all_gap.reshape(B_loc, -1)
+        vals, pos = jax.lax.top_k(flat_sc, K)
+        top_ids = jnp.take_along_axis(flat_ids, pos, axis=1)
+        top_gaps = jnp.take_along_axis(flat_gap, pos, axis=1)
+        return top_ids, vals, top_gaps, cands
+
+    kspec = P(*([None] * key.ndim))
+    out2 = P(batch_axes, None)
+    out3 = P(batch_axes, None, None)
+    fn = shard_map_compat(
+        local, mesh=mesh,
+        in_specs=(P(model_axis, None), P(batch_axes, None), kspec),
+        out_specs=(out2, out2, out2, (out3, out3, out3)))
+    ids, scores, gaps, cands = fn(table, Q, key)
+    if return_candidates:
+        return ids, scores, gaps, {
+            "ids": cands[0], "scores": cands[1], "gaps": cands[2]}
+    return ids, scores, gaps

@@ -18,7 +18,19 @@ from jax.sharding import Mesh, PartitionSpec as P
 from repro.configs.base import ArchConfig
 
 __all__ = ["param_pspecs", "batch_pspecs", "cache_pspecs", "tree_pspecs",
-           "batch_axes"]
+           "batch_axes", "serving_table_sharding"]
+
+
+def serving_table_sharding(mesh: Mesh, model_axis: str = "model"):
+    """NamedSharding placing an (n, N) item matrix row-sharded for serving.
+
+    The serving engine (`launch/serve.py`) device_puts its table with this
+    before the first request so `sharded_bounded_me_decode`'s shard_map
+    finds each row shard already resident on its device — no resharding
+    collective on the first flush (DESIGN.md §7).
+    """
+    from jax.sharding import NamedSharding
+    return NamedSharding(mesh, P(model_axis, None))
 
 
 def batch_axes(mesh: Mesh, global_batch: int):
@@ -94,6 +106,7 @@ def param_pspecs(cfg: ArchConfig, abstract_params, mesh: Mesh,
 
 
 def batch_pspecs(mesh: Mesh, global_batch: int, batch: dict):
+    """Batch tree specs: leading dim on `batch_axes`, rest replicated."""
     axes = batch_axes(mesh, global_batch)
 
     def spec(path, leaf):

@@ -28,6 +28,10 @@ Scalar-prefetch operands (SMEM):
   slotcode (S,)           packed slot | PULL_BIT | END_BIT per step
   rounds_meta (rounds+1,3) (t_cum, n_surv, n_keep) consumed at end steps
   cols (S,) / (B, S)      column-block id pulled per step (perm[bpos])
+  nvalid (1,)             rows >= nvalid are masked out of every ranking
+                          (tile padding AND caller padding, e.g. a padded
+                          vocab or a ragged shard — DESIGN.md §7); may be
+                          a traced value (per-shard under shard_map)
 """
 
 from __future__ import annotations
@@ -52,8 +56,8 @@ def _make_kernel(*, n_arms, R, C, K, n_tiles, t_final, n_final, S, Pw, B):
     """Build the kernel body.  B is None for the single-query variant."""
     batched = B is not None
 
-    def kernel(code_ref, rmeta_ref, cols_ref, V_ref, q_ref, ids_ref, vals_ref,
-               acc, vbuf, surv, tmp, scorebuf, rnd, sem):
+    def kernel(code_ref, rmeta_ref, cols_ref, nv_ref, V_ref, q_ref, ids_ref,
+               vals_ref, acc, vbuf, surv, tmp, scorebuf, rnd, sem):
         # constants must be materialized inside the traced body
         _NEG = jnp.float32(-jnp.inf)
         denom_final = jnp.float32(max(1, t_final) * C)
@@ -110,7 +114,7 @@ def _make_kernel(*, n_arms, R, C, K, n_tiles, t_final, n_final, S, Pw, B):
                 rowids = tile * R + jax.lax.broadcasted_iota(
                     jnp.int32, (1, R), 1)
                 scorebuf[0, s] = jnp.max(
-                    jnp.where(rowids < n_arms, means, _NEG))
+                    jnp.where(rowids < nv_ref[0], means, _NEG))
                 return 0
             jax.lax.fori_loop(0, T, score_body, 0)
             scorebuf[:] = jnp.where(colid < T, scorebuf[:], _NEG)
@@ -162,7 +166,7 @@ def _make_kernel(*, n_arms, R, C, K, n_tiles, t_final, n_final, S, Pw, B):
                 rowids = tile * R + jax.lax.broadcasted_iota(
                     jnp.int32, (1, R), 1)
                 scorebuf[0, pl.ds(s * R, R)] = jnp.where(
-                    rowids < n_arms, means, _NEG)[0]
+                    rowids < nv_ref[0], means, _NEG)[0]
                 return 0
             jax.lax.fori_loop(0, n_final, score_body, 0)
             scorebuf[:] = jnp.where(colid < n_final * R, scorebuf[:], _NEG)
@@ -194,23 +198,37 @@ def _scratch(n_tiles, R, C, Pw, vdtype):
 
 
 @functools.partial(jax.jit, static_argnames=("n_arms", "K", "t_final",
-                                             "n_final", "interpret"))
+                                             "n_final", "k_out", "interpret"))
 def fused_cascade_pallas(V4, qb, slotcode, rounds_meta, cols, *, n_arms: int,
                          K: int, t_final: int, n_final: int,
+                         k_out: int = None, n_valid=None,
                          interpret: bool = False):
     """Single-query fused cascade: ONE pallas_call for all rounds.
 
     V4:  (n_tiles, n_blocks, R, C) tile-major data (stays in HBM)
     qb:  (n_blocks, C) blocked query (VMEM-resident)
     slotcode/rounds_meta/cols: see `FlatSchedule.packed`
-    Returns (ids (K,) int32, vals (K,) f32) — vals are unscaled block means,
-    identical to the unfused path before its padding rescale.
+    k_out: number of final candidates extracted in-kernel (default K).
+    Shard-local callers ask for k_out > K so the K winners come back with a
+    threshold candidate for bound-gap computation; the extra extraction
+    iterations reuse the same scorebuf, so K only sizes the schedule while
+    k_out sizes the output.  Must satisfy ``K <= k_out <= n_final * R``.
+    n_valid: rows >= n_valid never win a ranking (default ``n_arms``);
+    accepts a traced scalar, so shards can mask their own slice of a
+    caller-padded table in-cascade (DESIGN.md §7).
+    Returns (ids (k_out,) int32, vals (k_out,) f32) — vals are unscaled block
+    means, identical to the unfused path before its padding rescale.
     """
     n_tiles, n_blocks, R, C = V4.shape
+    if k_out is None:
+        k_out = K
+    K = k_out          # K's only kernel role is the extraction/output width
+    if n_valid is None:
+        n_valid = n_arms
     S = slotcode.shape[0]
     Pw = _round_up(max(n_tiles, n_final * R, 1), 128)
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=3,
+        num_scalar_prefetch=4,
         grid=(S,),
         in_specs=[
             pl.BlockSpec(memory_space=pltpu.ANY),     # V4: manual tile DMA
@@ -232,27 +250,37 @@ def fused_cascade_pallas(V4, qb, slotcode, rounds_meta, cols, *, n_arms: int,
                    jax.ShapeDtypeStruct((1, K), jnp.float32)),
         interpret=interpret,
     )(slotcode.astype(jnp.int32), rounds_meta.astype(jnp.int32),
-      cols.astype(jnp.int32), V4, qb)
+      cols.astype(jnp.int32), jnp.asarray(n_valid, jnp.int32).reshape(1),
+      V4, qb)
     return ids[0], vals[0]
 
 
 @functools.partial(jax.jit, static_argnames=("n_arms", "K", "t_final",
-                                             "n_final", "interpret"))
+                                             "n_final", "k_out", "interpret"))
 def fused_cascade_batched_pallas(V4, Qb, slotcode, rounds_meta, cols, *,
                                  n_arms: int, K: int, t_final: int,
-                                 n_final: int, interpret: bool = False):
+                                 n_final: int, k_out: int = None,
+                                 n_valid=None, interpret: bool = False):
     """Batched fused cascade: the query axis rides in the grid.
 
     Qb: (B, n_blocks, C) blocked queries; cols: (B, S) per-query pull
     columns.  One dispatch serves the whole decode batch; per-query state is
-    re-initialized at each query's first grid step.
-    Returns (ids (B, K) int32, vals (B, K) f32), unscaled.
+    re-initialized at each query's first grid step.  ``k_out`` (default K)
+    widens the in-kernel final extraction and ``n_valid`` (default
+    ``n_arms``, may be traced) masks caller-padding rows exactly as in
+    `fused_cascade_pallas`.
+    Returns (ids (B, k_out) int32, vals (B, k_out) f32), unscaled.
     """
     n_tiles, n_blocks, R, C = V4.shape
+    if k_out is None:
+        k_out = K
+    K = k_out
+    if n_valid is None:
+        n_valid = n_arms
     B, S = cols.shape
     Pw = _round_up(max(n_tiles, n_final * R, 1), 128)
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=3,
+        num_scalar_prefetch=4,
         grid=(B, S),
         in_specs=[
             pl.BlockSpec(memory_space=pltpu.ANY),
@@ -273,4 +301,5 @@ def fused_cascade_batched_pallas(V4, Qb, slotcode, rounds_meta, cols, *,
                    jax.ShapeDtypeStruct((B, K), jnp.float32)),
         interpret=interpret,
     )(slotcode.astype(jnp.int32), rounds_meta.astype(jnp.int32),
-      cols.astype(jnp.int32), V4, Qb)
+      cols.astype(jnp.int32), jnp.asarray(n_valid, jnp.int32).reshape(1),
+      V4, Qb)

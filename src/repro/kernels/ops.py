@@ -21,6 +21,7 @@ __all__ = ["gather_block_dot", "blocked_matvec", "fused_cascade",
 
 
 def on_tpu() -> bool:
+    """True when the default backend compiles Pallas to Mosaic (TPU)."""
     return jax.default_backend() == "tpu"
 
 
@@ -61,19 +62,21 @@ def gather_block_dot(V4, idx, cols, qsel):
 
 
 def fused_cascade(V4, qb, slotcode, rounds_meta, cols, *, n_arms, K,
-                  t_final, n_final):
+                  t_final, n_final, k_out=None, n_valid=None):
     """Whole-cascade single dispatch: see `repro.kernels.fused_cascade`."""
     return fused_cascade_pallas(V4, qb, slotcode, rounds_meta, cols,
                                 n_arms=n_arms, K=K, t_final=t_final,
-                                n_final=n_final, interpret=not on_tpu())
+                                n_final=n_final, k_out=k_out,
+                                n_valid=n_valid, interpret=not on_tpu())
 
 
 def fused_cascade_batched(V4, Qb, slotcode, rounds_meta, cols, *, n_arms, K,
-                          t_final, n_final):
+                          t_final, n_final, k_out=None, n_valid=None):
     """Batched whole-cascade dispatch: query axis in the kernel grid."""
     return fused_cascade_batched_pallas(V4, Qb, slotcode, rounds_meta, cols,
                                         n_arms=n_arms, K=K, t_final=t_final,
-                                        n_final=n_final,
+                                        n_final=n_final, k_out=k_out,
+                                        n_valid=n_valid,
                                         interpret=not on_tpu())
 
 

@@ -6,12 +6,15 @@ touches jax device state (the dry-run sets XLA_FLAGS before any jax init).
 
 from __future__ import annotations
 
+from typing import Optional
+
 import jax
 
-__all__ = ["make_production_mesh", "make_local_mesh"]
+__all__ = ["make_production_mesh", "make_local_mesh", "make_serving_mesh"]
 
 
 def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single-pod (data, model) mesh, or 2x16x16 with a 'pod' axis."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     return jax.make_mesh(shape, axes)
@@ -23,3 +26,19 @@ def make_local_mesh(data: int = 1, model: int = 1):
     data = min(data, n)
     model = max(1, min(model, n // data))
     return jax.make_mesh((data, model), ("data", "model"))
+
+
+def make_serving_mesh(model: Optional[int] = None):
+    """1-D ('model',) mesh for the sharded MIPS serving engine.
+
+    The serving engine shards the item matrix on rows over a single
+    'model' axis (DESIGN.md §7); queries arrive replicated from the
+    request loop, so no 'data' axis is needed.  ``model`` defaults to
+    every visible device.  Returns None on a single device — callers fall
+    back to the single-device fused path, keeping the engine code
+    mesh-agnostic.
+    """
+    n = len(jax.devices()) if model is None else min(model, len(jax.devices()))
+    if n <= 1:
+        return None
+    return jax.make_mesh((n,), ("model",))

@@ -1,19 +1,38 @@
-"""Serving launcher: batched prefill + greedy decode with MIPS logits.
+"""Serving: the MIPS request loop (micro-batching engine) + LM decode demo.
 
 The paper's feature in production position: `--mips boundedme` replaces the
 full unembedding matvec at every decode step with the BoundedME bandit
 (per-query (eps, delta) knob, zero preprocessing — the vocab table can be
 hot-swapped between requests with no index rebuild).
 
-  PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b --smoke \
-      --mips boundedme --eps 0.1 --tokens 32
+Two entry points:
+
+* :class:`MIPSServeEngine` — a real request loop (DESIGN.md §7): incoming
+  queries are micro-batched up to a batch deadline, each flush is one
+  fused-cascade dispatch (single-device `bounded_me_decode`, or
+  `sharded_bounded_me_decode` across a device mesh) with the query buffer
+  donated to jit, results are memoized in a small LRU keyed on quantized
+  queries, and per-request latency/recall counters are exported as a stats
+  dict.
+
+      PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b \
+          --smoke --loop --requests 256 --batch 8 --deadline-ms 2
+
+* the original batched prefill + greedy decode demo:
+
+      PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b \
+          --smoke --mips boundedme --eps 0.1 --tokens 32
 """
 
 from __future__ import annotations
 
 import argparse
+import collections
 import dataclasses
+import json
 import time
+import warnings
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -23,20 +42,388 @@ from repro.configs import get_config
 from repro.models.model import init_params
 from repro.models.steps import decode_step, prefill_step
 
+__all__ = ["QuantizedLRU", "MIPSServeEngine", "simulate_stream", "main"]
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--mips", default="exact",
-                    choices=["exact", "boundedme"])
-    ap.add_argument("--eps", type=float, default=0.1)
-    ap.add_argument("--delta", type=float, default=0.1)
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--tokens", type=int, default=32)
-    args = ap.parse_args()
 
+class QuantizedLRU:
+    """LRU result cache keyed on quantized queries.
+
+    Keys are the bytes of ``round(q / resolution)`` (int32): any two
+    queries within ``resolution`` per coordinate share a cache line, which
+    is exactly the granularity at which an (eps, delta)-approximate answer
+    is reusable.  ``resolution=0`` disables quantization sharing (exact
+    byte equality only).  Capacity 0 disables the cache entirely.
+    """
+
+    def __init__(self, capacity: int, resolution: float = 1e-3):
+        self.capacity = int(capacity)
+        self.resolution = float(resolution)
+        self._od: "collections.OrderedDict[bytes, object]" = \
+            collections.OrderedDict()
+        self.hits = 0
+        self.misses = 0
+
+    def key(self, q: np.ndarray) -> bytes:
+        """Quantize a (N,) query to its cache key."""
+        if self.resolution > 0:
+            return np.round(np.asarray(q, np.float32)
+                            / self.resolution).astype(np.int64).tobytes()
+        return np.asarray(q, np.float32).tobytes()   # exact bytes only
+
+    def get(self, key: bytes):
+        """Return the cached value or None; counts the hit/miss."""
+        hit = self._od.get(key)
+        if hit is None:
+            self.misses += 1
+            return None
+        self._od.move_to_end(key)
+        self.hits += 1
+        return hit
+
+    def put(self, key: bytes, value) -> None:
+        """Insert/update; evicts the least-recently-used past capacity."""
+        if self.capacity <= 0:
+            return
+        self._od[key] = value
+        self._od.move_to_end(key)
+        while len(self._od) > self.capacity:
+            self._od.popitem(last=False)
+
+    def __len__(self) -> int:
+        return len(self._od)
+
+
+@dataclasses.dataclass
+class _Pending:
+    req_id: int
+    q: np.ndarray
+    t_submit: float
+    cache_key: Optional[bytes]
+
+
+class MIPSServeEngine:
+    """Micro-batching MIPS request loop over a fixed item table.
+
+    Requests (`submit`) are answered from the LRU when a quantized-equal
+    query was served recently; otherwise they queue until either
+    ``batch_size`` requests are waiting or the oldest has aged past
+    ``deadline_ms`` (`poll` applies both triggers), then the whole
+    micro-batch is served by ONE fused-cascade dispatch.  The padded
+    (batch_size, N) query buffer is donated to jit so steady-state serving
+    re-uses its device allocation instead of growing one per flush.
+
+    With ``mesh`` the flush runs `sharded_bounded_me_decode` (shard-local
+    cascades + exact cross-shard merge, DESIGN.md §7); otherwise the
+    single-device `bounded_me_decode`.  Results arrive via `result` as
+    ``(ids (K,), scores (K,))`` numpy arrays.
+
+    ``recall_sample_rate`` > 0 additionally rescoring a random fraction of
+    requests exhaustively on the host and folds top-K recall into
+    `stats` — the live accuracy counter for the (eps, delta) knob.
+
+    Failure modes: queries must be (N,) float and finite — NaN/inf
+    propagate into scores and poison the LRU line; `submit` raises on a
+    shape mismatch.  The engine is not thread-safe; drive it from one
+    loop.
+    """
+
+    def __init__(self, table, *, K: int = 1, eps: float = 0.1,
+                 delta: float = 0.1, value_range: Optional[float] = None,
+                 qmax_hint: float = 1.0, tile: int = 8, block: int = 512,
+                 batch_size: int = 8, deadline_ms: float = 2.0,
+                 cache_entries: int = 512, cache_resolution: float = 1e-3,
+                 mesh=None, model_axis: str = "model",
+                 n_valid: Optional[int] = None,
+                 recall_sample_rate: float = 0.0,
+                 use_pallas: Optional[bool] = None, seed: int = 0):
+        from repro.core.boundedme_jax import bounded_me_decode, make_plan
+        from repro.core.mips import table_abs_max
+
+        self._table = jnp.asarray(table)
+        n, N = self._table.shape
+        self.n, self.N, self.K = n, N, K
+        if value_range is None:
+            # a-priori product-range bound: callers who know their query
+            # norms should pass an explicit value_range instead
+            value_range = 2.0 * qmax_hint * table_abs_max(self._table)
+        self.batch_size = int(batch_size)
+        self.deadline_s = float(deadline_ms) * 1e-3
+        self._mesh = mesh
+        self._n_valid = n_valid
+        block = min(block, N)
+        if mesh is not None:
+            from repro.distributed.sharding import (make_shard_plan,
+                                                    sharded_bounded_me_decode)
+            from repro.distributed.specs import serving_table_sharding
+            self.plan, n_local, n_pad, _ = make_shard_plan(
+                n, N, mesh.shape[model_axis], K=K, eps=eps, delta=delta,
+                value_range=value_range, tile=tile, block=block)
+            n_valid_eff = n if n_valid is None else n_valid
+            self._n_valid = n_valid_eff   # recall must mask pad rows too
+            if n_pad:       # ragged: pad rows host-side ONCE, before placing
+                self._table = jnp.pad(self._table, ((0, n_pad), (0, 0)))
+            self._table = jax.device_put(
+                self._table, serving_table_sharding(mesh, model_axis))
+
+            def _flush_fn(tbl, Qbuf, key):
+                ids, scores, _ = sharded_bounded_me_decode(
+                    tbl, Qbuf, key, mesh=mesh, K=K, model_axis=model_axis,
+                    n_valid=n_valid_eff, eps=eps, delta=delta,
+                    value_range=value_range, tile=tile, block=block,
+                    final_exact=True, use_pallas=use_pallas)
+                return ids, scores
+        else:
+            self.plan = make_plan(n, N, K=K, eps=eps, delta=delta,
+                                  value_range=value_range, tile=tile,
+                                  block=block)
+
+            def _flush_fn(tbl, Qbuf, key):
+                # padding rows (if any) are masked inside the cascade, so
+                # they can never occupy the returned top-K slots
+                return bounded_me_decode(
+                    tbl, Qbuf, key, plan=self.plan, final_exact=True,
+                    use_pallas=use_pallas, n_valid=n_valid)
+
+        # donate the query buffer: steady-state flushes recycle the same
+        # (batch_size, N) device allocation (no-op on backends without
+        # donation support, e.g. CPU)
+        self._fn = jax.jit(_flush_fn, donate_argnums=(1,))
+        self._key = jax.random.PRNGKey(seed)
+        self.cache = QuantizedLRU(cache_entries, cache_resolution)
+        self._pending: List[_Pending] = []
+        self._results: Dict[int, Tuple[np.ndarray, np.ndarray]] = {}
+        self._next_id = 0
+        self._recall_rate = float(recall_sample_rate)
+        self._recall_rng = np.random.default_rng(seed)
+        self._table_np = None   # host copy, materialized only for recall
+        self._lat: List[float] = []
+        self._recalls: List[float] = []
+        self.n_requests = 0
+        self.n_cache_hits = 0
+        self.n_batches = 0
+        self.n_deadline_flushes = 0
+        self.n_full_flushes = 0
+        self._occupancy: List[int] = []
+
+    # ---- request path ---------------------------------------------------
+
+    @property
+    def pending_count(self) -> int:
+        """Requests accepted but not yet served (excludes cache hits)."""
+        return len(self._pending)
+
+    def submit(self, q, now: Optional[float] = None) -> int:
+        """Accept one (N,) query; returns its request id.
+
+        Cache hits complete immediately (latency ~0); misses queue for the
+        next micro-batch.  ``now`` (seconds, any monotonic origin) defaults
+        to wall clock — pass a virtual clock for simulation.
+        """
+        q = np.asarray(q, np.float32)
+        if q.shape != (self.N,):
+            raise ValueError(f"query shape {q.shape} != ({self.N},)")
+        now = time.perf_counter() if now is None else now
+        rid = self._next_id
+        self._next_id += 1
+        self.n_requests += 1
+        ck = self.cache.key(q) if self.cache.capacity > 0 else None
+        if ck is not None:
+            hit = self.cache.get(ck)
+            if hit is not None:
+                self._results[rid] = hit
+                self.n_cache_hits += 1
+                self._lat.append(0.0)
+                return rid
+        self._pending.append(_Pending(rid, q, now, ck))
+        return rid
+
+    def poll(self, now: Optional[float] = None) -> Tuple[List[int], float]:
+        """Flush micro-batches whose trigger fired; returns (ids, busy_s).
+
+        Triggers: ``batch_size`` requests waiting (full flush), or the
+        oldest pending request older than the batch deadline (deadline
+        flush).  ``busy_s`` is the wall time spent in compute, so virtual-
+        clock drivers can advance time by it.
+        """
+        now = time.perf_counter() if now is None else now
+        done: List[int] = []
+        busy = 0.0
+        while self._pending:
+            full = len(self._pending) >= self.batch_size
+            aged = now - self._pending[0].t_submit >= self.deadline_s
+            if not (full or aged):
+                break
+            if full:
+                self.n_full_flushes += 1
+            else:
+                self.n_deadline_flushes += 1
+            ids, dt = self._flush(now + busy)
+            done.extend(ids)
+            busy += dt
+        return done, busy
+
+    def drain(self, now: Optional[float] = None) -> Tuple[List[int], float]:
+        """Flush everything pending regardless of triggers (shutdown)."""
+        now = time.perf_counter() if now is None else now
+        done: List[int] = []
+        busy = 0.0
+        while self._pending:
+            self.n_deadline_flushes += 1
+            ids, dt = self._flush(now + busy)
+            done.extend(ids)
+            busy += dt
+        return done, busy
+
+    def result(self, req_id: int):
+        """Pop the (ids, scores) result for a completed request, or None."""
+        return self._results.pop(req_id, None)
+
+    # ---- flush ----------------------------------------------------------
+
+    def _flush(self, now: float) -> Tuple[List[int], float]:
+        batch = self._pending[:self.batch_size]
+        self._pending = self._pending[len(batch):]
+        Qbuf = np.zeros((self.batch_size, self.N), np.float32)
+        for i, p in enumerate(batch):
+            Qbuf[i] = p.q
+        key = jax.random.fold_in(self._key, self.n_batches)
+        t0 = time.perf_counter()
+        with warnings.catch_warnings():
+            # CPU backends warn that donation is unimplemented; harmless
+            warnings.filterwarnings("ignore",
+                                    message=".*[Dd]onat.*")
+            ids, scores = self._fn(self._table, jnp.asarray(Qbuf), key)
+            jax.block_until_ready(scores)
+        dt = time.perf_counter() - t0
+        ids = np.asarray(ids)[:len(batch)]
+        scores = np.asarray(scores)[:len(batch)]
+        self.n_batches += 1
+        self._occupancy.append(len(batch))
+        done = []
+        for i, p in enumerate(batch):
+            res = (ids[i].copy(), scores[i].copy())
+            self._results[p.req_id] = res
+            if p.cache_key is not None:
+                self.cache.put(p.cache_key, res)
+            self._lat.append((now - p.t_submit) + dt)
+            if (self._recall_rate > 0.0
+                    and self._recall_rng.random() < self._recall_rate):
+                self._recalls.append(self._recall_of(p.q, ids[i]))
+            done.append(p.req_id)
+        if len(self._lat) > 100_000:       # bound the stats memory
+            self._lat = self._lat[-10_000:]
+        if len(self._occupancy) > 100_000:
+            self._occupancy = self._occupancy[-10_000:]
+        if len(self._recalls) > 100_000:
+            self._recalls = self._recalls[-10_000:]
+        return done, dt
+
+    def _recall_of(self, q: np.ndarray, got_ids: np.ndarray) -> float:
+        if self._table_np is None:
+            self._table_np = np.asarray(self._table)
+        s = self._table_np @ q
+        if self._n_valid is not None:
+            s[self._n_valid:] = -np.inf
+        exact = np.argpartition(-s, self.K - 1)[:self.K]
+        return len(set(exact.tolist()) & set(got_ids.tolist())) / self.K
+
+    # ---- observability --------------------------------------------------
+
+    def stats(self) -> dict:
+        """Per-request latency/recall counters as a plain dict.
+
+        latency_ms percentiles include cache hits (latency 0); recall is
+        over the sampled fraction only (``nan`` when nothing was sampled).
+        """
+        lat = np.asarray(self._lat, np.float64) * 1e3
+        occ = np.asarray(self._occupancy, np.float64)
+        return {
+            "requests": self.n_requests,
+            "completed": self.n_requests - len(self._pending),
+            "pending": len(self._pending),
+            "batches": self.n_batches,
+            "full_flushes": self.n_full_flushes,
+            "deadline_flushes": self.n_deadline_flushes,
+            "mean_batch_occupancy": float(occ.mean()) if occ.size else 0.0,
+            "cache": {"hits": self.cache.hits, "misses": self.cache.misses,
+                      "entries": len(self.cache),
+                      "hit_rate": (self.cache.hits
+                                   / max(1, self.cache.hits
+                                         + self.cache.misses))},
+            "latency_ms": {
+                "mean": float(lat.mean()) if lat.size else 0.0,
+                "p50": float(np.percentile(lat, 50)) if lat.size else 0.0,
+                "p95": float(np.percentile(lat, 95)) if lat.size else 0.0,
+                "max": float(lat.max()) if lat.size else 0.0},
+            "recall": {"samples": len(self._recalls),
+                       "mean": (float(np.mean(self._recalls))
+                                if self._recalls else float("nan"))},
+            "plan": {"rounds": len(self.plan.schedule.rounds),
+                     "pull_speedup": self.plan.schedule.speedup},
+        }
+
+
+def simulate_stream(engine: MIPSServeEngine, queries, *,
+                    interarrival_ms: float = 0.1) -> dict:
+    """Drive a query stream through the engine on a virtual clock.
+
+    Arrivals are spaced ``interarrival_ms`` apart on a simulated clock that
+    only advances by (a) arrival spacing and (b) *measured* compute time of
+    each flush — so batching/deadline dynamics are exercised exactly as in
+    wall-clock serving, without sleeps.  Returns the engine stats dict plus
+    ``virtual_s`` and ``throughput_rps``.
+    """
+    now = 0.0
+    for i, q in enumerate(queries):
+        now = max(now, i * interarrival_ms * 1e-3)
+        engine.submit(q, now=now)
+        _, busy = engine.poll(now=now)
+        now += busy
+    while engine.pending_count:
+        now += engine.deadline_s
+        _, busy = engine.poll(now=now)
+        now += busy
+    n = max(1, len(queries))
+    return {"virtual_s": now, "throughput_rps": n / max(now, 1e-9),
+            **engine.stats()}
+
+
+def _run_loop(args) -> None:
+    """--loop mode: serve a synthetic query stream against the unembedding."""
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = cfg.smoke()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    mesh = None
+    if args.shards > 1:
+        from repro.launch.mesh import make_serving_mesh
+        mesh = make_serving_mesh(args.shards)
+    engine = MIPSServeEngine(
+        table, K=args.topk, eps=args.eps, delta=args.delta,
+        batch_size=args.batch, deadline_ms=args.deadline_ms,
+        block=min(512, cfg.d_model), n_valid=cfg.vocab, mesh=mesh,
+        recall_sample_rate=args.recall_rate,
+        cache_entries=args.cache_entries)
+    print(f"[serve] loop: table=({engine.n},{engine.N}) K={args.topk} "
+          f"eps={args.eps} batch={args.batch} "
+          f"deadline={args.deadline_ms}ms "
+          f"shards={mesh.shape['model'] if mesh else 1} "
+          f"rounds={len(engine.plan.schedule.rounds)} "
+          f"pull_speedup={engine.plan.schedule.speedup:.2f}x")
+    rng = np.random.default_rng(0)
+    qs = rng.normal(size=(args.requests, engine.N)).astype(np.float32)
+    if args.repeat_rate > 0:                  # cacheable duplicate queries
+        n_dup = int(args.requests * args.repeat_rate)
+        idx = rng.integers(0, max(1, args.requests - n_dup), n_dup)
+        qs[args.requests - n_dup:] = qs[idx]
+    stats = simulate_stream(engine, qs,
+                            interarrival_ms=args.interarrival_ms)
+    print(json.dumps(stats, indent=2))
+
+
+def _run_decode_demo(args) -> None:
+    """Default mode: batched prefill + greedy decode with MIPS logits."""
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = cfg.smoke()
@@ -97,6 +484,37 @@ def main():
           f"decode {args.tokens} toks: {t_decode*1e3:.1f} ms "
           f"({t_decode/args.tokens*1e3:.2f} ms/tok)")
     print(f"[serve] first sequences: {gen[0][:16].tolist()}")
+
+
+def main():
+    """CLI: `--loop` for the request loop, default for the decode demo."""
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--mips", default="exact",
+                    choices=["exact", "boundedme"])
+    ap.add_argument("--eps", type=float, default=0.1)
+    ap.add_argument("--delta", type=float, default=0.1)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--tokens", type=int, default=32)
+    # request-loop mode
+    ap.add_argument("--loop", action="store_true",
+                    help="run the micro-batching MIPS request loop")
+    ap.add_argument("--requests", type=int, default=256)
+    ap.add_argument("--deadline-ms", type=float, default=2.0)
+    ap.add_argument("--interarrival-ms", type=float, default=0.1)
+    ap.add_argument("--topk", type=int, default=4)
+    ap.add_argument("--shards", type=int, default=1)
+    ap.add_argument("--cache-entries", type=int, default=512)
+    ap.add_argument("--repeat-rate", type=float, default=0.1,
+                    help="fraction of requests repeating an earlier query")
+    ap.add_argument("--recall-rate", type=float, default=0.05)
+    args = ap.parse_args()
+    if args.loop:
+        _run_loop(args)
+    else:
+        _run_decode_demo(args)
 
 
 if __name__ == "__main__":

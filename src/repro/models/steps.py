@@ -26,6 +26,7 @@ __all__ = ["loss_fn", "train_step", "prefill_step", "decode_step",
 
 
 def loss_fn(params, cfg: ArchConfig, batch: Dict[str, jnp.ndarray]):
+    """Mean next-token NLL over the batch; returns (loss, metrics dict)."""
     h, _ = forward(params, cfg, batch["tokens"],
                    patch_embeds=batch.get("patch_embeds"),
                    enc_frames=batch.get("enc_frames"))
@@ -41,6 +42,8 @@ def loss_fn(params, cfg: ArchConfig, batch: Dict[str, jnp.ndarray]):
 
 def train_step(params, opt_state: OptState, batch, cfg: ArchConfig,
                opt_cfg: AdamWConfig, compress: bool = False):
+    """One AdamW step (optionally int8-compressed grads); returns
+    (params, opt_state, metrics)."""
     (loss, metrics), grads = jax.value_and_grad(
         lambda p: loss_fn(p, cfg, batch), has_aux=True)(params)
     err = opt_state.err
@@ -75,25 +78,27 @@ def decode_step(params, cfg: ArchConfig, caches, tokens, pos,
     mips_mode='exact'     -> full (d x Vp) matvec + argmax (the baseline)
     mips_mode='boundedme' -> the paper's bandit over the unembedding rows
     """
-    B = tokens.shape[0]
     h, new_caches = forward(params, cfg, tokens, caches=caches, pos=pos)
     hid = h[:, -1]                                        # (B, d)
     table = params["embed"] if cfg.tie_embeddings else params["unembed"]
     if cfg.mips_mode == "boundedme":
         if key is None:
             key = jax.random.PRNGKey(0)
-        keys = jax.random.split(jax.random.fold_in(key, 1), B)
+        # one key for the whole batch: the decode paths share a single
+        # block permutation across queries (DESIGN.md §3)
+        mips_key = jax.random.fold_in(key, 1)
         mesh = current_mesh()
         if (mesh is not None and "model" in mesh.axis_names
-                and cfg.padded_vocab % mesh.shape["model"] == 0):
-            # distributed MIPS: shard-local bandits + K-merge (the GSPMD
-            # fallback involuntarily replicates the gathered working set —
-            # see EXPERIMENTS.md §Perf iteration 1)
-            from repro.core.mips import sharded_mips_topk
-            from repro.distributed.sharding import spec_of
+                and mesh.shape["model"] > 1):
+            # distributed MIPS: shard-local fused cascades + exact K-merge
+            # (the GSPMD fallback involuntarily replicates the gathered
+            # working set — see EXPERIMENTS.md §Perf iteration 1).  Ragged
+            # vocab shards are handled by the engine (DESIGN.md §7).
+            from repro.distributed.sharding import (
+                sharded_bounded_me_decode, spec_of)
             baxes = spec_of("batch")[0]
-            ids, _ = sharded_mips_topk(
-                table, hid.astype(table.dtype), keys, K=1, mesh=mesh,
+            ids, _, _ = sharded_bounded_me_decode(
+                table, hid.astype(table.dtype), mips_key, K=1, mesh=mesh,
                 batch_axes=baxes, n_valid=cfg.vocab,
                 eps=cfg.mips_eps, delta=cfg.mips_delta,
                 value_range=4.0, block=min(512, cfg.d_model),
@@ -101,10 +106,11 @@ def decode_step(params, cfg: ArchConfig, caches, tokens, pos,
         else:
             # batched decode path: the whole (B,) batch is served by one
             # dispatch (one fused pallas_call on TPU; one dense-round scan
-            # program otherwise) instead of a vmapped per-query cascade
+            # program otherwise) instead of a vmapped per-query cascade;
+            # vocab-padding rows are masked inside the cascade
             plan = make_mips_plan(cfg, K=1)
-            ids, _ = bounded_me_decode(table, hid, keys[0], plan=plan,
-                                       final_exact=True)
+            ids, _ = bounded_me_decode(table, hid, mips_key, plan=plan,
+                                       final_exact=True, n_valid=cfg.vocab)
         next_tok = ids[:, 0]
     else:
         logits = jnp.einsum("bd,vd->bv", hid, table,

@@ -1,0 +1,207 @@
+"""The micro-batching serve loop: triggers, cache, stats, correctness.
+
+Single-device, in-process (the sharded engine runs in
+tests/test_sharded_serve.py under fake devices).  The engine is driven on a
+virtual clock throughout — no sleeps, no wall-clock flakiness.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.launch.serve import MIPSServeEngine, QuantizedLRU, simulate_stream
+
+
+def _engine(**kw):
+    rng = np.random.default_rng(0)
+    table = rng.normal(size=(256, 128)).astype(np.float32)
+    kw.setdefault("K", 3)
+    kw.setdefault("eps", 1e-4)
+    kw.setdefault("delta", 0.05)
+    kw.setdefault("value_range", 8.0)
+    kw.setdefault("block", 64)
+    kw.setdefault("batch_size", 4)
+    kw.setdefault("deadline_ms", 5.0)
+    return MIPSServeEngine(table, **kw), table
+
+
+class TestMicroBatching:
+    def test_full_batch_flushes_without_deadline(self):
+        eng, _ = _engine(batch_size=4)
+        rng = np.random.default_rng(1)
+        for i in range(4):
+            eng.submit(rng.normal(size=128).astype(np.float32), now=0.0)
+        done, _ = eng.poll(now=0.0)      # full trigger, deadline not reached
+        assert len(done) == 4
+        assert eng.n_full_flushes == 1 and eng.n_deadline_flushes == 0
+
+    def test_partial_batch_waits_for_deadline(self):
+        eng, _ = _engine(batch_size=4, deadline_ms=5.0)
+        rng = np.random.default_rng(2)
+        eng.submit(rng.normal(size=128).astype(np.float32), now=0.0)
+        eng.submit(rng.normal(size=128).astype(np.float32), now=0.001)
+        done, _ = eng.poll(now=0.004)            # younger than the deadline
+        assert done == [] and eng.pending_count == 2
+        done, _ = eng.poll(now=0.0051)           # oldest is now over it
+        assert len(done) == 2
+        assert eng.n_deadline_flushes == 1 and eng.n_full_flushes == 0
+        assert eng.stats()["mean_batch_occupancy"] == 2.0
+
+    def test_results_match_exact_topk(self):
+        eng, table = _engine()
+        rng = np.random.default_rng(3)
+        qs = rng.normal(size=(10, 128)).astype(np.float32)
+        rids = [eng.submit(q, now=0.0) for q in qs]
+        eng.drain(now=0.0)
+        for rid, q in zip(rids, qs):
+            ids, scores = eng.result(rid)
+            truth = np.argsort(-(table @ q))[:3]
+            np.testing.assert_array_equal(np.sort(ids), np.sort(truth))
+            for i, s in zip(ids, scores):
+                assert abs(s - float(table[i] @ q) / 128.0) < 1e-5
+
+    def test_query_shape_rejected(self):
+        eng, _ = _engine()
+        with pytest.raises(ValueError, match="query shape"):
+            eng.submit(np.zeros(64, np.float32))
+
+
+class TestCache:
+    def test_repeat_query_hits_lru(self):
+        eng, _ = _engine(cache_entries=16)
+        rng = np.random.default_rng(4)
+        q = rng.normal(size=128).astype(np.float32)
+        r1 = eng.submit(q, now=0.0)
+        eng.drain(now=0.0)
+        ids1, sc1 = eng.result(r1)
+        r2 = eng.submit(q.copy(), now=1.0)       # same query, new buffer
+        assert eng.pending_count == 0            # answered from cache
+        ids2, sc2 = eng.result(r2)
+        np.testing.assert_array_equal(ids1, ids2)
+        np.testing.assert_array_equal(sc1, sc2)
+        assert eng.n_cache_hits == 1 and eng.cache.hits == 1
+
+    def test_quantization_shares_nearby_queries(self):
+        eng, _ = _engine(cache_entries=16, cache_resolution=1e-2)
+        rng = np.random.default_rng(5)
+        # keep every coordinate well inside its quantization bucket so the
+        # perturbation below cannot cross a rounding boundary
+        q = (rng.integers(-50, 50, 128) * 1e-2 + 3e-3).astype(np.float32)
+        eng.submit(q, now=0.0)
+        eng.drain(now=0.0)
+        eng.submit(q + 1e-4, now=1.0)            # same bucket everywhere
+        assert eng.n_cache_hits == 1
+
+    def test_lru_eviction(self):
+        lru = QuantizedLRU(capacity=2)
+        for i, v in enumerate(("a", "b", "c")):
+            lru.put(bytes([i]), v)
+        assert len(lru) == 2
+        assert lru.get(bytes([0])) is None       # evicted, counts a miss
+        assert lru.get(bytes([2])) == "c"
+
+    def test_capacity_zero_disables(self):
+        eng, _ = _engine(cache_entries=0)
+        rng = np.random.default_rng(6)
+        q = rng.normal(size=128).astype(np.float32)
+        eng.submit(q, now=0.0)
+        eng.drain(now=0.0)
+        eng.submit(q, now=1.0)
+        assert eng.pending_count == 1 and eng.n_cache_hits == 0
+
+
+class TestStats:
+    def test_stats_schema_and_recall(self):
+        eng, _ = _engine(recall_sample_rate=1.0)
+        rng = np.random.default_rng(7)
+        stats = simulate_stream(
+            eng, rng.normal(size=(12, 128)).astype(np.float32),
+            interarrival_ms=0.01)
+        for k in ("requests", "completed", "pending", "batches",
+                  "full_flushes", "deadline_flushes",
+                  "mean_batch_occupancy", "cache", "latency_ms", "recall",
+                  "plan", "virtual_s", "throughput_rps"):
+            assert k in stats, k
+        assert stats["requests"] == stats["completed"] == 12
+        assert stats["pending"] == 0
+        assert stats["recall"]["samples"] == 12
+        assert stats["recall"]["mean"] == 1.0    # eps=1e-4 => exact top-K
+        assert stats["latency_ms"]["p95"] >= stats["latency_ms"]["p50"] >= 0
+
+    def test_latency_includes_queue_wait(self):
+        eng, _ = _engine(batch_size=8, deadline_ms=50.0)
+        rng = np.random.default_rng(8)
+        eng.submit(rng.normal(size=128).astype(np.float32), now=0.0)
+        eng.poll(now=0.0512)                     # deadline flush at 51.2 ms
+        lat = eng.stats()["latency_ms"]
+        assert lat["max"] >= 51.0                # waited out the deadline
+
+
+class TestNValidMasking:
+    def test_adversarial_padding_rows_cannot_win(self):
+        """Caller-padding rows with huge scores must be masked INSIDE the
+        cascade: masking after the fact cannot recover a true winner the
+        elimination already dropped for a padding arm."""
+        from repro.core.boundedme_jax import bounded_me_decode, make_plan
+        rng = np.random.default_rng(10)
+        n, n_valid, N, K = 256, 200, 512, 3
+        V = rng.normal(size=(n, N)).astype(np.float32)
+        V[n_valid:] = 100.0                  # padding rows dominate any q>0
+        Q = np.abs(rng.normal(size=(2, N))).astype(np.float32)
+        plan = make_plan(n, N, K=K, eps=1e-4, delta=0.05, value_range=8.0,
+                         block=128)
+        truth = np.argsort(-(V[:n_valid] @ Q.T), axis=0)[:K].T
+        for use_pallas in (False, True):
+            ids, scores = bounded_me_decode(
+                V, Q, jax.random.PRNGKey(0), plan=plan, final_exact=True,
+                use_pallas=use_pallas, n_valid=n_valid)
+            assert int(np.asarray(ids).max()) < n_valid, use_pallas
+            for b in range(2):
+                assert (set(np.asarray(ids)[b].tolist())
+                        == set(truth[b].tolist())), (use_pallas, b)
+
+    def test_engine_masks_padded_table(self):
+        rng = np.random.default_rng(11)
+        table = rng.normal(size=(256, 128)).astype(np.float32)
+        table[200:] = 100.0
+        eng = MIPSServeEngine(table, K=3, eps=1e-4, delta=0.05,
+                              value_range=8.0, block=64, batch_size=2,
+                              deadline_ms=1.0, n_valid=200,
+                              recall_sample_rate=1.0)
+        q = np.abs(rng.normal(size=(4, 128))).astype(np.float32)
+        rids = [eng.submit(x, now=0.0) for x in q]
+        eng.drain(now=0.0)
+        for rid in rids:
+            ids, _ = eng.result(rid)
+            assert int(ids.max()) < 200
+        assert eng.stats()["recall"]["mean"] == 1.0
+
+
+class TestKOutPlumbing:
+    def test_decode_k_out_returns_sorted_superset(self):
+        from repro.core.boundedme_jax import bounded_me_decode, make_plan
+        rng = np.random.default_rng(9)
+        V = rng.normal(size=(128, 256)).astype(np.float32)
+        Q = rng.normal(size=(2, 256)).astype(np.float32)
+        plan = make_plan(128, 256, K=2, eps=1e-4, delta=0.05,
+                         value_range=8.0, block=64)
+        key = jax.random.PRNGKey(0)
+        i2, s2 = bounded_me_decode(V, Q, key, plan=plan, use_pallas=False)
+        i3, s3 = bounded_me_decode(V, Q, key, plan=plan, use_pallas=False,
+                                   k_out=3)
+        np.testing.assert_array_equal(np.asarray(i3)[:, :2], np.asarray(i2))
+        np.testing.assert_array_equal(np.asarray(s3)[:, :2], np.asarray(s2))
+        assert np.all(np.diff(np.asarray(s3), axis=1) <= 0)   # sorted desc
+
+    def test_k_out_out_of_range_raises(self):
+        from repro.core.boundedme_jax import bounded_me_decode, make_plan
+        V = np.zeros((64, 128), np.float32)
+        Q = np.zeros((1, 128), np.float32)
+        plan = make_plan(64, 128, K=2, eps=0.1, delta=0.1, value_range=1.0,
+                         block=64)
+        with pytest.raises(ValueError, match="k_out"):
+            bounded_me_decode(V, Q, jax.random.PRNGKey(0), plan=plan,
+                              use_pallas=False, k_out=1)
+        with pytest.raises(ValueError, match="k_out"):
+            bounded_me_decode(V, Q, jax.random.PRNGKey(0), plan=plan,
+                              use_pallas=False, k_out=plan.k_out_cap + 1)

@@ -1,0 +1,200 @@
+"""Cross-shard merge correctness of `sharded_bounded_me_decode` (ISSUE 2).
+
+Run on 2 fake CPU devices in a subprocess so the main pytest process keeps
+its 1-device view (per the dry-run isolation rule).  The CI workflow also
+exports ``XLA_FLAGS=--xla_force_host_platform_device_count=2`` and runs
+this file directly; the preamble honours an outer flag so both paths work.
+"""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+_ENV_CODE_PREAMBLE = r"""
+import os
+_flags = os.environ.get("XLA_FLAGS", "")
+if "xla_force_host_platform_device_count" not in _flags:
+    os.environ["XLA_FLAGS"] = (
+        _flags + " --xla_force_host_platform_device_count=2").strip()
+import jax, jax.numpy as jnp, numpy as np
+"""
+
+
+def _run(code: str, timeout=480):
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    r = subprocess.run([sys.executable, "-c", _ENV_CODE_PREAMBLE + code],
+                       env=env, capture_output=True, text=True,
+                       timeout=timeout)
+    assert "OK" in r.stdout, r.stdout + "\n" + r.stderr
+
+
+@pytest.mark.slow
+def test_sharded_decode_bit_exact_vs_single_device():
+    """2-device sharded top-K == single-device fused-path top-K, bitwise.
+
+    The single-device jnp decode path is bit-identical to the fused kernel
+    (tests/test_boundedme_decode.py), so comparing against it transitively
+    pins the sharded merge to the fused path.
+    """
+    _run(r"""
+from repro.core.boundedme_jax import bounded_me_decode, make_plan
+from repro.distributed.sharding import sharded_bounded_me_decode
+mesh = jax.make_mesh((2,), ("model",))
+rng = np.random.default_rng(0)
+n, N, B, K = 512, 1024, 3, 3
+V = jnp.asarray(rng.normal(size=(n, N)), jnp.float32)
+Q = jnp.asarray(rng.normal(size=(B, N)), jnp.float32)
+key = jax.random.PRNGKey(7)
+plan = make_plan(n, N, K=K, eps=1e-4, delta=0.05, value_range=8.0, block=128)
+i1, s1 = bounded_me_decode(V, Q, key, plan=plan, final_exact=True,
+                           use_pallas=False)
+i2, s2, gaps = sharded_bounded_me_decode(
+    V, Q, key, mesh=mesh, K=K, eps=1e-4, delta=0.05, value_range=8.0,
+    block=128)
+np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))  # bit-exact
+truth = np.argsort(-(np.asarray(V) @ np.asarray(Q).T), axis=0)[:K].T
+np.testing.assert_array_equal(np.asarray(i2), truth)
+assert np.all(np.asarray(gaps) > 0)       # winners beat their threshold
+print("OK")
+""")
+
+
+@pytest.mark.slow
+def test_sharded_decode_ragged_n():
+    """n % shards != 0: zero pad rows must never win, results stay exact."""
+    _run(r"""
+from repro.core.boundedme_jax import bounded_me_decode, make_plan
+from repro.distributed.sharding import make_shard_plan, \
+    sharded_bounded_me_decode
+mesh = jax.make_mesh((2,), ("model",))
+rng = np.random.default_rng(1)
+n, N, B, K = 501, 768, 2, 4
+# all-negative table: zero padding rows (score 0) would win any merge that
+# forgets to mask them
+V = jnp.asarray(-np.abs(rng.normal(size=(n, N))), jnp.float32)
+Q = jnp.asarray(np.abs(rng.normal(size=(B, N))), jnp.float32)
+key = jax.random.PRNGKey(3)
+plan, n_local, n_pad, k_out = make_shard_plan(n, N, 2, K=K, eps=1e-4,
+                                              delta=0.05, value_range=8.0,
+                                              block=128)
+assert n_pad == 1 and n_local == 251, (n_local, n_pad)
+assert plan.K == K    # padding is masked in-cascade, K is not inflated
+i1, s1 = bounded_me_decode(V, Q, key,
+                           plan=make_plan(n, N, K=K, eps=1e-4, delta=0.05,
+                                          value_range=8.0, block=128),
+                           final_exact=True, use_pallas=False)
+i2, s2, _ = sharded_bounded_me_decode(
+    V, Q, key, mesh=mesh, K=K, eps=1e-4, delta=0.05, value_range=8.0,
+    block=128)
+assert int(np.asarray(i2).max()) < n      # no padding id leaked
+np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+print("OK")
+""")
+
+
+@pytest.mark.slow
+def test_sharded_decode_candidates_and_gaps():
+    """Per-shard candidate sets: shapes, exactness, and gap semantics."""
+    _run(r"""
+from repro.distributed.sharding import make_shard_plan, \
+    sharded_bounded_me_decode
+mesh = jax.make_mesh((2,), ("model",))
+rng = np.random.default_rng(2)
+n, N, B, K = 256, 512, 2, 2
+V = jnp.asarray(rng.normal(size=(n, N)), jnp.float32)
+Q = jnp.asarray(rng.normal(size=(B, N)), jnp.float32)
+plan, n_local, n_pad, k_out = make_shard_plan(n, N, 2, K=K, eps=1e-4,
+                                              delta=0.05, value_range=8.0,
+                                              block=128)
+ids, sc, gaps, cands = sharded_bounded_me_decode(
+    V, Q, jax.random.PRNGKey(0), mesh=mesh, K=K, eps=1e-4, delta=0.05,
+    value_range=8.0, block=128, return_candidates=True)
+assert cands["ids"].shape == (B, 2, k_out), cands["ids"].shape
+# every candidate's reported score is the exact mean product
+Vn, Qn = np.asarray(V), np.asarray(Q)
+cid = np.asarray(cands["ids"]); csc = np.asarray(cands["scores"])
+for b in range(B):
+    for s in range(2):
+        for j in range(k_out):
+            exact = float(Vn[cid[b, s, j]] @ Qn[b]) / N
+            assert abs(csc[b, s, j] - exact) < 1e-6, (b, s, j)
+# gaps: candidate score minus the shard's (K_local+1)-th candidate score
+cg = np.asarray(cands["gaps"])
+np.testing.assert_allclose(cg, csc - csc[:, :, -1:], rtol=1e-6, atol=1e-7)
+assert np.all(np.asarray(gaps) >= 0)
+print("OK")
+""")
+
+
+@pytest.mark.slow
+def test_caller_padded_vocab_masked_in_cascade():
+    """Adversarial vocab padding (rows that out-score every real arm) must
+    be masked inside each shard's cascade, not just at the merge."""
+    _run(r"""
+from repro.distributed.sharding import sharded_bounded_me_decode
+mesh = jax.make_mesh((2,), ("model",))
+rng = np.random.default_rng(6)
+n, n_valid, N, B, K = 512, 450, 512, 2, 3
+V = np.asarray(rng.normal(size=(n, N)), np.float32)
+V[n_valid:] = 100.0           # caller padding rows dominate positive queries
+Q = jnp.asarray(np.abs(rng.normal(size=(B, N))), jnp.float32)
+ids, sc, _ = sharded_bounded_me_decode(
+    jnp.asarray(V), Q, jax.random.PRNGKey(1), mesh=mesh, K=K,
+    n_valid=n_valid, eps=1e-4, delta=0.05, value_range=8.0, block=128)
+assert int(np.asarray(ids).max()) < n_valid, np.asarray(ids)
+truth = np.argsort(-(V[:n_valid] @ np.asarray(Q).T), axis=0)[:K].T
+np.testing.assert_array_equal(np.asarray(ids), truth)
+print("OK")
+""")
+
+
+@pytest.mark.slow
+def test_final_exact_false_still_merges_exactly():
+    """With final_exact=False the merge must rescore candidates exactly."""
+    _run(r"""
+from repro.distributed.sharding import sharded_bounded_me_decode
+mesh = jax.make_mesh((2,), ("model",))
+rng = np.random.default_rng(4)
+n, N, B, K = 512, 512, 2, 3
+V = jnp.asarray(rng.normal(size=(n, N)), jnp.float32)
+Q = jnp.asarray(rng.normal(size=(B, N)), jnp.float32)
+ids, sc, _ = sharded_bounded_me_decode(
+    V, Q, jax.random.PRNGKey(5), mesh=mesh, K=K, eps=1e-4, delta=0.05,
+    value_range=8.0, block=128, final_exact=False)
+truth = np.argsort(-(np.asarray(V) @ np.asarray(Q).T), axis=0)[:K].T
+np.testing.assert_array_equal(np.asarray(ids), truth)
+# scores are the dense-rescore exact products, not block-mean estimates
+Vn, Qn = np.asarray(V), np.asarray(Q)
+for b in range(B):
+    for j in range(K):
+        exact = float(Vn[np.asarray(ids)[b, j]] @ Qn[b]) / N
+        assert abs(float(np.asarray(sc)[b, j]) - exact) < 1e-6
+print("OK")
+""")
+
+
+@pytest.mark.slow
+def test_serve_engine_sharded_end_to_end():
+    """MIPSServeEngine over a 2-device mesh: recall 1.0 at tiny eps."""
+    _run(r"""
+from repro.launch.mesh import make_serving_mesh
+from repro.launch.serve import MIPSServeEngine, simulate_stream
+mesh = make_serving_mesh()
+assert mesh is not None and mesh.shape["model"] == 2
+rng = np.random.default_rng(0)
+table = rng.normal(size=(501, 256)).astype(np.float32)   # ragged on 2
+eng = MIPSServeEngine(table, K=3, eps=1e-4, delta=0.05, value_range=8.0,
+                      block=128, batch_size=4, deadline_ms=1.0, mesh=mesh,
+                      recall_sample_rate=1.0)
+qs = rng.normal(size=(24, 256)).astype(np.float32)
+stats = simulate_stream(eng, qs, interarrival_ms=0.05)
+assert stats["completed"] == 24 and stats["pending"] == 0, stats
+assert stats["recall"]["mean"] == 1.0, stats["recall"]
+print("OK")
+""")

@@ -1,0 +1,123 @@
+#!/usr/bin/env python
+"""Doc-coverage check for the public API surface (ISSUE 2 satellite).
+
+Pure-AST (no jax import, so it runs in milliseconds anywhere, including the
+CI container before deps install): every public module, class and function
+in the audited modules must carry a docstring, and the named public API
+entry points must document their contract keywords (shapes, the eps/delta
+knob, return structure).
+
+    python tools/check_docstrings.py          # exit 0 = covered
+
+Run by CI and by tests/test_docs.py so the suite fails when a public
+symbol loses its docstring.
+"""
+
+from __future__ import annotations
+
+import ast
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+SRC = REPO / "src" / "repro"
+
+# modules whose whole public surface must be documented
+AUDITED_MODULES = [
+    "core/mips.py",
+    "core/boundedme_jax.py",
+    "core/schedule.py",
+    "distributed/sharding.py",
+    "distributed/specs.py",
+    "kernels/ops.py",
+    "kernels/fused_cascade.py",
+    "launch/serve.py",
+    "launch/mesh.py",
+    "models/steps.py",
+]
+
+# entry points whose docstrings must mention their contract:
+# {module: {qualname: [required substrings (case-insensitive)]}}
+API_CONTRACTS = {
+    "core/mips.py": {
+        "mips_topk": ["eps", "delta", "(n, N)", "ids", "scores"],
+        "sharded_mips_topk": ["eps", "delta", "shard", "(B, N)", "mesh"],
+        "nns_topk": ["reduction"],
+    },
+    "core/boundedme_jax.py": {
+        "bounded_me_decode": ["(B, N)", "eps, delta", "k_out", "plan",
+                              "returns"],
+        "make_plan": ["range_mode"],
+    },
+    "core/schedule.py": {
+        "flatten_schedule": ["FlatSchedule"],
+    },
+    "distributed/sharding.py": {
+        "sharded_bounded_me_decode": ["eps", "delta", "shard", "merge",
+                                      "gap", "ragged", "returns"],
+        "make_shard_plan": ["union bound", "k_out", "pad"],
+    },
+}
+
+
+def _public_defs(tree: ast.Module):
+    """Yield (qualname, node) for public module-level defs and methods."""
+    for node in tree.body:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            if not node.name.startswith("_"):
+                yield node.name, node
+        elif isinstance(node, ast.ClassDef):
+            if node.name.startswith("_"):
+                continue
+            yield node.name, node
+            for sub in node.body:
+                if (isinstance(sub, (ast.FunctionDef, ast.AsyncFunctionDef))
+                        and not sub.name.startswith("_")):
+                    yield f"{node.name}.{sub.name}", sub
+
+
+def check() -> list:
+    """Return a list of human-readable violations (empty = covered)."""
+    problems = []
+    for rel in AUDITED_MODULES:
+        path = SRC / rel
+        if not path.exists():
+            problems.append(f"{rel}: audited module missing")
+            continue
+        tree = ast.parse(path.read_text())
+        if not ast.get_docstring(tree):
+            problems.append(f"{rel}: missing module docstring")
+        docs = {}
+        for qual, node in _public_defs(tree):
+            doc = ast.get_docstring(node)
+            docs[qual] = doc or ""
+            if not doc:
+                problems.append(f"{rel}:{node.lineno}: {qual} has no "
+                                f"docstring")
+        for qual, needles in API_CONTRACTS.get(rel, {}).items():
+            if qual not in docs:
+                problems.append(f"{rel}: contract symbol {qual} not found")
+                continue
+            low = docs[qual].lower()
+            for needle in needles:
+                if needle.lower() not in low:
+                    problems.append(
+                        f"{rel}: {qual} docstring must mention "
+                        f"{needle!r} (shapes/knobs contract)")
+    return problems
+
+
+def main() -> int:
+    problems = check()
+    if problems:
+        print(f"doc coverage: {len(problems)} problem(s)")
+        for p in problems:
+            print(f"  {p}")
+        return 1
+    n = len(AUDITED_MODULES)
+    print(f"doc coverage OK: {n} modules, all public symbols documented")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
