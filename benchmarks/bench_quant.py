@@ -1,0 +1,108 @@
+"""PR-3 perf benchmark: int8 quantized sampling cascade vs fp32.
+
+Emits the rows for ``BENCH_PR3.json`` (via `benchmarks.run`): for each
+decode batch size B in {1, 8, 32}, wall time and throughput of the
+batched decode path at ``precision='fp32'`` vs ``precision='int8'`` —
+both the pure sampling phase (``final_exact=False``: cascade only, the
+part whose memory traffic int8 halves) and the serving configuration
+(``final_exact=True``: int8 replaces fp32 coverage completion with an
+fp32 candidate rescore, so it wins twice).  The int8 timings *include*
+the per-call table quantization (this path quantizes in-jit; a
+production deployment would hoist it out of the dispatch — see
+docs/TUNING.md), so the reported win is a lower bound.
+
+Numbers from this CPU container track the trend only; the HBM-traffic
+halving that motivates the int8 path (DESIGN.md §10) needs TPU hardware
+to show its full effect.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.boundedme_jax import bounded_me_decode, make_plan
+
+# the PR-1 acceptance geometry (B=32, n=32768, N=4096) so the int8 rows
+# are directly comparable with BENCH_PR1.json's decode numbers
+_N_ARMS, _DIM, _K = 32768, 4096, 4
+_BATCHES = (1, 8, 32)
+_EPS, _DELTA, _VR, _BLOCK = 0.1, 0.05, 4.0, 512
+
+
+def _time_ms(fn, reps: int = 3, warmup: int = 1) -> float:
+    for _ in range(warmup):
+        jax.block_until_ready(fn())
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn()
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e3
+
+
+def run(csv: bool = True) -> dict:
+    """Run the int8-vs-fp32 sweep; returns the BENCH_PR3 payload dict."""
+    rng = np.random.default_rng(0)
+    V = jnp.asarray(rng.normal(size=(_N_ARMS, _DIM)), jnp.float32)
+    key = jax.random.PRNGKey(0)
+
+    plans = {prec: make_plan(_N_ARMS, _DIM, K=_K, eps=_EPS, delta=_DELTA,
+                             value_range=_VR, tile=8, block=_BLOCK,
+                             precision=prec)
+             for prec in ("fp32", "int8")}
+    out = {
+        "geometry": {"n": _N_ARMS, "N": _DIM, "K": _K, "eps": _EPS,
+                     "delta": _DELTA, "block": _BLOCK},
+        "plan": {prec: {"rounds": len(p.schedule.rounds),
+                        "total_pulls": p.schedule.total_pulls,
+                        "quant_err": p.quant_err,
+                        "eps_effective": p.eps_effective}
+                 for prec, p in plans.items()},
+        "int8_vs_fp32": [],
+    }
+    for B in _BATCHES:
+        Q = jnp.asarray(rng.normal(size=(B, _DIM)), jnp.float32)
+        row = {"batch_size": B}
+        for prec, plan in plans.items():
+            ms_sampling = _time_ms(lambda: bounded_me_decode(
+                V, Q, key, plan=plan, final_exact=False, use_pallas=False))
+            ms_serve = _time_ms(lambda: bounded_me_decode(
+                V, Q, key, plan=plan, final_exact=True, use_pallas=False))
+            row[prec] = {
+                "sampling_ms": ms_sampling,
+                "sampling_qps": B / (ms_sampling * 1e-3),
+                "serve_ms": ms_serve,
+                "serve_qps": B / (ms_serve * 1e-3),
+            }
+        row["sampling_speedup"] = (row["fp32"]["sampling_ms"]
+                                   / row["int8"]["sampling_ms"])
+        row["serve_speedup"] = (row["fp32"]["serve_ms"]
+                                / row["int8"]["serve_ms"])
+        out["int8_vs_fp32"].append(row)
+        if csv:
+            print(f"quant_decode,B={B},"
+                  f"sampling_fp32={row['fp32']['sampling_ms']:.0f}ms"
+                  f";sampling_int8={row['int8']['sampling_ms']:.0f}ms"
+                  f";sampling_speedup={row['sampling_speedup']:.2f}x"
+                  f";serve_speedup={row['serve_speedup']:.2f}x")
+
+    # recall sanity at the bench eps: int8 answers stay eps_eff-optimal
+    B = 8
+    Q = jnp.asarray(rng.normal(size=(B, _DIM)), jnp.float32)
+    ids, scores = bounded_me_decode(V, Q, key, plan=plans["int8"],
+                                    final_exact=True, use_pallas=False)
+    exact = np.asarray(V) @ np.asarray(Q).T / _DIM            # (n, B)
+    kth = -np.sort(-exact, axis=0)[_K - 1]                    # (B,)
+    worst = float(np.min(np.asarray(scores)[:, _K - 1] - kth))
+    out["int8_suboptimality"] = {
+        "worst_vs_kth_exact": worst,
+        "eps_effective": plans["int8"].eps_effective,
+        "within_guarantee": bool(worst >= -plans["int8"].eps_effective),
+    }
+    if csv:
+        print(f"quant_recall,,worst_gap={worst:.5f}"
+              f";eps_eff={plans['int8'].eps_effective:.4f}")
+    return out

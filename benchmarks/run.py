@@ -3,10 +3,11 @@
 Prints ``name,us_per_call,derived`` CSV rows per benchmark, then the
 roofline table from the dry-run artifacts (if present).  Also writes the
 machine-readable perf trajectories: ``BENCH_PR1.json`` (fused cascade /
-batched decode: us_per_call, pull-count speedup, kernel dispatch counts)
-and ``BENCH_PR2.json`` (serve-loop micro-batching: throughput vs batch
-deadline at B in {1, 8, 32}, LRU hit rates) so numbers stay comparable
-across PRs.
+batched decode: us_per_call, pull-count speedup, kernel dispatch counts),
+``BENCH_PR2.json`` (serve-loop micro-batching: throughput vs batch
+deadline at B in {1, 8, 32}, LRU hit rates) and ``BENCH_PR3.json``
+(int8 quantized sampling vs fp32 at B in {1, 8, 32}) so numbers stay
+comparable across PRs.
 """
 
 from __future__ import annotations
@@ -18,11 +19,13 @@ import sys
 _ROOT = os.path.dirname(os.path.dirname(__file__))
 BENCH_JSON = os.path.join(_ROOT, "BENCH_PR1.json")
 BENCH2_JSON = os.path.join(_ROOT, "BENCH_PR2.json")
+BENCH3_JSON = os.path.join(_ROOT, "BENCH_PR3.json")
 
 
 def main() -> None:
-    from benchmarks import (bench_fused, bench_serve, fig1_guarantee,
-                            fig23_synthetic, fig4_real, table1_complexity)
+    from benchmarks import (bench_fused, bench_quant, bench_serve,
+                            fig1_guarantee, fig23_synthetic, fig4_real,
+                            table1_complexity)
     print("== fused cascade / batched decode (PR 1) ==")
     import jax
     meta = {"backend": jax.default_backend(),
@@ -36,6 +39,11 @@ def main() -> None:
     with open(BENCH2_JSON, "w") as f:
         json.dump(payload2, f, indent=2)
     print(f"[bench] wrote {BENCH2_JSON}")
+    print("== int8 quantized sampling vs fp32 (PR 3) ==")
+    payload3 = {"meta": meta, "benchmarks": bench_quant.run()}
+    with open(BENCH3_JSON, "w") as f:
+        json.dump(payload3, f, indent=2)
+    print(f"[bench] wrote {BENCH3_JSON}")
     print("== table1: complexity/guarantees ==")
     table1_complexity.run()
     print("== fig1: guarantee validation (adversarial) ==")

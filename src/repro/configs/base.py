@@ -72,6 +72,7 @@ class ArchConfig:
     mips_mode: str = "exact"     # exact | boundedme
     mips_eps: float = 0.3
     mips_delta: float = 0.1
+    mips_precision: str = "fp32"  # fp32 | int8 sampling (DESIGN.md §10)
     # numerics / memory
     dtype: str = "bfloat16"
     remat: bool = True

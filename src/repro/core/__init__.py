@@ -2,7 +2,10 @@
 
 from repro.core.bounds import (
     rho_m, u_term, m_required, deviation_bound, hoeffding_required,
-    lil_required,
+    lil_required, quantization_error,
+)
+from repro.core.quantize import (
+    INT8_LEVELS, quantize_blocks, quantize_tiles,
 )
 from repro.core.schedule import (
     FlatSchedule, Round, Schedule, flatten_schedule, make_schedule,
@@ -21,7 +24,8 @@ from repro.core.bounded_se import bounded_se
 
 __all__ = [
     "rho_m", "u_term", "m_required", "deviation_bound", "hoeffding_required",
-    "lil_required", "Round", "Schedule", "FlatSchedule", "make_schedule",
+    "lil_required", "quantization_error", "INT8_LEVELS", "quantize_blocks",
+    "quantize_tiles", "Round", "Schedule", "FlatSchedule", "make_schedule",
     "flatten_schedule", "BoundedMEResult", "bounded_me", "reward_matrix",
     "BlockedPlan", "make_plan", "bounded_me_blocked", "bounded_me_batched",
     "bounded_me_decode", "mips_topk", "nns_topk", "sharded_mips_topk",

@@ -26,6 +26,15 @@ Adaptations versus the reference (`repro.core.boundedme`):
     survives); the reference path keeps exact per-arm semantics;
   * one shared random block permutation per query (uniform without
     replacement marginally per arm; contiguity for HBM).
+
+``precision='int8'`` (DESIGN.md §10) runs every sampling round in int8:
+the table is quantized per (tile, block) cell (`repro.core.quantize`),
+pulls run int8 x int8 -> int32 and dequantize into the f32 accumulator,
+and the schedule's confidence radii are widened by the worst-case
+quantization bias (`make_schedule(quant_err=...)`) so the (eps, delta)
+calibration survives.  The final top-K candidates are always rescored in
+fp32 against the unquantized table when ``final_exact=True``, so returned
+scores carry no quantization error at all.
 """
 
 from __future__ import annotations
@@ -39,6 +48,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import bounds
+from repro.core.quantize import quantize_blocks, quantize_tiles
 from repro.core.schedule import (Schedule, flatten_schedule, make_schedule)
 
 __all__ = ["BlockedPlan", "make_plan", "bounded_me_blocked",
@@ -57,6 +68,7 @@ class BlockedPlan:
     n_tiles: int        # padded arm tiles
     n_blocks: int       # padded coordinate blocks
     schedule: Schedule  # over (n_tiles "arms", n_blocks "rewards", K_tiles)
+    precision: str = "fp32"   # sampling arithmetic: 'fp32' | 'int8' (§10)
 
     @property
     def k_tiles(self) -> int:
@@ -81,6 +93,21 @@ class BlockedPlan:
         return n_final * self.tile
 
     @property
+    def quant_err(self) -> float:
+        """Per-block-mean quantization bias the schedule absorbs (0 = fp32)."""
+        return self.schedule.quant_err
+
+    @property
+    def eps_effective(self) -> float:
+        """Honest end-to-end eps bound incl. quantization (== eps at fp32).
+
+        See `Schedule.eps_effective` and DESIGN.md §10: rounds whose
+        budget absorbs the int8 bias stay eps_l-correct; saturated rounds
+        contribute at most ``2 * quant_err`` each.
+        """
+        return self.schedule.eps_effective
+
+    @property
     def total_multiplies(self) -> int:
         """FLOP-level sample complexity of the blocked schedule."""
         per_pull = self.tile * self.block
@@ -99,7 +126,8 @@ class BlockedPlan:
 
 def make_plan(n: int, N: int, K: int = 1, eps: float = 0.1, delta: float = 0.05,
               value_range: float = 1.0, tile: int = 8, block: int = 512,
-              range_mode: str = "clt") -> BlockedPlan:
+              range_mode: str = "clt",
+              precision: str = "fp32") -> BlockedPlan:
     """Build the static plan.
 
     range_mode:
@@ -111,22 +139,40 @@ def make_plan(n: int, N: int, K: int = 1, eps: float = 0.1, delta: float = 0.05,
         calibrated on this tighter effective range.  This is a modeling
         assumption (same spirit as the paper's rewards-in-[0,1] assumption)
         and is validated empirically by the fig-1 harness.
+
+    precision:
+      * 'fp32' (default) — sampling rounds pull fp32 tiles;
+      * 'int8' — sampling rounds pull int8-quantized tiles and the
+        schedule's confidence radii are widened by the worst-case
+        quantization bias (`bounds.quantization_error`, scaled like the
+        value range under ``range_mode``), so the (eps, delta) calibration
+        survives quantization (DESIGN.md §10).  Final candidates are
+        rescored in fp32 whenever ``final_exact=True``.
     """
     block = min(block, N)
     tile = min(tile, n)
     n_tiles = -(-n // tile)
     n_blocks = -(-N // block)
     k_tiles = min(n_tiles, K)
+    if precision not in ("fp32", "int8"):
+        raise ValueError(f"unknown precision {precision!r} "
+                         f"(expected 'fp32' or 'int8')")
+    qerr = (bounds.quantization_error(value_range)
+            if precision == "int8" else 0.0)
     if range_mode == "clt":
         eff_range = value_range / math.sqrt(block)
+        qerr = qerr / math.sqrt(block)   # the bias concentrates like the
+        # products themselves: rounding errors are weakly dependent across
+        # the block, so the block-mean bias shrinks ~ 1/sqrt(block) under
+        # the same modeling assumption as eff_range
     elif range_mode == "exact":
         eff_range = value_range
     else:
         raise ValueError(f"unknown range_mode {range_mode!r}")
     sched = make_schedule(n_tiles, n_blocks, K=k_tiles, eps=eps, delta=delta,
-                          value_range=eff_range)
+                          value_range=eff_range, quant_err=qerr)
     return BlockedPlan(n=n, N=N, K=K, tile=tile, block=block, n_tiles=n_tiles,
-                       n_blocks=n_blocks, schedule=sched)
+                       n_blocks=n_blocks, schedule=sched, precision=precision)
 
 
 def _pad_operands(V: jnp.ndarray, q: jnp.ndarray, plan: BlockedPlan
@@ -154,35 +200,80 @@ def _tile_major(V: jnp.ndarray, plan: BlockedPlan) -> jnp.ndarray:
 
 def _fused_call(V4, qb_or_Qb, perm_or_perms, *, plan: BlockedPlan,
                 final_exact: bool, batched: bool, k_out: Optional[int] = None,
-                n_valid=None):
-    """Dispatch the whole cascade as exactly one Pallas kernel launch."""
+                n_valid=None, vscale=None, qscale=None):
+    """Dispatch the whole cascade as exactly one Pallas kernel launch.
+
+    On the int8 path (``vscale``/``qscale`` given) ``final_exact`` never
+    appends coverage steps: exactness comes from the caller's fp32
+    candidate rescore instead of in-kernel coverage completion, so the
+    flat schedule stays at the sampling pull count (DESIGN.md §10).
+    """
     from repro.kernels import ops as _kops
 
-    flat = flatten_schedule(plan.schedule, final_coverage=final_exact)
+    quantized = vscale is not None
+    flat = flatten_schedule(plan.schedule,
+                            final_coverage=final_exact and not quantized)
     slotcode, rmeta = flat.packed()
     bpos = jnp.asarray(flat.bpos)
     fn = _kops.fused_cascade_batched if batched else _kops.fused_cascade
     cols = perm_or_perms[..., bpos] if batched else perm_or_perms[bpos]
     return fn(V4, qb_or_Qb, jnp.asarray(slotcode), jnp.asarray(rmeta), cols,
               n_arms=plan.n, K=plan.K, t_final=flat.t_final,
-              n_final=flat.n_final, k_out=k_out, n_valid=n_valid)
+              n_final=flat.n_final, k_out=k_out, n_valid=n_valid,
+              vscale=vscale, qscale=qscale)
 
 
-def _scan_pulls(sums, V4, qb, idx, cols):
+def _scan_pulls(sums, V4, qb, idx, cols, vscale=None, qscale=None):
     """One round of pulls as a scan over its coordinate blocks.
 
     Gathers a single (T, R, C) slab per block — the (T, dt, R, C) gather of
     the pre-fused implementation never exists.  Accumulation order (blocks
     in permutation order) matches the fused kernel's grid order, which is
     what keeps the two paths bitwise-comparable in interpret mode.
+
+    With ``vscale``/``qscale`` (int8 operands, DESIGN.md §10) each block's
+    tile-dot runs int8 x int8 -> int32 — exact — and is dequantized with
+    the same scalar product and the same two float ops per entry as the
+    fused kernel's pull step, preserving bitwise parity.
     """
+    quantized = vscale is not None
+
     def body(s, col):
-        part = jnp.einsum("trc,c->tr", V4[idx, col], qb[col],
-                          preferred_element_type=jnp.float32)
+        if quantized:
+            raw = jnp.einsum("trc,c->tr", V4[idx, col], qb[col],
+                             preferred_element_type=jnp.int32)
+            scl = vscale[idx, col] * qscale[col]            # (T,)
+            part = raw.astype(jnp.float32) * scl[:, None]
+        else:
+            part = jnp.einsum("trc,c->tr", V4[idx, col], qb[col],
+                              preferred_element_type=jnp.float32)
         return s + part, None
 
     sums, _ = jax.lax.scan(body, sums, cols)
     return sums
+
+
+def _rescore_rows(Vp, Qp, ids, n_valid, *, plan: BlockedPlan, batched: bool):
+    """fp32-exact rescore + descending re-sort of cascade candidates (§10).
+
+    ``Vp``/``Qp`` are the zero-padded operands, so each gathered row's
+    inner product equals the unpadded one and dividing by the true ``N``
+    lands directly on (q . v)/N — no padding rescale needed.  Rows at or
+    past ``n_valid`` (tile/caller padding the masked extraction may emit
+    as filler) are pinned to -inf so they can never re-enter the top-K.
+    """
+    neg = jnp.float32(-jnp.inf)
+    safe = jnp.clip(ids, 0, Vp.shape[0] - 1)
+    if batched:
+        scores = jnp.einsum("bkc,bc->bk", Vp[safe], Qp,
+                            preferred_element_type=jnp.float32)
+    else:
+        scores = jnp.dot(Vp[safe], Qp, preferred_element_type=jnp.float32)
+    scores = jnp.where(ids < n_valid, scores / jnp.float32(plan.N), neg)
+    vals, pos = jax.lax.top_k(scores, ids.shape[-1])
+    ids = (jnp.take_along_axis(ids, pos, axis=-1) if batched
+           else ids[pos])
+    return ids, vals
 
 
 @functools.partial(jax.jit, static_argnames=("plan", "final_exact", "use_pallas"))
@@ -197,14 +288,26 @@ def _run_blocked(V: jnp.ndarray, q: jnp.ndarray, key: jax.Array, *,
     perm = jax.random.permutation(key, plan.n_blocks)
     # undo the zero-padding rescale so scores estimate (q . v)/N
     scale = (plan.n_blocks * C) / plan.N
+    quantized = plan.precision == "int8"
+    if quantized:
+        V8, vscale = quantize_tiles(V4)
+        q8, qscale = quantize_blocks(qb)
 
     if use_pallas:
-        ids, vals = _fused_call(V4, qb, perm, plan=plan,
-                                final_exact=final_exact, batched=False)
+        if quantized:
+            ids, vals = _fused_call(V8, q8, perm, plan=plan,
+                                    final_exact=final_exact, batched=False,
+                                    vscale=vscale, qscale=qscale)
+            if final_exact:
+                return _rescore_rows(V, q, ids, plan.n, plan=plan,
+                                     batched=False)
+        else:
+            ids, vals = _fused_call(V4, qb, perm, plan=plan,
+                                    final_exact=final_exact, batched=False)
         return ids, vals * jnp.float32(scale)
 
     arm_ids0 = jnp.arange(plan.n_tiles * R).reshape(plan.n_tiles, R)
-    valid0 = (arm_ids0 < plan.n).astype(V.dtype)
+    valid0 = (arm_ids0 < plan.n).astype(jnp.float32)
 
     idx = jnp.arange(plan.n_tiles)
     sums = jnp.zeros((plan.n_tiles, R), dtype=jnp.float32)
@@ -214,7 +317,10 @@ def _run_blocked(V: jnp.ndarray, q: jnp.ndarray, key: jax.Array, *,
     for rnd in plan.schedule.rounds:
         if rnd.t_new > 0:
             cols = jax.lax.slice_in_dim(perm, t_prev, rnd.t_cum)  # static
-            sums = _scan_pulls(sums, V4, qb, idx, cols)
+            if quantized:
+                sums = _scan_pulls(sums, V8, q8, idx, cols, vscale, qscale)
+            else:
+                sums = _scan_pulls(sums, V4, qb, idx, cols)
         t_prev = rnd.t_cum
         means = sums / jnp.float32(t_prev * C)
         valid = valid0[idx]
@@ -223,7 +329,7 @@ def _run_blocked(V: jnp.ndarray, q: jnp.ndarray, key: jax.Array, *,
         idx, sums = idx[keep], sums[keep]
 
     valid = valid0[idx]
-    if final_exact:
+    if final_exact and not quantized:
         # exact rescore of the few survivors: (T_f*R, N') x (N',); divide by
         # the padded width N' = n_blocks*C so the caller-side rescale by
         # N'/N lands on (q . v)/N (dividing by N here double-counted the
@@ -233,10 +339,14 @@ def _run_blocked(V: jnp.ndarray, q: jnp.ndarray, key: jax.Array, *,
             plan.n_blocks * C)
         scores = scores.reshape(idx.shape[0], R)
     else:
+        # int8 + final_exact rescoring happens on the candidates below —
+        # coverage completion in int8 would still carry quantization bias
         scores = sums / jnp.float32(max(1, t_prev) * C)
     flat = jnp.where(valid > 0, scores, neg).reshape(-1)
     top_vals, top_pos = jax.lax.top_k(flat, plan.K)
     arm_ids = arm_ids0[idx].reshape(-1)[top_pos]
+    if quantized and final_exact:
+        return _rescore_rows(V, q, arm_ids, plan.n, plan=plan, batched=False)
     return arm_ids, top_vals * jnp.float32(scale)
 
 
@@ -244,17 +354,22 @@ def bounded_me_blocked(V, q, key, *, K: int = 1, eps: float = 0.1,
                        delta: float = 0.05, value_range: float = 1.0,
                        tile: int = 8, block: int = 512,
                        final_exact: bool = False, use_pallas: bool = False,
+                       precision: str = "fp32",
                        plan: Optional[BlockedPlan] = None):
     """Top-K MIPS over rows of ``V`` for query ``q`` (single query).
 
     Returns ``(ids (K,), scores (K,), plan)`` where scores estimate
     ``(q . v)/N``.  All shapes are static; safe under jit/pjit.  With
     ``use_pallas=True`` the entire cascade is one kernel dispatch.
+    ``precision='int8'`` samples in int8 under quantization-widened bounds
+    (DESIGN.md §10); ``final_exact`` then rescores the winners in fp32.
+    When ``plan`` is given its own precision wins.
     """
     n, N = V.shape
     if plan is None:
         plan = make_plan(n, N, K=K, eps=eps, delta=delta,
-                         value_range=value_range, tile=tile, block=block)
+                         value_range=value_range, tile=tile, block=block,
+                         precision=precision)
     ids, scores = _run_blocked(jnp.asarray(V), jnp.asarray(q), key, plan=plan,
                                final_exact=final_exact, use_pallas=use_pallas)
     return ids, scores, plan
@@ -270,9 +385,18 @@ def _run_batched_fused(V, Q, keys, *, plan: BlockedPlan, final_exact: bool):
     Qb = Q.reshape(B, plan.n_blocks, C)
     perms = jax.vmap(
         lambda k: jax.random.permutation(k, plan.n_blocks))(keys)
+    scale = (plan.n_blocks * C) / plan.N
+    if plan.precision == "int8":
+        V8, vscale = quantize_tiles(V4)
+        Q8, qscale = quantize_blocks(Qb)
+        ids, vals = _fused_call(V8, Q8, perms, plan=plan,
+                                final_exact=final_exact, batched=True,
+                                vscale=vscale, qscale=qscale)
+        if final_exact:
+            return _rescore_rows(V, Q, ids, plan.n, plan=plan, batched=True)
+        return ids, vals * jnp.float32(scale)
     ids, vals = _fused_call(V4, Qb, perms, plan=plan,
                             final_exact=final_exact, batched=True)
-    scale = (plan.n_blocks * C) / plan.N
     return ids, vals * jnp.float32(scale)
 
 
@@ -310,16 +434,29 @@ def _run_decode(V, Q, key, n_valid, *, plan: BlockedPlan, final_exact: bool,
     # (marginally each query still samples uniformly without replacement)
     perm = jax.random.permutation(key, plan.n_blocks)
     scale = (plan.n_blocks * C) / plan.N
+    quantized = plan.precision == "int8"
+    if quantized:
+        V8, vscale = quantize_tiles(V4)
+        Q8, qscale = quantize_blocks(Qb)     # per query: (B, n_blocks)
 
     if use_pallas:
         perms = jnp.broadcast_to(perm, (B, plan.n_blocks))
-        ids, vals = _fused_call(V4, Qb, perms, plan=plan,
-                                final_exact=final_exact, batched=True,
-                                k_out=k_out, n_valid=n_valid)
+        if quantized:
+            ids, vals = _fused_call(V8, Q8, perms, plan=plan,
+                                    final_exact=final_exact, batched=True,
+                                    k_out=k_out, n_valid=n_valid,
+                                    vscale=vscale, qscale=qscale)
+            if final_exact:
+                return _rescore_rows(V, Q, ids, n_valid, plan=plan,
+                                     batched=True)
+        else:
+            ids, vals = _fused_call(V4, Qb, perms, plan=plan,
+                                    final_exact=final_exact, batched=True,
+                                    k_out=k_out, n_valid=n_valid)
         return ids, vals * jnp.float32(scale)
 
     arm_ids0 = jnp.arange(plan.n_tiles * R).reshape(plan.n_tiles, R)
-    valid0 = (arm_ids0 < n_valid).astype(V.dtype)
+    valid0 = (arm_ids0 < n_valid).astype(jnp.float32)
     brange = jnp.arange(B)[:, None]
 
     idx = jnp.broadcast_to(jnp.arange(plan.n_tiles), (B, plan.n_tiles))
@@ -330,26 +467,45 @@ def _run_decode(V, Q, key, n_valid, *, plan: BlockedPlan, final_exact: bool,
     for rnd in plan.schedule.rounds:
         if rnd.t_new > 0:
             cols = jax.lax.slice_in_dim(perm, t_prev, rnd.t_cum)   # (dt,)
-            qsel = jnp.moveaxis(Qb[:, cols], 0, 1)                 # (dt,B,C)
+            Qsrc = Q8 if quantized else Qb
+            qsel = jnp.moveaxis(Qsrc[:, cols], 0, 1)               # (dt,B,C)
             if B * rnd.n_arms >= plan.n_tiles:
                 # early rounds: survivor union ~ every tile, so a dense
                 # (n_tiles*R, C) x (C, B) tile-matmul per block beats any
                 # gather; eliminated tiles accumulate garbage that is never
                 # read back (survivor gathers go through `idx`)
-                def dense(s, xs):
-                    col, qcol = xs
-                    part = jnp.einsum("trc,bc->btr", V4[:, col], qcol,
-                                      preferred_element_type=jnp.float32)
-                    return s + part, None
+                if quantized:
+                    def dense(s, xs):
+                        col, qcol = xs
+                        raw = jnp.einsum("trc,bc->btr", V8[:, col], qcol,
+                                         preferred_element_type=jnp.int32)
+                        scl = (vscale[:, col][None, :, None]
+                               * qscale[:, col][:, None, None])  # (B, T, 1)
+                        part = raw.astype(jnp.float32) * scl
+                        return s + part, None
+                else:
+                    def dense(s, xs):
+                        col, qcol = xs
+                        part = jnp.einsum("trc,bc->btr", V4[:, col], qcol,
+                                          preferred_element_type=jnp.float32)
+                        return s + part, None
                 sums, _ = jax.lax.scan(dense, sums, (cols, qsel))
             else:
                 # late rounds: few survivors per query — per-query gather
                 # scans, sequential over the batch to bound the working set
-                def one(args):
-                    idx_i, Qb_i = args
-                    s0 = jnp.zeros((rnd.n_arms, R), jnp.float32)
-                    return _scan_pulls(s0, V4, Qb_i, idx_i, cols)
-                parts = jax.lax.map(one, (idx, Qb))        # (B, T, R)
+                if quantized:
+                    def one(args):
+                        idx_i, Q8_i, qs_i = args
+                        s0 = jnp.zeros((rnd.n_arms, R), jnp.float32)
+                        return _scan_pulls(s0, V8, Q8_i, idx_i, cols,
+                                           vscale, qs_i)
+                    parts = jax.lax.map(one, (idx, Q8, qscale))  # (B, T, R)
+                else:
+                    def one(args):
+                        idx_i, Qb_i = args
+                        s0 = jnp.zeros((rnd.n_arms, R), jnp.float32)
+                        return _scan_pulls(s0, V4, Qb_i, idx_i, cols)
+                    parts = jax.lax.map(one, (idx, Qb))        # (B, T, R)
                 sums = sums.at[brange, idx].add(parts)
         t_prev = rnd.t_cum
         means = jnp.take_along_axis(sums, idx[..., None], axis=1)
@@ -360,18 +516,21 @@ def _run_decode(V, Q, key, n_valid, *, plan: BlockedPlan, final_exact: bool,
         idx = jnp.take_along_axis(idx, keep, axis=1)
 
     valid = valid0[idx]
-    if final_exact:
+    if final_exact and not quantized:
         Vfin = V4[idx]                                 # (B, Tf, nb, R, C)
         scores = jnp.einsum("btnrc,bnc->btr", Vfin, Qb,
                             preferred_element_type=jnp.float32)
         scores = scores / jnp.float32(plan.n_blocks * C)
     else:
+        # the int8 + final_exact rescore runs on the k_out candidates below
         scores = jnp.take_along_axis(sums, idx[..., None], axis=1)
         scores = scores / jnp.float32(max(1, t_prev) * C)
     flat = jnp.where(valid > 0, scores, neg).reshape(B, -1)
     top_vals, top_pos = jax.lax.top_k(flat, k_out)
     arm_ids = jnp.take_along_axis(arm_ids0[idx].reshape(B, -1), top_pos,
                                   axis=1)
+    if quantized and final_exact:
+        return _rescore_rows(V, Q, arm_ids, n_valid, plan=plan, batched=True)
     return arm_ids, top_vals * jnp.float32(scale)
 
 
@@ -395,9 +554,14 @@ def bounded_me_decode(V, Q, key, *, plan: BlockedPlan,
       Q: (B, N) query batch, same trailing dim as ``V``.
       key: PRNG key for the shared block permutation.
       plan: static :class:`BlockedPlan` from :func:`make_plan` — carries the
-        (eps, delta) calibration; must match ``V``'s (n, N).
-      final_exact: complete final survivors to full coverage so returned
-        scores are exact mean products (q . v)/N, not block-mean estimates.
+        (eps, delta) calibration and the sampling ``precision``; must match
+        ``V``'s (n, N).  With ``plan.precision='int8'`` every sampling
+        round pulls int8 tiles under quantization-widened confidence
+        bounds (DESIGN.md §10).
+      final_exact: make the returned scores exact mean products (q . v)/N
+        instead of block-mean estimates — via in-cascade coverage
+        completion at fp32, or via an fp32 rescore of the ``k_out``
+        candidates on the int8 path (which never pays coverage pulls).
       use_pallas: force/deny the fused kernel (default: auto, TPU only).
       k_out: how many candidates to return per query (default ``plan.K``).
         The cascade still targets ``plan.K`` (the elimination keeps

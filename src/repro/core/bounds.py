@@ -22,6 +22,7 @@ __all__ = [
     "deviation_bound",
     "hoeffding_required",
     "lil_required",
+    "quantization_error",
 ]
 
 
@@ -77,6 +78,33 @@ def deviation_bound(m: int, N: int, delta: float, value_range: float = 1.0) -> f
     if m >= N:
         return 0.0
     return value_range * math.sqrt(rho_m(m, N) * math.log(1.0 / delta) / (2.0 * m))
+
+
+def quantization_error(value_range: float, bits: int = 8) -> float:
+    """Worst-case per-coordinate product error of symmetric quantization.
+
+    With ``Q = 2^(bits-1) - 1`` levels per sign (127 for int8), symmetric
+    round-to-nearest quantization ``v_hat = round(v / s_v)`` with
+    ``s_v = v_max / Q`` (and likewise for the query) perturbs each
+    per-coordinate product ``x = q_j * v_ij`` by at most
+
+        |x - s_q s_v q_hat v_hat|
+            <= q_max * s_v/2 + (v_max + s_v/2) * s_q/2
+            <= q_max v_max * (1/Q + 1/(4 Q^2)).
+
+    The a-priori product range bound feeding the schedule is
+    ``value_range >= 2 q_max v_max`` (see `default_value_range`), so the
+    returned bound is ``(value_range / 2) * (1/Q + 1/(4 Q^2))`` — the
+    deterministic bias budget the quantized cascade's confidence radii
+    must absorb (DESIGN.md §10).  Per-tile scales are never larger than
+    the global ones, so this bound holds for tile-wise quantization too.
+    """
+    if value_range <= 0.0:
+        raise ValueError(f"value_range must be > 0, got {value_range}")
+    if bits < 2:
+        raise ValueError(f"bits must be >= 2, got {bits}")
+    q = float(2 ** (bits - 1) - 1)
+    return (value_range / 2.0) * (1.0 / q + 1.0 / (4.0 * q * q))
 
 
 def hoeffding_required(eps: float, delta: float, value_range: float = 1.0) -> int:

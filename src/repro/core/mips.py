@@ -96,7 +96,7 @@ def mips_topk(V, q, K: int = 1, *, method: str = "boundedme",
               value_range: Optional[float] = None,
               key: Optional[jax.Array] = None, tile: int = 8,
               block: int = 512, final_exact: bool = False,
-              use_pallas: bool = False):
+              use_pallas: bool = False, precision: str = "fp32"):
     """Top-K maximum inner product search over the rows of ``V``.
 
     Zero preprocessing: ``V`` can be hot-swapped between calls with no
@@ -123,6 +123,10 @@ def mips_topk(V, q, K: int = 1, *, method: str = "boundedme",
         carry no estimation error.
       use_pallas: run the fused single-dispatch kernel (TPU; interpret
         mode elsewhere — slow, tests only).
+      precision: 'fp32' (default) or 'int8' — int8 runs every sampling
+        round on quantized tiles under quantization-widened confidence
+        bounds (DESIGN.md §10); combine with ``final_exact`` for fp32-exact
+        returned scores.
 
     Returns:
       ``(ids (K,) int32, scores (K,) f32)``; scores estimate (q . v)/N.
@@ -140,7 +144,8 @@ def mips_topk(V, q, K: int = 1, *, method: str = "boundedme",
         value_range = default_value_range(V, q)
     ids, scores, _ = bounded_me_blocked(
         V, q, key, K=K, eps=eps, delta=delta, value_range=value_range,
-        tile=tile, block=block, final_exact=final_exact, use_pallas=use_pallas)
+        tile=tile, block=block, final_exact=final_exact,
+        use_pallas=use_pallas, precision=precision)
     return ids, scores
 
 
@@ -167,7 +172,8 @@ def sharded_mips_topk(table, queries, keys, K: int, *, mesh,
                       delta: float = 0.05, value_range: float = 4.0,
                       tile: int = 8, block: int = 512,
                       final_exact: bool = True,
-                      use_pallas: Optional[bool] = None):
+                      use_pallas: Optional[bool] = None,
+                      precision: str = "fp32"):
     """Distributed batched MIPS via shard_map: shard-local bandits, K-merge.
 
     ``table`` (n, N) is sharded on rows over ``model_axis``; each shard runs
@@ -189,8 +195,9 @@ def sharded_mips_topk(table, queries, keys, K: int, *, mesh,
       queries: (B, N) query batch; keys: (B,) per-query PRNG keys (each
         query samples its own block permutation — contrast with the
         shared-permutation decode engine).
-      K / eps / delta / value_range / tile / block / final_exact: as in
-        `mips_topk`; delta is split across shards by union bound.
+      K / eps / delta / value_range / tile / block / final_exact /
+        precision: as in `mips_topk`; delta is split across shards by
+        union bound (each shard's int8 plan widens its own bounds).
       mesh / model_axis / batch_axes: device mesh, arm-sharding axis name,
         and optional query-batch sharding axes.
       n_valid: real row count when ``table`` carries padding rows (e.g. a
@@ -212,7 +219,8 @@ def sharded_mips_topk(table, queries, keys, K: int, *, mesh,
     n_local = n // n_shards
     if plan is None:
         plan = make_plan(n_local, N, K=K, eps=eps, delta=delta / n_shards,
-                         value_range=value_range, tile=tile, block=block)
+                         value_range=value_range, tile=tile, block=block,
+                         precision=precision)
 
     def local(table_l, q_l, keys_l):
         ids, scores = bounded_me_batched(table_l, q_l, keys_l, plan=plan,

@@ -1,0 +1,83 @@
+"""Symmetric int8 quantization for the sampling cascade (DESIGN.md §10).
+
+The BoundedME sampling rounds only need inner-product *estimates*, so the
+pull arithmetic can run in int8 provided the worst-case quantization error
+is folded into the confidence radii (`repro.core.bounds.quantization_error`
+-> `make_schedule(quant_err=...)`).  This module holds the quantizers both
+execution paths share:
+
+  * the item matrix is quantized **per (R, C) tile** of its tile-major
+    layout — one f32 scale per (arm-tile, coordinate-block) cell, so a
+    single huge-magnitude row only coarsens its own tile, never the whole
+    table;
+  * queries are quantized **per coordinate block** — one f32 scale per
+    block (per query in the batched case).
+
+Each pull then dequantizes its int32 tile-dot with the *scalar*
+``vscale[tile, col] * qscale[col]`` before accumulating in f32; the fused
+kernel and the jnp fallback perform the identical elementary float ops in
+the identical order, which is what keeps the two paths bit-exact in
+interpret mode (tests/test_quantized.py).
+
+Rounding is deterministic round-half-to-even (`jnp.round`) so repeated
+quantization of the same table is reproducible across calls and hosts.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+__all__ = ["INT8_LEVELS", "quantize_tiles", "quantize_blocks"]
+
+# symmetric signed-int8 quantization grid: 127 levels per sign
+INT8_LEVELS = 127
+
+
+def _scale_of(amax: jnp.ndarray) -> jnp.ndarray:
+    """Per-cell scale max|x| / 127; all-zero cells get scale 1 (codes 0)."""
+    return jnp.where(amax > 0, amax / INT8_LEVELS, 1.0).astype(jnp.float32)
+
+
+def quantize_tiles(V4: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-tile symmetric int8 quantization of a tile-major item matrix.
+
+    Args:
+      V4: (n_tiles, n_blocks, R, C) float tile-major table
+        (`boundedme_jax._tile_major` layout).
+
+    Returns:
+      ``(V8 (n_tiles, n_blocks, R, C) int8, vscale (n_tiles, n_blocks)
+      f32)`` with ``V4 ~= V8 * vscale[:, :, None, None]`` and per-entry
+      reconstruction error at most ``vscale/2`` (round-to-nearest).  The
+      scales ride alongside the block permutation into the kernel as a
+      VMEM-resident operand.  The current decode paths quantize in-jit
+      (once per traced dispatch, O(nN) per flush); hoisting the table
+      quantization out of the dispatch is recorded as the next win in
+      docs/TUNING.md.
+    """
+    amax = jnp.max(jnp.abs(V4), axis=(2, 3))
+    vscale = _scale_of(amax)
+    V8 = jnp.round(V4 / vscale[:, :, None, None])
+    V8 = jnp.clip(V8, -INT8_LEVELS, INT8_LEVELS).astype(jnp.int8)
+    return V8, vscale
+
+
+def quantize_blocks(qb: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-block symmetric int8 quantization of blocked queries.
+
+    Args:
+      qb: (n_blocks, C) blocked query, or (B, n_blocks, C) blocked batch.
+
+    Returns:
+      ``(q8 int8, qscale f32)`` with qscale shaped (n_blocks,) or
+      (B, n_blocks) — one scale per coordinate block (per query in the
+      batched case), computed at dispatch time (queries arrive per
+      request; only the table's scales are precomputed).
+    """
+    amax = jnp.max(jnp.abs(qb), axis=-1)
+    qscale = _scale_of(amax)
+    q8 = jnp.round(qb / qscale[..., None])
+    q8 = jnp.clip(q8, -INT8_LEVELS, INT8_LEVELS).astype(jnp.int8)
+    return q8, qscale

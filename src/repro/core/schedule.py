@@ -51,6 +51,7 @@ class Schedule:
     delta: float
     value_range: float
     rounds: Tuple[Round, ...]  # tuple => hashable => usable as a jit static
+    quant_err: float = 0.0     # per-reward bias absorbed by the bounds (§10)
 
     @property
     def total_pulls(self) -> int:
@@ -71,6 +72,27 @@ class Schedule:
     def final_pulls(self) -> int:
         """Cumulative pulls per arm surviving to the last round (t_L)."""
         return self.rounds[-1].t_cum if self.rounds else 0
+
+    @property
+    def eps_effective(self) -> float:
+        """The honest end-to-end suboptimality bound under ``quant_err``.
+
+        Rounds whose per-round budget absorbs the quantization bias
+        (``eps_l / 2 > quant_err``) stay eps_l-correct; rounds where it
+        cannot are driven to full coverage, where the only remaining error
+        is the bias of the two compared estimates, ``<= 2 * quant_err``.
+        Summing the per-round errors gives
+
+            eps_eff = eps + sum_{l : eps_l <= 2 quant_err}
+                                  (2 quant_err - eps_l)
+
+        which collapses to ``eps`` as ``quant_err -> 0`` (DESIGN.md §10).
+        """
+        if self.quant_err <= 0.0:
+            return self.eps
+        penalty = sum(max(0.0, 2.0 * self.quant_err - r.eps_l)
+                      for r in self.rounds)
+        return self.eps + penalty
 
 
 @dataclasses.dataclass(frozen=True)
@@ -185,41 +207,61 @@ def flatten_schedule(sched: Schedule, *,
 
 
 def _round_pulls(n_l: int, K: int, eps_l: float, delta_l: float, N: int,
-                 value_range: float) -> int:
+                 value_range: float, quant_err: float = 0.0) -> int:
     """t_l of Algorithm 1, line 7 (expanded per the Lemma 4 proof).
 
     Each arm needs an (eps_l/2, delta'_l/2)-accurate estimate where
     ``delta'_l = delta_l (floor((n_l-K)/2)+1) / (n_l-K)`` is the per-arm
     budget and the factor 2 covers the two one-sided deviation events.
+
+    With ``quant_err > 0`` (the int8 sampling path, DESIGN.md §10) each
+    estimate additionally carries a deterministic bias of at most
+    ``quant_err``, so the *sampling* deviation target shrinks to
+    ``eps_l/2 - quant_err`` and the reward range widens by ``2 quant_err``
+    (the quantized reward list's range).  Rounds whose budget cannot absorb
+    the bias (``eps_l/2 <= quant_err``) are driven to full coverage
+    (``t_l = N``), leaving only the bias; `Schedule.eps_effective` accounts
+    for those.
     """
     gap = n_l - K
     if gap <= 0:
         return 0
     delta_eff = delta_l * (gap // 2 + 1) / (2.0 * gap)
-    # deviation eps_l/2, confidence delta_eff
-    return bounds.m_required(eps_l / 2.0, delta_eff, N, value_range)
+    dev = eps_l / 2.0 - quant_err
+    if dev <= 0.0:
+        return N          # sampling cannot absorb the bias: full coverage
+    # deviation eps_l/2 (minus the bias budget), confidence delta_eff
+    return bounds.m_required(dev, delta_eff, N,
+                             value_range + 2.0 * quant_err)
 
 
 def make_schedule(n: int, N: int, K: int = 1, eps: float = 0.1,
-                  delta: float = 0.05, value_range: float = 1.0) -> Schedule:
+                  delta: float = 0.05, value_range: float = 1.0,
+                  quant_err: float = 0.0) -> Schedule:
     """Build the static round plan of Algorithm 1.
 
     eps_1 = eps/4, delta_1 = delta/2; eps_{l+1} = 3/4 eps_l,
     delta_{l+1} = delta_l/2; each round keeps K + floor((|S_l|-K)/2) arms.
     Cumulative pull counts are clamped to be nondecreasing and <= N.
+    ``quant_err`` widens every round's pull count so a per-reward bias of
+    that size (low-precision sampling arithmetic) is absorbed into the
+    confidence radii (see `_round_pulls` and DESIGN.md §10).
     """
     if n < 1 or N < 1:
         raise ValueError(f"need n,N >= 1, got n={n} N={N}")
+    if quant_err < 0.0:
+        raise ValueError(f"quant_err must be >= 0, got {quant_err}")
     if K >= n:
-        return Schedule(n, N, K, eps, delta, value_range, ())
+        return Schedule(n, N, K, eps, delta, value_range, (), quant_err)
     rounds: List[Round] = []
     n_l, eps_l, delta_l, t_prev, l = n, eps / 4.0, delta / 2.0, 0, 1
     while n_l > K:
-        t_l = _round_pulls(n_l, K, eps_l, delta_l, N, value_range)
+        t_l = _round_pulls(n_l, K, eps_l, delta_l, N, value_range, quant_err)
         t_l = min(N, max(t_l, t_prev))  # nondecreasing, saturates at N
         n_keep = K + (n_l - K) // 2
         rounds.append(Round(index=l, n_arms=n_l, n_keep=n_keep, t_cum=t_l,
                             t_new=t_l - t_prev, eps_l=eps_l, delta_l=delta_l))
         n_l, t_prev, l = n_keep, t_l, l + 1
         eps_l, delta_l = 0.75 * eps_l, 0.5 * delta_l
-    return Schedule(n, N, K, eps, delta, value_range, tuple(rounds))
+    return Schedule(n, N, K, eps, delta, value_range, tuple(rounds),
+                    quant_err)

@@ -148,7 +148,7 @@ def named_sharding(*logical_axes: Optional[str]) -> NamedSharding:
 def make_shard_plan(n: int, N: int, n_shards: int, *, K: int = 1,
                     eps: float = 0.05, delta: float = 0.05,
                     value_range: float = 4.0, tile: int = 8,
-                    block: int = 512):
+                    block: int = 512, precision: str = "fp32"):
     """Shard-local BlockedPlan + padding geometry for an arm-sharded table.
 
     Splits an (n, N) item matrix into ``n_shards`` row shards of
@@ -166,7 +166,10 @@ def make_shard_plan(n: int, N: int, n_shards: int, *, K: int = 1,
       inflation is needed;
     * ``k_out`` asks each shard for one candidate beyond its top-K so the
       merge can report per-candidate bound gaps (margin over the best
-      non-returned survivor).
+      non-returned survivor);
+    * ``precision='int8'`` calibrates each shard's plan with
+      quantization-widened bounds (DESIGN.md §10); quantization itself is
+      shard-local (per-tile scales over the shard's own rows).
 
     Returns ``(plan, n_local, n_pad, k_out)``.
     """
@@ -180,7 +183,8 @@ def make_shard_plan(n: int, N: int, n_shards: int, *, K: int = 1,
     n_pad = n_shards * n_local - n
     K_local = min(K, n_local)
     plan = make_plan(n_local, N, K=K_local, eps=eps, delta=delta / n_shards,
-                     value_range=value_range, tile=tile, block=block)
+                     value_range=value_range, tile=tile, block=block,
+                     precision=precision)
     k_out = max(K_local, min(K_local + 1, plan.k_out_cap, n_local))
     return plan, n_local, n_pad, k_out
 
@@ -192,6 +196,7 @@ def sharded_bounded_me_decode(table, Q, key, *, mesh: Mesh, K: int = 1,
                               value_range: float = 4.0, tile: int = 8,
                               block: int = 512, final_exact: bool = True,
                               use_pallas: Optional[bool] = None,
+                              precision: str = "fp32",
                               return_candidates: bool = False):
     """Multi-device batched-decode MIPS: per-shard fused cascade + exact merge.
 
@@ -235,6 +240,11 @@ def sharded_bounded_me_decode(table, Q, key, *, mesh: Mesh, K: int = 1,
         gather-rescore supplies the exact merge scores instead — cheaper
         per shard when N is huge and the schedule saturates early.
       use_pallas: force/deny the fused kernel (default auto: TPU only).
+      precision: 'fp32' (default) or 'int8' — each shard samples on its
+        own int8-quantized tiles under quantization-widened bounds
+        (DESIGN.md §10); candidates entering the merge are still fp32
+        exact (coverage completion at fp32, or the int8 path's fp32
+        candidate rescore), so the exact-merge argument is untouched.
       return_candidates: also return the pre-merge per-shard candidate
         sets — a dict of ``ids/scores/gaps`` arrays shaped
         (B, shards, k_out) — for diagnostics and tests.
@@ -260,7 +270,7 @@ def sharded_bounded_me_decode(table, Q, key, *, mesh: Mesh, K: int = 1,
     n_shards = mesh.shape[model_axis]
     plan, n_local, n_pad, k_out = make_shard_plan(
         n, N, n_shards, K=K, eps=eps, delta=delta, value_range=value_range,
-        tile=tile, block=block)
+        tile=tile, block=block, precision=precision)
     if n_pad:
         table = jnp.pad(table, ((0, n_pad), (0, 0)))
     key = jnp.asarray(key)

@@ -32,6 +32,16 @@ Scalar-prefetch operands (SMEM):
                           (tile padding AND caller padding, e.g. a padded
                           vocab or a ragged shard — DESIGN.md §7); may be
                           a traced value (per-shard under shard_map)
+
+Quantized sampling (DESIGN.md §10): when ``V4``/``qb`` are int8 the caller
+passes the per-tile table scales ``vscale (n_tiles, n_blocks) f32`` and the
+per-block query scales ``qscale (1|B, n_blocks) f32`` (VMEM-resident,
+`repro.core.quantize`).  Each pull's tile-dot then runs int8 x int8 -> int32
+on the MXU — half the HBM bytes per pulled tile — and is dequantized with
+the scalar ``vscale[tile, col] * qscale[col]`` before entering the same f32
+accumulator; elimination, survivor bookkeeping and extraction are unchanged.
+The widened confidence radii that absorb the quantization bias live in the
+schedule, not here (`make_schedule(quant_err=...)`).
 """
 
 from __future__ import annotations
@@ -52,12 +62,23 @@ def _round_up(x: int, m: int) -> int:
     return -(-x // m) * m
 
 
-def _make_kernel(*, n_arms, R, C, K, n_tiles, t_final, n_final, S, Pw, B):
-    """Build the kernel body.  B is None for the single-query variant."""
+def _make_kernel(*, n_arms, R, C, K, n_tiles, t_final, n_final, S, Pw, B,
+                 quantized=False):
+    """Build the kernel body.  B is None for the single-query variant.
+
+    With ``quantized`` the tensor-operand list grows by (vscale, qscale)
+    and every pull dequantizes its int32 tile-dot before accumulating.
+    """
     batched = B is not None
 
-    def kernel(code_ref, rmeta_ref, cols_ref, nv_ref, V_ref, q_ref, ids_ref,
-               vals_ref, acc, vbuf, surv, tmp, scorebuf, rnd, sem):
+    def kernel(code_ref, rmeta_ref, cols_ref, nv_ref, V_ref, q_ref, *rest):
+        if quantized:
+            (vs_ref, qs_ref, ids_ref, vals_ref, acc, vbuf, surv, tmp,
+             scorebuf, rnd, sem) = rest
+        else:
+            (ids_ref, vals_ref, acc, vbuf, surv, tmp, scorebuf, rnd,
+             sem) = rest
+            vs_ref = qs_ref = None
         # constants must be materialized inside the traced body
         _NEG = jnp.float32(-jnp.inf)
         denom_final = jnp.float32(max(1, t_final) * C)
@@ -98,8 +119,18 @@ def _make_kernel(*, n_arms, R, C, K, n_tiles, t_final, n_final, S, Pw, B):
                                   sem.at[dslot]).wait()
             qcol = (q_ref[0, pl.ds(col, 1), :] if batched
                     else q_ref[pl.ds(col, 1), :])          # (1, C)
-            part = jnp.dot(vbuf[dslot], qcol[0],
-                           preferred_element_type=jnp.float32)  # (R,)
+            if quantized:
+                # int8 x int8 -> int32 on the MXU, then dequantize with the
+                # scalar tile/block scale product.  The jnp fallback does
+                # the identical (exact) integer dot and the identical two
+                # float ops per entry, so the paths stay bit-exact.
+                raw = jnp.dot(vbuf[dslot], qcol[0],
+                              preferred_element_type=jnp.int32)    # (R,)
+                s = vs_ref[tile, col] * qs_ref[0, col]
+                part = raw.astype(jnp.float32) * s
+            else:
+                part = jnp.dot(vbuf[dslot], qcol[0],
+                               preferred_element_type=jnp.float32)  # (R,)
             acc[pl.ds(tile, 1), :] = acc[pl.ds(tile, 1), :] + part[None]
 
         @pl.when(end)
@@ -202,11 +233,13 @@ def _scratch(n_tiles, R, C, Pw, vdtype):
 def fused_cascade_pallas(V4, qb, slotcode, rounds_meta, cols, *, n_arms: int,
                          K: int, t_final: int, n_final: int,
                          k_out: int = None, n_valid=None,
+                         vscale=None, qscale=None,
                          interpret: bool = False):
     """Single-query fused cascade: ONE pallas_call for all rounds.
 
-    V4:  (n_tiles, n_blocks, R, C) tile-major data (stays in HBM)
-    qb:  (n_blocks, C) blocked query (VMEM-resident)
+    V4:  (n_tiles, n_blocks, R, C) tile-major data (stays in HBM);
+    float for the fp32 path, int8 for the quantized path.
+    qb:  (n_blocks, C) blocked query (VMEM-resident), same dtype family.
     slotcode/rounds_meta/cols: see `FlatSchedule.packed`
     k_out: number of final candidates extracted in-kernel (default K).
     Shard-local callers ask for k_out > K so the K winners come back with a
@@ -216,10 +249,16 @@ def fused_cascade_pallas(V4, qb, slotcode, rounds_meta, cols, *, n_arms: int,
     n_valid: rows >= n_valid never win a ranking (default ``n_arms``);
     accepts a traced scalar, so shards can mask their own slice of a
     caller-padded table in-cascade (DESIGN.md §7).
+    vscale/qscale: per-tile table scales (n_tiles, n_blocks) and per-block
+    query scales (n_blocks,) for int8 operands (`repro.core.quantize`,
+    DESIGN.md §10); both or neither must be given.
     Returns (ids (k_out,) int32, vals (k_out,) f32) — vals are unscaled block
     means, identical to the unfused path before its padding rescale.
     """
     n_tiles, n_blocks, R, C = V4.shape
+    quantized = vscale is not None
+    if quantized != (qscale is not None):
+        raise ValueError("vscale and qscale must be passed together")
     if k_out is None:
         k_out = K
     K = k_out          # K's only kernel role is the extraction/output width
@@ -227,13 +266,22 @@ def fused_cascade_pallas(V4, qb, slotcode, rounds_meta, cols, *, n_arms: int,
         n_valid = n_arms
     S = slotcode.shape[0]
     Pw = _round_up(max(n_tiles, n_final * R, 1), 128)
+    in_specs = [
+        pl.BlockSpec(memory_space=pltpu.ANY),     # V4: manual tile DMA
+        pl.BlockSpec(memory_space=pltpu.VMEM),    # qb: fully resident
+    ]
+    operands = [V4, qb]
+    if quantized:
+        in_specs += [
+            pl.BlockSpec(memory_space=pltpu.VMEM),    # vscale
+            pl.BlockSpec(memory_space=pltpu.VMEM),    # qscale (1, n_blocks)
+        ]
+        operands += [jnp.asarray(vscale, jnp.float32),
+                     jnp.asarray(qscale, jnp.float32).reshape(1, n_blocks)]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=4,
         grid=(S,),
-        in_specs=[
-            pl.BlockSpec(memory_space=pltpu.ANY),     # V4: manual tile DMA
-            pl.BlockSpec(memory_space=pltpu.VMEM),    # qb: fully resident
-        ],
+        in_specs=in_specs,
         out_specs=(
             pl.BlockSpec((1, K), lambda i, *_: (0, 0)),
             pl.BlockSpec((1, K), lambda i, *_: (0, 0)),
@@ -242,7 +290,7 @@ def fused_cascade_pallas(V4, qb, slotcode, rounds_meta, cols, *, n_arms: int,
     )
     kernel = _make_kernel(n_arms=n_arms, R=R, C=C, K=K, n_tiles=n_tiles,
                           t_final=t_final, n_final=n_final, S=S, Pw=Pw,
-                          B=None)
+                          B=None, quantized=quantized)
     ids, vals = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
@@ -251,7 +299,7 @@ def fused_cascade_pallas(V4, qb, slotcode, rounds_meta, cols, *, n_arms: int,
         interpret=interpret,
     )(slotcode.astype(jnp.int32), rounds_meta.astype(jnp.int32),
       cols.astype(jnp.int32), jnp.asarray(n_valid, jnp.int32).reshape(1),
-      V4, qb)
+      *operands)
     return ids[0], vals[0]
 
 
@@ -260,7 +308,8 @@ def fused_cascade_pallas(V4, qb, slotcode, rounds_meta, cols, *, n_arms: int,
 def fused_cascade_batched_pallas(V4, Qb, slotcode, rounds_meta, cols, *,
                                  n_arms: int, K: int, t_final: int,
                                  n_final: int, k_out: int = None,
-                                 n_valid=None, interpret: bool = False):
+                                 n_valid=None, vscale=None, qscale=None,
+                                 interpret: bool = False):
     """Batched fused cascade: the query axis rides in the grid.
 
     Qb: (B, n_blocks, C) blocked queries; cols: (B, S) per-query pull
@@ -268,10 +317,14 @@ def fused_cascade_batched_pallas(V4, Qb, slotcode, rounds_meta, cols, *,
     re-initialized at each query's first grid step.  ``k_out`` (default K)
     widens the in-kernel final extraction and ``n_valid`` (default
     ``n_arms``, may be traced) masks caller-padding rows exactly as in
-    `fused_cascade_pallas`.
+    `fused_cascade_pallas`.  For int8 operands pass ``vscale`` (n_tiles,
+    n_blocks) and per-query ``qscale`` (B, n_blocks) (DESIGN.md §10).
     Returns (ids (B, k_out) int32, vals (B, k_out) f32), unscaled.
     """
     n_tiles, n_blocks, R, C = V4.shape
+    quantized = vscale is not None
+    if quantized != (qscale is not None):
+        raise ValueError("vscale and qscale must be passed together")
     if k_out is None:
         k_out = K
     K = k_out
@@ -279,13 +332,22 @@ def fused_cascade_batched_pallas(V4, Qb, slotcode, rounds_meta, cols, *,
         n_valid = n_arms
     B, S = cols.shape
     Pw = _round_up(max(n_tiles, n_final * R, 1), 128)
+    in_specs = [
+        pl.BlockSpec(memory_space=pltpu.ANY),
+        pl.BlockSpec((1, n_blocks, C), lambda b, i, *_: (b, 0, 0)),
+    ]
+    operands = [V4, Qb]
+    if quantized:
+        in_specs += [
+            pl.BlockSpec(memory_space=pltpu.VMEM),                # vscale
+            pl.BlockSpec((1, n_blocks), lambda b, i, *_: (b, 0)),  # qscale
+        ]
+        operands += [jnp.asarray(vscale, jnp.float32),
+                     jnp.asarray(qscale, jnp.float32)]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=4,
         grid=(B, S),
-        in_specs=[
-            pl.BlockSpec(memory_space=pltpu.ANY),
-            pl.BlockSpec((1, n_blocks, C), lambda b, i, *_: (b, 0, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=(
             pl.BlockSpec((1, K), lambda b, i, *_: (b, 0)),
             pl.BlockSpec((1, K), lambda b, i, *_: (b, 0)),
@@ -293,7 +355,8 @@ def fused_cascade_batched_pallas(V4, Qb, slotcode, rounds_meta, cols, *,
         scratch_shapes=_scratch(n_tiles, R, C, Pw, V4.dtype),
     )
     kernel = _make_kernel(n_arms=n_arms, R=R, C=C, K=K, n_tiles=n_tiles,
-                          t_final=t_final, n_final=n_final, S=S, Pw=Pw, B=B)
+                          t_final=t_final, n_final=n_final, S=S, Pw=Pw, B=B,
+                          quantized=quantized)
     return pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
@@ -302,4 +365,4 @@ def fused_cascade_batched_pallas(V4, Qb, slotcode, rounds_meta, cols, *,
         interpret=interpret,
     )(slotcode.astype(jnp.int32), rounds_meta.astype(jnp.int32),
       cols.astype(jnp.int32), jnp.asarray(n_valid, jnp.int32).reshape(1),
-      V4, Qb)
+      *operands)

@@ -62,21 +62,39 @@ def gather_block_dot(V4, idx, cols, qsel):
 
 
 def fused_cascade(V4, qb, slotcode, rounds_meta, cols, *, n_arms, K,
-                  t_final, n_final, k_out=None, n_valid=None):
-    """Whole-cascade single dispatch: see `repro.kernels.fused_cascade`."""
+                  t_final, n_final, k_out=None, n_valid=None,
+                  vscale=None, qscale=None):
+    """Whole-cascade single dispatch: see `repro.kernels.fused_cascade`.
+
+    Beyond the schedule operands: ``k_out`` (default K) widens the
+    in-kernel final extraction so shard-local callers get extra threshold
+    candidates (it never changes the elimination schedule; must satisfy
+    ``K <= k_out <= n_final * tile``); ``n_valid`` (default ``n_arms``,
+    may be a traced scalar) masks rows >= n_valid out of every tile-max
+    and extraction so caller padding can never win (DESIGN.md §7);
+    ``vscale``/``qscale`` are the int8 dequantization scales of the
+    quantized sampling path (DESIGN.md §10, `repro.core.quantize`).
+    """
     return fused_cascade_pallas(V4, qb, slotcode, rounds_meta, cols,
                                 n_arms=n_arms, K=K, t_final=t_final,
                                 n_final=n_final, k_out=k_out,
-                                n_valid=n_valid, interpret=not on_tpu())
+                                n_valid=n_valid, vscale=vscale,
+                                qscale=qscale, interpret=not on_tpu())
 
 
 def fused_cascade_batched(V4, Qb, slotcode, rounds_meta, cols, *, n_arms, K,
-                          t_final, n_final, k_out=None, n_valid=None):
-    """Batched whole-cascade dispatch: query axis in the kernel grid."""
+                          t_final, n_final, k_out=None, n_valid=None,
+                          vscale=None, qscale=None):
+    """Batched whole-cascade dispatch: query axis in the kernel grid.
+
+    ``k_out``/``n_valid``/``vscale``/``qscale`` behave exactly as in
+    :func:`fused_cascade` (``qscale`` is per query here, (B, n_blocks)).
+    """
     return fused_cascade_batched_pallas(V4, Qb, slotcode, rounds_meta, cols,
                                         n_arms=n_arms, K=K, t_final=t_final,
                                         n_final=n_final, k_out=k_out,
-                                        n_valid=n_valid,
+                                        n_valid=n_valid, vscale=vscale,
+                                        qscale=qscale,
                                         interpret=not on_tpu())
 
 

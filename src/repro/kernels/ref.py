@@ -28,7 +28,8 @@ def blocked_matvec_ref(W: jnp.ndarray, q: jnp.ndarray) -> jnp.ndarray:
     return jnp.dot(W, q, preferred_element_type=jnp.float32)
 
 
-def fused_cascade_ref(V4, qb, flat, cols, *, n_arms: int, K: int):
+def fused_cascade_ref(V4, qb, flat, cols, *, n_arms: int, K: int,
+                      vscale=None, qscale=None):
     """Step-accurate numpy simulation of the fused cascade kernel.
 
     Walks the same FlatSchedule the kernel prefetches, one grid step at a
@@ -39,10 +40,20 @@ def fused_cascade_ref(V4, qb, flat, cols, *, n_arms: int, K: int):
 
     V4: (n_tiles, n_blocks, R, C); qb: (n_blocks, C); flat: FlatSchedule;
     cols: (S,) column-block id per step (i.e. perm[flat.bpos]).
+    With ``vscale (n_tiles, n_blocks)`` / ``qscale (n_blocks,)`` the
+    operands are int8 and each pull is an exact integer dot dequantized by
+    the scalar scale product (the quantized path, DESIGN.md §10).
     Returns (ids (K,), vals (K,)) — vals unscaled, like the kernel.
     """
-    V4 = np.asarray(V4, np.float32)
-    qb = np.asarray(qb, np.float32)
+    quantized = vscale is not None
+    if quantized:
+        V4 = np.asarray(V4, np.int32)   # exact integer tile-dots
+        qb = np.asarray(qb, np.int32)
+        vscale = np.asarray(vscale, np.float32)
+        qscale = np.asarray(qscale, np.float32)
+    else:
+        V4 = np.asarray(V4, np.float32)
+        qb = np.asarray(qb, np.float32)
     cols = np.asarray(cols)
     n_tiles, n_blocks, R, C = V4.shape
     acc = np.zeros((n_tiles, R), np.float32)
@@ -56,7 +67,12 @@ def fused_cascade_ref(V4, qb, flat, cols, *, n_arms: int, K: int):
         if flat.is_pull[i]:
             tile = surv[flat.slot[i]]
             col = int(cols[i])
-            acc[tile] = acc[tile] + V4[tile, col] @ qb[col]
+            if quantized:
+                raw = V4[tile, col] @ qb[col]               # exact int32
+                s = np.float32(vscale[tile, col]) * np.float32(qscale[col])
+                acc[tile] = acc[tile] + raw.astype(np.float32) * s
+            else:
+                acc[tile] = acc[tile] + V4[tile, col] @ qb[col]
         if flat.is_end[i]:
             T, keep = int(flat.n_surv[i]), int(flat.n_keep[i])
             denom = np.float32(int(flat.t_cum[i]) * C)

@@ -121,6 +121,13 @@ class MIPSServeEngine:
     requests exhaustively on the host and folds top-K recall into
     `stats` — the live accuracy counter for the (eps, delta) knob.
 
+    ``precision='int8'`` serves every flush on int8-quantized tiles under
+    quantization-widened confidence bounds (DESIGN.md §10, docs/TUNING.md):
+    roughly half the sampling-phase memory traffic per flush, with returned
+    scores still fp32-exact (candidate rescore).  The live ``recall``
+    stat is the operator's check that the widened (eps, delta) calibration
+    holds on real traffic.
+
     Failure modes: queries must be (N,) float and finite — NaN/inf
     propagate into scores and poison the LRU line; `submit` raises on a
     shape mismatch.  The engine is not thread-safe; drive it from one
@@ -135,7 +142,8 @@ class MIPSServeEngine:
                  mesh=None, model_axis: str = "model",
                  n_valid: Optional[int] = None,
                  recall_sample_rate: float = 0.0,
-                 use_pallas: Optional[bool] = None, seed: int = 0):
+                 use_pallas: Optional[bool] = None,
+                 precision: str = "fp32", seed: int = 0):
         from repro.core.boundedme_jax import bounded_me_decode, make_plan
         from repro.core.mips import table_abs_max
 
@@ -157,7 +165,8 @@ class MIPSServeEngine:
             from repro.distributed.specs import serving_table_sharding
             self.plan, n_local, n_pad, _ = make_shard_plan(
                 n, N, mesh.shape[model_axis], K=K, eps=eps, delta=delta,
-                value_range=value_range, tile=tile, block=block)
+                value_range=value_range, tile=tile, block=block,
+                precision=precision)
             n_valid_eff = n if n_valid is None else n_valid
             self._n_valid = n_valid_eff   # recall must mask pad rows too
             if n_pad:       # ragged: pad rows host-side ONCE, before placing
@@ -170,12 +179,13 @@ class MIPSServeEngine:
                     tbl, Qbuf, key, mesh=mesh, K=K, model_axis=model_axis,
                     n_valid=n_valid_eff, eps=eps, delta=delta,
                     value_range=value_range, tile=tile, block=block,
-                    final_exact=True, use_pallas=use_pallas)
+                    final_exact=True, use_pallas=use_pallas,
+                    precision=precision)
                 return ids, scores
         else:
             self.plan = make_plan(n, N, K=K, eps=eps, delta=delta,
                                   value_range=value_range, tile=tile,
-                                  block=block)
+                                  block=block, precision=precision)
 
             def _flush_fn(tbl, Qbuf, key):
                 # padding rows (if any) are masked inside the cascade, so
@@ -404,12 +414,14 @@ def _run_loop(args) -> None:
         batch_size=args.batch, deadline_ms=args.deadline_ms,
         block=min(512, cfg.d_model), n_valid=cfg.vocab, mesh=mesh,
         recall_sample_rate=args.recall_rate,
-        cache_entries=args.cache_entries)
+        cache_entries=args.cache_entries, precision=args.precision)
     print(f"[serve] loop: table=({engine.n},{engine.N}) K={args.topk} "
           f"eps={args.eps} batch={args.batch} "
           f"deadline={args.deadline_ms}ms "
           f"shards={mesh.shape['model'] if mesh else 1} "
           f"rounds={len(engine.plan.schedule.rounds)} "
+          f"precision={engine.plan.precision} "
+          f"eps_eff={engine.plan.eps_effective:.4f} "
           f"pull_speedup={engine.plan.schedule.speedup:.2f}x")
     rng = np.random.default_rng(0)
     qs = rng.normal(size=(args.requests, engine.N)).astype(np.float32)
@@ -428,7 +440,8 @@ def _run_decode_demo(args) -> None:
     if args.smoke:
         cfg = cfg.smoke()
     cfg = dataclasses.replace(cfg, mips_mode=args.mips, mips_eps=args.eps,
-                              mips_delta=args.delta)
+                              mips_delta=args.delta,
+                              mips_precision=args.precision)
 
     if cfg.mips_mode == "boundedme":
         # the decode hot path runs the whole bandit as ONE fused kernel
@@ -443,6 +456,7 @@ def _run_decode_demo(args) -> None:
                 if on_tpu() else "jnp scan fallback (non-TPU backend)")
         print(f"[serve] fused cascade: rounds={len(plan.schedule.rounds)} "
               f"grid_steps={flat.n_steps} "
+              f"precision={plan.precision} "
               f"pull_speedup={plan.schedule.speedup:.2f}x path={path}")
 
     params = init_params(cfg, jax.random.PRNGKey(0))
@@ -495,6 +509,10 @@ def main():
                     choices=["exact", "boundedme"])
     ap.add_argument("--eps", type=float, default=0.1)
     ap.add_argument("--delta", type=float, default=0.1)
+    ap.add_argument("--precision", default="fp32",
+                    choices=["fp32", "int8"],
+                    help="sampling arithmetic of the cascade "
+                         "(int8 = quantized pulls, widened bounds)")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--tokens", type=int, default=32)

@@ -65,10 +65,16 @@ def prefill_step(params, cfg: ArchConfig, tokens, cache_len: int,
 
 
 def make_mips_plan(cfg: ArchConfig, K: int = 1):
-    """Static BoundedME plan for the unembedding MIPS (trace-time)."""
+    """Static BoundedME plan for the unembedding MIPS (trace-time).
+
+    ``cfg.mips_precision`` selects the sampling arithmetic: 'int8' runs
+    the cascade's pull rounds on quantized tiles under quantization-
+    widened bounds (DESIGN.md §10), with final scores rescored in fp32.
+    """
     return make_plan(cfg.padded_vocab, cfg.d_model, K=K, eps=cfg.mips_eps,
                      delta=cfg.mips_delta, value_range=4.0,
-                     tile=8, block=min(512, cfg.d_model))
+                     tile=8, block=min(512, cfg.d_model),
+                     precision=cfg.mips_precision)
 
 
 def decode_step(params, cfg: ArchConfig, caches, tokens, pos,
@@ -102,7 +108,7 @@ def decode_step(params, cfg: ArchConfig, caches, tokens, pos,
                 batch_axes=baxes, n_valid=cfg.vocab,
                 eps=cfg.mips_eps, delta=cfg.mips_delta,
                 value_range=4.0, block=min(512, cfg.d_model),
-                final_exact=True)
+                final_exact=True, precision=cfg.mips_precision)
         else:
             # batched decode path: the whole (B,) batch is served by one
             # dispatch (one fused pallas_call on TPU; one dense-round scan

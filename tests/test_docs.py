@@ -1,7 +1,8 @@
 """Doc coverage is part of tier-1: the public API must stay documented.
 
-Delegates to tools/check_docstrings.py (pure AST — no jax import), so the
-CI step and the test suite can never disagree about what "covered" means.
+Delegates to tools/check_docstrings.py (docstring coverage, pure AST) and
+tools/check_links.py (markdown link + path-reference liveness), so the CI
+docs job and the test suite can never disagree about what "covered" means.
 """
 
 import sys
@@ -10,6 +11,7 @@ from pathlib import Path
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "tools"))
 
 import check_docstrings  # noqa: E402
+import check_links  # noqa: E402
 
 
 def test_public_api_docstrings_covered():
@@ -22,3 +24,22 @@ def test_contracted_symbols_exist():
     for rel, contracts in check_docstrings.API_CONTRACTS.items():
         assert rel in check_docstrings.AUDITED_MODULES, rel
         assert contracts, rel
+
+
+def test_doc_links_live():
+    """README/DESIGN/docs references must point at files that exist."""
+    problems = check_links.check()
+    assert not problems, "\n".join(problems)
+
+
+def test_link_checker_detects_breakage(tmp_path, monkeypatch):
+    """The checker itself must not be vacuous: a planted broken link and a
+    dangling backtick path must both be reported.  The fixture doc lives
+    in tmp_path (absolute entries resolve as-is against REPO), keeping
+    the repo working tree untouched."""
+    bad = tmp_path / "broken.md"
+    bad.write_text("[x](no/such/file.md) and `src/repro/core/missing.py`")
+    monkeypatch.setattr(check_links, "AUDITED_DOCS", [str(bad)])
+    problems = check_links.check()
+    assert any("broken link" in p for p in problems), problems
+    assert any("dangling path" in p for p in problems), problems

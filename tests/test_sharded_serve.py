@@ -180,6 +180,47 @@ print("OK")
 
 
 @pytest.mark.slow
+def test_sharded_int8_parity_with_single_device():
+    """int8 sharded decode == int8 single-device decode == exact truth.
+
+    Quantization is shard-local (per-tile scales over each shard's own
+    rows) and the per-shard plans widen their bounds independently, so
+    parity is asserted at the result level: with winner margins above the
+    int8 bias both paths must return the identical exact-rescored top-K.
+    """
+    _run(r"""
+from repro.core.boundedme_jax import bounded_me_decode, make_plan
+from repro.distributed.sharding import sharded_bounded_me_decode
+mesh = jax.make_mesh((2,), ("model",))
+rng = np.random.default_rng(11)
+n, N, B, K = 512, 1024, 3, 3
+V = (0.2 * rng.normal(size=(n, N))).astype(np.float32)
+Q = rng.normal(size=(B, N)).astype(np.float32)
+for b in range(B):        # planted winners with margins >> the int8 bias
+    unit = Q[b] / np.linalg.norm(Q[b])
+    for j in range(K):
+        V[31 * b + 5 * j] = (4.0 + 0.5 * j) * unit
+V = jnp.asarray(V); Q = jnp.asarray(Q)
+key = jax.random.PRNGKey(7)
+plan = make_plan(n, N, K=K, eps=1e-3, delta=0.05, value_range=8.0,
+                 block=128, precision="int8")
+i1, s1 = bounded_me_decode(V, Q, key, plan=plan, final_exact=True,
+                           use_pallas=False)
+i2, s2, gaps = sharded_bounded_me_decode(
+    V, Q, key, mesh=mesh, K=K, eps=1e-3, delta=0.05, value_range=8.0,
+    block=128, precision="int8")
+truth = np.argsort(-(np.asarray(V) @ np.asarray(Q).T), axis=0)[:K].T
+np.testing.assert_array_equal(np.asarray(i1), truth)
+np.testing.assert_array_equal(np.asarray(i2), truth)
+# both paths rescore candidates in fp32: scores agree to fp32 tolerance
+np.testing.assert_allclose(np.asarray(s1), np.asarray(s2),
+                           rtol=1e-5, atol=1e-6)
+assert np.all(np.asarray(gaps) > 0)
+print("OK")
+""")
+
+
+@pytest.mark.slow
 def test_serve_engine_sharded_end_to_end():
     """MIPSServeEngine over a 2-device mesh: recall 1.0 at tiny eps."""
     _run(r"""

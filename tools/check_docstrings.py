@@ -26,6 +26,8 @@ SRC = REPO / "src" / "repro"
 AUDITED_MODULES = [
     "core/mips.py",
     "core/boundedme_jax.py",
+    "core/bounds.py",
+    "core/quantize.py",
     "core/schedule.py",
     "distributed/sharding.py",
     "distributed/specs.py",
@@ -47,15 +49,28 @@ API_CONTRACTS = {
     "core/boundedme_jax.py": {
         "bounded_me_decode": ["(B, N)", "eps, delta", "k_out", "plan",
                               "returns"],
-        "make_plan": ["range_mode"],
+        "make_plan": ["range_mode", "precision"],
+    },
+    "core/bounds.py": {
+        "quantization_error": ["symmetric", "value_range", "bias"],
+    },
+    "core/quantize.py": {
+        "quantize_tiles": ["(n_tiles, n_blocks", "int8", "scale"],
+        "quantize_blocks": ["int8", "block"],
     },
     "core/schedule.py": {
         "flatten_schedule": ["FlatSchedule"],
+        "make_schedule": ["quant_err"],
     },
     "distributed/sharding.py": {
         "sharded_bounded_me_decode": ["eps", "delta", "shard", "merge",
-                                      "gap", "ragged", "returns"],
+                                      "gap", "ragged", "precision",
+                                      "returns"],
         "make_shard_plan": ["union bound", "k_out", "pad"],
+    },
+    "kernels/ops.py": {
+        "fused_cascade": ["k_out", "n_valid", "vscale"],
+        "fused_cascade_batched": ["k_out", "n_valid"],
     },
 }
 

@@ -1,0 +1,96 @@
+#!/usr/bin/env python
+"""Doc link checker for the markdown suite (ISSUE 3 satellite).
+
+Every relative markdown link and every backtick-quoted repo path
+mentioned in the audited docs must exist on disk, so README/DESIGN/docs
+can't drift from the tree they describe.  Pure stdlib (no deps, runs in
+milliseconds before the CI environment installs anything):
+
+    python tools/check_links.py          # exit 0 = all targets exist
+
+Checked per file:
+  * inline markdown links ``[text](target)`` with a relative target
+    (http(s)/mailto and pure #anchors are skipped; a target's own
+    #fragment is stripped before the existence check);
+  * backtick-quoted paths that look like repo files (contain a '/' and
+    end in a known source/doc extension), e.g. `repro/core/bounds.py` —
+    resolved against the repo root, `src/`, and the referencing file's
+    directory.
+
+Run by CI (docs job) and by tests/test_docs.py.
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+# the documentation surface whose references must stay live
+AUDITED_DOCS = [
+    "README.md",
+    "DESIGN.md",
+    "EXPERIMENTS.md",
+    "ROADMAP.md",
+    "docs/KERNEL.md",
+    "docs/TUNING.md",
+]
+
+_MD_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_TICK_PATH = re.compile(r"`([A-Za-z0-9_./-]+/[A-Za-z0-9_.-]+"
+                        r"\.(?:py|md|json|yml|yaml|txt))`")
+_SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+
+
+def _exists(target: str, base: Path) -> bool:
+    """True if ``target`` resolves against the doc's dir, repo root or src/."""
+    for root in (base, REPO, REPO / "src", REPO / "src" / "repro"):
+        if (root / target).exists():
+            return True
+    return False
+
+
+def check() -> list:
+    """Return human-readable problems for broken doc references."""
+    problems = []
+    for rel in AUDITED_DOCS:
+        path = REPO / rel
+        if not path.exists():
+            problems.append(f"{rel}: audited doc missing")
+            continue
+        text = path.read_text()
+        for m in _MD_LINK.finditer(text):
+            target = m.group(1)
+            if target.startswith(_SKIP_PREFIXES):
+                continue
+            target = target.split("#", 1)[0]
+            if not target:
+                continue
+            if not _exists(target, path.parent):
+                line = text.count("\n", 0, m.start()) + 1
+                problems.append(f"{rel}:{line}: broken link -> {target}")
+        for m in _TICK_PATH.finditer(text):
+            target = m.group(1)
+            if not _exists(target, path.parent):
+                line = text.count("\n", 0, m.start()) + 1
+                problems.append(f"{rel}:{line}: dangling path "
+                                f"reference -> {target}")
+    return problems
+
+
+def main() -> int:
+    problems = check()
+    if problems:
+        print(f"doc links: {len(problems)} problem(s)")
+        for p in problems:
+            print(f"  {p}")
+        return 1
+    print(f"doc links OK: {len(AUDITED_DOCS)} docs, all referenced "
+          f"paths exist")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
