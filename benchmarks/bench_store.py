@@ -1,0 +1,152 @@
+"""PR-4 benchmark: live-corpus serving + update cost vs index rebuilds.
+
+Emits the rows for ``BENCH_PR4.json`` (via `benchmarks.run`), quantifying
+the paper's no-preprocessing claim on the serving stack (DESIGN.md §11):
+
+* **mixed read/write stream** — the store-backed `MIPSServeEngine` under
+  churn rates {0, 10, 50}% of arrivals (each churn event stages an upsert
+  or a delete+append): query throughput, latency percentiles and sampled
+  exact recall, on `simulate_stream`'s virtual clock.  The zero-rebuild
+  claim is checked structurally: the whole sweep must report 0 schedule
+  recalibrations (updates stay in the calibrated value range) — i.e. not
+  a single new executable was compiled to absorb the churn;
+* **update cost vs full rebuild** — amortized per-row upsert cost of the
+  store (fp32, and int8 including dirty-tile re-quantization) against
+  what the index baselines must pay to absorb *any* row change: a full
+  `build_lsh` / `build_pca_tree` rebuild (their Table-1 preprocessing).
+  Reported both as measured wall time and as the structural
+  preprocess-multiply counts the baselines expose.
+
+Geometry matches bench_serve (8192 x 1024) so rows are comparable with
+BENCH_PR2.json; absolute CPU-container numbers track trends only.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.baselines.lsh_mips import build_lsh
+from repro.baselines.pca_mips import build_pca_tree
+from repro.launch.serve import MIPSServeEngine, simulate_stream
+from repro.store import DynamicTableStore
+
+_N_ARMS, _DIM, _K = 8192, 1024, 4
+_REQUESTS = 192
+_INTERARRIVAL_MS = 0.3
+_CHURN_RATES = (0.0, 0.1, 0.5)
+_UPSERT_ROWS = 128          # rows timed for the update-cost comparison
+
+
+def _mixed_stream_row(table, queries, churn_rate: float) -> dict:
+    store = DynamicTableStore(table, block=256, capacity_slack=1.25)
+    eng = MIPSServeEngine(store, K=_K, eps=0.2, delta=0.1, value_range=8.0,
+                          batch_size=8, deadline_ms=2.0, cache_entries=0,
+                          recall_sample_rate=0.05)
+    crng = np.random.default_rng(7)
+
+    def churn(_eng, _i):
+        if crng.random() >= churn_rate:
+            return
+        row = crng.normal(size=_DIM).astype(np.float32)
+        live = store.live_ids()
+        if crng.random() < 0.7:
+            store.upsert(int(crng.choice(live)), row)
+        elif store.free_rows > 0:
+            store.delete(int(crng.choice(live)))
+            store.append(row)
+
+    eng.submit(queries[0], now=-1e3)     # warm the jit cache
+    eng.drain(now=-1e3)
+    stats = simulate_stream(eng, queries,
+                            interarrival_ms=_INTERARRIVAL_MS,
+                            churn=churn if churn_rate > 0 else None)
+    return {
+        "churn_rate": churn_rate,
+        "updates_applied": stats["updates"]["applied"],
+        "recalibrations": stats["updates"]["recalibrations"],
+        "throughput_rps": stats["throughput_rps"],
+        "latency_ms_p50": stats["latency_ms"]["p50"],
+        "latency_ms_p95": stats["latency_ms"]["p95"],
+        "recall_mean": stats["recall"]["mean"],
+        "update_rows_per_s": stats["updates"]["rows_per_s"],
+    }
+
+
+def _update_cost(table) -> dict:
+    rng = np.random.default_rng(1)
+    out = {}
+    for precision in ("fp32", "int8"):
+        store = DynamicTableStore(table, block=256, capacity_slack=1.25,
+                                  precision=precision)
+        # one warm flush so jit compiles don't pollute the timing
+        store.upsert(0, table[0])
+        store.flush_updates()
+        t0 = time.perf_counter()
+        for i in range(_UPSERT_ROWS):
+            store.upsert(int(rng.integers(0, _N_ARMS)),
+                         rng.normal(size=_DIM).astype(np.float32))
+            store.flush_updates()        # worst case: one flush per row
+        dt = time.perf_counter() - t0
+        out[precision] = {
+            "upsert_ms_per_row": dt / _UPSERT_ROWS * 1e3,
+            "rows_per_s": _UPSERT_ROWS / dt,
+            "tiles_requantized": store.tiles_requantized,
+        }
+    # index baselines: absorbing any update means a full rebuild
+    t0 = time.perf_counter()
+    lsh = build_lsh(table, a=8, b=16)
+    lsh_ms = (time.perf_counter() - t0) * 1e3
+    t0 = time.perf_counter()
+    pca = build_pca_tree(table, depth=6)
+    pca_ms = (time.perf_counter() - t0) * 1e3
+    store_row = _DIM                       # multiplies touched per upsert
+    out["rebuild"] = {
+        "lsh_ms": lsh_ms,
+        "lsh_preprocess_multiplies": lsh.preprocess_multiplies,
+        "pca_ms": pca_ms,
+        "pca_preprocess_multiplies": pca.preprocess_multiplies,
+        "store_touched_multiplies_per_upsert": store_row,
+        "lsh_rebuilds_per_store_upsert":
+            lsh_ms / out["fp32"]["upsert_ms_per_row"],
+        "pca_rebuilds_per_store_upsert":
+            pca_ms / out["fp32"]["upsert_ms_per_row"],
+    }
+    return out
+
+
+def run(csv: bool = True) -> dict:
+    """Run the live-corpus sweep; returns the BENCH_PR4 payload dict."""
+    rng = np.random.default_rng(0)
+    table = rng.normal(size=(_N_ARMS, _DIM)).astype(np.float32)
+    queries = rng.normal(size=(_REQUESTS, _DIM)).astype(np.float32)
+
+    out = {"geometry": {"n": _N_ARMS, "N": _DIM, "K": _K,
+                        "requests": _REQUESTS,
+                        "interarrival_ms": _INTERARRIVAL_MS,
+                        "upsert_rows_timed": _UPSERT_ROWS},
+           "mixed_stream": [], "update_cost": {}}
+    for rate in _CHURN_RATES:
+        row = _mixed_stream_row(table, queries, rate)
+        out["mixed_stream"].append(row)
+        if csv:
+            print(f"store_stream,churn={rate},"
+                  f"rps={row['throughput_rps']:.0f}"
+                  f";p95={row['latency_ms_p95']:.2f}ms"
+                  f";updates={row['updates_applied']}"
+                  f";recalib={row['recalibrations']}"
+                  f";recall={row['recall_mean']:.2f}")
+    out["update_cost"] = _update_cost(table)
+    if csv:
+        uc = out["update_cost"]
+        print(f"store_upsert,fp32,"
+              f"{uc['fp32']['upsert_ms_per_row']*1e3:.0f}us_per_row,"
+              f"int8={uc['int8']['upsert_ms_per_row']*1e3:.0f}us")
+        print(f"store_vs_rebuild,,lsh={uc['rebuild']['lsh_ms']:.0f}ms"
+              f";pca={uc['rebuild']['pca_ms']:.0f}ms"
+              f";lsh_rebuilds_per_upsert="
+              f"{uc['rebuild']['lsh_rebuilds_per_store_upsert']:.0f}"
+              f";pca_rebuilds_per_upsert="
+              f"{uc['rebuild']['pca_rebuilds_per_store_upsert']:.0f}")
+    return out

@@ -5,9 +5,10 @@ roofline table from the dry-run artifacts (if present).  Also writes the
 machine-readable perf trajectories: ``BENCH_PR1.json`` (fused cascade /
 batched decode: us_per_call, pull-count speedup, kernel dispatch counts),
 ``BENCH_PR2.json`` (serve-loop micro-batching: throughput vs batch
-deadline at B in {1, 8, 32}, LRU hit rates) and ``BENCH_PR3.json``
-(int8 quantized sampling vs fp32 at B in {1, 8, 32}) so numbers stay
-comparable across PRs.
+deadline at B in {1, 8, 32}, LRU hit rates), ``BENCH_PR3.json``
+(int8 quantized sampling vs fp32 at B in {1, 8, 32}) and
+``BENCH_PR4.json`` (dynamic-store serving under churn + update cost vs
+LSH/PCA full rebuilds) so numbers stay comparable across PRs.
 """
 
 from __future__ import annotations
@@ -20,12 +21,13 @@ _ROOT = os.path.dirname(os.path.dirname(__file__))
 BENCH_JSON = os.path.join(_ROOT, "BENCH_PR1.json")
 BENCH2_JSON = os.path.join(_ROOT, "BENCH_PR2.json")
 BENCH3_JSON = os.path.join(_ROOT, "BENCH_PR3.json")
+BENCH4_JSON = os.path.join(_ROOT, "BENCH_PR4.json")
 
 
 def main() -> None:
     from benchmarks import (bench_fused, bench_quant, bench_serve,
-                            fig1_guarantee, fig23_synthetic, fig4_real,
-                            table1_complexity)
+                            bench_store, fig1_guarantee, fig23_synthetic,
+                            fig4_real, table1_complexity)
     print("== fused cascade / batched decode (PR 1) ==")
     import jax
     meta = {"backend": jax.default_backend(),
@@ -44,6 +46,11 @@ def main() -> None:
     with open(BENCH3_JSON, "w") as f:
         json.dump(payload3, f, indent=2)
     print(f"[bench] wrote {BENCH3_JSON}")
+    print("== dynamic table store: churn + update cost (PR 4) ==")
+    payload4 = {"meta": meta, "benchmarks": bench_store.run()}
+    with open(BENCH4_JSON, "w") as f:
+        json.dump(payload4, f, indent=2)
+    print(f"[bench] wrote {BENCH4_JSON}")
     print("== table1: complexity/guarantees ==")
     table1_complexity.run()
     print("== fig1: guarantee validation (adversarial) ==")

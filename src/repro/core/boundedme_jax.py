@@ -422,7 +422,8 @@ def bounded_me_batched(V, Q, keys, *, plan: BlockedPlan,
 
 @functools.partial(jax.jit, static_argnames=("plan", "final_exact",
                                              "use_pallas", "k_out"))
-def _run_decode(V, Q, key, n_valid, *, plan: BlockedPlan, final_exact: bool,
+def _run_decode(V, Q, key, n_valid, V8=None, vscale=None, *,
+                plan: BlockedPlan, final_exact: bool,
                 use_pallas: bool, k_out: int):
     R, C = plan.tile, plan.block
     B = Q.shape[0]
@@ -436,7 +437,8 @@ def _run_decode(V, Q, key, n_valid, *, plan: BlockedPlan, final_exact: bool,
     scale = (plan.n_blocks * C) / plan.N
     quantized = plan.precision == "int8"
     if quantized:
-        V8, vscale = quantize_tiles(V4)
+        if V8 is None:
+            V8, vscale = quantize_tiles(V4)
         Q8, qscale = quantize_blocks(Qb)     # per query: (B, n_blocks)
 
     if use_pallas:
@@ -538,7 +540,7 @@ def bounded_me_decode(V, Q, key, *, plan: BlockedPlan,
                       final_exact: bool = True,
                       use_pallas: Optional[bool] = None,
                       k_out: Optional[int] = None,
-                      n_valid=None):
+                      n_valid=None, quantized=None):
     """Batched-decode BoundedME: one dispatch for a whole (B, N) batch.
 
     The serving hot path (DESIGN.md §3).  All queries share one block
@@ -570,8 +572,18 @@ def bounded_me_decode(V, Q, key, *, plan: BlockedPlan,
         Must satisfy ``plan.K <= k_out <= plan.k_out_cap``.
       n_valid: rows >= n_valid are masked out of every ranking *inside*
         the cascade (default ``plan.n``): caller-padding rows (padded
-        vocab, ragged shard) can then never occupy survivor or candidate
-        slots.  Accepts a traced scalar (per-shard under shard_map).
+        vocab, ragged shard) and a dynamic store's dead suffix
+        (DESIGN.md §11) can then never occupy survivor or candidate
+        slots.  Accepts a traced scalar (per-shard under shard_map, or a
+        live-row count that changes between calls without recompiling).
+      quantized: optional pre-quantized table operands ``(V8, vscale)``
+        in the tile-major layout of `repro.core.quantize.quantize_tiles`
+        (int8-plan only).  When given, the in-jit table quantization is
+        skipped — this is how a `DynamicTableStore`'s incrementally
+        re-quantized shadow reaches the kernel; results are bit-identical
+        to quantizing ``V`` in-jit because per-(tile, block) cells are
+        quantized independently.  Queries are always quantized in-jit
+        (they arrive per request).
 
     Returns:
       ``(ids (B, k_out) int32, scores (B, k_out) f32)`` sorted by descending
@@ -588,7 +600,10 @@ def bounded_me_decode(V, Q, key, *, plan: BlockedPlan,
                          f"k_out_cap={plan.k_out_cap}]")
     if n_valid is None:
         n_valid = plan.n
+    if quantized is not None and plan.precision != "int8":
+        raise ValueError("pre-quantized operands need an int8 plan")
+    V8, vscale = quantized if quantized is not None else (None, None)
     return _run_decode(jnp.asarray(V), jnp.asarray(Q), key,
-                       jnp.asarray(n_valid, jnp.int32), plan=plan,
-                       final_exact=final_exact, use_pallas=use_pallas,
-                       k_out=k_out)
+                       jnp.asarray(n_valid, jnp.int32), V8, vscale,
+                       plan=plan, final_exact=final_exact,
+                       use_pallas=use_pallas, k_out=k_out)

@@ -23,6 +23,7 @@ from typing import Dict, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 __all__ = [
@@ -231,8 +232,13 @@ def sharded_bounded_me_decode(table, Q, key, *, mesh: Mesh, K: int = 1,
       batch_axes: mesh axis (or tuple) to shard the query batch over, or
         None for a replicated batch.
       n_valid: number of *real* rows if the caller already padded ``table``
-        (e.g. a padded vocab); defaults to n.  Rows past it are masked out
-        of the merge.
+        (e.g. a padded vocab); defaults to n.  Either a global int (rows
+        past it are masked, prefix semantics as before) or a per-shard
+        (shards,) int vector of live-row counts — the layout a
+        `ShardedTableStore` (DESIGN.md §11) exports, where every shard
+        region has its own dense live prefix; the vector may be traced,
+        so live-count changes never recompile.  Rows past the bound are
+        masked *inside* each shard's cascade, before the merge.
       eps / delta / value_range / tile / block: cascade calibration knobs,
         as in `make_plan`; delta is split across shards internally.
       final_exact: complete survivors to full coverage on-shard so merge
@@ -275,14 +281,24 @@ def sharded_bounded_me_decode(table, Q, key, *, mesh: Mesh, K: int = 1,
         table = jnp.pad(table, ((0, n_pad), (0, 0)))
     key = jnp.asarray(key)
     neg = jnp.float32(-jnp.inf)
+    if getattr(n_valid, "ndim", 0) == 1:
+        # per-shard live counts (a ShardedTableStore's n_valid_vector):
+        # every shard region carries its own dense live prefix
+        nv_vec = jnp.asarray(n_valid, jnp.int32)
+    else:
+        # global prefix bound -> the per-shard prefix it induces; jnp so
+        # a traced scalar (e.g. under an outer jit) keeps working
+        nv_vec = jnp.clip(jnp.asarray(n_valid)
+                          - jnp.arange(n_shards) * n_local,
+                          0, n_local).astype(jnp.int32)
 
-    def local(table_l, Q_l, key_l):
-        shard_i = jax.lax.axis_index(model_axis)
-        # rows of this shard past the global n_valid boundary (ragged zero
-        # padding and caller padding, e.g. a padded vocab) are masked
-        # *inside* the cascade: they can never evict a true winner from
-        # the survivor set, so no shard-local K inflation is needed
-        n_valid_l = jnp.clip(n_valid - shard_i * n_local, 0, n_local)
+    def local(table_l, Q_l, key_l, nv_l):
+        # rows of this shard at or past its live bound (ragged zero
+        # padding, caller padding such as a padded vocab, or a dynamic
+        # store's dead suffix) are masked *inside* the cascade: they can
+        # never evict a true winner from the survivor set, so no
+        # shard-local K inflation is needed
+        n_valid_l = nv_l[0]
         ids, scores = bounded_me_decode(
             table_l, Q_l, key_l, plan=plan, final_exact=final_exact,
             use_pallas=use_pallas, k_out=k_out,
@@ -294,7 +310,7 @@ def sharded_bounded_me_decode(table, Q, key, *, mesh: Mesh, K: int = 1,
             scores = jnp.einsum("bkc,bc->bk", table_l[safe], Q_l,
                                 preferred_element_type=jnp.float32)
             scores = scores / jnp.float32(N)
-        gids = ids + shard_i * n_local
+        gids = ids + jax.lax.axis_index(model_axis) * n_local
         # bound gap: margin over the shard's best non-returned survivor
         if k_out > plan.K:
             thr = scores[:, k_out - 1:k_out]               # (B_loc, 1)
@@ -304,8 +320,7 @@ def sharded_bounded_me_decode(table, Q, key, *, mesh: Mesh, K: int = 1,
         # belt-and-braces for the merge: in-cascade masking already keeps
         # padding out of the candidates, but a shard with fewer than k_out
         # valid arms still emits filler entries — keep them at -inf
-        valid = jnp.logical_and(ids < n_valid_l, gids < n_valid)
-        scores = jnp.where(valid, scores, neg)
+        scores = jnp.where(ids < n_valid_l, scores, neg)
         B_loc = ids.shape[0]
         all_ids = jax.lax.all_gather(gids, model_axis, axis=1)
         all_sc = jax.lax.all_gather(scores, model_axis, axis=1)
@@ -324,9 +339,10 @@ def sharded_bounded_me_decode(table, Q, key, *, mesh: Mesh, K: int = 1,
     out3 = P(batch_axes, None, None)
     fn = shard_map_compat(
         local, mesh=mesh,
-        in_specs=(P(model_axis, None), P(batch_axes, None), kspec),
+        in_specs=(P(model_axis, None), P(batch_axes, None), kspec,
+                  P(model_axis)),
         out_specs=(out2, out2, out2, (out3, out3, out3)))
-    ids, scores, gaps, cands = fn(table, Q, key)
+    ids, scores, gaps, cands = fn(table, Q, key, nv_vec)
     if return_candidates:
         return ids, scores, gaps, {
             "ids": cands[0], "scores": cands[1], "gaps": cands[2]}

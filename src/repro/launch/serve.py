@@ -13,7 +13,10 @@ Two entry points:
   `sharded_bounded_me_decode` across a device mesh) with the query buffer
   donated to jit, results are memoized in a small LRU keyed on quantized
   queries, and per-request latency/recall counters are exported as a stats
-  dict.
+  dict.  Pass a `repro.store.DynamicTableStore` / `ShardedTableStore`
+  instead of a static table to serve a *live* corpus: upserts/deletes are
+  drained between flushes with zero recompilation and zero index rebuild
+  (DESIGN.md §11; `--dynamic --churn-rate 0.1` below).
 
       PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b \
           --smoke --loop --requests 256 --batch 8 --deadline-ms 2
@@ -30,6 +33,7 @@ import argparse
 import collections
 import dataclasses
 import json
+import struct
 import time
 import warnings
 from typing import Dict, List, Optional, Tuple
@@ -62,6 +66,7 @@ class QuantizedLRU:
             collections.OrderedDict()
         self.hits = 0
         self.misses = 0
+        self.invalidations = 0
 
     def key(self, q: np.ndarray) -> bytes:
         """Quantize a (N,) query to its cache key."""
@@ -88,6 +93,17 @@ class QuantizedLRU:
         self._od.move_to_end(key)
         while len(self._od) > self.capacity:
             self._od.popitem(last=False)
+
+    def invalidate(self) -> None:
+        """Drop every entry (table version bump: cached answers are stale).
+
+        Hit/miss counters survive; ``invalidations`` counts the calls.
+        The engine additionally salts its keys with the table version, so
+        even an entry that somehow survived an invalidation could never
+        answer a post-update query.
+        """
+        self._od.clear()
+        self.invalidations += 1
 
     def __len__(self) -> int:
         return len(self._od)
@@ -128,6 +144,22 @@ class MIPSServeEngine:
     stat is the operator's check that the widened (eps, delta) calibration
     holds on real traffic.
 
+    **Live corpora** (DESIGN.md §11): ``table`` may be a
+    `repro.store.DynamicTableStore` (or `ShardedTableStore` for
+    multi-device serving) instead of a static array.  The engine then
+    serves the store's preallocated capacity buffer with the live-row
+    count riding in as a traced ``n_valid`` every flush, so
+    upsert/delete/append streams recompile nothing; staged mutations are
+    drained by `apply_updates` — called automatically at every `poll` /
+    `drain`, i.e. between micro-batch flushes — which also bumps the
+    engine's table version (salting + invalidating the LRU so no stale
+    answer survives), keeps the recall estimator on the store's live host
+    mirror, and re-derives the (eps, delta) schedule only when the
+    store's monotonic value range grows past the calibrated bound.
+    Returned ids are the store's stable *external* ids.  The engine
+    adopts the store's ``tile``/``block`` geometry and (for a
+    `DynamicTableStore` int8 shadow) its ``precision``.
+
     Failure modes: queries must be (N,) float and finite — NaN/inf
     propagate into scores and poison the LRU line; `submit` raises on a
     shape mismatch.  The engine is not thread-safe; drive it from one
@@ -143,63 +175,81 @@ class MIPSServeEngine:
                  n_valid: Optional[int] = None,
                  recall_sample_rate: float = 0.0,
                  use_pallas: Optional[bool] = None,
-                 precision: str = "fp32", seed: int = 0):
-        from repro.core.boundedme_jax import bounded_me_decode, make_plan
+                 precision: str = "fp32", range_slack: float = 1.0,
+                 seed: int = 0):
         from repro.core.mips import table_abs_max
+        from repro.store import DynamicTableStore, ShardedTableStore
 
-        self._table = jnp.asarray(table)
-        n, N = self._table.shape
+        self._store = table if isinstance(
+            table, (DynamicTableStore, ShardedTableStore)) else None
+        self._qmax_hint = float(qmax_hint)
+        self._range_slack = float(range_slack)
+        self._use_pallas = use_pallas
+        if self._store is not None:
+            store = self._store
+            if isinstance(store, ShardedTableStore):
+                if mesh is not None and mesh is not store.mesh:
+                    raise ValueError("mesh differs from the store's mesh")
+                mesh = store.mesh
+                model_axis = store.model_axis
+            elif mesh is not None:
+                raise ValueError(
+                    "serving a mesh needs a ShardedTableStore")
+            if n_valid is not None:
+                raise ValueError("n_valid is store-managed")
+            # the store owns the kernel geometry (its int8 shadow and the
+            # engine's plan must agree tile-for-tile)
+            tile, block = store.tile, store.block
+            if store.precision == "int8":
+                precision = "int8"
+            n, N = store.capacity_rows, store.N
+            # clamp to the store's observed range exactly as apply_updates
+            # would on growth: a churned engine and a fresh engine on the
+            # store's snapshot then always calibrate identical plans
+            # (range_slack=1.0)
+            floor = 2.0 * self._qmax_hint * max(store.value_abs_max, 1e-30)
+            value_range = (floor if value_range is None
+                           else max(float(value_range), floor))
+        else:
+            self._table = jnp.asarray(table)
+            n, N = self._table.shape
+            if value_range is None:
+                # a-priori product-range bound: callers who know their
+                # query norms should pass an explicit value_range instead
+                value_range = 2.0 * qmax_hint * table_abs_max(self._table)
         self.n, self.N, self.K = n, N, K
-        if value_range is None:
-            # a-priori product-range bound: callers who know their query
-            # norms should pass an explicit value_range instead
-            value_range = 2.0 * qmax_hint * table_abs_max(self._table)
         self.batch_size = int(batch_size)
         self.deadline_s = float(deadline_ms) * 1e-3
         self._mesh = mesh
+        self._model_axis = model_axis
+        self._eps, self._delta = float(eps), float(delta)
+        self._tile, self._block = int(tile), min(int(block), N)
+        self._precision = precision
         self._n_valid = n_valid
-        block = min(block, N)
-        if mesh is not None:
-            from repro.distributed.sharding import (make_shard_plan,
-                                                    sharded_bounded_me_decode)
+        self._use_shadow = (self._store is not None and mesh is None
+                            and self._store.precision == "int8")
+
+        self._build(float(value_range))   # sets plan (+ shard geometry)
+        if mesh is not None and self._store is None:
             from repro.distributed.specs import serving_table_sharding
-            self.plan, n_local, n_pad, _ = make_shard_plan(
-                n, N, mesh.shape[model_axis], K=K, eps=eps, delta=delta,
-                value_range=value_range, tile=tile, block=block,
-                precision=precision)
             n_valid_eff = n if n_valid is None else n_valid
             self._n_valid = n_valid_eff   # recall must mask pad rows too
-            if n_pad:       # ragged: pad rows host-side ONCE, before placing
-                self._table = jnp.pad(self._table, ((0, n_pad), (0, 0)))
+            if self._n_pad:  # ragged: pad rows host-side ONCE, pre-placing
+                self._table = jnp.pad(self._table,
+                                      ((0, self._n_pad), (0, 0)))
             self._table = jax.device_put(
                 self._table, serving_table_sharding(mesh, model_axis))
-
-            def _flush_fn(tbl, Qbuf, key):
-                ids, scores, _ = sharded_bounded_me_decode(
-                    tbl, Qbuf, key, mesh=mesh, K=K, model_axis=model_axis,
-                    n_valid=n_valid_eff, eps=eps, delta=delta,
-                    value_range=value_range, tile=tile, block=block,
-                    final_exact=True, use_pallas=use_pallas,
-                    precision=precision)
-                return ids, scores
-        else:
-            self.plan = make_plan(n, N, K=K, eps=eps, delta=delta,
-                                  value_range=value_range, tile=tile,
-                                  block=block, precision=precision)
-
-            def _flush_fn(tbl, Qbuf, key):
-                # padding rows (if any) are masked inside the cascade, so
-                # they can never occupy the returned top-K slots
-                return bounded_me_decode(
-                    tbl, Qbuf, key, plan=self.plan, final_exact=True,
-                    use_pallas=use_pallas, n_valid=n_valid)
-
-        # donate the query buffer: steady-state flushes recycle the same
-        # (batch_size, N) device allocation (no-op on backends without
-        # donation support, e.g. CPU)
-        self._fn = jax.jit(_flush_fn, donate_argnums=(1,))
+            # static per-shard validity prefixes, passed traced per flush
+            self._nv_static = np.clip(
+                n_valid_eff
+                - np.arange(mesh.shape[model_axis]) * self._n_local,
+                0, self._n_local).astype(np.int32)
+        elif mesh is None:
+            nv = n if n_valid is None else n_valid
+            self._nv_static = np.int32(nv)
         self._key = jax.random.PRNGKey(seed)
         self.cache = QuantizedLRU(cache_entries, cache_resolution)
+        self._version = 0 if self._store is None else self._store.version
         self._pending: List[_Pending] = []
         self._results: Dict[int, Tuple[np.ndarray, np.ndarray]] = {}
         self._next_id = 0
@@ -213,7 +263,74 @@ class MIPSServeEngine:
         self.n_batches = 0
         self.n_deadline_flushes = 0
         self.n_full_flushes = 0
+        self.n_updates = 0
+        self.n_update_flushes = 0
+        self.n_recalibrations = 0
+        self._update_time_s = 0.0
         self._occupancy: List[int] = []
+
+    def _build(self, value_range: float) -> None:
+        """(Re)build the static plan + jitted flush fn for a value range.
+
+        Called once at construction and again only when `apply_updates`
+        observes the store's monotonic value range outgrowing the
+        calibrated bound — the single event that changes the schedule
+        (and therefore recompiles) on the dynamic path.
+        """
+        from repro.core.boundedme_jax import bounded_me_decode, make_plan
+
+        self._plan_value_range = float(value_range)
+        mesh, model_axis = self._mesh, self._model_axis
+        K, eps, delta = self.K, self._eps, self._delta
+        tile, block = self._tile, self._block
+        precision, use_pallas = self._precision, self._use_pallas
+        if mesh is not None:
+            from repro.distributed.sharding import (make_shard_plan,
+                                                    sharded_bounded_me_decode)
+            self.plan, self._n_local, self._n_pad, _ = make_shard_plan(
+                self.n, self.N, mesh.shape[model_axis], K=K, eps=eps,
+                delta=delta, value_range=value_range, tile=tile, block=block,
+                precision=precision)
+
+            def _flush_fn(tbl, Qbuf, key, nv):
+                ids, scores, _ = sharded_bounded_me_decode(
+                    tbl, Qbuf, key, mesh=mesh, K=K, model_axis=model_axis,
+                    n_valid=nv, eps=eps, delta=delta,
+                    value_range=value_range, tile=tile, block=block,
+                    final_exact=True, use_pallas=use_pallas,
+                    precision=precision)
+                return ids, scores
+
+            donate = 1
+        else:
+            plan = make_plan(self.n, self.N, K=K, eps=eps, delta=delta,
+                             value_range=value_range, tile=tile,
+                             block=block, precision=precision)
+            self.plan = plan
+            if self._use_shadow:
+                # the store maintains the int8 shadow incrementally; the
+                # flush consumes it instead of re-quantizing the table
+                def _flush_fn(tbl, V8, vscale, Qbuf, key, nv):
+                    return bounded_me_decode(
+                        tbl, Qbuf, key, plan=plan, final_exact=True,
+                        use_pallas=use_pallas, n_valid=nv,
+                        quantized=(V8, vscale))
+
+                donate = 3
+            else:
+                def _flush_fn(tbl, Qbuf, key, nv):
+                    # padding/dead rows are masked inside the cascade, so
+                    # they can never occupy the returned top-K slots
+                    return bounded_me_decode(
+                        tbl, Qbuf, key, plan=plan, final_exact=True,
+                        use_pallas=use_pallas, n_valid=nv)
+
+                donate = 1
+
+        # donate the query buffer: steady-state flushes recycle the same
+        # (batch_size, N) device allocation (no-op on backends without
+        # donation support, e.g. CPU)
+        self._fn = jax.jit(_flush_fn, donate_argnums=(donate,))
 
     # ---- request path ---------------------------------------------------
 
@@ -227,18 +344,24 @@ class MIPSServeEngine:
 
         Cache hits complete immediately (latency ~0); misses queue for the
         next micro-batch.  ``now`` (seconds, any monotonic origin) defaults
-        to wall clock — pass a virtual clock for simulation.
+        to wall clock — pass a virtual clock for simulation.  Staged store
+        mutations are drained first: a query submitted after an upsert
+        must never be answered from a pre-upsert cache line or table.
         """
         q = np.asarray(q, np.float32)
         if q.shape != (self.N,):
             raise ValueError(f"query shape {q.shape} != ({self.N},)")
+        self.apply_updates()
         now = time.perf_counter() if now is None else now
         rid = self._next_id
         self._next_id += 1
         self.n_requests += 1
+        # lookups are salted with the *current* (table version, K): a
+        # result cached before an update can never answer a post-update
+        # query, even if an invalidation were missed
         ck = self.cache.key(q) if self.cache.capacity > 0 else None
         if ck is not None:
-            hit = self.cache.get(ck)
+            hit = self.cache.get(self._salted(ck))
             if hit is not None:
                 self._results[rid] = hit
                 self.n_cache_hits += 1
@@ -247,15 +370,23 @@ class MIPSServeEngine:
         self._pending.append(_Pending(rid, q, now, ck))
         return rid
 
+    def _salted(self, base_key: bytes) -> bytes:
+        """Prefix an LRU base key with the live (version, K) salt."""
+        return struct.pack("<qi", self._version, self.K) + base_key
+
     def poll(self, now: Optional[float] = None) -> Tuple[List[int], float]:
         """Flush micro-batches whose trigger fired; returns (ids, busy_s).
 
         Triggers: ``batch_size`` requests waiting (full flush), or the
         oldest pending request older than the batch deadline (deadline
         flush).  ``busy_s`` is the wall time spent in compute, so virtual-
-        clock drivers can advance time by it.
+        clock drivers can advance time by it.  Store-backed engines drain
+        staged table mutations first (`apply_updates`), so a flush never
+        serves a torn table and an update submitted before a query is
+        visible to it.
         """
         now = time.perf_counter() if now is None else now
+        self.apply_updates()
         done: List[int] = []
         busy = 0.0
         while self._pending:
@@ -273,8 +404,12 @@ class MIPSServeEngine:
         return done, busy
 
     def drain(self, now: Optional[float] = None) -> Tuple[List[int], float]:
-        """Flush everything pending regardless of triggers (shutdown)."""
+        """Flush everything pending regardless of triggers (shutdown).
+
+        Also drains staged store mutations first, like `poll`.
+        """
         now = time.perf_counter() if now is None else now
+        self.apply_updates()
         done: List[int] = []
         busy = 0.0
         while self._pending:
@@ -288,7 +423,68 @@ class MIPSServeEngine:
         """Pop the (ids, scores) result for a completed request, or None."""
         return self._results.pop(req_id, None)
 
+    # ---- updates (store-backed engines) ---------------------------------
+
+    def apply_updates(self) -> int:
+        """Drain the store's staged mutations; returns rows applied.
+
+        Runs between micro-batch flushes (`poll` / `drain` call it first),
+        so in-flight queries never observe a half-applied update burst.
+        On any applied mutation: bumps the engine's table version (the
+        LRU is invalidated and its keys salted so no pre-update answer
+        survives), drops the stale recall mirror (the estimator reads the
+        store's always-fresh host mirror anyway), and — only if the
+        store's monotonic value range grew past the calibrated bound —
+        re-derives the (eps, delta) schedule at ``range * range_slack``
+        (the lone recompile-triggering event, counted in
+        ``stats()["updates"]["recalibrations"]``).  No-op without a store.
+        """
+        store = self._store
+        if store is None:
+            return 0
+        applied = 0
+        if store.pending_updates:
+            t0 = time.perf_counter()
+            info = store.flush_updates()
+            applied = info["applied"]
+            self.n_updates += applied
+            self.n_update_flushes += 1
+            self._update_time_s += time.perf_counter() - t0
+        if store.version != self._version:
+            # covers staged mutations AND out-of-band ones (grow())
+            self._version = store.version
+            self.cache.invalidate()
+            self._table_np = None   # never serve stale recall ground truth
+        if store.capacity_rows != self.n:
+            # the store grew: shapes changed, rebuild plan + flush fn
+            self.n = store.capacity_rows
+            self._build(self._plan_value_range)
+            self.n_recalibrations += 1
+        needed = 2.0 * self._qmax_hint * store.value_abs_max
+        if needed > self._plan_value_range:
+            # value-range growth is the only other event that re-derives
+            # the schedule; range_slack > 1 buys headroom so a growing
+            # corpus recalibrates O(log growth) times, not per update
+            self._build(needed * self._range_slack)
+            self.n_recalibrations += 1
+        return applied
+
     # ---- flush ----------------------------------------------------------
+
+    def _flush_args(self, Qbuf, key):
+        """Assemble per-flush operands (table/shadow/validity) in order."""
+        store = self._store
+        if store is None:
+            return (self._table, Qbuf, key, self._nv_static)
+        tbl = store.device_table()
+        if self._mesh is not None:
+            nv = store.n_valid_vector()
+        else:
+            nv = np.int32(store.n_live)
+        if self._use_shadow:
+            V8, vscale = store.quantized()
+            return (tbl, V8, vscale, Qbuf, key, nv)
+        return (tbl, Qbuf, key, nv)
 
     def _flush(self, now: float) -> Tuple[List[int], float]:
         batch = self._pending[:self.batch_size]
@@ -302,7 +498,7 @@ class MIPSServeEngine:
             # CPU backends warn that donation is unimplemented; harmless
             warnings.filterwarnings("ignore",
                                     message=".*[Dd]onat.*")
-            ids, scores = self._fn(self._table, jnp.asarray(Qbuf), key)
+            ids, scores = self._fn(*self._flush_args(jnp.asarray(Qbuf), key))
             jax.block_until_ready(scores)
         dt = time.perf_counter() - t0
         ids = np.asarray(ids)[:len(batch)]
@@ -311,10 +507,17 @@ class MIPSServeEngine:
         self._occupancy.append(len(batch))
         done = []
         for i, p in enumerate(batch):
-            res = (ids[i].copy(), scores[i].copy())
+            # store-backed engines answer with stable external ids, never
+            # raw slots (a slot's occupant changes across swap-deletes)
+            out_ids = (self._store.external_ids(ids[i])
+                       if self._store is not None else ids[i].copy())
+            res = (out_ids, scores[i].copy())
             self._results[p.req_id] = res
             if p.cache_key is not None:
-                self.cache.put(p.cache_key, res)
+                # salt at put time: if the version bumped while this
+                # request was queued, the result files under the live
+                # version (not a dead pre-update key)
+                self.cache.put(self._salted(p.cache_key), res)
             self._lat.append((now - p.t_submit) + dt)
             if (self._recall_rate > 0.0
                     and self._recall_rng.random() < self._recall_rate):
@@ -328,14 +531,21 @@ class MIPSServeEngine:
             self._recalls = self._recalls[-10_000:]
         return done, dt
 
-    def _recall_of(self, q: np.ndarray, got_ids: np.ndarray) -> float:
-        if self._table_np is None:
-            self._table_np = np.asarray(self._table)
-        s = self._table_np @ q
-        if self._n_valid is not None:
-            s[self._n_valid:] = -np.inf
+    def _recall_of(self, q: np.ndarray, got_slots: np.ndarray) -> float:
+        if self._store is not None:
+            # the store's host mirror is updated in O(rows touched) at
+            # every apply_updates, so live recall never goes stale
+            tbl = self._store.host_table()
+            s = tbl @ q
+            s[~self._store.live_mask()] = -np.inf
+        else:
+            if self._table_np is None:
+                self._table_np = np.asarray(self._table)
+            s = self._table_np @ q
+            if self._n_valid is not None:
+                s[self._n_valid:] = -np.inf
         exact = np.argpartition(-s, self.K - 1)[:self.K]
-        return len(set(exact.tolist()) & set(got_ids.tolist())) / self.K
+        return len(set(exact.tolist()) & set(got_slots.tolist())) / self.K
 
     # ---- observability --------------------------------------------------
 
@@ -370,22 +580,37 @@ class MIPSServeEngine:
                                 if self._recalls else float("nan"))},
             "plan": {"rounds": len(self.plan.schedule.rounds),
                      "pull_speedup": self.plan.schedule.speedup},
+            "updates": {
+                "applied": self.n_updates,
+                "update_flushes": self.n_update_flushes,
+                "recalibrations": self.n_recalibrations,
+                "version": self._version,
+                "cache_invalidations": self.cache.invalidations,
+                "rows_per_s": (self.n_updates / self._update_time_s
+                               if self._update_time_s > 0 else 0.0)},
+            **({"store": self._store.stats()}
+               if self._store is not None else {}),
         }
 
 
 def simulate_stream(engine: MIPSServeEngine, queries, *,
-                    interarrival_ms: float = 0.1) -> dict:
+                    interarrival_ms: float = 0.1, churn=None) -> dict:
     """Drive a query stream through the engine on a virtual clock.
 
     Arrivals are spaced ``interarrival_ms`` apart on a simulated clock that
     only advances by (a) arrival spacing and (b) *measured* compute time of
     each flush — so batching/deadline dynamics are exercised exactly as in
-    wall-clock serving, without sleeps.  Returns the engine stats dict plus
-    ``virtual_s`` and ``throughput_rps``.
+    wall-clock serving, without sleeps.  ``churn`` (optional) is called as
+    ``churn(engine, i)`` before each arrival — stage store mutations there
+    to simulate a live corpus; the engine drains them at its next poll
+    (mixed read/write streams, BENCH_PR4.json).  Returns the engine stats
+    dict plus ``virtual_s`` and ``throughput_rps``.
     """
     now = 0.0
     for i, q in enumerate(queries):
         now = max(now, i * interarrival_ms * 1e-3)
+        if churn is not None:
+            churn(engine, i)
         engine.submit(q, now=now)
         _, busy = engine.poll(now=now)
         now += busy
@@ -399,7 +624,15 @@ def simulate_stream(engine: MIPSServeEngine, queries, *,
 
 
 def _run_loop(args) -> None:
-    """--loop mode: serve a synthetic query stream against the unembedding."""
+    """--loop mode: serve a synthetic query stream against the unembedding.
+
+    With ``--dynamic`` the vocab table is wrapped in a
+    `repro.store.DynamicTableStore` (or `ShardedTableStore` under
+    ``--shards``) and ``--churn-rate`` of the arrivals additionally stage
+    an embedding upsert or a delete+append pair — the live-corpus
+    scenario (DESIGN.md §11): a growing vocabulary served with zero
+    engine rebuilds.
+    """
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = cfg.smoke()
@@ -409,16 +642,53 @@ def _run_loop(args) -> None:
     if args.shards > 1:
         from repro.launch.mesh import make_serving_mesh
         mesh = make_serving_mesh(args.shards)
-    engine = MIPSServeEngine(
-        table, K=args.topk, eps=args.eps, delta=args.delta,
-        batch_size=args.batch, deadline_ms=args.deadline_ms,
-        block=min(512, cfg.d_model), n_valid=cfg.vocab, mesh=mesh,
-        recall_sample_rate=args.recall_rate,
-        cache_entries=args.cache_entries, precision=args.precision)
+    block = min(512, cfg.d_model)
+    churn = None
+    if args.dynamic:
+        from repro.store import DynamicTableStore, ShardedTableStore
+        table = np.asarray(table, np.float32)[:cfg.vocab]
+        if mesh is not None:
+            store = ShardedTableStore(
+                table, mesh=mesh, block=block,
+                capacity_slack=args.capacity_slack)
+        else:
+            store = DynamicTableStore(
+                table, block=block, capacity_slack=args.capacity_slack,
+                precision=args.precision)
+        engine = MIPSServeEngine(
+            store, K=args.topk, eps=args.eps, delta=args.delta,
+            batch_size=args.batch, deadline_ms=args.deadline_ms,
+            mesh=mesh, recall_sample_rate=args.recall_rate,
+            cache_entries=args.cache_entries, precision=args.precision)
+        if args.churn_rate > 0:
+            crng = np.random.default_rng(1)
+            scale = float(np.abs(table).max())
+
+            def churn(eng, i):
+                if crng.random() >= args.churn_rate:
+                    return
+                row = (scale * crng.normal(size=eng.N) / np.sqrt(eng.N)
+                       ).astype(np.float32)
+                live = store.live_ids()
+                if crng.random() < 0.7 or live.size == 0:
+                    tgt = (int(crng.choice(live)) if live.size
+                           else store.append(row) or 0)
+                    store.upsert(tgt, row)
+                elif store.free_rows > 0:
+                    store.delete(int(crng.choice(live)))
+                    store.append(row)
+    else:
+        engine = MIPSServeEngine(
+            table, K=args.topk, eps=args.eps, delta=args.delta,
+            batch_size=args.batch, deadline_ms=args.deadline_ms,
+            block=block, n_valid=cfg.vocab, mesh=mesh,
+            recall_sample_rate=args.recall_rate,
+            cache_entries=args.cache_entries, precision=args.precision)
     print(f"[serve] loop: table=({engine.n},{engine.N}) K={args.topk} "
           f"eps={args.eps} batch={args.batch} "
           f"deadline={args.deadline_ms}ms "
           f"shards={mesh.shape['model'] if mesh else 1} "
+          f"dynamic={bool(args.dynamic)} churn={args.churn_rate} "
           f"rounds={len(engine.plan.schedule.rounds)} "
           f"precision={engine.plan.precision} "
           f"eps_eff={engine.plan.eps_effective:.4f} "
@@ -430,7 +700,8 @@ def _run_loop(args) -> None:
         idx = rng.integers(0, max(1, args.requests - n_dup), n_dup)
         qs[args.requests - n_dup:] = qs[idx]
     stats = simulate_stream(engine, qs,
-                            interarrival_ms=args.interarrival_ms)
+                            interarrival_ms=args.interarrival_ms,
+                            churn=churn)
     print(json.dumps(stats, indent=2))
 
 
@@ -528,6 +799,14 @@ def main():
     ap.add_argument("--repeat-rate", type=float, default=0.1,
                     help="fraction of requests repeating an earlier query")
     ap.add_argument("--recall-rate", type=float, default=0.05)
+    ap.add_argument("--dynamic", action="store_true",
+                    help="serve from a mutable DynamicTableStore "
+                         "(zero-rebuild upserts/deletes, DESIGN.md §11)")
+    ap.add_argument("--churn-rate", type=float, default=0.0,
+                    help="fraction of arrivals that also mutate the "
+                         "table (needs --dynamic)")
+    ap.add_argument("--capacity-slack", type=float, default=1.5,
+                    help="store capacity headroom factor (--dynamic)")
     args = ap.parse_args()
     if args.loop:
         _run_loop(args)

@@ -1,0 +1,27 @@
+"""Dynamic table store: zero-rebuild streaming upserts/deletes (DESIGN.md §11).
+
+The paper's headline claim is *no preprocessing* — so the serving stack
+must absorb corpus churn at O(rows touched), never by rebuilding an
+engine.  This package holds the versioned, capacity-slack mutable table
+stores the serving engine mutates between micro-batch flushes:
+
+  * :class:`~repro.store.dynamic_table.DynamicTableStore` — single-device
+    store: preallocated capacity rounded to a tile multiple, live rows
+    kept a dense prefix (swap-delete) so the fused kernel's existing
+    traced-scalar ``n_valid`` masks exactly the dead suffix, jit-donated
+    `dynamic_update_slice` writes, dirty-tile incremental int8
+    re-quantization, and monotonic ``version`` / value-range counters;
+  * :class:`~repro.store.sharded_table.ShardedTableStore` — the same
+    contract over the PR-2 serving mesh: per-shard slot pools, a
+    per-shard ``n_valid`` vector through `sharded_bounded_me_decode`,
+    and the exact cross-shard merge untouched.
+
+Both are consumed by `repro.launch.serve.MIPSServeEngine` — pass a store
+where a static table was expected and call ``engine.apply_updates()``
+(drained automatically at every `poll`).
+"""
+
+from repro.store.dynamic_table import DynamicTableStore
+from repro.store.sharded_table import ShardedTableStore
+
+__all__ = ["DynamicTableStore", "ShardedTableStore"]

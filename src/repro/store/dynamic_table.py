@@ -1,0 +1,442 @@
+"""Single-device dynamic table store (DESIGN.md §11).
+
+The serving engines of PR 2/3 froze the item matrix at construction, so a
+corpus change meant rebuilding the whole engine — exactly the amortization
+burden the paper argues index-based MIPS must pay and BoundedME does not.
+:class:`DynamicTableStore` removes it: row churn lands in O(rows touched)
+device work, and the engine's compiled flush functions are reused across
+arbitrary upsert/delete/append streams with **zero recompilation**.
+
+The contract that makes this work (normative in DESIGN.md §11):
+
+  * **Capacity slack.**  The device buffer is preallocated at
+    ``capacity_rows`` = the requested capacity rounded *up* to a multiple
+    of the arm-tile size.  Every compiled shape is a function of
+    ``capacity_rows``, never of the live count, so growth within capacity
+    is invisible to jit.
+  * **Dense-prefix liveness.**  Live rows always occupy slots
+    ``[0, n_live)``.  The fused cascade masks rows with a *prefix* bound
+    (the traced-scalar ``n_valid`` added in PR 2), so a hole left by a
+    delete could be neither masked nor safely zeroed (a zero row wins any
+    all-negative ranking).  ``delete`` therefore swap-fills the hole with
+    the last live row and zeroes the vacated tail slot: the free pool is
+    always exactly the suffix ``[n_live, capacity_rows)``, and ``n_valid
+    = n_live`` stays a correct mask after every mutation.  External ids
+    stay stable through the moves via the slot <-> id indirection.
+  * **Donated writes.**  Every device mutation is a
+    `jax.lax.dynamic_update_slice` at a *traced* slot index inside a
+    jitted function whose buffer argument is donated: one executable per
+    store geometry, reused for every slot, no per-write allocation growth.
+  * **Monotonic version.**  Every applied mutation bumps ``version``;
+    consumers (the engine's LRU, its recall mirror) key their caches on
+    it.  ``value_abs_max`` is likewise monotonic — it only grows, so a
+    schedule calibrated on it stays a valid bound until growth is
+    observed (DESIGN.md §11 value-range monotonicity).
+  * **Dirty-tile re-quantization** (``precision='int8'``).  The store
+    maintains the tile-major int8 shadow (`repro.core.quantize`) the
+    fused kernel consumes; a mutation marks only its arm-tile dirty and
+    `flush_updates` re-quantizes just those (1, n_blocks, R, C) slabs.
+    Per-(tile, block) cells are quantized independently, so incremental
+    re-quantization is bit-identical to quantizing the whole updated
+    table from scratch.
+
+Mutations are *staged* host-side (`upsert` / `delete` / `append`) and
+applied in submission order by `flush_updates` — the engine drains them
+between micro-batch flushes so in-flight queries never see a torn table.
+
+Failure modes: rows must be (N,) float and finite (NaN/inf propagate into
+every later score they touch); exceeding capacity raises at flush time
+(`grow` reallocates, the one operation that *does* recompile); deleting
+an unknown id raises.  The store is not thread-safe; drive it from the
+engine's loop.
+"""
+
+from __future__ import annotations
+
+import functools
+import time
+import warnings
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.quantize import quantize_tiles
+
+__all__ = ["DynamicTableStore"]
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _write_row(buf, row, slot):
+    """Donated single-row write: ``buf[slot] = row`` at a traced index."""
+    return jax.lax.dynamic_update_slice(buf, row[None, :], (slot, 0))
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1))
+def _requant_tile(V8, vscale, slab, t):
+    """Donated re-quantization of one dirty arm-tile of the int8 shadow.
+
+    ``slab`` is the tile's updated fp32 rows in tile-major layout
+    (1, n_blocks, R, C); ``t`` is the traced arm-tile index.  Quantizes
+    the slab with the same `quantize_tiles` the full-table path uses and
+    splices the (codes, scale) cells in place — bit-identical to a full
+    re-quantization because cells are independent.
+    """
+    q8, scl = quantize_tiles(slab)
+    V8 = jax.lax.dynamic_update_slice(V8, q8, (t, 0, 0, 0))
+    vscale = jax.lax.dynamic_update_slice(vscale, scl, (t, 0))
+    return V8, vscale
+
+
+@jax.jit
+def _quantize_full(V4):
+    """Full-table tile quantization (store construction / `grow` only)."""
+    return quantize_tiles(V4)
+
+
+def _call_donated(fn, *args):
+    """Invoke a donating jitted op, silencing the CPU 'donation
+    unimplemented' warning (harmless: CPU copies instead of aliasing)."""
+    with warnings.catch_warnings():
+        warnings.filterwarnings("ignore", message=".*[Dd]onat.*")
+        return fn(*args)
+
+
+class DynamicTableStore:
+    """Versioned, capacity-slack mutable item table for the serving stack.
+
+    Wraps an (n, N) item matrix in a preallocated ``capacity_rows``-row
+    device buffer (capacity rounded up to a ``tile`` multiple) whose live
+    rows are a dense prefix ``[0, n_live)`` — `n_valid` for the fused
+    cascade is always exactly ``n_live``, a traced scalar, so mutations
+    never change a compiled shape.  Deletes swap-fill from the tail
+    (stable external ids via slot <-> id maps); writes are jit-donated
+    `dynamic_update_slice` ops; every applied mutation bumps the
+    monotonic ``version``.  With ``precision='int8'`` the store also
+    maintains the tile-major int8 shadow with dirty-tile incremental
+    re-quantization (DESIGN.md §11).
+
+    Args:
+      table: optional (n0, N) initial rows (any float dtype); row i gets
+        external id ``ids[i]`` (default ``i``).
+      dim: N when ``table`` is None (an empty store).
+      capacity: minimum row capacity; default ``ceil(n0 * capacity_slack)``.
+        Rounded up to a ``tile`` multiple either way.
+      capacity_slack: headroom factor used when ``capacity`` is omitted.
+      tile / block: cascade geometry this store serves (must match the
+        engine's plan; the engine adopts the store's values).
+      precision: 'fp32' or 'int8' — whether to maintain the quantized
+        shadow the int8 serving path consumes.
+      ids: optional explicit external ids for the initial rows.
+
+    Mutations stage host-side and apply on `flush_updates` in submission
+    order.  ``value_abs_max`` tracks max|v| over every row ever applied
+    (monotonic; deletes do not shrink it).
+    """
+
+    def __init__(self, table=None, *, dim: Optional[int] = None,
+                 capacity: Optional[int] = None, capacity_slack: float = 1.5,
+                 tile: int = 8, block: int = 512, precision: str = "fp32",
+                 ids=None):
+        if precision not in ("fp32", "int8"):
+            raise ValueError(f"unknown precision {precision!r}")
+        if table is None:
+            if dim is None:
+                raise ValueError("need `table` or `dim`")
+            init = np.zeros((0, int(dim)), np.float32)
+        else:
+            init = np.asarray(table, np.float32)
+            if init.ndim != 2:
+                raise ValueError(f"table must be 2D, got {init.shape}")
+        n0, N = init.shape
+        if capacity is None:
+            capacity = max(n0, int(np.ceil(n0 * float(capacity_slack))))
+        capacity = max(int(capacity), n0, 1)
+        self.tile = int(tile)
+        self.block = min(int(block), N)
+        self.N = N
+        self.capacity_rows = -(-capacity // self.tile) * self.tile
+        self.n_tiles = self.capacity_rows // self.tile
+        self.n_blocks = -(-N // self.block)
+        self._col_pad = self.n_blocks * self.block - N
+        self.precision = precision
+
+        self._host = np.zeros((self.capacity_rows, N), np.float32)
+        self._host[:n0] = init
+        self._dev = jnp.asarray(self._host)
+        self._zero_row = jnp.zeros((N,), jnp.float32)
+
+        if ids is None:
+            ids = np.arange(n0, dtype=np.int64)
+        else:
+            ids = np.asarray(ids, np.int64)
+            if ids.shape != (n0,) or len(set(ids.tolist())) != n0:
+                raise ValueError("ids must be unique and match table rows")
+        self._slot_ids = np.full(self.capacity_rows, -1, np.int64)
+        self._slot_ids[:n0] = ids
+        self._id2slot: Dict[int, int] = {int(i): s
+                                         for s, i in enumerate(ids)}
+        self._next_id = int(ids.max()) + 1 if n0 else 0
+
+        self.n_live = n0
+        self.version = 0
+        self._vmax = float(np.abs(init).max()) if init.size else 0.0
+        self._staged: List[Tuple[str, int, Optional[np.ndarray]]] = []
+        self.n_upserts = 0
+        self.n_deletes = 0
+        self.rows_written = 0
+        self.tiles_requantized = 0
+
+        self._V8 = self._vscale = None
+        if precision == "int8":
+            self._V8, self._vscale = _quantize_full(self._tile_major_dev())
+            jax.block_until_ready(self._vscale)
+
+    # ---- geometry helpers -----------------------------------------------
+
+    def _tile_major_dev(self):
+        """Current buffer as the (n_tiles, n_blocks, R, C) kernel layout."""
+        V = self._dev
+        if self._col_pad:
+            V = jnp.pad(V, ((0, 0), (0, self._col_pad)))
+        return V.reshape(self.n_tiles, self.tile, self.n_blocks,
+                         self.block).transpose(0, 2, 1, 3)
+
+    def _tile_slab(self, t: int):
+        """One arm-tile's fp32 rows in tile-major layout (1, n_blocks, R, C)."""
+        rows = self._host[t * self.tile:(t + 1) * self.tile]
+        if self._col_pad:
+            rows = np.pad(rows, ((0, 0), (0, self._col_pad)))
+        slab = rows.reshape(self.tile, self.n_blocks,
+                            self.block).transpose(1, 0, 2)
+        return jnp.asarray(slab[None])
+
+    # ---- read side -------------------------------------------------------
+
+    @property
+    def n_valid(self) -> int:
+        """The cascade's validity bound: live rows are exactly [0, n_live)."""
+        return self.n_live
+
+    @property
+    def free_rows(self) -> int:
+        """Capacity slack remaining (the suffix free pool)."""
+        return self.capacity_rows - self.n_live
+
+    @property
+    def pending_updates(self) -> int:
+        """Mutations staged but not yet applied by `flush_updates`."""
+        return len(self._staged)
+
+    @property
+    def value_abs_max(self) -> float:
+        """Monotonic max|v| over every row ever applied (never shrinks)."""
+        return self._vmax
+
+    def device_table(self):
+        """The (capacity_rows, N) device buffer (live prefix + zero slack)."""
+        return self._dev
+
+    def quantized(self):
+        """The int8 shadow ``(V8, vscale)``, or None on the fp32 path."""
+        if self.precision != "int8":
+            return None
+        return self._V8, self._vscale
+
+    def host_table(self) -> np.ndarray:
+        """Host mirror of the device buffer (read-only view; always fresh)."""
+        v = self._host.view()
+        v.flags.writeable = False
+        return v
+
+    def external_ids(self, slots) -> np.ndarray:
+        """Map cascade row indices (slots) to external ids (-1 = dead)."""
+        slots = np.asarray(slots)
+        return self._slot_ids[np.clip(slots, 0, self.capacity_rows - 1)]
+
+    def live_ids(self) -> np.ndarray:
+        """External ids of the live rows, in slot order."""
+        return self._slot_ids[:self.n_live].copy()
+
+    def live_mask(self) -> np.ndarray:
+        """Boolean (capacity_rows,) mask of live slots (the dense prefix)."""
+        return self._slot_ids >= 0
+
+    def snapshot(self) -> Tuple[np.ndarray, np.ndarray]:
+        """(rows, ids) copies of the live prefix, in slot order.
+
+        A fresh store built as ``DynamicTableStore(rows, ids=ids,
+        capacity=capacity_rows)`` reproduces this store's buffers
+        byte-for-byte — the equivalence the bit-identity tests assert.
+        """
+        return self._host[:self.n_live].copy(), self.live_ids()
+
+    # ---- write side (staged) --------------------------------------------
+
+    def upsert(self, ext_id: int, row) -> None:
+        """Stage an insert-or-overwrite of external id ``ext_id``.
+
+        New ids append at slot ``n_live`` (capacity permitting); known ids
+        overwrite in place.  Applied by `flush_updates`.
+        """
+        row = np.asarray(row, np.float32)
+        if row.shape != (self.N,):
+            raise ValueError(f"row shape {row.shape} != ({self.N},)")
+        ext_id = int(ext_id)
+        if ext_id < 0:
+            raise ValueError(f"ids must be >= 0, got {ext_id}")
+        self._next_id = max(self._next_id, ext_id + 1)
+        self._staged.append(("upsert", ext_id, row.copy()))
+
+    def append(self, row) -> int:
+        """Stage an insert under a fresh auto-assigned id; returns the id."""
+        ext_id = self._next_id
+        self.upsert(ext_id, row)
+        return ext_id
+
+    def delete(self, ext_id: int) -> None:
+        """Stage removal of external id ``ext_id`` (raises at flush if
+        unknown).  The vacated slot is swap-filled from the tail so live
+        rows remain the dense prefix the cascade's ``n_valid`` masks."""
+        self._staged.append(("delete", int(ext_id), None))
+
+    # ---- apply -----------------------------------------------------------
+
+    def _dev_write(self, row_dev, slot: int) -> None:
+        self._dev = _call_donated(_write_row, self._dev, row_dev,
+                                  np.int32(slot))
+        self.rows_written += 1
+
+    def _apply_upsert(self, ext_id: int, row: np.ndarray, dirty: set) -> None:
+        slot = self._id2slot.get(ext_id)
+        if slot is None:
+            if self.n_live >= self.capacity_rows:
+                raise RuntimeError(
+                    f"store full: {self.n_live}/{self.capacity_rows} rows "
+                    f"live; call grow() (recompiles) or provision more "
+                    f"capacity_slack")
+            slot = self.n_live
+            self._id2slot[ext_id] = slot
+            self._slot_ids[slot] = ext_id
+            self.n_live += 1
+        self._host[slot] = row
+        self._dev_write(jnp.asarray(row), slot)
+        dirty.add(slot // self.tile)
+        self._vmax = max(self._vmax, float(np.abs(row).max(initial=0.0)))
+        self.n_upserts += 1
+        self.version += 1
+
+    def _apply_delete(self, ext_id: int, dirty: set) -> None:
+        slot = self._id2slot.pop(ext_id, None)
+        if slot is None:
+            raise KeyError(f"delete of unknown id {ext_id}")
+        last = self.n_live - 1
+        if slot != last:
+            # swap-fill the hole from the tail: one row moved, ids stable
+            moved = self._slot_ids[last]
+            self._host[slot] = self._host[last]
+            self._dev_write(jnp.asarray(self._host[slot]), slot)
+            self._slot_ids[slot] = moved
+            self._id2slot[int(moved)] = slot
+            dirty.add(slot // self.tile)
+        self._host[last] = 0.0
+        self._dev_write(self._zero_row, last)
+        self._slot_ids[last] = -1
+        dirty.add(last // self.tile)
+        self.n_live -= 1
+        self.n_deletes += 1
+        self.version += 1
+
+    def flush_updates(self) -> dict:
+        """Apply every staged mutation in submission order; returns stats.
+
+        O(rows touched) device work: one donated row write per upsert,
+        two per interior delete, plus — on the int8 path — one dirty-tile
+        re-quantization per touched arm-tile (bit-identical to a full
+        re-quantization of the updated table).  Bumps ``version`` once
+        per applied mutation.  Returns ``{"applied", "version",
+        "requantized_tiles", "seconds"}``.
+
+        On a failing mutation (unknown delete, capacity exhausted) the
+        failing op is dropped, the ops staged after it stay staged, and
+        the int8 shadow is still re-synchronized to everything already
+        applied before the error re-raises — the store is never torn.
+        """
+        t0 = time.perf_counter()
+        dirty: set = set()
+        applied = 0
+        staged, self._staged = self._staged, []
+        try:
+            for i, (op, ext_id, row) in enumerate(staged):
+                if op == "upsert":
+                    self._apply_upsert(ext_id, row, dirty)
+                else:
+                    self._apply_delete(ext_id, dirty)
+                applied += 1
+        except Exception:
+            # drop the failing op, keep its successors staged (in front
+            # of anything staged while we ran), then fall through to the
+            # shadow re-sync below before re-raising
+            self._staged = staged[applied + 1:] + self._staged
+            raise
+        finally:
+            if self.precision == "int8" and dirty:
+                for t in sorted(dirty):
+                    self._V8, self._vscale = _call_donated(
+                        _requant_tile, self._V8, self._vscale,
+                        self._tile_slab(t), np.int32(t))
+                self.tiles_requantized += len(dirty)
+            if applied:
+                jax.block_until_ready(self._dev)
+        return {"applied": applied, "version": self.version,
+                "requantized_tiles": len(dirty) if self.precision == "int8"
+                else 0,
+                "seconds": time.perf_counter() - t0}
+
+    def grow(self, capacity: int) -> None:
+        """Reallocate to a larger capacity (rounded to a tile multiple).
+
+        The one mutation that changes compiled shapes and therefore
+        recompiles — consumers must rebuild their plans/flush functions
+        (the engine does this when it observes ``capacity_rows``
+        changed).  O(n N): copies the buffer and re-quantizes the shadow
+        from scratch.
+        """
+        capacity = max(int(capacity), self.n_live)
+        new_rows = -(-capacity // self.tile) * self.tile
+        if new_rows <= self.capacity_rows:
+            return
+        host = np.zeros((new_rows, self.N), np.float32)
+        host[:self.capacity_rows] = self._host
+        slot_ids = np.full(new_rows, -1, np.int64)
+        slot_ids[:self.capacity_rows] = self._slot_ids
+        self._host, self._slot_ids = host, slot_ids
+        self.capacity_rows = new_rows
+        self.n_tiles = new_rows // self.tile
+        self._dev = jnp.asarray(self._host)
+        if self.precision == "int8":
+            self._V8, self._vscale = _quantize_full(self._tile_major_dev())
+        self.version += 1
+
+    # ---- observability ---------------------------------------------------
+
+    def jit_cache_size(self) -> int:
+        """Total compiled-executable count of the store's jitted write ops.
+
+        The zero-recompilation tests snapshot this (plus the engine's
+        flush-fn cache) after warmup and assert it never grows across a
+        mutation stream.
+        """
+        return int(_write_row._cache_size() + _requant_tile._cache_size()
+                   + _quantize_full._cache_size())
+
+    def stats(self) -> dict:
+        """Counters: live/capacity rows, version, churn totals."""
+        return {"n_live": self.n_live, "capacity_rows": self.capacity_rows,
+                "utilization": self.n_live / max(1, self.capacity_rows),
+                "version": self.version, "upserts": self.n_upserts,
+                "deletes": self.n_deletes, "rows_written": self.rows_written,
+                "tiles_requantized": self.tiles_requantized,
+                "value_abs_max": self._vmax,
+                "pending": len(self._staged)}

@@ -1,0 +1,302 @@
+"""Sharded dynamic table store over the serving mesh (DESIGN.md §11).
+
+:class:`ShardedTableStore` extends the `DynamicTableStore` contract to the
+PR-2 multi-device serving engine: the capacity buffer is row-sharded over
+the mesh's model axis (`distributed.specs.serving_table_sharding`), every
+shard owns an independent slot pool with its own dense live prefix, and
+the store exports the **per-shard** ``n_valid`` vector that
+`sharded_bounded_me_decode` masks with inside each shard's cascade.  The
+exact cross-shard merge is untouched: shards still emit fp32-exact
+candidate scores and the global top-K is an argmax over them — a shard
+whose live count just changed contributes exactly its live rows, nothing
+else.
+
+Updates route by id: a known id overwrites in place on its owning shard;
+a new id appends to the shard with the most free slots (lowest index on
+ties), so shards stay balanced under sustained growth without any row
+ever migrating between shards.  Deletes swap-fill *within* the owning
+shard's region, preserving each shard's dense prefix independently.
+
+Device writes go through one jitted, buffer-donating
+`dynamic_update_slice` whose output sharding is pinned to the serving
+layout, so a row write touches only the owning shard's device memory and
+never re-shards the table.  Zero-recompilation holds exactly as in the
+single-device store: compiled shapes depend only on the (static) capacity
+geometry, live counts ride in as a traced (shards,) vector.
+
+The int8 shadow is not maintained here — the sharded int8 path quantizes
+shard-locally in-jit per flush (DESIGN.md §10), which keeps quantization
+consistent with each shard's own rows at any live count.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.specs import serving_table_sharding
+from repro.store.dynamic_table import _call_donated
+
+__all__ = ["ShardedTableStore"]
+
+
+class ShardedTableStore:
+    """Mutable, versioned item table row-sharded over the serving mesh.
+
+    Per-shard slot pools of ``cap_local`` rows (the global capacity split
+    evenly and rounded up to a ``tile`` multiple per shard); live rows are
+    a dense prefix of every shard region, exported as the per-shard
+    ``n_valid`` vector (`n_valid_vector`) the sharded cascade masks with.
+    New ids append to the shard with the most free capacity; deletes
+    swap-fill within their shard.  Monotonic ``version`` and
+    ``value_abs_max`` follow the `DynamicTableStore` contract; the exact
+    cross-shard merge of `sharded_bounded_me_decode` is preserved because
+    masking happens inside each shard's cascade, before any candidate is
+    emitted.
+
+    Args:
+      table: optional (n0, N) initial rows, distributed contiguously and
+        evenly across shards.
+      mesh: the serving mesh; ``model_axis`` names the row-sharding axis.
+      dim: N when ``table`` is None.
+      capacity / capacity_slack / tile / block / ids: as in
+        `DynamicTableStore` (capacity is global; each shard gets
+        ``cap_local = round_up(ceil(capacity / shards), tile)`` rows).
+    """
+
+    def __init__(self, table=None, *, mesh, model_axis: str = "model",
+                 dim: Optional[int] = None, capacity: Optional[int] = None,
+                 capacity_slack: float = 1.5, tile: int = 8,
+                 block: int = 512, ids=None):
+        if table is None:
+            if dim is None:
+                raise ValueError("need `table` or `dim`")
+            init = np.zeros((0, int(dim)), np.float32)
+        else:
+            init = np.asarray(table, np.float32)
+            if init.ndim != 2:
+                raise ValueError(f"table must be 2D, got {init.shape}")
+        n0, N = init.shape
+        self.mesh = mesh
+        self.model_axis = model_axis
+        self.n_shards = int(mesh.shape[model_axis])
+        S = self.n_shards
+        if capacity is None:
+            capacity = max(n0, int(np.ceil(n0 * float(capacity_slack))))
+        capacity = max(int(capacity), n0, S)
+        self.tile = int(tile)
+        self.block = min(int(block), N)
+        self.N = N
+        per_shard = -(-capacity // S)
+        self.cap_local = -(-per_shard // self.tile) * self.tile
+        self.capacity_rows = S * self.cap_local
+        self.precision = "fp32"
+
+        self._host = np.zeros((self.capacity_rows, N), np.float32)
+        self._slot_ids = np.full(self.capacity_rows, -1, np.int64)
+        self._id2slot: Dict[int, int] = {}
+        self._n_live = np.zeros(S, np.int64)
+        if ids is None:
+            ids = np.arange(n0, dtype=np.int64)
+        else:
+            ids = np.asarray(ids, np.int64)
+            if ids.shape != (n0,) or len(set(ids.tolist())) != n0:
+                raise ValueError("ids must be unique and match table rows")
+        # contiguous, even initial distribution: shard s takes the next
+        # n0//S (+1 for the first n0%S shards) rows
+        counts = [n0 // S + (1 if s < n0 % S else 0) for s in range(S)]
+        if max(counts, default=0) > self.cap_local:
+            raise ValueError("initial table exceeds per-shard capacity")
+        row = 0
+        for s, c in enumerate(counts):
+            base = s * self.cap_local
+            self._host[base:base + c] = init[row:row + c]
+            self._slot_ids[base:base + c] = ids[row:row + c]
+            for j in range(c):
+                self._id2slot[int(ids[row + j])] = base + j
+            self._n_live[s] = c
+            row += c
+        self._next_id = int(ids.max()) + 1 if n0 else 0
+
+        self._sharding = serving_table_sharding(mesh, model_axis)
+        self._dev = jax.device_put(jnp.asarray(self._host), self._sharding)
+        self._zero_row = jnp.zeros((N,), jnp.float32)
+        self._write = jax.jit(
+            lambda buf, r, slot: jax.lax.dynamic_update_slice(
+                buf, r[None, :], (slot, 0)),
+            donate_argnums=(0,), out_shardings=self._sharding)
+
+        self.version = 0
+        self._vmax = float(np.abs(init).max()) if init.size else 0.0
+        self._staged: List[Tuple[str, int, Optional[np.ndarray]]] = []
+        self.n_upserts = 0
+        self.n_deletes = 0
+        self.rows_written = 0
+
+    # ---- read side -------------------------------------------------------
+
+    @property
+    def n_live(self) -> int:
+        """Total live rows across all shards."""
+        return int(self._n_live.sum())
+
+    @property
+    def free_rows(self) -> int:
+        """Free slots summed over every shard's suffix pool."""
+        return self.capacity_rows - self.n_live
+
+    @property
+    def pending_updates(self) -> int:
+        """Mutations staged but not yet applied by `flush_updates`."""
+        return len(self._staged)
+
+    @property
+    def value_abs_max(self) -> float:
+        """Monotonic max|v| over every row ever applied."""
+        return self._vmax
+
+    def n_valid_vector(self) -> np.ndarray:
+        """Per-shard live counts (shards,) — the cascade's validity bounds."""
+        return self._n_live.astype(np.int32).copy()
+
+    def device_table(self):
+        """The (capacity_rows, N) row-sharded device buffer."""
+        return self._dev
+
+    def host_table(self) -> np.ndarray:
+        """Host mirror (read-only view; always in sync with the device)."""
+        v = self._host.view()
+        v.flags.writeable = False
+        return v
+
+    def external_ids(self, slots) -> np.ndarray:
+        """Map global row indices (slots) to external ids (-1 = dead)."""
+        slots = np.asarray(slots)
+        return self._slot_ids[np.clip(slots, 0, self.capacity_rows - 1)]
+
+    def live_ids(self) -> np.ndarray:
+        """External ids of all live rows, in global slot order."""
+        return self._slot_ids[self._slot_ids >= 0].copy()
+
+    def live_mask(self) -> np.ndarray:
+        """Boolean (capacity_rows,) mask of live slots (dense per shard)."""
+        return self._slot_ids >= 0
+
+    # ---- write side ------------------------------------------------------
+
+    def upsert(self, ext_id: int, row) -> None:
+        """Stage insert-or-overwrite; new ids route to the emptiest shard."""
+        row = np.asarray(row, np.float32)
+        if row.shape != (self.N,):
+            raise ValueError(f"row shape {row.shape} != ({self.N},)")
+        ext_id = int(ext_id)
+        if ext_id < 0:
+            raise ValueError(f"ids must be >= 0, got {ext_id}")
+        self._next_id = max(self._next_id, ext_id + 1)
+        self._staged.append(("upsert", ext_id, row.copy()))
+
+    def append(self, row) -> int:
+        """Stage an insert under a fresh auto-assigned id; returns the id."""
+        ext_id = self._next_id
+        self.upsert(ext_id, row)
+        return ext_id
+
+    def delete(self, ext_id: int) -> None:
+        """Stage removal; swap-fills within the owning shard's region."""
+        self._staged.append(("delete", int(ext_id), None))
+
+    # ---- apply -----------------------------------------------------------
+
+    def _dev_write(self, row_dev, slot: int) -> None:
+        self._dev = _call_donated(self._write, self._dev, row_dev,
+                                  np.int32(slot))
+        self.rows_written += 1
+
+    def _route(self) -> int:
+        free = self.cap_local - self._n_live
+        s = int(np.argmax(free))
+        if free[s] <= 0:
+            raise RuntimeError(
+                f"store full: {self.n_live}/{self.capacity_rows} rows live "
+                f"across {self.n_shards} shards; provision more capacity")
+        return s
+
+    def _apply_upsert(self, ext_id: int, row: np.ndarray) -> None:
+        slot = self._id2slot.get(ext_id)
+        if slot is None:
+            s = self._route()
+            slot = s * self.cap_local + int(self._n_live[s])
+            self._id2slot[ext_id] = slot
+            self._slot_ids[slot] = ext_id
+            self._n_live[s] += 1
+        self._host[slot] = row
+        self._dev_write(jnp.asarray(row), slot)
+        self._vmax = max(self._vmax, float(np.abs(row).max(initial=0.0)))
+        self.n_upserts += 1
+        self.version += 1
+
+    def _apply_delete(self, ext_id: int) -> None:
+        slot = self._id2slot.pop(ext_id, None)
+        if slot is None:
+            raise KeyError(f"delete of unknown id {ext_id}")
+        s = slot // self.cap_local
+        last = s * self.cap_local + int(self._n_live[s]) - 1
+        if slot != last:
+            moved = self._slot_ids[last]
+            self._host[slot] = self._host[last]
+            self._dev_write(jnp.asarray(self._host[slot]), slot)
+            self._slot_ids[slot] = moved
+            self._id2slot[int(moved)] = slot
+        self._host[last] = 0.0
+        self._dev_write(self._zero_row, last)
+        self._slot_ids[last] = -1
+        self._n_live[s] -= 1
+        self.n_deletes += 1
+        self.version += 1
+
+    def flush_updates(self) -> dict:
+        """Apply staged mutations in order; returns ``{"applied",
+        "version", "requantized_tiles", "seconds"}`` (the tile counter is
+        always 0 here — the sharded int8 path quantizes in-jit).  A
+        failing op is dropped and its successors stay staged, as in
+        `DynamicTableStore.flush_updates`."""
+        t0 = time.perf_counter()
+        applied = 0
+        staged, self._staged = self._staged, []
+        try:
+            for op, ext_id, row in staged:
+                if op == "upsert":
+                    self._apply_upsert(ext_id, row)
+                else:
+                    self._apply_delete(ext_id)
+                applied += 1
+        except Exception:
+            self._staged = staged[applied + 1:] + self._staged
+            raise
+        if applied:
+            jax.block_until_ready(self._dev)
+        return {"applied": applied, "version": self.version,
+                "requantized_tiles": 0,
+                "seconds": time.perf_counter() - t0}
+
+    # ---- observability ---------------------------------------------------
+
+    def jit_cache_size(self) -> int:
+        """Compiled-executable count of this store's write op (for the
+        zero-recompilation assertions)."""
+        return int(self._write._cache_size())
+
+    def stats(self) -> dict:
+        """Counters: per-shard occupancy, version, churn totals."""
+        return {"n_live": self.n_live, "capacity_rows": self.capacity_rows,
+                "cap_local": self.cap_local, "n_shards": self.n_shards,
+                "per_shard_live": self._n_live.tolist(),
+                "utilization": self.n_live / max(1, self.capacity_rows),
+                "version": self.version, "upserts": self.n_upserts,
+                "deletes": self.n_deletes, "rows_written": self.rows_written,
+                "value_abs_max": self._vmax,
+                "pending": len(self._staged)}

@@ -177,6 +177,95 @@ class TestNValidMasking:
         assert eng.stats()["recall"]["mean"] == 1.0
 
 
+class TestDynamicStoreRegressions:
+    """ISSUE 4 satellites: cache/recall staleness under live updates."""
+
+    def _store_engine(self, **kw):
+        from repro.store import DynamicTableStore
+        rng = np.random.default_rng(20)
+        table = rng.normal(size=(256, 128)).astype(np.float32)
+        st = DynamicTableStore(table, block=64, capacity_slack=1.5)
+        kw.setdefault("K", 3)
+        kw.setdefault("eps", 1e-4)
+        kw.setdefault("delta", 0.05)
+        kw.setdefault("value_range", 16.0)
+        kw.setdefault("batch_size", 2)
+        kw.setdefault("deadline_ms", 1.0)
+        return MIPSServeEngine(st, **kw), st
+
+    def test_post_upsert_query_never_returns_stale_cache(self):
+        """Regression: the LRU key used to ignore table identity — a
+        repeat query after an upsert was answered from the pre-upsert
+        cache line.  Version-salted keys + invalidate-on-bump fix it."""
+        eng, st = self._store_engine(cache_entries=64)
+        rng = np.random.default_rng(21)
+        q = rng.normal(size=128).astype(np.float32)
+        r1 = eng.submit(q, now=0.0)
+        eng.drain(now=0.0)
+        ids1, _ = eng.result(r1)
+        nid = st.append((9.0 * q / np.linalg.norm(q)).astype(np.float32))
+        r2 = eng.submit(q.copy(), now=1.0)   # would hit the stale line
+        eng.drain(now=1.0)
+        ids2, _ = eng.result(r2)
+        assert nid in ids2.tolist(), "pre-upsert cached answer returned"
+        assert nid not in ids1.tolist()
+        assert eng.cache.invalidations >= 1
+        # and the same query now re-caches under the new version
+        r3 = eng.submit(q.copy(), now=2.0)
+        assert eng.pending_count == 0        # served from the fresh line
+        np.testing.assert_array_equal(eng.result(r3)[0], ids2)
+
+    def test_result_cached_under_live_version_when_update_queued(self):
+        """A result computed after a mid-queue version bump must be
+        cached under the live version, not the submit-time one — the
+        post-update repeat should hit, not recompute."""
+        eng, st = self._store_engine(cache_entries=64, batch_size=4,
+                                     deadline_ms=50.0)
+        rng = np.random.default_rng(24)
+        q = rng.normal(size=128).astype(np.float32)
+        eng.submit(q, now=0.0)               # queued: batch not full
+        st.upsert(0, rng.normal(size=128).astype(np.float32))  # staged
+        eng.poll(now=0.06)                   # drains update, then flushes
+        eng.submit(q.copy(), now=0.1)        # repeat at the live version
+        assert eng.pending_count == 0 and eng.n_cache_hits == 1
+
+    def test_recall_mirror_refreshes_after_updates(self):
+        """Regression: the recall estimator's host table copy was
+        materialized once and never refreshed — after an upsert its
+        'exact truth' was stale and the live recall stat lied."""
+        eng, st = self._store_engine(cache_entries=0,
+                                     recall_sample_rate=1.0)
+        rng = np.random.default_rng(22)
+        q = rng.normal(size=128).astype(np.float32)
+        r = eng.submit(q, now=0.0)
+        eng.drain(now=0.0)
+        eng.result(r)
+        # mutate winners: overwrite the current argmax and add a new one
+        ids, _ = np.asarray(st.host_table() @ q), None
+        st.upsert(int(np.argmax(st.host_table() @ q)),
+                  rng.normal(size=128).astype(np.float32))
+        st.append((9.0 * q / np.linalg.norm(q)).astype(np.float32))
+        r = eng.submit(q, now=1.0)
+        eng.drain(now=1.0)
+        eng.result(r)
+        # a stale mirror would score the engine's (correct, fresh) answer
+        # against pre-update truth and report recall < 1
+        assert eng.stats()["recall"]["mean"] == 1.0
+
+    def test_static_engine_behavior_unchanged(self):
+        """A plain-array engine still works with apply_updates a no-op."""
+        eng, table = _engine()
+        assert eng.apply_updates() == 0
+        rng = np.random.default_rng(23)
+        q = rng.normal(size=128).astype(np.float32)
+        r = eng.submit(q, now=0.0)
+        eng.drain(now=0.0)
+        ids, _ = eng.result(r)
+        truth = np.argsort(-(table @ q))[:3]
+        np.testing.assert_array_equal(np.sort(ids), np.sort(truth))
+        assert eng.stats()["updates"]["applied"] == 0
+
+
 class TestKOutPlumbing:
     def test_decode_k_out_returns_sorted_superset(self):
         from repro.core.boundedme_jax import bounded_me_decode, make_plan

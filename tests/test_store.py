@@ -1,0 +1,439 @@
+"""Dynamic table store (ISSUE 4): liveness, bit-identity, zero recompiles.
+
+The store contract under test (DESIGN.md §11):
+
+* deleted ids are *never* returned — adversarially, on an all-negative
+  table where a zeroed tombstone row would out-score every live arm;
+* an engine after an arbitrary upsert/delete burst is equivalent to a
+  freshly built engine on the store's snapshot — byte-equal buffers
+  (incl. the int8 shadow) and bit-identical decode output under the same
+  key, in fp32 and int8;
+* a mutation stream compiles **zero** new executables (the jit-cache
+  assertion): live counts ride through the traced ``n_valid``, writes
+  reuse one donated `dynamic_update_slice` executable.
+
+The 2-device `ShardedTableStore` variants run in a subprocess with fake
+CPU devices (same idiom as tests/test_sharded_serve.py); the CI 2-device
+matrix step re-runs this file under an outer XLA flag.
+"""
+
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.boundedme_jax import bounded_me_decode, make_plan
+from repro.launch.serve import MIPSServeEngine
+from repro.store import DynamicTableStore
+
+_N, _DIM, _K = 192, 128, 3
+_BLOCK = 64
+
+
+def _table(seed=0, n=_N, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return (scale * rng.normal(size=(n, _DIM))).astype(np.float32)
+
+
+def _engine(store, **kw):
+    kw.setdefault("K", _K)
+    kw.setdefault("eps", 1e-4)
+    kw.setdefault("delta", 0.05)
+    kw.setdefault("value_range", 16.0)
+    kw.setdefault("batch_size", 2)
+    kw.setdefault("deadline_ms", 1.0)
+    return MIPSServeEngine(store, **kw)
+
+
+def _query(store, eng, q):
+    rid = eng.submit(q, now=float(eng.n_requests))
+    eng.drain(now=float(eng.n_requests))
+    return eng.result(rid)
+
+
+def _masked_truth(store, q, K=_K):
+    s = store.host_table() @ q
+    s[~store.live_mask()] = -np.inf
+    slots = np.argsort(-s)[:K]
+    return store.external_ids(slots), s[slots]
+
+
+class TestStoreSemantics:
+    def test_roundtrip_and_dense_prefix(self):
+        V = _table()
+        st = DynamicTableStore(V, block=_BLOCK, capacity_slack=1.5)
+        assert st.capacity_rows % st.tile == 0
+        assert st.capacity_rows >= int(np.ceil(_N * 1.5))
+        assert st.n_live == _N and st.version == 0
+        rng = np.random.default_rng(1)
+        row = rng.normal(size=_DIM).astype(np.float32)
+        new_id = st.append(row)
+        st.upsert(7, 2 * row)
+        st.delete(3)                       # interior: swap-filled from tail
+        assert st.pending_updates == 3
+        info = st.flush_updates()
+        assert info["applied"] == 3 and st.version == 3
+        assert st.pending_updates == 0
+        # live slots are a dense prefix; vacated tail slot zeroed
+        mask = st.live_mask()
+        assert mask[:st.n_live].all() and not mask[st.n_live:].any()
+        np.testing.assert_array_equal(st.host_table()[st.n_live:], 0.0)
+        # host mirror == device buffer, byte for byte
+        np.testing.assert_array_equal(st.host_table(),
+                                      np.asarray(st.device_table()))
+        # ids are stable through the swap
+        np.testing.assert_array_equal(
+            st.host_table()[st._id2slot[new_id]], row)
+        np.testing.assert_array_equal(st.host_table()[st._id2slot[7]],
+                                      2 * row)
+        assert 3 not in set(st.live_ids().tolist())
+
+    def test_snapshot_rebuild_is_byte_identical(self):
+        st = DynamicTableStore(_table(), block=_BLOCK)
+        st.delete(0)
+        st.append(np.ones(_DIM, np.float32))
+        st.flush_updates()
+        rows, ids = st.snapshot()
+        fresh = DynamicTableStore(rows, ids=ids, capacity=st.capacity_rows,
+                                  block=_BLOCK)
+        np.testing.assert_array_equal(st.host_table(), fresh.host_table())
+        np.testing.assert_array_equal(st.live_ids(), fresh.live_ids())
+
+    def test_capacity_overflow_raises(self):
+        st = DynamicTableStore(_table(n=8), capacity=8, block=_BLOCK)
+        st.append(np.zeros(_DIM, np.float32))
+        with pytest.raises(RuntimeError, match="store full"):
+            st.flush_updates()
+
+    def test_grow_reallocates(self):
+        st = DynamicTableStore(_table(n=8), capacity=8, block=_BLOCK)
+        st.grow(32)
+        assert st.capacity_rows == 32
+        for _ in range(20):
+            st.append(np.zeros(_DIM, np.float32))
+        st.flush_updates()
+        assert st.n_live == 28
+
+    def test_engine_survives_grow(self):
+        rng = np.random.default_rng(7)
+        st = DynamicTableStore(_table(n=24), capacity=24, block=_BLOCK)
+        eng = _engine(st)
+        q = rng.normal(size=_DIM).astype(np.float32)
+        _query(st, eng, q)
+        st.grow(64)                       # out-of-band shape change
+        winner_id = st.append(
+            (9.0 * q / np.linalg.norm(q)).astype(np.float32))
+        ids, _ = _query(st, eng, q)       # engine rebuilds its plan
+        assert eng.n == st.capacity_rows == 64
+        assert winner_id in ids.tolist()
+        assert eng.stats()["updates"]["recalibrations"] >= 1
+
+    def test_delete_unknown_raises(self):
+        st = DynamicTableStore(_table(n=8), block=_BLOCK)
+        st.delete(123)
+        with pytest.raises(KeyError, match="unknown id"):
+            st.flush_updates()
+
+    def test_failed_flush_is_not_torn(self):
+        """A failing mid-batch op drops only itself: successors stay
+        staged and the int8 shadow stays in sync with what applied."""
+        st = DynamicTableStore(_table(), block=_BLOCK, precision="int8")
+        st.upsert(0, np.ones(_DIM, np.float32))
+        st.delete(12345)                      # unknown: fails at apply
+        st.upsert(1, 2 * np.ones(_DIM, np.float32))
+        with pytest.raises(KeyError, match="unknown id"):
+            st.flush_updates()
+        assert st.pending_updates == 1        # the successor survived
+        st.flush_updates()
+        assert np.all(st.host_table()[st._id2slot[1]] == 2.0)
+        rows, ids = st.snapshot()
+        fresh = DynamicTableStore(rows, ids=ids, capacity=st.capacity_rows,
+                                  block=_BLOCK, precision="int8")
+        np.testing.assert_array_equal(st.host_table(), fresh.host_table())
+        V8a, va = st.quantized()
+        V8b, vb = fresh.quantized()
+        np.testing.assert_array_equal(np.asarray(V8a), np.asarray(V8b))
+        np.testing.assert_array_equal(np.asarray(va), np.asarray(vb))
+
+    def test_bad_row_shape_raises(self):
+        st = DynamicTableStore(_table(n=8), block=_BLOCK)
+        with pytest.raises(ValueError, match="row shape"):
+            st.upsert(0, np.zeros(_DIM + 1, np.float32))
+
+
+class TestDeletedNeverReturned:
+    """Property-style: across random interleavings, a dead id never comes
+    back.  All-negative tables make this adversarial — a zeroed tombstone
+    row (score 0) would beat every live arm, so only in-cascade masking
+    of the dead suffix can pass."""
+
+    @pytest.mark.parametrize("seed", [0, 1, 2])
+    def test_random_interleaving(self, seed):
+        rng = np.random.default_rng(seed)
+        V = -np.abs(rng.normal(size=(96, _DIM))).astype(np.float32)
+        st = DynamicTableStore(V, block=_BLOCK, capacity_slack=2.0)
+        eng = _engine(st, recall_sample_rate=1.0)
+        dead = set()
+        for step in range(12):
+            live = st.live_ids()
+            op = rng.integers(0, 3)
+            if op == 0 and live.size > _K + 4:
+                victim = int(rng.choice(live))
+                st.delete(victim)
+                dead.add(victim)
+            elif op == 1 and st.free_rows > 0:
+                st.append(
+                    -np.abs(rng.normal(size=_DIM)).astype(np.float32))
+            else:
+                tgt = int(rng.choice(live))
+                st.upsert(
+                    tgt, -np.abs(rng.normal(size=_DIM)).astype(np.float32))
+            q = np.abs(rng.normal(size=_DIM)).astype(np.float32)
+            ids, scores = _query(st, eng, q)
+            got = set(ids.tolist())
+            assert not (got & dead), f"dead id returned at step {step}"
+            t_ids, t_scores = _masked_truth(st, q)
+            assert got == set(t_ids.tolist())
+        assert eng.stats()["recall"]["mean"] == 1.0
+
+
+class TestBitIdentity:
+    """The acceptance script: after every mutation step the dynamic
+    store/engine is equivalent to a fresh build on its snapshot."""
+
+    def _script(self, st, rng, step, protect=(), scale=1.0):
+        live = [i for i in st.live_ids().tolist() if i not in protect]
+        row = (scale * rng.normal(size=_DIM)).astype(np.float32)
+        if step % 3 == 0:
+            st.upsert(int(rng.choice(live)), row)
+        elif step % 3 == 1 and st.free_rows > 0:
+            st.delete(int(rng.choice(live)))
+            st.append(row)
+        else:
+            st.append(row)
+        st.flush_updates()
+
+    @pytest.mark.parametrize("precision", ["fp32", "int8"])
+    def test_decode_bit_identical_to_fresh_every_step(self, precision):
+        rng = np.random.default_rng(3)
+        st = DynamicTableStore(_table(), block=_BLOCK, capacity_slack=1.6,
+                               precision=precision)
+        plan = make_plan(st.capacity_rows, _DIM, K=_K, eps=1e-3, delta=0.05,
+                         value_range=16.0, block=_BLOCK, precision=precision)
+        key = jax.random.PRNGKey(9)
+        Q = rng.normal(size=(2, _DIM)).astype(np.float32)
+        for step in range(6):
+            self._script(st, rng, step)
+            rows, ids = st.snapshot()
+            fresh = DynamicTableStore(rows, ids=ids,
+                                      capacity=st.capacity_rows,
+                                      block=_BLOCK, precision=precision)
+            np.testing.assert_array_equal(st.host_table(),
+                                          fresh.host_table())
+            if precision == "int8":
+                # dirty-tile incremental requant == full requant, bytewise
+                V8a, va = st.quantized()
+                V8b, vb = fresh.quantized()
+                np.testing.assert_array_equal(np.asarray(V8a),
+                                              np.asarray(V8b))
+                np.testing.assert_array_equal(np.asarray(va),
+                                              np.asarray(vb))
+            kw = dict(plan=plan, final_exact=True, use_pallas=False,
+                      n_valid=np.int32(st.n_live))
+            ia, sa = bounded_me_decode(st.device_table(), Q, key,
+                                       quantized=st.quantized(), **kw)
+            ib, sb = bounded_me_decode(fresh.device_table(), Q, key,
+                                       quantized=fresh.quantized(), **kw)
+            np.testing.assert_array_equal(np.asarray(ia), np.asarray(ib))
+            np.testing.assert_array_equal(np.asarray(sa), np.asarray(sb))
+
+    @pytest.mark.parametrize("precision", ["fp32", "int8"])
+    def test_engine_matches_fresh_engine_after_burst(self, precision):
+        rng = np.random.default_rng(4)
+        st = DynamicTableStore(_table(scale=0.2), block=_BLOCK,
+                               capacity_slack=1.6, precision=precision)
+        eng = _engine(st, eps=1e-3)
+        qs = rng.normal(size=(3, _DIM)).astype(np.float32)
+        planted = []
+        for b, q in enumerate(qs):       # planted winners: margins >> the
+            unit = q / np.linalg.norm(q)  # int8 bias, so fp32 and int8
+            for j in range(_K):           # agree on the exact top-K
+                st.upsert(17 * b + 5 * j + 1,
+                          ((4.0 + 0.5 * j) * unit).astype(np.float32))
+                planted.append(17 * b + 5 * j + 1)
+        for step in range(4):
+            self._script(st, rng, step, protect=planted, scale=0.2)
+            rows, ids = st.snapshot()
+            fresh_store = DynamicTableStore(rows, ids=ids,
+                                            capacity=st.capacity_rows,
+                                            block=_BLOCK,
+                                            precision=precision)
+            fresh = _engine(fresh_store, eps=1e-3)
+            for q in qs:
+                ia, sa = _query(st, eng, q)
+                ib, sb = _query(fresh_store, fresh, q)
+                np.testing.assert_array_equal(ia, ib)
+                np.testing.assert_array_equal(sa, sb)
+
+
+class TestZeroRecompilation:
+    @pytest.mark.parametrize("precision", ["fp32", "int8"])
+    def test_mutation_stream_compiles_nothing_new(self, precision):
+        rng = np.random.default_rng(5)
+        st = DynamicTableStore(_table(), block=_BLOCK, capacity_slack=2.0,
+                               precision=precision)
+        eng = _engine(st, eps=1e-3)
+        # warmup: touch every op class once (first compile is expected)
+        st.upsert(0, rng.normal(size=_DIM).astype(np.float32))
+        st.delete(1)
+        st.append(rng.normal(size=_DIM).astype(np.float32))
+        _query(st, eng, rng.normal(size=_DIM).astype(np.float32))
+        before = (eng._fn._cache_size(), st.jit_cache_size())
+        for step in range(24):
+            live = st.live_ids()
+            op = step % 3
+            if op == 0:
+                st.upsert(int(rng.choice(live)),
+                          rng.normal(size=_DIM).astype(np.float32))
+            elif op == 1 and st.free_rows > 0:
+                st.delete(int(rng.choice(live)))
+                st.append(rng.normal(size=_DIM).astype(np.float32))
+            else:
+                st.append(rng.normal(size=_DIM).astype(np.float32))
+            _query(st, eng, rng.normal(size=_DIM).astype(np.float32))
+        after = (eng._fn._cache_size(), st.jit_cache_size())
+        assert after == before, (
+            f"mutation stream recompiled: {before} -> {after}")
+        assert eng.stats()["updates"]["recalibrations"] == 0
+
+
+class TestValueRangeTracking:
+    def test_growth_recalibrates_once_and_stays_correct(self):
+        rng = np.random.default_rng(6)
+        st = DynamicTableStore(_table(), block=_BLOCK, capacity_slack=1.5)
+        eng = _engine(st, value_range=None, recall_sample_rate=1.0)
+        vr0 = eng._plan_value_range
+        q = rng.normal(size=_DIM).astype(np.float32)
+        big = (40.0 * q / np.linalg.norm(q)).astype(np.float32)
+        gid = st.append(big)
+        ids, _ = _query(st, eng, q)
+        assert gid in ids.tolist()
+        assert eng.stats()["updates"]["recalibrations"] == 1
+        assert eng._plan_value_range > vr0
+        # a second in-range update must not recalibrate again
+        st.upsert(0, rng.normal(size=_DIM).astype(np.float32))
+        _query(st, eng, q)
+        assert eng.stats()["updates"]["recalibrations"] == 1
+        assert eng.stats()["recall"]["mean"] == 1.0
+
+
+# ---------------------------------------------------------------------------
+# 2-device ShardedTableStore suite (subprocess, fake CPU devices)
+# ---------------------------------------------------------------------------
+
+_ENV_CODE_PREAMBLE = r"""
+import os
+_flags = os.environ.get("XLA_FLAGS", "")
+if "xla_force_host_platform_device_count" not in _flags:
+    os.environ["XLA_FLAGS"] = (
+        _flags + " --xla_force_host_platform_device_count=2").strip()
+import jax, jax.numpy as jnp, numpy as np
+"""
+
+
+def _run(code: str, timeout=480):
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    r = subprocess.run([sys.executable, "-c", _ENV_CODE_PREAMBLE + code],
+                       env=env, capture_output=True, text=True,
+                       timeout=timeout)
+    assert "OK" in r.stdout, r.stdout + "\n" + r.stderr
+
+
+@pytest.mark.slow
+def test_sharded_store_decode_matches_fresh_and_truth():
+    """Per-shard n_valid vector: churned store == fresh buffer, bitwise,
+    and == live-masked exact truth; dead ids never returned."""
+    _run(r"""
+from repro.distributed.sharding import sharded_bounded_me_decode
+from repro.store import ShardedTableStore
+mesh = jax.make_mesh((2,), ("model",))
+rng = np.random.default_rng(0)
+n, N, B, K = 300, 256, 2, 3
+V = -np.abs(rng.normal(size=(n, N))).astype(np.float32)   # adversarial
+st = ShardedTableStore(V, mesh=mesh, block=128, capacity_slack=1.5)
+dead = set()
+for step in range(6):
+    live = st.live_ids()
+    victim = int(rng.choice(live))
+    st.delete(victim); dead.add(victim)
+    nid = st.append(-np.abs(rng.normal(size=N)).astype(np.float32))
+    st.upsert(int(rng.choice(st.live_ids())),
+              -np.abs(rng.normal(size=N)).astype(np.float32))
+    st.flush_updates()
+    Q = jnp.asarray(np.abs(rng.normal(size=(B, N))), jnp.float32)
+    key = jax.random.PRNGKey(step)
+    kw = dict(mesh=mesh, K=K, eps=1e-4, delta=0.05, value_range=16.0,
+              block=128, n_valid=st.n_valid_vector())
+    i1, s1, _ = sharded_bounded_me_decode(st.device_table(), Q, key, **kw)
+    # fresh device buffer with identical bytes -> bit-identical output
+    fresh = jnp.asarray(st.host_table().copy())
+    i2, s2, _ = sharded_bounded_me_decode(fresh, Q, key, **kw)
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+    ext = st.external_ids(np.asarray(i1))
+    assert not (set(ext.ravel().tolist()) & dead), step
+    H = st.host_table().copy()
+    S = H @ np.asarray(Q).T
+    S[~st.live_mask()] = -np.inf
+    truth = np.argsort(-S, axis=0)[:K].T
+    np.testing.assert_array_equal(np.asarray(i1), truth)
+print("OK")
+""")
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("precision", ["fp32", "int8"])
+def test_sharded_store_engine_after_burst(precision):
+    """2-device engine on a ShardedTableStore: upsert burst, then exact
+    recall and zero recompiles (per-shard live counts ride traced)."""
+    _run(r"""
+from repro.launch.serve import MIPSServeEngine
+from repro.store import ShardedTableStore
+mesh = jax.make_mesh((2,), ("model",))
+rng = np.random.default_rng(1)
+n, N, K = 300, 256, 3
+V = (0.2 * rng.normal(size=(n, N))).astype(np.float32)
+st = ShardedTableStore(V, mesh=mesh, block=128, capacity_slack=1.6)
+eng = MIPSServeEngine(st, K=K, eps=1e-3, delta=0.05, value_range=16.0,
+                      batch_size=2, deadline_ms=1.0,
+                      recall_sample_rate=1.0, precision=%r)
+def query(q):
+    rid = eng.submit(q, now=float(eng.n_requests))
+    eng.drain(now=float(eng.n_requests))
+    return eng.result(rid)
+qs = rng.normal(size=(3, N)).astype(np.float32)
+planted = {}
+for b, q in enumerate(qs):               # margins >> int8 bias
+    unit = q / np.linalg.norm(q)
+    for j in range(K):
+        nid = st.append(((4.0 + 0.5 * j) * unit).astype(np.float32))
+        planted.setdefault(b, []).append(nid)
+query(qs[0])                             # warmup + drain the burst
+before = eng._fn._cache_size() + st.jit_cache_size()
+for step in range(8):
+    st.delete(int(rng.choice([i for i in st.live_ids()
+                              if i not in sum(planted.values(), [])])))
+    st.append((0.2 * rng.normal(size=N)).astype(np.float32))
+    for b, q in enumerate(qs):
+        ids, scores = query(q)
+        assert set(ids.tolist()) == set(planted[b]), (step, b)
+after = eng._fn._cache_size() + st.jit_cache_size()
+assert after == before, (before, after)
+assert eng.stats()["recall"]["mean"] == 1.0
+print("OK")
+""" % precision)

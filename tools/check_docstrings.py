@@ -36,6 +36,9 @@ AUDITED_MODULES = [
     "launch/serve.py",
     "launch/mesh.py",
     "models/steps.py",
+    "store/__init__.py",
+    "store/dynamic_table.py",
+    "store/sharded_table.py",
 ]
 
 # entry points whose docstrings must mention their contract:
@@ -71,6 +74,23 @@ API_CONTRACTS = {
     "kernels/ops.py": {
         "fused_cascade": ["k_out", "n_valid", "vscale"],
         "fused_cascade_batched": ["k_out", "n_valid"],
+    },
+    "store/dynamic_table.py": {
+        "DynamicTableStore": ["capacity", "version", "n_valid",
+                              "swap", "int8"],
+        "DynamicTableStore.flush_updates": ["rows touched", "version",
+                                            "dirty"],
+        "DynamicTableStore.delete": ["swap", "prefix"],
+        "DynamicTableStore.grow": ["recompil"],
+    },
+    "store/sharded_table.py": {
+        "ShardedTableStore": ["shard", "n_valid", "capacity", "merge"],
+        "ShardedTableStore.n_valid_vector": ["per-shard"],
+    },
+    "launch/serve.py": {
+        "MIPSServeEngine.apply_updates": ["version", "recall",
+                                          "value range", "recompile"],
+        "QuantizedLRU.invalidate": ["version", "salt"],
     },
 }
 
