@@ -6,9 +6,11 @@ machine-readable perf trajectories: ``BENCH_PR1.json`` (fused cascade /
 batched decode: us_per_call, pull-count speedup, kernel dispatch counts),
 ``BENCH_PR2.json`` (serve-loop micro-batching: throughput vs batch
 deadline at B in {1, 8, 32}, LRU hit rates), ``BENCH_PR3.json``
-(int8 quantized sampling vs fp32 at B in {1, 8, 32}) and
+(int8 quantized sampling vs fp32 at B in {1, 8, 32}),
 ``BENCH_PR4.json`` (dynamic-store serving under churn + update cost vs
-LSH/PCA full rebuilds) so numbers stay comparable across PRs.
+LSH/PCA full rebuilds) and ``BENCH_PR5.json`` (adaptive early-exit mean
+pulls + rounds_used histograms, easy vs hard workloads) so numbers stay
+comparable across PRs.
 """
 
 from __future__ import annotations
@@ -22,12 +24,13 @@ BENCH_JSON = os.path.join(_ROOT, "BENCH_PR1.json")
 BENCH2_JSON = os.path.join(_ROOT, "BENCH_PR2.json")
 BENCH3_JSON = os.path.join(_ROOT, "BENCH_PR3.json")
 BENCH4_JSON = os.path.join(_ROOT, "BENCH_PR4.json")
+BENCH5_JSON = os.path.join(_ROOT, "BENCH_PR5.json")
 
 
 def main() -> None:
-    from benchmarks import (bench_fused, bench_quant, bench_serve,
-                            bench_store, fig1_guarantee, fig23_synthetic,
-                            fig4_real, table1_complexity)
+    from benchmarks import (bench_adaptive, bench_fused, bench_quant,
+                            bench_serve, bench_store, fig1_guarantee,
+                            fig23_synthetic, fig4_real, table1_complexity)
     print("== fused cascade / batched decode (PR 1) ==")
     import jax
     meta = {"backend": jax.default_backend(),
@@ -51,6 +54,11 @@ def main() -> None:
     with open(BENCH4_JSON, "w") as f:
         json.dump(payload4, f, indent=2)
     print(f"[bench] wrote {BENCH4_JSON}")
+    print("== adaptive early-exit cascade (PR 5) ==")
+    payload5 = {"meta": meta, "benchmarks": bench_adaptive.run()}
+    with open(BENCH5_JSON, "w") as f:
+        json.dump(payload5, f, indent=2)
+    print(f"[bench] wrote {BENCH5_JSON}")
     print("== table1: complexity/guarantees ==")
     table1_complexity.run()
     print("== fig1: guarantee validation (adversarial) ==")

@@ -50,7 +50,8 @@ import numpy as np
 
 from repro.core import bounds
 from repro.core.quantize import quantize_blocks, quantize_tiles
-from repro.core.schedule import (Schedule, flatten_schedule, make_schedule)
+from repro.core.schedule import (Schedule, cert_coeffs, flatten_schedule,
+                                 make_schedule)
 
 __all__ = ["BlockedPlan", "make_plan", "bounded_me_blocked",
            "bounded_me_batched", "bounded_me_decode"]
@@ -127,7 +128,8 @@ class BlockedPlan:
 def make_plan(n: int, N: int, K: int = 1, eps: float = 0.1, delta: float = 0.05,
               value_range: float = 1.0, tile: int = 8, block: int = 512,
               range_mode: str = "clt",
-              precision: str = "fp32") -> BlockedPlan:
+              precision: str = "fp32",
+              bound: str = "hoeffding") -> BlockedPlan:
     """Build the static plan.
 
     range_mode:
@@ -148,6 +150,14 @@ def make_plan(n: int, N: int, K: int = 1, eps: float = 0.1, delta: float = 0.05,
         value range under ``range_mode``), so the (eps, delta) calibration
         survives quantization (DESIGN.md §10).  Final candidates are
         rescored in fp32 whenever ``final_exact=True``.
+
+    bound:
+      * 'hoeffding' (default) — the adaptive path certifies early exit
+        with the schedule's own Hoeffding–Serfling radii (zero extra delta
+        cost; the round plan is identical to the non-adaptive one);
+      * 'bernstein' — certification uses the variance-aware empirical
+        Bernstein–Serfling radii with per-tile running mean/M2
+        accumulators (`repro.core.schedule.cert_coeffs`, DESIGN.md §12).
     """
     block = min(block, N)
     tile = min(tile, n)
@@ -170,7 +180,7 @@ def make_plan(n: int, N: int, K: int = 1, eps: float = 0.1, delta: float = 0.05,
     else:
         raise ValueError(f"unknown range_mode {range_mode!r}")
     sched = make_schedule(n_tiles, n_blocks, K=k_tiles, eps=eps, delta=delta,
-                          value_range=eff_range, quant_err=qerr)
+                          value_range=eff_range, quant_err=qerr, bound=bound)
     return BlockedPlan(n=n, N=N, K=K, tile=tile, block=block, n_tiles=n_tiles,
                        n_blocks=n_blocks, schedule=sched, precision=precision)
 
@@ -200,30 +210,39 @@ def _tile_major(V: jnp.ndarray, plan: BlockedPlan) -> jnp.ndarray:
 
 def _fused_call(V4, qb_or_Qb, perm_or_perms, *, plan: BlockedPlan,
                 final_exact: bool, batched: bool, k_out: Optional[int] = None,
-                n_valid=None, vscale=None, qscale=None):
+                n_valid=None, vscale=None, qscale=None,
+                adaptive: bool = False):
     """Dispatch the whole cascade as exactly one Pallas kernel launch.
 
     On the int8 path (``vscale``/``qscale`` given) ``final_exact`` never
     appends coverage steps: exactness comes from the caller's fp32
     candidate rescore instead of in-kernel coverage completion, so the
     flat schedule stays at the sampling pull count (DESIGN.md §10).
+    The adaptive path (DESIGN.md §12) does the same — coverage steps can't
+    be skipped by a mid-flight certification, so exactness always comes
+    from the candidate rescore — and passes the per-round certification
+    coefficients; the kernel then returns a third ``rounds_used`` output.
     """
     from repro.kernels import ops as _kops
 
     quantized = vscale is not None
-    flat = flatten_schedule(plan.schedule,
-                            final_coverage=final_exact and not quantized)
+    flat = flatten_schedule(
+        plan.schedule,
+        final_coverage=final_exact and not quantized and not adaptive)
     slotcode, rmeta = flat.packed()
     bpos = jnp.asarray(flat.bpos)
     fn = _kops.fused_cascade_batched if batched else _kops.fused_cascade
     cols = perm_or_perms[..., bpos] if batched else perm_or_perms[bpos]
+    cert = (jnp.asarray(cert_coeffs(plan.schedule)) if adaptive else None)
     return fn(V4, qb_or_Qb, jnp.asarray(slotcode), jnp.asarray(rmeta), cols,
               n_arms=plan.n, K=plan.K, t_final=flat.t_final,
               n_final=flat.n_final, k_out=k_out, n_valid=n_valid,
-              vscale=vscale, qscale=qscale)
+              vscale=vscale, qscale=qscale, cert=cert, k_cert=plan.K,
+              track_var=adaptive and plan.schedule.bound == "bernstein")
 
 
-def _scan_pulls(sums, V4, qb, idx, cols, vscale=None, qscale=None):
+def _scan_pulls(sums, V4, qb, idx, cols, vscale=None, qscale=None,
+                sums2=None):
     """One round of pulls as a scan over its coordinate blocks.
 
     Gathers a single (T, R, C) slab per block — the (T, dt, R, C) gather of
@@ -235,10 +254,17 @@ def _scan_pulls(sums, V4, qb, idx, cols, vscale=None, qscale=None):
     tile-dot runs int8 x int8 -> int32 — exact — and is dequantized with
     the same scalar product and the same two float ops per entry as the
     fused kernel's pull step, preserving bitwise parity.
+
+    With ``sums2`` (the adaptive 'bernstein' path, DESIGN.md §12) a
+    running sum of squared block-dots rides along — the same ``part *
+    part`` elementwise product the kernel accumulates — and the function
+    returns ``(sums, sums2)`` instead of ``sums``.
     """
     quantized = vscale is not None
+    track = sums2 is not None
 
-    def body(s, col):
+    def body(carry, col):
+        s = carry[0] if track else carry
         if quantized:
             raw = jnp.einsum("trc,c->tr", V4[idx, col], qb[col],
                              preferred_element_type=jnp.int32)
@@ -247,10 +273,66 @@ def _scan_pulls(sums, V4, qb, idx, cols, vscale=None, qscale=None):
         else:
             part = jnp.einsum("trc,c->tr", V4[idx, col], qb[col],
                               preferred_element_type=jnp.float32)
+        if track:
+            return (s + part, carry[1] + part * part), None
         return s + part, None
 
-    sums, _ = jax.lax.scan(body, sums, cols)
-    return sums
+    out, _ = jax.lax.scan(body, (sums, sums2) if track else sums, cols)
+    return out
+
+
+def _cert_fire(mu, rad, valid, K):
+    """Certification predicate of the adaptive early exit (DESIGN.md §12).
+
+    ``mu``/``rad``/``valid``: (..., T, R) post-elimination survivor means,
+    radii and validity masks.  Fires (True) when the top-``K``-by-mean
+    valid rows' lower bounds ``mu - rad`` clear every other valid row's
+    upper bound ``mu + rad`` — on the confidence event those K rows' true
+    means then dominate every other survivor's, so the eventual top-K
+    extraction is already certified (suboptimality 0 <= eps).  With fewer
+    than K valid rows the comparison set is empty and the predicate fires
+    trivially (`-inf >= -inf`).  Row enumeration order matches the
+    kernel's slot-major certification buffers, so tie-breaks agree
+    bitwise.
+    """
+    neg = jnp.float32(-jnp.inf)
+    lead = mu.shape[:-2]
+    bufM = jnp.where(valid, mu, neg).reshape(*lead, -1)
+    bufU = jnp.where(valid, mu + rad, neg).reshape(*lead, -1)
+    bufL = jnp.where(valid, mu - rad, neg).reshape(*lead, -1)
+    _, pos = jax.lax.top_k(bufM, K)
+    minlb = jnp.min(jnp.take_along_axis(bufL, pos, axis=-1), axis=-1)
+    if lead:
+        bufU = bufU.at[jnp.arange(lead[0])[:, None], pos].set(neg)
+    else:
+        bufU = bufU.at[pos].set(neg)
+    return minlb >= jnp.max(bufU, axis=-1)
+
+
+def _cert_update(mu, v, valid, cert, l, t_cum, K, active, rounds_used,
+                 t_stop):
+    """One round-boundary certification step of the jnp fallbacks.
+
+    Evaluates the per-row radius ``a_l sqrt(max(v, 0)) + b_l`` (``v`` is
+    None on the variance-free 'hoeffding' family), runs `_cert_fire` over
+    the post-elimination survivors, and advances the per-query
+    ``(active, rounds_used, t_stop)`` state — the same bookkeeping the
+    fused kernel's ``_certify`` block performs in SMEM.  Shared by
+    `_run_blocked` (scalar state) and `_run_decode` ((B,) state); the ops
+    are rank-polymorphic, which keeps both paths bitwise-identical to the
+    kernel.
+    """
+    if v is not None:
+        rad = (jnp.float32(cert[l, 0]) * jnp.sqrt(jnp.maximum(v, 0.0))
+               + jnp.float32(cert[l, 1]))
+    else:
+        rad = jnp.full_like(mu, jnp.float32(cert[l, 1]))
+    fire = _cert_fire(mu, rad, valid, K)
+    fire_now = jnp.logical_and(active, fire)
+    rounds_used = jnp.where(fire_now, l + 1, rounds_used)
+    t_stop = jnp.where(fire_now, t_cum, t_stop)
+    active = jnp.logical_and(active, jnp.logical_not(fire))
+    return active, rounds_used, t_stop
 
 
 def _rescore_rows(Vp, Qp, ids, n_valid, *, plan: BlockedPlan, batched: bool):
@@ -276,11 +358,17 @@ def _rescore_rows(Vp, Qp, ids, n_valid, *, plan: BlockedPlan, batched: bool):
     return ids, vals
 
 
-@functools.partial(jax.jit, static_argnames=("plan", "final_exact", "use_pallas"))
+@functools.partial(jax.jit, static_argnames=("plan", "final_exact",
+                                             "use_pallas", "adaptive"))
 def _run_blocked(V: jnp.ndarray, q: jnp.ndarray, key: jax.Array, *,
                  plan: BlockedPlan, final_exact: bool = False,
-                 use_pallas: bool = False) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Returns (topk_ids (K,), topk_scores (K,)) — scores are mean products."""
+                 use_pallas: bool = False,
+                 adaptive: bool = False) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (topk_ids (K,), topk_scores (K,)) — scores are mean products.
+
+    With ``adaptive`` a third output ``rounds_used`` (int32 scalar) rides
+    along and pulls freeze at the first certified round (DESIGN.md §12).
+    """
     R, C = plan.tile, plan.block
     V, q = _pad_operands(jnp.asarray(V), jnp.asarray(q), plan)
     V4 = _tile_major(V, plan)
@@ -289,47 +377,83 @@ def _run_blocked(V: jnp.ndarray, q: jnp.ndarray, key: jax.Array, *,
     # undo the zero-padding rescale so scores estimate (q . v)/N
     scale = (plan.n_blocks * C) / plan.N
     quantized = plan.precision == "int8"
+    track_var = adaptive and plan.schedule.bound == "bernstein"
     if quantized:
         V8, vscale = quantize_tiles(V4)
         q8, qscale = quantize_blocks(qb)
 
     if use_pallas:
+        rounds_used = None
         if quantized:
-            ids, vals = _fused_call(V8, q8, perm, plan=plan,
-                                    final_exact=final_exact, batched=False,
-                                    vscale=vscale, qscale=qscale)
-            if final_exact:
-                return _rescore_rows(V, q, ids, plan.n, plan=plan,
-                                     batched=False)
+            out = _fused_call(V8, q8, perm, plan=plan,
+                              final_exact=final_exact, batched=False,
+                              vscale=vscale, qscale=qscale,
+                              adaptive=adaptive)
         else:
-            ids, vals = _fused_call(V4, qb, perm, plan=plan,
-                                    final_exact=final_exact, batched=False)
-        return ids, vals * jnp.float32(scale)
+            out = _fused_call(V4, qb, perm, plan=plan,
+                              final_exact=final_exact, batched=False,
+                              adaptive=adaptive)
+        if adaptive:
+            ids, vals, rounds_used = out
+        else:
+            ids, vals = out
+        if final_exact and (quantized or adaptive):
+            ids, vals = _rescore_rows(V, q, ids, plan.n, plan=plan,
+                                      batched=False)
+        else:
+            vals = vals * jnp.float32(scale)
+        return (ids, vals, rounds_used) if adaptive else (ids, vals)
 
     arm_ids0 = jnp.arange(plan.n_tiles * R).reshape(plan.n_tiles, R)
     valid0 = (arm_ids0 < plan.n).astype(jnp.float32)
 
     idx = jnp.arange(plan.n_tiles)
     sums = jnp.zeros((plan.n_tiles, R), dtype=jnp.float32)
+    sums2 = jnp.zeros_like(sums) if track_var else None
     t_prev = 0
     neg = jnp.asarray(-jnp.inf, dtype=jnp.float32)
+    n_rounds = len(plan.schedule.rounds)
+    if adaptive:
+        cert = cert_coeffs(plan.schedule)
+        t_last = plan.schedule.rounds[-1].t_cum if n_rounds else 0
+        active = jnp.asarray(True)
+        t_stop = jnp.asarray(t_last, jnp.int32)
+        rounds_used = jnp.asarray(n_rounds, jnp.int32)
 
-    for rnd in plan.schedule.rounds:
+    for l, rnd in enumerate(plan.schedule.rounds):
         if rnd.t_new > 0:
             cols = jax.lax.slice_in_dim(perm, t_prev, rnd.t_cum)  # static
             if quantized:
-                sums = _scan_pulls(sums, V8, q8, idx, cols, vscale, qscale)
+                new = _scan_pulls(sums, V8, q8, idx, cols, vscale, qscale,
+                                  sums2=sums2)
             else:
-                sums = _scan_pulls(sums, V4, qb, idx, cols)
+                new = _scan_pulls(sums, V4, qb, idx, cols, sums2=sums2)
+            if track_var:
+                new, new2 = new
+                sums2 = jnp.where(active, new2, sums2)
+            if adaptive:   # a certified query's accumulator stays frozen
+                sums = jnp.where(active, new, sums)
+            else:
+                sums = new
         t_prev = rnd.t_cum
-        means = sums / jnp.float32(t_prev * C)
+        denom = jnp.float32(t_prev * C)
+        means = sums / denom
         valid = valid0[idx]
         tile_score = jnp.where(valid > 0, means, neg).max(axis=1)
         _, keep = jax.lax.top_k(tile_score, rnd.n_keep)            # static
         idx, sums = idx[keep], sums[keep]
+        if track_var:
+            sums2 = sums2[keep]
+        if adaptive:
+            mu = sums / denom
+            v = (sums2 / (denom * jnp.float32(C)) - mu * mu
+                 if track_var else None)
+            active, rounds_used, t_stop = _cert_update(
+                mu, v, valid0[idx] > 0, cert, l, rnd.t_cum, plan.K,
+                active, rounds_used, t_stop)
 
     valid = valid0[idx]
-    if final_exact and not quantized:
+    if final_exact and not quantized and not adaptive:
         # exact rescore of the few survivors: (T_f*R, N') x (N',); divide by
         # the padded width N' = n_blocks*C so the caller-side rescale by
         # N'/N lands on (q . v)/N (dividing by N here double-counted the
@@ -338,6 +462,9 @@ def _run_blocked(V: jnp.ndarray, q: jnp.ndarray, key: jax.Array, *,
         scores = (Vfin @ q).astype(jnp.float32) / jnp.float32(
             plan.n_blocks * C)
         scores = scores.reshape(idx.shape[0], R)
+    elif adaptive:
+        # normalize by the query's ACTUAL pull count (frozen at t_stop)
+        scores = sums / (jnp.maximum(t_stop, 1) * C).astype(jnp.float32)
     else:
         # int8 + final_exact rescoring happens on the candidates below —
         # coverage completion in int8 would still carry quantization bias
@@ -345,16 +472,21 @@ def _run_blocked(V: jnp.ndarray, q: jnp.ndarray, key: jax.Array, *,
     flat = jnp.where(valid > 0, scores, neg).reshape(-1)
     top_vals, top_pos = jax.lax.top_k(flat, plan.K)
     arm_ids = arm_ids0[idx].reshape(-1)[top_pos]
-    if quantized and final_exact:
-        return _rescore_rows(V, q, arm_ids, plan.n, plan=plan, batched=False)
-    return arm_ids, top_vals * jnp.float32(scale)
+    if final_exact and (quantized or adaptive):
+        arm_ids, top_vals = _rescore_rows(V, q, arm_ids, plan.n, plan=plan,
+                                          batched=False)
+    else:
+        top_vals = top_vals * jnp.float32(scale)
+    return (arm_ids, top_vals, rounds_used) if adaptive else (arm_ids,
+                                                              top_vals)
 
 
 def bounded_me_blocked(V, q, key, *, K: int = 1, eps: float = 0.1,
                        delta: float = 0.05, value_range: float = 1.0,
                        tile: int = 8, block: int = 512,
                        final_exact: bool = False, use_pallas: bool = False,
-                       precision: str = "fp32",
+                       precision: str = "fp32", adaptive: bool = False,
+                       bound: str = "hoeffding",
                        plan: Optional[BlockedPlan] = None):
     """Top-K MIPS over rows of ``V`` for query ``q`` (single query).
 
@@ -363,20 +495,27 @@ def bounded_me_blocked(V, q, key, *, K: int = 1, eps: float = 0.1,
     ``use_pallas=True`` the entire cascade is one kernel dispatch.
     ``precision='int8'`` samples in int8 under quantization-widened bounds
     (DESIGN.md §10); ``final_exact`` then rescores the winners in fp32.
-    When ``plan`` is given its own precision wins.
+    ``adaptive=True`` certifies early exit at round boundaries under the
+    plan's ``bound`` radius family and returns a 4-tuple
+    ``(ids, scores, rounds_used, plan)`` (DESIGN.md §12);
+    ``adaptive=False`` is bit-identical to not passing it.  When ``plan``
+    is given its own precision/bound win.
     """
     n, N = V.shape
     if plan is None:
         plan = make_plan(n, N, K=K, eps=eps, delta=delta,
                          value_range=value_range, tile=tile, block=block,
-                         precision=precision)
-    ids, scores = _run_blocked(jnp.asarray(V), jnp.asarray(q), key, plan=plan,
-                               final_exact=final_exact, use_pallas=use_pallas)
-    return ids, scores, plan
+                         precision=precision, bound=bound)
+    out = _run_blocked(jnp.asarray(V), jnp.asarray(q), key, plan=plan,
+                       final_exact=final_exact, use_pallas=use_pallas,
+                       adaptive=adaptive)
+    return (*out, plan)
 
 
-@functools.partial(jax.jit, static_argnames=("plan", "final_exact"))
-def _run_batched_fused(V, Q, keys, *, plan: BlockedPlan, final_exact: bool):
+@functools.partial(jax.jit, static_argnames=("plan", "final_exact",
+                                             "adaptive"))
+def _run_batched_fused(V, Q, keys, *, plan: BlockedPlan, final_exact: bool,
+                       adaptive: bool = False):
     """Per-query-key batch as ONE batched kernel dispatch (B in the grid)."""
     C = plan.block
     B = Q.shape[0]
@@ -386,22 +525,31 @@ def _run_batched_fused(V, Q, keys, *, plan: BlockedPlan, final_exact: bool):
     perms = jax.vmap(
         lambda k: jax.random.permutation(k, plan.n_blocks))(keys)
     scale = (plan.n_blocks * C) / plan.N
+    rounds_used = None
     if plan.precision == "int8":
         V8, vscale = quantize_tiles(V4)
         Q8, qscale = quantize_blocks(Qb)
-        ids, vals = _fused_call(V8, Q8, perms, plan=plan,
-                                final_exact=final_exact, batched=True,
-                                vscale=vscale, qscale=qscale)
-        if final_exact:
-            return _rescore_rows(V, Q, ids, plan.n, plan=plan, batched=True)
-        return ids, vals * jnp.float32(scale)
-    ids, vals = _fused_call(V4, Qb, perms, plan=plan,
-                            final_exact=final_exact, batched=True)
-    return ids, vals * jnp.float32(scale)
+        out = _fused_call(V8, Q8, perms, plan=plan,
+                          final_exact=final_exact, batched=True,
+                          vscale=vscale, qscale=qscale, adaptive=adaptive)
+    else:
+        out = _fused_call(V4, Qb, perms, plan=plan,
+                          final_exact=final_exact, batched=True,
+                          adaptive=adaptive)
+    if adaptive:
+        ids, vals, rounds_used = out
+    else:
+        ids, vals = out
+    if final_exact and (plan.precision == "int8" or adaptive):
+        ids, vals = _rescore_rows(V, Q, ids, plan.n, plan=plan, batched=True)
+    else:
+        vals = vals * jnp.float32(scale)
+    return (ids, vals, rounds_used) if adaptive else (ids, vals)
 
 
 def bounded_me_batched(V, Q, keys, *, plan: BlockedPlan,
-                       final_exact: bool = False, use_pallas: bool = False):
+                       final_exact: bool = False, use_pallas: bool = False,
+                       adaptive: bool = False):
     """BoundedME over a batch of queries ``Q`` (B, N) with per-query keys.
 
     Results match a loop of single-query calls with the same keys.  With
@@ -409,22 +557,25 @@ def bounded_me_batched(V, Q, keys, *, plan: BlockedPlan,
     (query axis in the grid); otherwise the scan fallback is vmapped.  For
     the decode serving hot path prefer `bounded_me_decode`, which shares the
     block permutation across the batch so early rounds become dense MXU
-    tile-matmuls even without Pallas.
+    tile-matmuls even without Pallas.  ``adaptive=True`` appends a
+    per-query ``rounds_used (B,)`` output (DESIGN.md §12).
     """
     if use_pallas:
         return _run_batched_fused(jnp.asarray(V), jnp.asarray(Q), keys,
-                                  plan=plan, final_exact=final_exact)
+                                  plan=plan, final_exact=final_exact,
+                                  adaptive=adaptive)
     fn = functools.partial(_run_blocked, plan=plan, final_exact=final_exact,
-                           use_pallas=False)
+                           use_pallas=False, adaptive=adaptive)
     return jax.vmap(fn, in_axes=(None, 0, 0))(jnp.asarray(V), jnp.asarray(Q),
                                               keys)
 
 
 @functools.partial(jax.jit, static_argnames=("plan", "final_exact",
-                                             "use_pallas", "k_out"))
+                                             "use_pallas", "k_out",
+                                             "adaptive"))
 def _run_decode(V, Q, key, n_valid, V8=None, vscale=None, *,
                 plan: BlockedPlan, final_exact: bool,
-                use_pallas: bool, k_out: int):
+                use_pallas: bool, k_out: int, adaptive: bool = False):
     R, C = plan.tile, plan.block
     B = Q.shape[0]
     V, Q = _pad_operands(jnp.asarray(V), jnp.asarray(Q), plan)
@@ -436,26 +587,36 @@ def _run_decode(V, Q, key, n_valid, V8=None, vscale=None, *,
     perm = jax.random.permutation(key, plan.n_blocks)
     scale = (plan.n_blocks * C) / plan.N
     quantized = plan.precision == "int8"
+    track_var = adaptive and plan.schedule.bound == "bernstein"
     if quantized:
         if V8 is None:
             V8, vscale = quantize_tiles(V4)
         Q8, qscale = quantize_blocks(Qb)     # per query: (B, n_blocks)
 
     if use_pallas:
+        rounds_used = None
         perms = jnp.broadcast_to(perm, (B, plan.n_blocks))
         if quantized:
-            ids, vals = _fused_call(V8, Q8, perms, plan=plan,
-                                    final_exact=final_exact, batched=True,
-                                    k_out=k_out, n_valid=n_valid,
-                                    vscale=vscale, qscale=qscale)
-            if final_exact:
-                return _rescore_rows(V, Q, ids, n_valid, plan=plan,
-                                     batched=True)
+            out = _fused_call(V8, Q8, perms, plan=plan,
+                              final_exact=final_exact, batched=True,
+                              k_out=k_out, n_valid=n_valid,
+                              vscale=vscale, qscale=qscale,
+                              adaptive=adaptive)
         else:
-            ids, vals = _fused_call(V4, Qb, perms, plan=plan,
-                                    final_exact=final_exact, batched=True,
-                                    k_out=k_out, n_valid=n_valid)
-        return ids, vals * jnp.float32(scale)
+            out = _fused_call(V4, Qb, perms, plan=plan,
+                              final_exact=final_exact, batched=True,
+                              k_out=k_out, n_valid=n_valid,
+                              adaptive=adaptive)
+        if adaptive:
+            ids, vals, rounds_used = out
+        else:
+            ids, vals = out
+        if final_exact and (quantized or adaptive):
+            ids, vals = _rescore_rows(V, Q, ids, n_valid, plan=plan,
+                                      batched=True)
+        else:
+            vals = vals * jnp.float32(scale)
+        return (ids, vals, rounds_used) if adaptive else (ids, vals)
 
     arm_ids0 = jnp.arange(plan.n_tiles * R).reshape(plan.n_tiles, R)
     valid0 = (arm_ids0 < n_valid).astype(jnp.float32)
@@ -463,10 +624,19 @@ def _run_decode(V, Q, key, n_valid, V8=None, vscale=None, *,
 
     idx = jnp.broadcast_to(jnp.arange(plan.n_tiles), (B, plan.n_tiles))
     sums = jnp.zeros((B, plan.n_tiles, R), dtype=jnp.float32)
+    sums2 = jnp.zeros_like(sums) if track_var else None
     t_prev = 0
     neg = jnp.asarray(-jnp.inf, dtype=jnp.float32)
+    n_rounds = len(plan.schedule.rounds)
+    if adaptive:
+        cert = cert_coeffs(plan.schedule)
+        t_last = plan.schedule.rounds[-1].t_cum if n_rounds else 0
+        active = jnp.ones((B,), bool)
+        t_stop = jnp.full((B,), t_last, jnp.int32)
+        rounds_used = jnp.full((B,), n_rounds, jnp.int32)
+        gate = lambda new, old: jnp.where(active[:, None, None], new, old)
 
-    for rnd in plan.schedule.rounds:
+    for l, rnd in enumerate(plan.schedule.rounds):
         if rnd.t_new > 0:
             cols = jax.lax.slice_in_dim(perm, t_prev, rnd.t_cum)   # (dt,)
             Qsrc = Q8 if quantized else Qb
@@ -484,14 +654,28 @@ def _run_decode(V, Q, key, n_valid, V8=None, vscale=None, *,
                         scl = (vscale[:, col][None, :, None]
                                * qscale[:, col][:, None, None])  # (B, T, 1)
                         part = raw.astype(jnp.float32) * scl
+                        if track_var:
+                            return ((s[0] + part, s[1] + part * part),
+                                    None)
                         return s + part, None
                 else:
                     def dense(s, xs):
                         col, qcol = xs
                         part = jnp.einsum("trc,bc->btr", V4[:, col], qcol,
                                           preferred_element_type=jnp.float32)
+                        if track_var:
+                            return ((s[0] + part, s[1] + part * part),
+                                    None)
                         return s + part, None
-                sums, _ = jax.lax.scan(dense, sums, (cols, qsel))
+                carry = (sums, sums2) if track_var else sums
+                new, _ = jax.lax.scan(dense, carry, (cols, qsel))
+                if track_var:
+                    new, new2 = new
+                    sums2 = gate(new2, sums2)
+                if adaptive:   # certified queries' accumulators stay frozen
+                    sums = gate(new, sums)
+                else:
+                    sums = new
             else:
                 # late rounds: few survivors per query — per-query gather
                 # scans, sequential over the batch to bound the working set
@@ -499,30 +683,53 @@ def _run_decode(V, Q, key, n_valid, V8=None, vscale=None, *,
                     def one(args):
                         idx_i, Q8_i, qs_i = args
                         s0 = jnp.zeros((rnd.n_arms, R), jnp.float32)
+                        s20 = jnp.zeros_like(s0) if track_var else None
                         return _scan_pulls(s0, V8, Q8_i, idx_i, cols,
-                                           vscale, qs_i)
+                                           vscale, qs_i, sums2=s20)
                     parts = jax.lax.map(one, (idx, Q8, qscale))  # (B, T, R)
                 else:
                     def one(args):
                         idx_i, Qb_i = args
                         s0 = jnp.zeros((rnd.n_arms, R), jnp.float32)
-                        return _scan_pulls(s0, V4, Qb_i, idx_i, cols)
+                        s20 = jnp.zeros_like(s0) if track_var else None
+                        return _scan_pulls(s0, V4, Qb_i, idx_i, cols,
+                                           sums2=s20)
                     parts = jax.lax.map(one, (idx, Qb))        # (B, T, R)
-                sums = sums.at[brange, idx].add(parts)
+                if track_var:
+                    parts, parts2 = parts
+                    sums2 = gate(sums2.at[brange, idx].add(parts2), sums2)
+                if adaptive:
+                    sums = gate(sums.at[brange, idx].add(parts), sums)
+                else:
+                    sums = sums.at[brange, idx].add(parts)
         t_prev = rnd.t_cum
+        denom = jnp.float32(t_prev * C)
         means = jnp.take_along_axis(sums, idx[..., None], axis=1)
-        means = means / jnp.float32(t_prev * C)
+        means = means / denom
         valid = valid0[idx]
         tile_score = jnp.where(valid > 0, means, neg).max(axis=-1)  # (B, T)
         _, keep = jax.lax.top_k(tile_score, rnd.n_keep)
         idx = jnp.take_along_axis(idx, keep, axis=1)
+        if adaptive:
+            mu = jnp.take_along_axis(sums, idx[..., None], axis=1) / denom
+            v = (jnp.take_along_axis(sums2, idx[..., None], axis=1)
+                 / (denom * jnp.float32(C)) - mu * mu
+                 if track_var else None)
+            active, rounds_used, t_stop = _cert_update(
+                mu, v, valid0[idx] > 0, cert, l, rnd.t_cum, plan.K,
+                active, rounds_used, t_stop)
 
     valid = valid0[idx]
-    if final_exact and not quantized:
+    if final_exact and not quantized and not adaptive:
         Vfin = V4[idx]                                 # (B, Tf, nb, R, C)
         scores = jnp.einsum("btnrc,bnc->btr", Vfin, Qb,
                             preferred_element_type=jnp.float32)
         scores = scores / jnp.float32(plan.n_blocks * C)
+    elif adaptive:
+        # normalize by each query's ACTUAL pull count (frozen at t_stop)
+        scores = jnp.take_along_axis(sums, idx[..., None], axis=1)
+        scores = scores / (jnp.maximum(t_stop, 1)[:, None, None]
+                           * C).astype(jnp.float32)
     else:
         # the int8 + final_exact rescore runs on the k_out candidates below
         scores = jnp.take_along_axis(sums, idx[..., None], axis=1)
@@ -531,16 +738,21 @@ def _run_decode(V, Q, key, n_valid, V8=None, vscale=None, *,
     top_vals, top_pos = jax.lax.top_k(flat, k_out)
     arm_ids = jnp.take_along_axis(arm_ids0[idx].reshape(B, -1), top_pos,
                                   axis=1)
-    if quantized and final_exact:
-        return _rescore_rows(V, Q, arm_ids, n_valid, plan=plan, batched=True)
-    return arm_ids, top_vals * jnp.float32(scale)
+    if final_exact and (quantized or adaptive):
+        arm_ids, top_vals = _rescore_rows(V, Q, arm_ids, n_valid, plan=plan,
+                                          batched=True)
+    else:
+        top_vals = top_vals * jnp.float32(scale)
+    return (arm_ids, top_vals, rounds_used) if adaptive else (arm_ids,
+                                                              top_vals)
 
 
 def bounded_me_decode(V, Q, key, *, plan: BlockedPlan,
                       final_exact: bool = True,
                       use_pallas: Optional[bool] = None,
                       k_out: Optional[int] = None,
-                      n_valid=None, quantized=None):
+                      n_valid=None, quantized=None,
+                      adaptive: bool = False):
     """Batched-decode BoundedME: one dispatch for a whole (B, N) batch.
 
     The serving hot path (DESIGN.md §3).  All queries share one block
@@ -585,10 +797,22 @@ def bounded_me_decode(V, Q, key, *, plan: BlockedPlan,
         quantized independently.  Queries are always quantized in-jit
         (they arrive per request).
 
+      adaptive: certify early exit per query at round boundaries under the
+        plan's ``bound`` radius family (DESIGN.md §12): a certified
+        query's remaining pulls become masked no-ops and a third output
+        reports its ``rounds_used``.  ``adaptive=False`` (default) is
+        bit-identical to the pre-adaptive decode path.  On the int8 path
+        certification radii carry the schedule's ``quant_err`` bias — the
+        *eps_effective* calibration — so quantization error is still
+        absorbed.
+
     Returns:
       ``(ids (B, k_out) int32, scores (B, k_out) f32)`` sorted by descending
       score.  Entries past the number of real arms (if ``n < k_out``) carry
-      ``-inf`` scores and padding ids.
+      ``-inf`` scores and padding ids.  With ``adaptive=True`` a third
+      element ``rounds_used (B,) int32`` is appended — the per-query count
+      of elimination rounds that actually pulled (the histogram input for
+      `benchmarks/bench_adaptive` and the serve engine's stats).
     """
     if use_pallas is None:
         from repro.kernels import ops as _kops
@@ -606,4 +830,5 @@ def bounded_me_decode(V, Q, key, *, plan: BlockedPlan,
     return _run_decode(jnp.asarray(V), jnp.asarray(Q), key,
                        jnp.asarray(n_valid, jnp.int32), V8, vscale,
                        plan=plan, final_exact=final_exact,
-                       use_pallas=use_pallas, k_out=k_out)
+                       use_pallas=use_pallas, k_out=k_out,
+                       adaptive=adaptive)

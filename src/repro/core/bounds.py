@@ -14,16 +14,24 @@ time, and parameterize the shapes of the jitted TPU program.
 from __future__ import annotations
 
 import math
+from typing import Optional
 
 __all__ = [
     "rho_m",
     "u_term",
     "m_required",
     "deviation_bound",
+    "bernstein_radius",
+    "m_required_eb",
     "hoeffding_required",
     "lil_required",
     "quantization_error",
+    "KAPPA_EB",
 ]
+
+# additive-term constant of the empirical Bernstein–Serfling inequality
+# (Bardenet & Maillard 2015, Theorem 3): kappa = 7/3 + 3/sqrt(2)
+KAPPA_EB = 7.0 / 3.0 + 3.0 / math.sqrt(2.0)
 
 
 def rho_m(m: int, N: int) -> float:
@@ -32,22 +40,34 @@ def rho_m(m: int, N: int) -> float:
     ``rho_m = min{1 - (m-1)/N, (1 - m/N)(1 + 1/m)}``  (Eq. 3 of the paper).
     As ``m → N`` this goes to 0: once the whole list is seen, the empirical
     mean is exact.  The i.i.d. Hoeffding bound corresponds to ``rho_m = 1``.
+
+    Clamped at the boundary: any ``m >= N`` returns exactly 0.0 (the
+    without-replacement variance of a fully observed list is zero), so
+    callers never have to cap ``m`` themselves.
     """
     if m < 1:
         raise ValueError(f"m must be >= 1, got {m}")
     if N <= 1:
         raise ValueError(f"N must be > 1, got {N}")
-    m = min(m, N)
+    if m >= N:
+        return 0.0
     return min(1.0 - (m - 1.0) / N, (1.0 - m / N) * (1.0 + 1.0 / m))
 
 
 def u_term(eps: float, delta: float, value_range: float = 1.0) -> float:
-    """``u = log(1/delta)/2 * (b-a)^2 / eps^2``  (Lemma 1)."""
+    """``u = log(1/delta)/2 * (b-a)^2 / eps^2``  (Lemma 1).
+
+    Returns ``inf`` (instead of raising ``OverflowError``) when the ratio
+    overflows the float range — `m_required` clamps that to full coverage.
+    """
     if not 0.0 < eps:
         raise ValueError(f"eps must be > 0, got {eps}")
     if not 0.0 < delta < 1.0:
         raise ValueError(f"delta must be in (0,1), got {delta}")
-    return 0.5 * math.log(1.0 / delta) * (value_range / eps) ** 2
+    try:
+        return 0.5 * math.log(1.0 / delta) * (value_range / eps) ** 2
+    except OverflowError:
+        return math.inf
 
 
 def m_required(eps: float, delta: float, N: int, value_range: float = 1.0) -> int:
@@ -56,10 +76,19 @@ def m_required(eps: float, delta: float, N: int, value_range: float = 1.0) -> in
     ``m(u) = min{ (u+1)/(1+u/N), (u + u/N)/(1+u/N) }`` (Eq. 4/6), with
     ``u = u_term(eps, delta, value_range)``.  Always ``<= N`` — the defining
     property that makes BoundedME never slower than exhaustive search.
+
+    Edge behavior at full coverage: as ``eps -> 0`` the required ``u``
+    overflows to ``inf`` and the Eq. 4 ratio degenerates to ``inf/inf``
+    (pre-PR-5 this raised from ``ceil(nan)``); any non-finite ``u`` now
+    clamps straight to ``N`` — at ``m = N`` the without-replacement
+    variance is exactly zero (`rho_m` returns 0), so full coverage
+    satisfies every ``eps > 0``.
     """
     if N <= 1:
         return 1
     u = u_term(eps, delta, value_range)
+    if not math.isfinite(u):
+        return N          # eps so small the sample size saturates the list
     if u <= 0.0:
         return 1
     m1 = (u + 1.0) / (1.0 + u / N)
@@ -78,6 +107,70 @@ def deviation_bound(m: int, N: int, delta: float, value_range: float = 1.0) -> f
     if m >= N:
         return 0.0
     return value_range * math.sqrt(rho_m(m, N) * math.log(1.0 / delta) / (2.0 * m))
+
+
+def bernstein_radius(m: int, N: int, delta: float, value_range: float = 1.0,
+                     std: float = 0.0) -> float:
+    """Two-sided empirical Bernstein–Serfling deviation radius.
+
+    Bardenet & Maillard (2015), Theorem 3: when sampling ``m`` of ``N``
+    values without replacement, with probability at least ``1 - delta``
+
+        |mean_hat - mean| <= std_hat sqrt(2 rho_m log(5/delta) / m)
+                             + kappa (b-a) log(5/delta) / m,
+
+    with ``kappa = 7/3 + 3/sqrt(2)`` (`KAPPA_EB`) and ``std_hat`` the
+    *empirical* (population-normalized, i.e. divide-by-m) standard
+    deviation of the observed values.  This is the variance-aware radius
+    family behind ``make_schedule(bound='bernstein')``: on low-variance
+    reward lists the ``sqrt(Vhat)`` term collapses and the radius is
+    dominated by the O(1/m) additive term, far below the Hoeffding radius
+    at the same ``m`` — which is what lets the adaptive cascade certify
+    easy queries rounds earlier (DESIGN.md §12).
+
+    Returns exactly 0.0 for ``m >= N`` (full coverage: the empirical mean
+    is the mean).  ``std`` is the empirical standard deviation observed so
+    far; pass ``value_range / 2`` for the a-priori worst case.
+    """
+    if m < 1:
+        raise ValueError(f"m must be >= 1, got {m}")
+    if not 0.0 < delta < 1.0:
+        raise ValueError(f"delta must be in (0,1), got {delta}")
+    if std < 0.0:
+        raise ValueError(f"std must be >= 0, got {std}")
+    if m >= N:
+        return 0.0
+    lg = math.log(5.0 / delta)
+    return (std * math.sqrt(2.0 * rho_m(m, N) * lg / m)
+            + KAPPA_EB * value_range * lg / m)
+
+
+def m_required_eb(eps: float, delta: float, N: int, value_range: float = 1.0,
+                  std: Optional[float] = None) -> int:
+    """Minimal sample size under the empirical-Bernstein–Serfling radius.
+
+    The smallest ``m`` with ``bernstein_radius(m, N, delta, value_range,
+    std) <= eps``, found by binary search (the radius is nonincreasing in
+    ``m``: both ``rho_m / m`` and ``1/m`` shrink).  ``std`` defaults to the
+    worst case ``value_range / 2``.  Like `m_required` this is clamped to
+    ``[1, N]`` — full coverage (``m = N``, radius exactly 0) satisfies any
+    ``eps > 0``, so the search always terminates and never relies on the
+    caller to cap.
+    """
+    if not 0.0 < eps:
+        raise ValueError(f"eps must be > 0, got {eps}")
+    if N <= 1:
+        return 1
+    if std is None:
+        std = value_range / 2.0
+    lo, hi = 1, N
+    while lo < hi:
+        mid = (lo + hi) // 2
+        if bernstein_radius(mid, N, delta, value_range, std) <= eps:
+            hi = mid
+        else:
+            lo = mid + 1
+    return lo
 
 
 def quantization_error(value_range: float, bits: int = 8) -> float:

@@ -96,7 +96,8 @@ def mips_topk(V, q, K: int = 1, *, method: str = "boundedme",
               value_range: Optional[float] = None,
               key: Optional[jax.Array] = None, tile: int = 8,
               block: int = 512, final_exact: bool = False,
-              use_pallas: bool = False, precision: str = "fp32"):
+              use_pallas: bool = False, precision: str = "fp32",
+              adaptive: bool = False, bound: str = "hoeffding"):
     """Top-K maximum inner product search over the rows of ``V``.
 
     Zero preprocessing: ``V`` can be hot-swapped between calls with no
@@ -127,6 +128,16 @@ def mips_topk(V, q, K: int = 1, *, method: str = "boundedme",
         round on quantized tiles under quantization-widened confidence
         bounds (DESIGN.md §10); combine with ``final_exact`` for fp32-exact
         returned scores.
+      adaptive: certify early exit per query at round boundaries
+        (DESIGN.md §12): easy queries stop pulling as soon as their top-K
+        is certified inside the same (eps, delta) contract.  The default
+        False is bit-identical to the non-adaptive cascade.  This simple
+        API discards the per-query ``rounds_used`` diagnostic — call
+        `bounded_me_blocked`/`bounded_me_decode` directly to observe it.
+      bound: certification radius family, 'hoeffding' (default; reuses
+        the schedule's own events) or 'bernstein' (variance-aware
+        empirical-Bernstein radii; reserves half of each round's delta
+        budget and carries running mean/M2 accumulators).
 
     Returns:
       ``(ids (K,) int32, scores (K,) f32)``; scores estimate (q . v)/N.
@@ -142,11 +153,12 @@ def mips_topk(V, q, K: int = 1, *, method: str = "boundedme",
         key = jax.random.PRNGKey(0)
     if value_range is None:
         value_range = default_value_range(V, q)
-    ids, scores, _ = bounded_me_blocked(
+    out = bounded_me_blocked(
         V, q, key, K=K, eps=eps, delta=delta, value_range=value_range,
         tile=tile, block=block, final_exact=final_exact,
-        use_pallas=use_pallas, precision=precision)
-    return ids, scores
+        use_pallas=use_pallas, precision=precision, adaptive=adaptive,
+        bound=bound)
+    return out[0], out[1]
 
 
 def nns_topk(V, q, K: int = 1, **kw):

@@ -18,7 +18,8 @@ import numpy as np
 from repro.core import bounds
 
 __all__ = ["Round", "Schedule", "FlatSchedule", "make_schedule",
-           "flatten_schedule", "SLOT_MASK", "END_BIT", "PULL_BIT"]
+           "flatten_schedule", "cert_coeffs", "pulls_through_round",
+           "SLOT_MASK", "END_BIT", "PULL_BIT"]
 
 # bit-packing of the per-step word handed to the fused kernel (SMEM is the
 # scarcest resource on-chip: one int32 per step instead of a wide row)
@@ -52,6 +53,7 @@ class Schedule:
     value_range: float
     rounds: Tuple[Round, ...]  # tuple => hashable => usable as a jit static
     quant_err: float = 0.0     # per-reward bias absorbed by the bounds (§10)
+    bound: str = "hoeffding"   # radius family: 'hoeffding' | 'bernstein'
 
     @property
     def total_pulls(self) -> int:
@@ -206,8 +208,87 @@ def flatten_schedule(sched: Schedule, *,
         t_final=t_final, n_final=n_final)
 
 
+def cert_coeffs(sched: Schedule) -> np.ndarray:
+    """Per-round certification-radius coefficients for adaptive early exit.
+
+    Returns ``(n_rounds + 1, 2) float32`` rows ``(a_l, b_l)`` (one pad row
+    so the array is never empty, mirroring `FlatSchedule.packed`): at the
+    end of round ``l`` every surviving arm's confidence radius on the
+    block-mean reward scale is
+
+        r_i = a_l * sqrt(max(Vhat_i, 0)) + b_l
+
+    with ``Vhat_i`` the arm's empirical (divide-by-m) reward variance.
+    The kernel and both jnp fallbacks evaluate exactly this expression at
+    round boundaries and certify a query — freezing its remaining pulls —
+    when the top-K arms' lower bounds clear every other survivor's upper
+    bound (DESIGN.md §12).
+
+    Budget accounting (why early exit preserves the union bound):
+
+      * ``bound='hoeffding'`` — ``a_l = 0`` and ``b_l`` is the
+        Hoeffding–Serfling `deviation_bound` at the round's cumulative
+        pulls and the *same* per-arm-per-side budget `_round_pulls` sized
+        the round with: certification reads the very events the schedule
+        already paid for, so it adds zero failure probability.
+      * ``bound='bernstein'`` — ``(a_l, b_l)`` come from the two-sided
+        empirical Bernstein–Serfling radius (`bounds.bernstein_radius`) at
+        the per-arm budget `_round_pulls` reserved for it (the sizing half
+        ran at ``delta_eff / 2``).
+
+    Both families add the schedule's ``quant_err`` to ``b_l`` — on the
+    int8 path the certification radii absorb the deterministic
+    quantization bias exactly as the sizing radii do (the *eps_effective*
+    calibration of DESIGN.md §10), and the width is computed on the
+    quantized reward range ``value_range + 2 quant_err``.
+    """
+    rng_w = sched.value_range + 2.0 * sched.quant_err
+    rows = []
+    for r in sched.rounds:
+        gap = r.n_arms - sched.K
+        # delta_eff is the PER-SIDE sizing budget of `_round_pulls`: the
+        # per-arm round budget is beta = 2 * delta_eff.  Accounting:
+        #   hoeffding  — sizing spends beta (two sides at delta_eff each)
+        #                and certification re-reads those same events;
+        #   bernstein  — sizing ran at delta_eff/2 per side (beta/2 total),
+        #                so the two-sided EB event below may spend the
+        #                remaining beta/2 = delta_eff.  Totals stay <= beta.
+        delta_eff = r.delta_l * (gap // 2 + 1) / (2.0 * gap)
+        m = r.t_cum
+        if sched.bound == "bernstein":
+            if m >= sched.N:
+                a = b = 0.0
+            else:
+                lg = math.log(5.0 / delta_eff)
+                a = math.sqrt(2.0 * bounds.rho_m(m, sched.N) * lg / m)
+                b = bounds.KAPPA_EB * rng_w * lg / m
+        else:
+            a = 0.0
+            b = bounds.deviation_bound(m, sched.N, delta_eff, rng_w)
+        rows.append((a, b + sched.quant_err))
+    rows.append((0.0, 0.0))                      # pad row, never indexed
+    return np.asarray(rows, np.float32)
+
+
+def pulls_through_round(sched: Schedule) -> np.ndarray:
+    """Cumulative *executed* pull count after each possible exit round.
+
+    ``out[r]`` for ``r in [0, n_rounds]`` is the total number of
+    (arm, block) pulls the cascade has issued once ``rounds_used == r``
+    rounds have run: ``out[0] = 0`` and ``out[n_rounds] ==
+    Schedule.total_pulls``.  This is the lookup `benchmarks/bench_adaptive`
+    and the serve engine use to convert a per-query ``rounds_used`` into
+    the paper's sample-complexity metric.
+    """
+    out = [0]
+    for r in sched.rounds:
+        out.append(out[-1] + r.n_arms * r.t_new)
+    return np.asarray(out, np.int64)
+
+
 def _round_pulls(n_l: int, K: int, eps_l: float, delta_l: float, N: int,
-                 value_range: float, quant_err: float = 0.0) -> int:
+                 value_range: float, quant_err: float = 0.0,
+                 bound: str = "hoeffding") -> int:
     """t_l of Algorithm 1, line 7 (expanded per the Lemma 4 proof).
 
     Each arm needs an (eps_l/2, delta'_l/2)-accurate estimate where
@@ -222,11 +303,20 @@ def _round_pulls(n_l: int, K: int, eps_l: float, delta_l: float, N: int,
     the bias (``eps_l/2 <= quant_err``) are driven to full coverage
     (``t_l = N``), leaving only the bias; `Schedule.eps_effective` accounts
     for those.
+
+    With ``bound='bernstein'`` (DESIGN.md §12) half of each arm's round
+    budget is reserved for the per-round empirical-Bernstein certification
+    events of the adaptive early-exit path, so the sizing confidence drops
+    to ``delta_eff / 2`` (slightly more pulls per round); the Hoeffding
+    default reuses the sizing events for certification and reserves
+    nothing.
     """
     gap = n_l - K
     if gap <= 0:
         return 0
     delta_eff = delta_l * (gap // 2 + 1) / (2.0 * gap)
+    if bound == "bernstein":
+        delta_eff /= 2.0   # the other half funds the EB certification
     dev = eps_l / 2.0 - quant_err
     if dev <= 0.0:
         return N          # sampling cannot absorb the bias: full coverage
@@ -237,7 +327,8 @@ def _round_pulls(n_l: int, K: int, eps_l: float, delta_l: float, N: int,
 
 def make_schedule(n: int, N: int, K: int = 1, eps: float = 0.1,
                   delta: float = 0.05, value_range: float = 1.0,
-                  quant_err: float = 0.0) -> Schedule:
+                  quant_err: float = 0.0,
+                  bound: str = "hoeffding") -> Schedule:
     """Build the static round plan of Algorithm 1.
 
     eps_1 = eps/4, delta_1 = delta/2; eps_{l+1} = 3/4 eps_l,
@@ -246,17 +337,35 @@ def make_schedule(n: int, N: int, K: int = 1, eps: float = 0.1,
     ``quant_err`` widens every round's pull count so a per-reward bias of
     that size (low-precision sampling arithmetic) is absorbed into the
     confidence radii (see `_round_pulls` and DESIGN.md §10).
+
+    ``bound`` selects the radius family the adaptive early-exit path uses
+    to certify queries at round boundaries (`cert_coeffs`, DESIGN.md §12):
+
+      * 'hoeffding' (default) — certification reuses the schedule's own
+        Hoeffding–Serfling sizing events at no extra delta cost; the round
+        plan is *identical* to the non-adaptive one.
+      * 'bernstein' — certification uses the variance-aware empirical
+        Bernstein–Serfling radius (`bounds.bernstein_radius`, with running
+        mean/M2 accumulators carried per surviving tile at run time);
+        those are new events, so each round's sizing confidence is halved
+        to reserve budget for them (slightly more pulls per round, much
+        earlier certification on low-variance data).
     """
     if n < 1 or N < 1:
         raise ValueError(f"need n,N >= 1, got n={n} N={N}")
     if quant_err < 0.0:
         raise ValueError(f"quant_err must be >= 0, got {quant_err}")
+    if bound not in ("hoeffding", "bernstein"):
+        raise ValueError(f"unknown bound {bound!r} "
+                         f"(expected 'hoeffding' or 'bernstein')")
     if K >= n:
-        return Schedule(n, N, K, eps, delta, value_range, (), quant_err)
+        return Schedule(n, N, K, eps, delta, value_range, (), quant_err,
+                        bound)
     rounds: List[Round] = []
     n_l, eps_l, delta_l, t_prev, l = n, eps / 4.0, delta / 2.0, 0, 1
     while n_l > K:
-        t_l = _round_pulls(n_l, K, eps_l, delta_l, N, value_range, quant_err)
+        t_l = _round_pulls(n_l, K, eps_l, delta_l, N, value_range, quant_err,
+                           bound)
         t_l = min(N, max(t_l, t_prev))  # nondecreasing, saturates at N
         n_keep = K + (n_l - K) // 2
         rounds.append(Round(index=l, n_arms=n_l, n_keep=n_keep, t_cum=t_l,
@@ -264,4 +373,4 @@ def make_schedule(n: int, N: int, K: int = 1, eps: float = 0.1,
         n_l, t_prev, l = n_keep, t_l, l + 1
         eps_l, delta_l = 0.75 * eps_l, 0.5 * delta_l
     return Schedule(n, N, K, eps, delta, value_range, tuple(rounds),
-                    quant_err)
+                    quant_err, bound)

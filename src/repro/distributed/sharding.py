@@ -149,7 +149,8 @@ def named_sharding(*logical_axes: Optional[str]) -> NamedSharding:
 def make_shard_plan(n: int, N: int, n_shards: int, *, K: int = 1,
                     eps: float = 0.05, delta: float = 0.05,
                     value_range: float = 4.0, tile: int = 8,
-                    block: int = 512, precision: str = "fp32"):
+                    block: int = 512, precision: str = "fp32",
+                    bound: str = "hoeffding"):
     """Shard-local BlockedPlan + padding geometry for an arm-sharded table.
 
     Splits an (n, N) item matrix into ``n_shards`` row shards of
@@ -170,7 +171,11 @@ def make_shard_plan(n: int, N: int, n_shards: int, *, K: int = 1,
       non-returned survivor);
     * ``precision='int8'`` calibrates each shard's plan with
       quantization-widened bounds (DESIGN.md §10); quantization itself is
-      shard-local (per-tile scales over the shard's own rows).
+      shard-local (per-tile scales over the shard's own rows);
+    * ``bound`` selects the certification radius family of the adaptive
+      early-exit path (DESIGN.md §12) — certification is *shard-local*
+      (each shard certifies its own top-K at its own ``delta / n_shards``
+      budget), so the exact cross-shard merge argument is untouched.
 
     Returns ``(plan, n_local, n_pad, k_out)``.
     """
@@ -185,7 +190,7 @@ def make_shard_plan(n: int, N: int, n_shards: int, *, K: int = 1,
     K_local = min(K, n_local)
     plan = make_plan(n_local, N, K=K_local, eps=eps, delta=delta / n_shards,
                      value_range=value_range, tile=tile, block=block,
-                     precision=precision)
+                     precision=precision, bound=bound)
     k_out = max(K_local, min(K_local + 1, plan.k_out_cap, n_local))
     return plan, n_local, n_pad, k_out
 
@@ -198,6 +203,8 @@ def sharded_bounded_me_decode(table, Q, key, *, mesh: Mesh, K: int = 1,
                               block: int = 512, final_exact: bool = True,
                               use_pallas: Optional[bool] = None,
                               precision: str = "fp32",
+                              adaptive: bool = False,
+                              bound: str = "hoeffding",
                               return_candidates: bool = False):
     """Multi-device batched-decode MIPS: per-shard fused cascade + exact merge.
 
@@ -251,6 +258,14 @@ def sharded_bounded_me_decode(table, Q, key, *, mesh: Mesh, K: int = 1,
         (DESIGN.md §10); candidates entering the merge are still fp32
         exact (coverage completion at fp32, or the int8 path's fp32
         candidate rescore), so the exact-merge argument is untouched.
+      adaptive / bound: per-query adaptive early exit (DESIGN.md §12),
+        certified *shard-locally*: each shard freezes its own cascade as
+        soon as its local top-K is certified under its ``delta / shards``
+        budget and the ``bound`` radius family; merge scores stay exact
+        (the adaptive path always rescores its candidates in fp32), so
+        the exact cross-shard merge — and with it the global
+        (eps, delta) argument — is untouched.  ``adaptive=False`` is
+        bit-identical to the pre-adaptive path.
       return_candidates: also return the pre-merge per-shard candidate
         sets — a dict of ``ids/scores/gaps`` arrays shaped
         (B, shards, k_out) — for diagnostics and tests.
@@ -260,8 +275,10 @@ def sharded_bounded_me_decode(table, Q, key, *, mesh: Mesh, K: int = 1,
       are exact mean products (q . v)/N; ``gaps[b, j]`` is candidate j's
       margin over its *source shard's* best non-returned survivor (+inf
       when the shard had no spare survivor), a per-candidate certificate of
-      how decisively it won shard-locally.  With ``return_candidates=True``
-      a 4th element (the candidates dict) is appended.
+      how decisively it won shard-locally.  With ``adaptive=True`` a
+      ``rounds_used (B, shards) int32`` element is appended (each shard's
+      per-query exit round); with ``return_candidates=True`` the
+      candidates dict is appended last.
     """
     from repro.core.boundedme_jax import bounded_me_decode
 
@@ -276,7 +293,7 @@ def sharded_bounded_me_decode(table, Q, key, *, mesh: Mesh, K: int = 1,
     n_shards = mesh.shape[model_axis]
     plan, n_local, n_pad, k_out = make_shard_plan(
         n, N, n_shards, K=K, eps=eps, delta=delta, value_range=value_range,
-        tile=tile, block=block, precision=precision)
+        tile=tile, block=block, precision=precision, bound=bound)
     if n_pad:
         table = jnp.pad(table, ((0, n_pad), (0, 0)))
     key = jnp.asarray(key)
@@ -299,10 +316,15 @@ def sharded_bounded_me_decode(table, Q, key, *, mesh: Mesh, K: int = 1,
         # never evict a true winner from the survivor set, so no
         # shard-local K inflation is needed
         n_valid_l = nv_l[0]
-        ids, scores = bounded_me_decode(
+        out = bounded_me_decode(
             table_l, Q_l, key_l, plan=plan, final_exact=final_exact,
             use_pallas=use_pallas, k_out=k_out,
-            n_valid=n_valid_l)                            # (B_loc, k_out)
+            n_valid=n_valid_l, adaptive=adaptive)         # (B_loc, k_out)
+        if adaptive:
+            ids, scores, rounds_l = out
+        else:
+            ids, scores = out
+            rounds_l = jnp.zeros((ids.shape[0],), jnp.int32)
         if not final_exact:
             # exact cross-shard rescore: merge decisions must compare exact
             # inner products, never block-mean estimates
@@ -325,6 +347,7 @@ def sharded_bounded_me_decode(table, Q, key, *, mesh: Mesh, K: int = 1,
         all_ids = jax.lax.all_gather(gids, model_axis, axis=1)
         all_sc = jax.lax.all_gather(scores, model_axis, axis=1)
         all_gap = jax.lax.all_gather(gaps, model_axis, axis=1)
+        all_rnd = jax.lax.all_gather(rounds_l, model_axis, axis=1)
         cands = (all_ids, all_sc, all_gap)                 # (B_loc, S, k_out)
         flat_ids = all_ids.reshape(B_loc, -1)
         flat_sc = all_sc.reshape(B_loc, -1)
@@ -332,7 +355,7 @@ def sharded_bounded_me_decode(table, Q, key, *, mesh: Mesh, K: int = 1,
         vals, pos = jax.lax.top_k(flat_sc, K)
         top_ids = jnp.take_along_axis(flat_ids, pos, axis=1)
         top_gaps = jnp.take_along_axis(flat_gap, pos, axis=1)
-        return top_ids, vals, top_gaps, cands
+        return top_ids, vals, top_gaps, all_rnd, cands
 
     kspec = P(*([None] * key.ndim))
     out2 = P(batch_axes, None)
@@ -341,9 +364,11 @@ def sharded_bounded_me_decode(table, Q, key, *, mesh: Mesh, K: int = 1,
         local, mesh=mesh,
         in_specs=(P(model_axis, None), P(batch_axes, None), kspec,
                   P(model_axis)),
-        out_specs=(out2, out2, out2, (out3, out3, out3)))
-    ids, scores, gaps, cands = fn(table, Q, key, nv_vec)
+        out_specs=(out2, out2, out2, out2, (out3, out3, out3)))
+    ids, scores, gaps, rounds, cands = fn(table, Q, key, nv_vec)
+    out = [ids, scores, gaps]
+    if adaptive:
+        out.append(rounds)     # (B, shards): each shard's per-query exit
     if return_candidates:
-        return ids, scores, gaps, {
-            "ids": cands[0], "scores": cands[1], "gaps": cands[2]}
-    return ids, scores, gaps
+        out.append({"ids": cands[0], "scores": cands[1], "gaps": cands[2]})
+    return tuple(out)

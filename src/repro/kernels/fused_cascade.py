@@ -27,6 +27,9 @@ at each query's first step.
 Scalar-prefetch operands (SMEM):
   slotcode (S,)           packed slot | PULL_BIT | END_BIT per step
   rounds_meta (rounds+1,3) (t_cum, n_surv, n_keep) consumed at end steps
+  cert (rounds+1, 2)      adaptive only: per-round certification-radius
+                          coefficients (a_l, b_l) from
+                          `repro.core.schedule.cert_coeffs` (DESIGN.md §12)
   cols (S,) / (B, S)      column-block id pulled per step (perm[bpos])
   nvalid (1,)             rows >= nvalid are masked out of every ranking
                           (tile padding AND caller padding, e.g. a padded
@@ -42,6 +45,20 @@ the scalar ``vscale[tile, col] * qscale[col]`` before entering the same f32
 accumulator; elimination, survivor bookkeeping and extraction are unchanged.
 The widened confidence radii that absorb the quantization bias live in the
 schedule, not here (`make_schedule(quant_err=...)`).
+
+Adaptive early exit (DESIGN.md §12): with ``cert`` the kernel keeps a
+per-query ``active`` lane in SMEM next to the existing ``n_valid``
+plumbing.  After every round-end step it evaluates the certification
+predicate over the post-elimination survivors' rows — each row's radius is
+``a_l sqrt(max(Vhat, 0)) + b_l`` on the block-mean scale, with ``Vhat``
+from a second running-M2 accumulator when the schedule's bound family is
+'bernstein' — and if the top-``k_cert`` rows' lower bounds clear every
+other survivor's upper bound, the query's remaining pull steps (tile DMA +
+accumulate + prefetch) become masked no-ops.  Eliminations keep running on
+the frozen accumulator (every survivor froze at the same pull count, so
+scheduled-denominator means are a positive rescale of the true means and
+every later ranking is unchanged), the final extraction normalizes by the
+*actual* pull count, and a third output reports per-query ``rounds_used``.
 """
 
 from __future__ import annotations
@@ -63,24 +80,48 @@ def _round_up(x: int, m: int) -> int:
 
 
 def _make_kernel(*, n_arms, R, C, K, n_tiles, t_final, n_final, S, Pw, B,
-                 quantized=False):
+                 quantized=False, adaptive=False, track_var=False,
+                 k_cert=1, n_rounds=0, Pc=0):
     """Build the kernel body.  B is None for the single-query variant.
 
     With ``quantized`` the tensor-operand list grows by (vscale, qscale)
     and every pull dequantizes its int32 tile-dot before accumulating.
+    With ``adaptive`` the scalar-prefetch list grows by the per-round
+    ``cert`` coefficients, the outputs by ``rounds_used``, and the scratch
+    by the active/t_stop lanes plus the certification work buffers
+    (``track_var`` additionally carries the M2 accumulator for the
+    variance-aware 'bernstein' radii); ``k_cert`` is the *contract* top-K
+    the predicate certifies (K above is the extraction width ``k_out``).
     """
     batched = B is not None
 
-    def kernel(code_ref, rmeta_ref, cols_ref, nv_ref, V_ref, q_ref, *rest):
-        if quantized:
-            (vs_ref, qs_ref, ids_ref, vals_ref, acc, vbuf, surv, tmp,
-             scorebuf, rnd, sem) = rest
+    def kernel(code_ref, rmeta_ref, *more):
+        if adaptive:
+            cert_ref, cols_ref, nv_ref, V_ref, q_ref, *rest = more
         else:
-            (ids_ref, vals_ref, acc, vbuf, surv, tmp, scorebuf, rnd,
-             sem) = rest
+            cols_ref, nv_ref, V_ref, q_ref, *rest = more
+            cert_ref = None
+        if quantized:
+            vs_ref, qs_ref, *rest = rest
+        else:
             vs_ref = qs_ref = None
+        ids_ref, vals_ref, *rest = rest
+        if adaptive:
+            rused_ref, *rest = rest
+        acc, *rest = rest
+        if track_var:
+            acc2, *rest = rest
+        else:
+            acc2 = None
+        vbuf, surv, tmp, scorebuf, rnd, *rest = rest
+        if adaptive:
+            active, tstop, minlb, bufM, bufU, bufL, sem = rest
+        else:
+            (sem,) = rest
+            active = tstop = minlb = bufM = bufU = bufL = None
         # constants must be materialized inside the traced body
         _NEG = jnp.float32(-jnp.inf)
+        _NAN = jnp.float32(jnp.nan)
         denom_final = jnp.float32(max(1, t_final) * C)
         if batched:
             b, i = pl.program_id(0), pl.program_id(1)
@@ -93,11 +134,19 @@ def _make_kernel(*, n_arms, R, C, K, n_tiles, t_final, n_final, S, Pw, B,
         col = cols_ref[b, i] if batched else cols_ref[i]
         dslot = jax.lax.rem(i, 2)
         colid = jax.lax.broadcasted_iota(jnp.int32, (1, Pw), 1)
+        if adaptive:
+            colid_c = jax.lax.broadcasted_iota(jnp.int32, (1, Pc), 1)
 
         @pl.when(i == 0)
         def _init():  # per-query state (re-entered at each b in the batch)
             acc[:] = jnp.zeros_like(acc)
             rnd[0] = 0
+            if adaptive:
+                active[0] = 1
+                tstop[0] = t_final
+                rused_ref[0, 0] = n_rounds
+            if track_var:
+                acc2[:] = jnp.zeros_like(acc2)
 
             def w(j, _):
                 surv[j] = j
@@ -112,7 +161,12 @@ def _make_kernel(*, n_arms, R, C, K, n_tiles, t_final, n_final, S, Pw, B,
             pltpu.make_async_copy(V_ref.at[tile, col], vbuf.at[0],
                                   sem.at[0]).start()
 
-        @pl.when(pull)
+        # a certified (inactive) query's remaining pulls are masked no-ops:
+        # no DMA wait, no accumulate — and _warm below starts no DMA for it
+        do_pull = (jnp.logical_and(pull, active[0] == 1) if adaptive
+                   else pull)
+
+        @pl.when(do_pull)
         def _pull():
             tile = surv[slot]
             pltpu.make_async_copy(V_ref.at[tile, col], vbuf.at[dslot],
@@ -132,6 +186,9 @@ def _make_kernel(*, n_arms, R, C, K, n_tiles, t_final, n_final, S, Pw, B,
                 part = jnp.dot(vbuf[dslot], qcol[0],
                                preferred_element_type=jnp.float32)  # (R,)
             acc[pl.ds(tile, 1), :] = acc[pl.ds(tile, 1), :] + part[None]
+            if track_var:
+                acc2[pl.ds(tile, 1), :] = (acc2[pl.ds(tile, 1), :]
+                                           + (part * part)[None])
 
         @pl.when(end)
         def _eliminate():
@@ -151,11 +208,16 @@ def _make_kernel(*, n_arms, R, C, K, n_tiles, t_final, n_final, S, Pw, B,
             scorebuf[:] = jnp.where(colid < T, scorebuf[:], _NEG)
 
             def extract(j, _):  # descending, lowest-index tie-break
+                # extracted slots become NaN: they can never tie with the
+                # running max again (an -inf marker re-extracts the same
+                # slot once the max itself reaches -inf, duplicating
+                # survivors whenever fewer than `keep` tiles hold a valid
+                # row — exactly `lax.top_k`'s distinct-index semantics)
                 sc = scorebuf[:]
-                m = jnp.max(sc)
+                m = jnp.max(jnp.where(jnp.isnan(sc), _NEG, sc))
                 arg = jnp.min(jnp.where(sc == m, colid, Pw))
                 tmp[j] = surv[arg]
-                scorebuf[0, arg] = _NEG
+                scorebuf[0, arg] = _NAN
                 return 0
             jax.lax.fori_loop(0, keep, extract, 0)
 
@@ -163,14 +225,70 @@ def _make_kernel(*, n_arms, R, C, K, n_tiles, t_final, n_final, S, Pw, B,
                 surv[j] = tmp[j]
                 return 0
             jax.lax.fori_loop(0, keep, writeback, 0)
+
+            if adaptive:
+                # certification over the post-elimination survivors' rows
+                # (DESIGN.md §12): radius_i = a sqrt(max(Vhat_i, 0)) + b,
+                # fire when the top-k_cert rows' lower bounds clear every
+                # other valid row's upper bound
+                @pl.when(active[0] == 1)
+                def _certify():
+                    a = cert_ref[r, 0]
+                    bconst = cert_ref[r, 1]
+                    denomC = denom * jnp.float32(C)
+                    bufM[:] = jnp.full((1, Pc), _NEG, jnp.float32)
+                    bufU[:] = jnp.full((1, Pc), _NEG, jnp.float32)
+                    bufL[:] = jnp.full((1, Pc), _NEG, jnp.float32)
+
+                    def fill(s, _):
+                        tile = surv[s]
+                        mu = acc[pl.ds(tile, 1), :] / denom     # (1, R)
+                        if track_var:
+                            v = (acc2[pl.ds(tile, 1), :] / denomC
+                                 - mu * mu)
+                            rad = a * jnp.sqrt(jnp.maximum(v, 0.0)) + bconst
+                        else:
+                            rad = jnp.full_like(mu, bconst)
+                        rowids = tile * R + jax.lax.broadcasted_iota(
+                            jnp.int32, (1, R), 1)
+                        valid = rowids < nv_ref[0]
+                        bufM[0, pl.ds(s * R, R)] = jnp.where(
+                            valid, mu, _NEG)[0]
+                        bufU[0, pl.ds(s * R, R)] = jnp.where(
+                            valid, mu + rad, _NEG)[0]
+                        bufL[0, pl.ds(s * R, R)] = jnp.where(
+                            valid, mu - rad, _NEG)[0]
+                        return 0
+                    jax.lax.fori_loop(0, keep, fill, 0)
+                    minlb[0] = jnp.float32(jnp.inf)
+
+                    def take(j, _):  # top-k_cert rows by mean, as extract
+                        sc = bufM[:]
+                        m = jnp.max(jnp.where(jnp.isnan(sc), _NEG, sc))
+                        arg = jnp.min(jnp.where(sc == m, colid_c, Pc))
+                        minlb[0] = jnp.minimum(minlb[0], bufL[0, arg])
+                        bufU[0, arg] = _NEG
+                        bufM[0, arg] = _NAN     # distinct rows, as extract
+                        return 0
+                    jax.lax.fori_loop(0, k_cert, take, 0)
+
+                    @pl.when(minlb[0] >= jnp.max(bufU[:]))
+                    def _fire():
+                        active[0] = 0
+                        tstop[0] = rmeta_ref[r, 0]
+                        rused_ref[0, 0] = r + 1
+
             rnd[0] = r + 1
 
         # prefetch the next step's tile (post-elimination survivor indices)
         @pl.when(i < S - 1)
         def _warm():
             ncode = code_ref[i + 1]
+            npull = (ncode & PULL_BIT) != 0
+            if adaptive:      # frozen queries prefetch nothing
+                npull = jnp.logical_and(npull, active[0] == 1)
 
-            @pl.when((ncode & PULL_BIT) != 0)
+            @pl.when(npull)
             def _():
                 ntile = surv[ncode & SLOT_MASK]
                 ncol = cols_ref[b, i + 1] if batched else cols_ref[i + 1]
@@ -191,9 +309,14 @@ def _make_kernel(*, n_arms, R, C, K, n_tiles, t_final, n_final, S, Pw, B,
 
         @pl.when(i == S - 1)
         def _finalize():
+            if adaptive:   # normalize by the query's ACTUAL pull count
+                denom_f = (jnp.maximum(tstop[0], 1) * C).astype(jnp.float32)
+            else:
+                denom_f = denom_final
+
             def score_body(s, _):
                 tile = surv[s]
-                means = acc[pl.ds(tile, 1), :] / denom_final    # (1, R)
+                means = acc[pl.ds(tile, 1), :] / denom_f        # (1, R)
                 rowids = tile * R + jax.lax.broadcasted_iota(
                     jnp.int32, (1, R), 1)
                 scorebuf[0, pl.ds(s * R, R)] = jnp.where(
@@ -204,36 +327,52 @@ def _make_kernel(*, n_arms, R, C, K, n_tiles, t_final, n_final, S, Pw, B,
 
             def extract(j, _):
                 sc = scorebuf[:]
-                m = jnp.max(sc)
+                m = jnp.max(jnp.where(jnp.isnan(sc), _NEG, sc))
                 arg = jnp.min(jnp.where(sc == m, colid, Pw))
                 s_idx = arg // R
                 ids_ref[0, j] = surv[s_idx] * R + (arg - s_idx * R)
                 vals_ref[0, j] = m
-                scorebuf[0, arg] = _NEG
+                scorebuf[0, arg] = _NAN     # distinct candidates, see above
                 return 0
             jax.lax.fori_loop(0, K, extract, 0)
 
     return kernel
 
 
-def _scratch(n_tiles, R, C, Pw, vdtype):
-    return [
+def _scratch(n_tiles, R, C, Pw, vdtype, *, adaptive=False, track_var=False,
+             Pc=0):
+    base = [
         pltpu.VMEM((n_tiles, R), jnp.float32),   # accumulator, all rounds
         pltpu.VMEM((2, R, C), vdtype),           # double-buffered tile DMA
         pltpu.SMEM((n_tiles,), jnp.int32),       # survivor tile ids
         pltpu.SMEM((n_tiles,), jnp.int32),       # elimination staging
         pltpu.VMEM((1, Pw), jnp.float32),        # score workspace
         pltpu.SMEM((1,), jnp.int32),             # round cursor
-        pltpu.SemaphoreType.DMA((2,)),
     ]
+    if track_var:
+        # running M2 accumulator feeding the 'bernstein' radii — inserted
+        # BEFORE the adaptive lanes so the kernel's unpack order holds
+        base.insert(1, pltpu.VMEM((n_tiles, R), jnp.float32))
+    if adaptive:
+        base += [
+            pltpu.SMEM((1,), jnp.int32),         # active lane
+            pltpu.SMEM((1,), jnp.int32),         # t_stop (actual pulls)
+            pltpu.SMEM((1,), jnp.float32),       # min lower bound
+            pltpu.VMEM((1, Pc), jnp.float32),    # cert means workspace
+            pltpu.VMEM((1, Pc), jnp.float32),    # cert upper bounds
+            pltpu.VMEM((1, Pc), jnp.float32),    # cert lower bounds
+        ]
+    return base + [pltpu.SemaphoreType.DMA((2,))]
 
 
 @functools.partial(jax.jit, static_argnames=("n_arms", "K", "t_final",
-                                             "n_final", "k_out", "interpret"))
+                                             "n_final", "k_out", "k_cert",
+                                             "track_var", "interpret"))
 def fused_cascade_pallas(V4, qb, slotcode, rounds_meta, cols, *, n_arms: int,
                          K: int, t_final: int, n_final: int,
                          k_out: int = None, n_valid=None,
-                         vscale=None, qscale=None,
+                         vscale=None, qscale=None, cert=None,
+                         k_cert: int = 1, track_var: bool = False,
                          interpret: bool = False):
     """Single-query fused cascade: ONE pallas_call for all rounds.
 
@@ -252,20 +391,30 @@ def fused_cascade_pallas(V4, qb, slotcode, rounds_meta, cols, *, n_arms: int,
     vscale/qscale: per-tile table scales (n_tiles, n_blocks) and per-block
     query scales (n_blocks,) for int8 operands (`repro.core.quantize`,
     DESIGN.md §10); both or neither must be given.
-    Returns (ids (k_out,) int32, vals (k_out,) f32) — vals are unscaled block
-    means, identical to the unfused path before its padding rescale.
+    cert: (rounds+1, 2) f32 per-round certification coefficients
+    (`repro.core.schedule.cert_coeffs`) — enables adaptive early exit
+    (DESIGN.md §12); ``k_cert`` is the contract top-K the predicate
+    certifies and ``track_var`` carries the running M2 accumulator the
+    'bernstein' radii read.
+    Returns (ids (k_out,) int32, vals (k_out,) f32) — vals are unscaled
+    block means, identical to the unfused path before its padding rescale.
+    With ``cert`` a third output ``rounds_used`` (int32 scalar) reports
+    how many elimination rounds actually pulled before certification.
     """
     n_tiles, n_blocks, R, C = V4.shape
     quantized = vscale is not None
     if quantized != (qscale is not None):
         raise ValueError("vscale and qscale must be passed together")
+    adaptive = cert is not None
     if k_out is None:
         k_out = K
     K = k_out          # K's only kernel role is the extraction/output width
     if n_valid is None:
         n_valid = n_arms
     S = slotcode.shape[0]
+    n_rounds = rounds_meta.shape[0] - 1
     Pw = _round_up(max(n_tiles, n_final * R, 1), 128)
+    Pc = _round_up(n_tiles * R, 128) if adaptive else 0
     in_specs = [
         pl.BlockSpec(memory_space=pltpu.ANY),     # V4: manual tile DMA
         pl.BlockSpec(memory_space=pltpu.VMEM),    # qb: fully resident
@@ -278,37 +427,56 @@ def fused_cascade_pallas(V4, qb, slotcode, rounds_meta, cols, *, n_arms: int,
         ]
         operands += [jnp.asarray(vscale, jnp.float32),
                      jnp.asarray(qscale, jnp.float32).reshape(1, n_blocks)]
+    out_specs = [
+        pl.BlockSpec((1, K), lambda i, *_: (0, 0)),
+        pl.BlockSpec((1, K), lambda i, *_: (0, 0)),
+    ]
+    out_shape = [jax.ShapeDtypeStruct((1, K), jnp.int32),
+                 jax.ShapeDtypeStruct((1, K), jnp.float32)]
+    if adaptive:
+        out_specs.append(pl.BlockSpec((1, 1), lambda i, *_: (0, 0)))
+        out_shape.append(jax.ShapeDtypeStruct((1, 1), jnp.int32))
+    scalars = [slotcode.astype(jnp.int32), rounds_meta.astype(jnp.int32)]
+    if adaptive:
+        scalars.append(jnp.asarray(cert, jnp.float32))
+    scalars += [cols.astype(jnp.int32),
+                jnp.asarray(n_valid, jnp.int32).reshape(1)]
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=4,
+        num_scalar_prefetch=len(scalars),
         grid=(S,),
         in_specs=in_specs,
-        out_specs=(
-            pl.BlockSpec((1, K), lambda i, *_: (0, 0)),
-            pl.BlockSpec((1, K), lambda i, *_: (0, 0)),
-        ),
-        scratch_shapes=_scratch(n_tiles, R, C, Pw, V4.dtype),
+        out_specs=tuple(out_specs),
+        scratch_shapes=_scratch(n_tiles, R, C, Pw, V4.dtype,
+                                adaptive=adaptive, track_var=track_var,
+                                Pc=Pc),
     )
     kernel = _make_kernel(n_arms=n_arms, R=R, C=C, K=K, n_tiles=n_tiles,
                           t_final=t_final, n_final=n_final, S=S, Pw=Pw,
-                          B=None, quantized=quantized)
-    ids, vals = pl.pallas_call(
+                          B=None, quantized=quantized, adaptive=adaptive,
+                          track_var=track_var, k_cert=k_cert,
+                          n_rounds=n_rounds, Pc=Pc)
+    out = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
-        out_shape=(jax.ShapeDtypeStruct((1, K), jnp.int32),
-                   jax.ShapeDtypeStruct((1, K), jnp.float32)),
+        out_shape=tuple(out_shape),
         interpret=interpret,
-    )(slotcode.astype(jnp.int32), rounds_meta.astype(jnp.int32),
-      cols.astype(jnp.int32), jnp.asarray(n_valid, jnp.int32).reshape(1),
-      *operands)
+    )(*scalars, *operands)
+    if adaptive:
+        ids, vals, rused = out
+        return ids[0], vals[0], rused[0, 0]
+    ids, vals = out
     return ids[0], vals[0]
 
 
 @functools.partial(jax.jit, static_argnames=("n_arms", "K", "t_final",
-                                             "n_final", "k_out", "interpret"))
+                                             "n_final", "k_out", "k_cert",
+                                             "track_var", "interpret"))
 def fused_cascade_batched_pallas(V4, Qb, slotcode, rounds_meta, cols, *,
                                  n_arms: int, K: int, t_final: int,
                                  n_final: int, k_out: int = None,
                                  n_valid=None, vscale=None, qscale=None,
+                                 cert=None, k_cert: int = 1,
+                                 track_var: bool = False,
                                  interpret: bool = False):
     """Batched fused cascade: the query axis rides in the grid.
 
@@ -319,19 +487,27 @@ def fused_cascade_batched_pallas(V4, Qb, slotcode, rounds_meta, cols, *,
     ``n_arms``, may be traced) masks caller-padding rows exactly as in
     `fused_cascade_pallas`.  For int8 operands pass ``vscale`` (n_tiles,
     n_blocks) and per-query ``qscale`` (B, n_blocks) (DESIGN.md §10).
-    Returns (ids (B, k_out) int32, vals (B, k_out) f32), unscaled.
+    ``cert``/``k_cert``/``track_var`` enable per-query adaptive early exit
+    exactly as in `fused_cascade_pallas` — each query carries its own
+    ``active`` lane, so one certified query's no-op steps never disturb
+    its batchmates.
+    Returns (ids (B, k_out) int32, vals (B, k_out) f32), unscaled; with
+    ``cert`` also ``rounds_used (B,) int32``.
     """
     n_tiles, n_blocks, R, C = V4.shape
     quantized = vscale is not None
     if quantized != (qscale is not None):
         raise ValueError("vscale and qscale must be passed together")
+    adaptive = cert is not None
     if k_out is None:
         k_out = K
     K = k_out
     if n_valid is None:
         n_valid = n_arms
     B, S = cols.shape
+    n_rounds = rounds_meta.shape[0] - 1
     Pw = _round_up(max(n_tiles, n_final * R, 1), 128)
+    Pc = _round_up(n_tiles * R, 128) if adaptive else 0
     in_specs = [
         pl.BlockSpec(memory_space=pltpu.ANY),
         pl.BlockSpec((1, n_blocks, C), lambda b, i, *_: (b, 0, 0)),
@@ -344,25 +520,41 @@ def fused_cascade_batched_pallas(V4, Qb, slotcode, rounds_meta, cols, *,
         ]
         operands += [jnp.asarray(vscale, jnp.float32),
                      jnp.asarray(qscale, jnp.float32)]
+    out_specs = [
+        pl.BlockSpec((1, K), lambda b, i, *_: (b, 0)),
+        pl.BlockSpec((1, K), lambda b, i, *_: (b, 0)),
+    ]
+    out_shape = [jax.ShapeDtypeStruct((B, K), jnp.int32),
+                 jax.ShapeDtypeStruct((B, K), jnp.float32)]
+    if adaptive:
+        out_specs.append(pl.BlockSpec((1, 1), lambda b, i, *_: (b, 0)))
+        out_shape.append(jax.ShapeDtypeStruct((B, 1), jnp.int32))
+    scalars = [slotcode.astype(jnp.int32), rounds_meta.astype(jnp.int32)]
+    if adaptive:
+        scalars.append(jnp.asarray(cert, jnp.float32))
+    scalars += [cols.astype(jnp.int32),
+                jnp.asarray(n_valid, jnp.int32).reshape(1)]
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=4,
+        num_scalar_prefetch=len(scalars),
         grid=(B, S),
         in_specs=in_specs,
-        out_specs=(
-            pl.BlockSpec((1, K), lambda b, i, *_: (b, 0)),
-            pl.BlockSpec((1, K), lambda b, i, *_: (b, 0)),
-        ),
-        scratch_shapes=_scratch(n_tiles, R, C, Pw, V4.dtype),
+        out_specs=tuple(out_specs),
+        scratch_shapes=_scratch(n_tiles, R, C, Pw, V4.dtype,
+                                adaptive=adaptive, track_var=track_var,
+                                Pc=Pc),
     )
     kernel = _make_kernel(n_arms=n_arms, R=R, C=C, K=K, n_tiles=n_tiles,
                           t_final=t_final, n_final=n_final, S=S, Pw=Pw, B=B,
-                          quantized=quantized)
-    return pl.pallas_call(
+                          quantized=quantized, adaptive=adaptive,
+                          track_var=track_var, k_cert=k_cert,
+                          n_rounds=n_rounds, Pc=Pc)
+    out = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
-        out_shape=(jax.ShapeDtypeStruct((B, K), jnp.int32),
-                   jax.ShapeDtypeStruct((B, K), jnp.float32)),
+        out_shape=tuple(out_shape),
         interpret=interpret,
-    )(slotcode.astype(jnp.int32), rounds_meta.astype(jnp.int32),
-      cols.astype(jnp.int32), jnp.asarray(n_valid, jnp.int32).reshape(1),
-      *operands)
+    )(*scalars, *operands)
+    if adaptive:
+        ids, vals, rused = out
+        return ids, vals, rused[:, 0]
+    return out

@@ -63,7 +63,8 @@ def gather_block_dot(V4, idx, cols, qsel):
 
 def fused_cascade(V4, qb, slotcode, rounds_meta, cols, *, n_arms, K,
                   t_final, n_final, k_out=None, n_valid=None,
-                  vscale=None, qscale=None):
+                  vscale=None, qscale=None, cert=None, k_cert=1,
+                  track_var=False):
     """Whole-cascade single dispatch: see `repro.kernels.fused_cascade`.
 
     Beyond the schedule operands: ``k_out`` (default K) widens the
@@ -73,28 +74,37 @@ def fused_cascade(V4, qb, slotcode, rounds_meta, cols, *, n_arms, K,
     may be a traced scalar) masks rows >= n_valid out of every tile-max
     and extraction so caller padding can never win (DESIGN.md §7);
     ``vscale``/``qscale`` are the int8 dequantization scales of the
-    quantized sampling path (DESIGN.md §10, `repro.core.quantize`).
+    quantized sampling path (DESIGN.md §10, `repro.core.quantize`);
+    ``cert``/``k_cert``/``track_var`` (per-round radius coefficients from
+    `repro.core.schedule.cert_coeffs`, the certified top-K, and the
+    M2-accumulator switch) enable adaptive early exit and append a
+    ``rounds_used`` output (DESIGN.md §12).
     """
     return fused_cascade_pallas(V4, qb, slotcode, rounds_meta, cols,
                                 n_arms=n_arms, K=K, t_final=t_final,
                                 n_final=n_final, k_out=k_out,
                                 n_valid=n_valid, vscale=vscale,
-                                qscale=qscale, interpret=not on_tpu())
+                                qscale=qscale, cert=cert, k_cert=k_cert,
+                                track_var=track_var,
+                                interpret=not on_tpu())
 
 
 def fused_cascade_batched(V4, Qb, slotcode, rounds_meta, cols, *, n_arms, K,
                           t_final, n_final, k_out=None, n_valid=None,
-                          vscale=None, qscale=None):
+                          vscale=None, qscale=None, cert=None, k_cert=1,
+                          track_var=False):
     """Batched whole-cascade dispatch: query axis in the kernel grid.
 
-    ``k_out``/``n_valid``/``vscale``/``qscale`` behave exactly as in
-    :func:`fused_cascade` (``qscale`` is per query here, (B, n_blocks)).
+    ``k_out``/``n_valid``/``vscale``/``qscale``/``cert`` behave exactly as
+    in :func:`fused_cascade` (``qscale`` is per query here, (B, n_blocks),
+    and the adaptive ``rounds_used`` output is per query, (B,)).
     """
     return fused_cascade_batched_pallas(V4, Qb, slotcode, rounds_meta, cols,
                                         n_arms=n_arms, K=K, t_final=t_final,
                                         n_final=n_final, k_out=k_out,
                                         n_valid=n_valid, vscale=vscale,
-                                        qscale=qscale,
+                                        qscale=qscale, cert=cert,
+                                        k_cert=k_cert, track_var=track_var,
                                         interpret=not on_tpu())
 
 

@@ -29,7 +29,8 @@ def blocked_matvec_ref(W: jnp.ndarray, q: jnp.ndarray) -> jnp.ndarray:
 
 
 def fused_cascade_ref(V4, qb, flat, cols, *, n_arms: int, K: int,
-                      vscale=None, qscale=None):
+                      vscale=None, qscale=None, n_valid=None,
+                      cert=None, k_cert=1):
     """Step-accurate numpy simulation of the fused cascade kernel.
 
     Walks the same FlatSchedule the kernel prefetches, one grid step at a
@@ -43,9 +44,18 @@ def fused_cascade_ref(V4, qb, flat, cols, *, n_arms: int, K: int,
     With ``vscale (n_tiles, n_blocks)`` / ``qscale (n_blocks,)`` the
     operands are int8 and each pull is an exact integer dot dequantized by
     the scalar scale product (the quantized path, DESIGN.md §10).
+    ``n_valid`` (default ``n_arms``) masks rows at or past it out of every
+    ranking, like the kernel's scalar-prefetch bound.  With ``cert``
+    (the (rounds+1, 2) coefficient array of
+    `repro.core.schedule.cert_coeffs`) the adaptive early exit
+    (DESIGN.md §12) is simulated too — running M2 accumulator,
+    per-round-end certification of the top-``k_cert`` rows, frozen pulls,
+    actual-pull-count normalization — and the return grows a third
+    element ``rounds_used``.
     Returns (ids (K,), vals (K,)) — vals unscaled, like the kernel.
     """
     quantized = vscale is not None
+    adaptive = cert is not None
     if quantized:
         V4 = np.asarray(V4, np.int32)   # exact integer tile-dots
         qb = np.asarray(qb, np.int32)
@@ -56,23 +66,40 @@ def fused_cascade_ref(V4, qb, flat, cols, *, n_arms: int, K: int,
         qb = np.asarray(qb, np.float32)
     cols = np.asarray(cols)
     n_tiles, n_blocks, R, C = V4.shape
+    if n_valid is None:
+        n_valid = n_arms
     acc = np.zeros((n_tiles, R), np.float32)
+    acc2 = np.zeros((n_tiles, R), np.float32)
     surv = np.arange(n_tiles)
+    if adaptive:
+        cert = np.asarray(cert, np.float32)
+        n_rounds = int(np.sum(np.asarray(flat.is_end)))
+        active, t_stop, rounds_used, rnd = True, flat.t_final, n_rounds, 0
 
     def masked_means(tile, denom):
         rowids = tile * R + np.arange(R)
-        return np.where(rowids < n_arms, acc[tile] / denom, -np.inf)
+        return np.where(rowids < n_valid, acc[tile] / denom, -np.inf)
+
+    def take_max(buf):
+        """Kernel-exact extraction step: max over non-extracted entries,
+        lowest-index tie-break; extracted slots are NaN so they can never
+        tie again (lax.top_k's distinct-index semantics)."""
+        m = np.max(np.where(np.isnan(buf), -np.inf, buf))
+        a = int(np.argmax(buf == m))
+        return a, np.float32(m)
 
     for i in range(flat.n_steps):
-        if flat.is_pull[i]:
+        if flat.is_pull[i] and (not adaptive or active):
             tile = surv[flat.slot[i]]
             col = int(cols[i])
             if quantized:
                 raw = V4[tile, col] @ qb[col]               # exact int32
                 s = np.float32(vscale[tile, col]) * np.float32(qscale[col])
-                acc[tile] = acc[tile] + raw.astype(np.float32) * s
+                part = raw.astype(np.float32) * s
             else:
-                acc[tile] = acc[tile] + V4[tile, col] @ qb[col]
+                part = V4[tile, col] @ qb[col]
+            acc[tile] = acc[tile] + part
+            acc2[tile] = acc2[tile] + part * part
         if flat.is_end[i]:
             T, keep = int(flat.n_surv[i]), int(flat.n_keep[i])
             denom = np.float32(int(flat.t_cum[i]) * C)
@@ -80,19 +107,54 @@ def fused_cascade_ref(V4, qb, flat, cols, *, n_arms: int, K: int,
                                for s in range(T)], np.float32)
             new = []
             for _ in range(keep):
-                a = int(np.argmax(scores))      # first max == lowest index
+                a, _m = take_max(scores)        # first max == lowest index
                 new.append(surv[a])
-                scores[a] = -np.inf
+                scores[a] = np.nan
             surv = np.asarray(new)
+            if adaptive and active:
+                a_l, b_l = np.float32(cert[rnd, 0]), np.float32(cert[rnd, 1])
+                denomC = np.float32(denom * np.float32(C))
+                bufM, bufU, bufL = [], [], []
+                for s in range(keep):
+                    tile = surv[s]
+                    mu = (acc[tile] / denom).astype(np.float32)
+                    if a_l != 0.0:
+                        v = (acc2[tile] / denomC - mu * mu).astype(
+                            np.float32)
+                        rad = a_l * np.sqrt(np.maximum(v, np.float32(0.0))
+                                            ) + b_l
+                    else:
+                        rad = np.full_like(mu, b_l)
+                    valid = tile * R + np.arange(R) < n_valid
+                    bufM.append(np.where(valid, mu, -np.inf))
+                    bufU.append(np.where(valid, mu + rad, -np.inf))
+                    bufL.append(np.where(valid, mu - rad, -np.inf))
+                bufM = np.concatenate(bufM).astype(np.float32)
+                bufU = np.concatenate(bufU).astype(np.float32)
+                bufL = np.concatenate(bufL).astype(np.float32)
+                minlb = np.inf
+                for _ in range(k_cert):
+                    a, _m = take_max(bufM)      # lowest-index tie-break
+                    minlb = min(minlb, bufL[a])
+                    bufU[a] = -np.inf
+                    bufM[a] = np.nan
+                if minlb >= bufU.max():
+                    active = False
+                    t_stop = int(flat.t_cum[i])
+                    rounds_used = rnd + 1
+            if adaptive:
+                rnd += 1
 
-    denom = np.float32(max(1, flat.t_final) * C)
+    t_fin = t_stop if adaptive else flat.t_final
+    denom = np.float32(max(1, t_fin) * C)
     flat_scores = np.concatenate([masked_means(surv[s], denom)
                                   for s in range(flat.n_final)])
     ids, vals = [], []
     for _ in range(K):
-        a = int(np.argmax(flat_scores))
+        a, m = take_max(flat_scores)
         s, r = divmod(a, R)
         ids.append(surv[s] * R + r)
-        vals.append(flat_scores[a])
-        flat_scores[a] = -np.inf
-    return np.asarray(ids, np.int32), np.asarray(vals, np.float32)
+        vals.append(m)
+        flat_scores[a] = np.nan
+    out = (np.asarray(ids, np.int32), np.asarray(vals, np.float32))
+    return (*out, rounds_used) if adaptive else out

@@ -144,6 +144,16 @@ class MIPSServeEngine:
     stat is the operator's check that the widened (eps, delta) calibration
     holds on real traffic.
 
+    ``adaptive=True`` (DESIGN.md §12) lets every query in a flush certify
+    early exit at round boundaries under the ``bound`` radius family
+    ('hoeffding' reuses the schedule's events; 'bernstein' is
+    variance-aware): easy queries stop pulling rounds early inside the
+    same (eps, delta) contract, and `stats()["adaptive"]` exports the
+    per-query ``rounds_used`` histogram plus the mean executed-pull
+    fraction.  Works on every path — single-device, sharded
+    (shard-local certification), and store-backed including the int8
+    shadow (certification radii carry the quantization bias).
+
     **Live corpora** (DESIGN.md §11): ``table`` may be a
     `repro.store.DynamicTableStore` (or `ShardedTableStore` for
     multi-device serving) instead of a static array.  The engine then
@@ -176,6 +186,7 @@ class MIPSServeEngine:
                  recall_sample_rate: float = 0.0,
                  use_pallas: Optional[bool] = None,
                  precision: str = "fp32", range_slack: float = 1.0,
+                 adaptive: bool = False, bound: str = "hoeffding",
                  seed: int = 0):
         from repro.core.mips import table_abs_max
         from repro.store import DynamicTableStore, ShardedTableStore
@@ -225,6 +236,8 @@ class MIPSServeEngine:
         self._eps, self._delta = float(eps), float(delta)
         self._tile, self._block = int(tile), min(int(block), N)
         self._precision = precision
+        self._adaptive = bool(adaptive)
+        self._bound = bound
         self._n_valid = n_valid
         self._use_shadow = (self._store is not None and mesh is None
                             and self._store.precision == "int8")
@@ -258,6 +271,7 @@ class MIPSServeEngine:
         self._table_np = None   # host copy, materialized only for recall
         self._lat: List[float] = []
         self._recalls: List[float] = []
+        self._rounds: List[int] = []   # adaptive: per-query exit rounds
         self.n_requests = 0
         self.n_cache_hits = 0
         self.n_batches = 0
@@ -284,46 +298,50 @@ class MIPSServeEngine:
         K, eps, delta = self.K, self._eps, self._delta
         tile, block = self._tile, self._block
         precision, use_pallas = self._precision, self._use_pallas
+        adaptive, bound = self._adaptive, self._bound
         if mesh is not None:
             from repro.distributed.sharding import (make_shard_plan,
                                                     sharded_bounded_me_decode)
             self.plan, self._n_local, self._n_pad, _ = make_shard_plan(
                 self.n, self.N, mesh.shape[model_axis], K=K, eps=eps,
                 delta=delta, value_range=value_range, tile=tile, block=block,
-                precision=precision)
+                precision=precision, bound=bound)
 
             def _flush_fn(tbl, Qbuf, key, nv):
-                ids, scores, _ = sharded_bounded_me_decode(
+                out = sharded_bounded_me_decode(
                     tbl, Qbuf, key, mesh=mesh, K=K, model_axis=model_axis,
                     n_valid=nv, eps=eps, delta=delta,
                     value_range=value_range, tile=tile, block=block,
                     final_exact=True, use_pallas=use_pallas,
-                    precision=precision)
-                return ids, scores
+                    precision=precision, adaptive=adaptive, bound=bound)
+                # rounds_used is (B, shards) when adaptive, else absent
+                return out[0], out[1], (out[3] if adaptive else None)
 
             donate = 1
         else:
             plan = make_plan(self.n, self.N, K=K, eps=eps, delta=delta,
                              value_range=value_range, tile=tile,
-                             block=block, precision=precision)
+                             block=block, precision=precision, bound=bound)
             self.plan = plan
             if self._use_shadow:
                 # the store maintains the int8 shadow incrementally; the
                 # flush consumes it instead of re-quantizing the table
                 def _flush_fn(tbl, V8, vscale, Qbuf, key, nv):
-                    return bounded_me_decode(
+                    out = bounded_me_decode(
                         tbl, Qbuf, key, plan=plan, final_exact=True,
                         use_pallas=use_pallas, n_valid=nv,
-                        quantized=(V8, vscale))
+                        quantized=(V8, vscale), adaptive=adaptive)
+                    return (out if adaptive else (*out, None))
 
                 donate = 3
             else:
                 def _flush_fn(tbl, Qbuf, key, nv):
                     # padding/dead rows are masked inside the cascade, so
                     # they can never occupy the returned top-K slots
-                    return bounded_me_decode(
+                    out = bounded_me_decode(
                         tbl, Qbuf, key, plan=plan, final_exact=True,
-                        use_pallas=use_pallas, n_valid=nv)
+                        use_pallas=use_pallas, n_valid=nv, adaptive=adaptive)
+                    return (out if adaptive else (*out, None))
 
                 donate = 1
 
@@ -498,11 +516,17 @@ class MIPSServeEngine:
             # CPU backends warn that donation is unimplemented; harmless
             warnings.filterwarnings("ignore",
                                     message=".*[Dd]onat.*")
-            ids, scores = self._fn(*self._flush_args(jnp.asarray(Qbuf), key))
+            ids, scores, rounds = self._fn(
+                *self._flush_args(jnp.asarray(Qbuf), key))
             jax.block_until_ready(scores)
         dt = time.perf_counter() - t0
         ids = np.asarray(ids)[:len(batch)]
         scores = np.asarray(scores)[:len(batch)]
+        if rounds is not None:
+            # (B,) single-device, (B, shards) sharded: histogram every
+            # shard's exit round for the real (non-padding) batch rows
+            self._rounds.extend(
+                np.asarray(rounds)[:len(batch)].reshape(-1).tolist())
         self.n_batches += 1
         self._occupancy.append(len(batch))
         done = []
@@ -529,6 +553,8 @@ class MIPSServeEngine:
             self._occupancy = self._occupancy[-10_000:]
         if len(self._recalls) > 100_000:
             self._recalls = self._recalls[-10_000:]
+        if len(self._rounds) > 100_000:
+            self._rounds = self._rounds[-10_000:]
         return done, dt
 
     def _recall_of(self, q: np.ndarray, got_slots: np.ndarray) -> float:
@@ -548,6 +574,29 @@ class MIPSServeEngine:
         return len(set(exact.tolist()) & set(got_slots.tolist())) / self.K
 
     # ---- observability --------------------------------------------------
+
+    def _adaptive_stats(self) -> dict:
+        """Early-exit telemetry: rounds_used histogram + mean pull frac."""
+        out = {"enabled": self._adaptive, "bound": self._bound}
+        if not self._adaptive:
+            return out
+        from repro.core.schedule import pulls_through_round
+        hist: Dict[int, int] = {}
+        for r in self._rounds:
+            hist[int(r)] = hist.get(int(r), 0) + 1
+        pulls = pulls_through_round(self.plan.schedule)
+        total = max(1, int(pulls[-1]))
+        samples = max(1, len(self._rounds))
+        mean_pulls = sum(int(pulls[min(r, len(pulls) - 1)]) * c
+                         for r, c in hist.items()) / samples
+        out.update({
+            "samples": len(self._rounds),
+            "rounds_hist": {str(k): v for k, v in sorted(hist.items())},
+            "mean_rounds": (float(np.mean(self._rounds))
+                            if self._rounds else 0.0),
+            "mean_pull_frac": mean_pulls / total,
+        })
+        return out
 
     def stats(self) -> dict:
         """Per-request latency/recall counters as a plain dict.
@@ -580,6 +629,7 @@ class MIPSServeEngine:
                                 if self._recalls else float("nan"))},
             "plan": {"rounds": len(self.plan.schedule.rounds),
                      "pull_speedup": self.plan.schedule.speedup},
+            "adaptive": self._adaptive_stats(),
             "updates": {
                 "applied": self.n_updates,
                 "update_flushes": self.n_update_flushes,
@@ -659,7 +709,8 @@ def _run_loop(args) -> None:
             store, K=args.topk, eps=args.eps, delta=args.delta,
             batch_size=args.batch, deadline_ms=args.deadline_ms,
             mesh=mesh, recall_sample_rate=args.recall_rate,
-            cache_entries=args.cache_entries, precision=args.precision)
+            cache_entries=args.cache_entries, precision=args.precision,
+            adaptive=args.adaptive, bound=args.bound)
         if args.churn_rate > 0:
             crng = np.random.default_rng(1)
             scale = float(np.abs(table).max())
@@ -683,7 +734,8 @@ def _run_loop(args) -> None:
             batch_size=args.batch, deadline_ms=args.deadline_ms,
             block=block, n_valid=cfg.vocab, mesh=mesh,
             recall_sample_rate=args.recall_rate,
-            cache_entries=args.cache_entries, precision=args.precision)
+            cache_entries=args.cache_entries, precision=args.precision,
+            adaptive=args.adaptive, bound=args.bound)
     print(f"[serve] loop: table=({engine.n},{engine.N}) K={args.topk} "
           f"eps={args.eps} batch={args.batch} "
           f"deadline={args.deadline_ms}ms "
@@ -691,6 +743,7 @@ def _run_loop(args) -> None:
           f"dynamic={bool(args.dynamic)} churn={args.churn_rate} "
           f"rounds={len(engine.plan.schedule.rounds)} "
           f"precision={engine.plan.precision} "
+          f"adaptive={args.adaptive} bound={args.bound} "
           f"eps_eff={engine.plan.eps_effective:.4f} "
           f"pull_speedup={engine.plan.schedule.speedup:.2f}x")
     rng = np.random.default_rng(0)
@@ -784,6 +837,14 @@ def main():
                     choices=["fp32", "int8"],
                     help="sampling arithmetic of the cascade "
                          "(int8 = quantized pulls, widened bounds)")
+    ap.add_argument("--adaptive", action="store_true",
+                    help="certify per-query early exit at round "
+                         "boundaries (DESIGN.md §12); easy queries stop "
+                         "pulling inside the same (eps, delta) contract")
+    ap.add_argument("--bound", default="hoeffding",
+                    choices=["hoeffding", "bernstein"],
+                    help="certification radius family for --adaptive "
+                         "(bernstein = variance-aware, more pulls/round)")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--tokens", type=int, default=32)

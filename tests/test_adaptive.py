@@ -1,0 +1,352 @@
+"""Adaptive early-exit cascade (ISSUE 5 tentpole, DESIGN.md §12).
+
+Covers the acceptance criteria that need to run from a clean checkout:
+``adaptive=False`` bit-identity with the pre-adaptive paths, bitwise
+kernel/fallback parity with ``adaptive=True`` (fp32 and int8, hoeffding and
+bernstein), actual early exit with correct results on easy instances, the
+adversarial near-tie regression (a too-eager certification predicate must
+not fire before the schedule's certified round), and the serve-engine /
+sharded plumbing.
+"""
+
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.boundedme_jax import (bounded_me_batched, bounded_me_blocked,
+                                      bounded_me_decode, make_plan)
+from repro.core.schedule import cert_coeffs, pulls_through_round
+
+
+def _data(n, N, seed=0):
+    rng = np.random.default_rng(seed)
+    return (rng.normal(size=(n, N)).astype(np.float32),
+            rng.normal(size=N).astype(np.float32))
+
+
+class TestAdaptiveOffBitIdentity:
+    """adaptive=False must be bit-identical to not passing the kwarg at
+    all — on the kernel and both fallbacks, fp32 and int8."""
+
+    @pytest.mark.parametrize("precision", ["fp32", "int8"])
+    @pytest.mark.parametrize("use_pallas", [False, True])
+    def test_decode_off_is_bit_identical(self, precision, use_pallas):
+        V, q = _data(192, 768, seed=3)
+        Q = np.stack([q, -q, 0.25 * q])
+        plan = make_plan(192, 768, K=2, eps=0.2, delta=0.1, value_range=8.0,
+                         block=96, precision=precision)
+        key = jax.random.PRNGKey(11)
+        for fe in (False, True):
+            i0, s0 = bounded_me_decode(V, Q, key, plan=plan, final_exact=fe,
+                                       use_pallas=use_pallas)
+            i1, s1 = bounded_me_decode(V, Q, key, plan=plan, final_exact=fe,
+                                       use_pallas=use_pallas, adaptive=False)
+            np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
+            np.testing.assert_array_equal(np.asarray(s0), np.asarray(s1))
+
+    def test_default_bound_leaves_schedule_unchanged(self):
+        """bound='hoeffding' must not perturb the static round plan (the
+        adaptive=False bit-identity rests on this)."""
+        a = make_plan(512, 4096, K=3, eps=0.1, delta=0.05, value_range=4.0)
+        b = make_plan(512, 4096, K=3, eps=0.1, delta=0.05, value_range=4.0,
+                      bound="hoeffding")
+        assert a.schedule == b.schedule
+        c = make_plan(512, 4096, K=3, eps=0.1, delta=0.05, value_range=4.0,
+                      bound="bernstein")
+        # bernstein reserves certification budget: never fewer pulls
+        assert c.schedule.total_pulls >= a.schedule.total_pulls
+
+    def test_blocked_off_is_bit_identical(self):
+        V, q = _data(123, 300, seed=5)
+        kw = dict(K=3, eps=0.25, delta=0.1, value_range=8.0, block=64)
+        for use_pallas in (False, True):
+            i0, s0, _ = bounded_me_blocked(V, q, jax.random.PRNGKey(7),
+                                           use_pallas=use_pallas, **kw)
+            i1, s1, _ = bounded_me_blocked(V, q, jax.random.PRNGKey(7),
+                                           use_pallas=use_pallas,
+                                           adaptive=False, **kw)
+            np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
+            np.testing.assert_array_equal(np.asarray(s0), np.asarray(s1))
+
+
+class TestAdaptiveParity:
+    """Kernel (interpret) == jnp fallback, bitwise, with adaptive=True."""
+
+    @pytest.mark.parametrize("precision", ["fp32", "int8"])
+    @pytest.mark.parametrize("bound", ["hoeffding", "bernstein"])
+    def test_decode_kernel_matches_fallback(self, precision, bound):
+        V, q = _data(200, 1000, seed=1)
+        Q = np.stack([q, -q, 0.5 * q])
+        plan = make_plan(200, 1000, K=3, eps=0.15, delta=0.1,
+                         value_range=8.0, block=256, precision=precision,
+                         bound=bound)
+        key = jax.random.PRNGKey(5)
+        for fe in (False, True):
+            ia, sa, ra = bounded_me_decode(V, Q, key, plan=plan,
+                                           final_exact=fe, use_pallas=False,
+                                           adaptive=True, k_out=4)
+            ik, sk, rk = bounded_me_decode(V, Q, key, plan=plan,
+                                           final_exact=fe, use_pallas=True,
+                                           adaptive=True, k_out=4)
+            np.testing.assert_array_equal(np.asarray(ia), np.asarray(ik))
+            np.testing.assert_array_equal(np.asarray(sa), np.asarray(sk))
+            np.testing.assert_array_equal(np.asarray(ra), np.asarray(rk))
+
+    def test_batched_fused_matches_single_loop(self):
+        V, q = _data(160, 640, seed=9)
+        Q = np.stack([q, -q])
+        plan = make_plan(160, 640, K=2, eps=0.2, delta=0.1, value_range=8.0,
+                         block=64, bound="bernstein")
+        keys = jax.random.split(jax.random.PRNGKey(0), 2)
+        ib, sb, rb = bounded_me_batched(V, Q, keys, plan=plan,
+                                        adaptive=True, use_pallas=True)
+        for b in range(2):
+            iu, su, ru, _ = bounded_me_blocked(V, Q[b], keys[b], plan=plan,
+                                               adaptive=True,
+                                               use_pallas=True)
+            np.testing.assert_array_equal(np.asarray(ib[b]), np.asarray(iu))
+            np.testing.assert_array_equal(np.asarray(sb[b]), np.asarray(su))
+            assert int(rb[b]) == int(ru)
+
+    def test_adaptive_final_exact_scores_are_exact(self):
+        """Early exit must not leak estimate scores through final_exact."""
+        V, q = _data(200, 1000, seed=2)
+        Q = np.stack([q, 0.3 * q])
+        for precision in ("fp32", "int8"):
+            plan = make_plan(200, 1000, K=3, eps=0.2, delta=0.1,
+                             value_range=8.0, block=256, precision=precision)
+            ids, scores, _ = bounded_me_decode(
+                V, Q, jax.random.PRNGKey(1), plan=plan, final_exact=True,
+                use_pallas=False, adaptive=True)
+            for b in range(2):
+                for i, s in zip(np.asarray(ids)[b], np.asarray(scores)[b]):
+                    assert abs(s - float(V[i] @ Q[b]) / 1000.0) < 1e-5
+
+
+class TestEarlyExit:
+    """Non-saturated schedules (many coordinate blocks, eps matched to the
+    effective range) where radii shrink gradually across rounds — the
+    regime where adaptivity can actually save pulls."""
+
+    N, n, block = 32768, 256, 64         # 512 blocks, 32 arm tiles
+    eps, vr = 1.6, 8.0
+
+    def _easy_instance(self, seed=0):
+        """Huge top-1 margin (planted self-similar row): certifies early."""
+        rng = np.random.default_rng(seed)
+        V = rng.normal(size=(self.n, self.N)).astype(np.float32)
+        q = rng.normal(size=self.N).astype(np.float32)
+        V[7] = q                 # score ~ |q|^2/N ~ 1 vs noise ~ 1/sqrt(N)
+        return V, q
+
+    def test_easy_instance_exits_early_and_stays_correct(self):
+        V, q = self._easy_instance()
+        plan = make_plan(self.n, self.N, K=1, eps=self.eps, delta=0.05,
+                         value_range=self.vr, block=self.block)
+        n_rounds = len(plan.schedule.rounds)
+        assert n_rounds >= 4
+        # genuinely non-saturated: the last round still samples
+        assert plan.schedule.rounds[-1].t_cum < plan.n_blocks
+        ids, _, rounds, _ = bounded_me_blocked(
+            V, q, jax.random.PRNGKey(0), plan=plan, adaptive=True,
+            final_exact=True, use_pallas=False)
+        assert int(np.asarray(ids)[0]) == 7
+        assert int(rounds) < n_rounds          # actually exited early
+        # the exit translates into a real pull saving (>= 30%)
+        pulls = pulls_through_round(plan.schedule)
+        assert pulls[int(rounds)] < 0.7 * pulls[-1]
+
+    def test_hard_instance_runs_full_schedule_and_matches_nonadaptive(self):
+        """No certification => rounds_used == n_rounds and outputs equal
+        the non-adaptive ones bitwise (the frozen path is never taken)."""
+        rng = np.random.default_rng(4)
+        V = rng.normal(size=(self.n, self.N)).astype(np.float32)
+        q = rng.normal(size=self.N).astype(np.float32)
+        # top-2 near-tie far below every round's radius: never certifies
+        V[0] = q
+        V[8] = np.float32(1.0 - 1e-4) * q
+        plan = make_plan(self.n, self.N, K=1, eps=self.eps, delta=0.05,
+                         value_range=self.vr, block=self.block)
+        assert plan.schedule.rounds[-1].t_cum < plan.n_blocks
+        key = jax.random.PRNGKey(2)
+        # kernel path: a never-fired adaptive query is bit-identical to the
+        # non-adaptive run (the frozen path is never taken and the actual
+        # pull count equals the scheduled one)
+        i0, s0 = bounded_me_decode(V, q[None], key, plan=plan,
+                                   final_exact=False, use_pallas=True)
+        i1, s1, r1 = bounded_me_decode(V, q[None], key, plan=plan,
+                                       final_exact=False, use_pallas=True,
+                                       adaptive=True)
+        assert int(np.asarray(r1)[0]) == len(plan.schedule.rounds)
+        np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
+        np.testing.assert_array_equal(np.asarray(s0), np.asarray(s1))
+        # jnp fallback: same ids/rounds; scores agree to float tolerance
+        # only, because XLA strength-reduces the non-adaptive path's
+        # compile-time-constant denominator while the adaptive path's
+        # (traced t_stop) stays a true division
+        i2, s2 = bounded_me_decode(V, q[None], key, plan=plan,
+                                   final_exact=False, use_pallas=False)
+        i3, s3, r3 = bounded_me_decode(V, q[None], key, plan=plan,
+                                       final_exact=False, use_pallas=False,
+                                       adaptive=True)
+        assert int(np.asarray(r3)[0]) == len(plan.schedule.rounds)
+        np.testing.assert_array_equal(np.asarray(i2), np.asarray(i3))
+        np.testing.assert_allclose(np.asarray(s2), np.asarray(s3), rtol=1e-6)
+
+
+class TestNearTieRegression:
+    """ISSUE 5 satellite: a top-2 gap just under eps must not fire before
+    the schedule's certified round (2 r_l <= gap)."""
+
+    def _constant_rows_instance(self, n, N, tile, gap):
+        # constant rows + all-ones query => zero reward variance and
+        # exactly-known means: c1 for row 0, c1 - gap for row `tile`
+        # (its own tile), 0 elsewhere
+        V = np.zeros((n, N), np.float32)
+        c1 = np.float32(0.5)
+        V[0] = c1
+        V[tile] = np.float32(c1 - gap)
+        q = np.ones(N, np.float32)
+        return V, q
+
+    n, N, tile, block = 128, 32768, 8, 64      # 512 blocks: non-saturated
+    eps, vr = 1.0, 4.0
+
+    def test_exit_waits_for_certified_round(self):
+        plan = make_plan(self.n, self.N, K=1, eps=self.eps, delta=0.05,
+                         value_range=self.vr, tile=self.tile,
+                         block=self.block)
+        radii = cert_coeffs(plan.schedule)[:-1, 1]     # hoeffding: b_l only
+        n_rounds = len(plan.schedule.rounds)
+        assert n_rounds >= 4
+        # pick a target round in the strictly-decreasing radius regime and
+        # a gap strictly between its threshold and the previous round's
+        lt = next(l for l in range(2, n_rounds) if radii[l] < radii[l - 1])
+        gap = float(radii[lt] + radii[lt - 1])   # 2r_lt <= gap < 2r_{lt-1}
+        assert gap < self.eps                    # a near-tie under eps
+        V, q = self._constant_rows_instance(self.n, self.N, self.tile, gap)
+        for use_pallas in (False, True):
+            ids, _, rounds, _ = bounded_me_blocked(
+                V, q, jax.random.PRNGKey(0), plan=plan, adaptive=True,
+                final_exact=True, use_pallas=use_pallas)
+            assert int(np.asarray(ids)[0]) == 0, use_pallas
+            # fires exactly at the first round whose radius certifies the
+            # gap — one round earlier would be unsound, later is waste
+            assert int(rounds) == lt + 1, use_pallas
+
+    def test_gap_above_first_threshold_fires_round_one(self):
+        """Sanity inverse: a gap clearing 2 r_1 certifies immediately."""
+        plan = make_plan(self.n, self.N, K=1, eps=self.eps, delta=0.05,
+                         value_range=self.vr, tile=self.tile,
+                         block=self.block)
+        radii = cert_coeffs(plan.schedule)[:-1, 1]
+        gap = float(2.5 * radii[0])
+        V, q = self._constant_rows_instance(self.n, self.N, self.tile, gap)
+        _, _, rounds, _ = bounded_me_blocked(
+            V, q, jax.random.PRNGKey(0), plan=plan, adaptive=True,
+            final_exact=True, use_pallas=False)
+        assert int(rounds) == 1
+
+
+class TestServeEngineAdaptive:
+    def test_engine_reports_rounds_histogram(self):
+        from repro.launch.serve import MIPSServeEngine
+
+        rng = np.random.default_rng(0)
+        table = 0.01 * rng.normal(size=(128, 256)).astype(np.float32)
+        table[3] = 1.0
+        eng = MIPSServeEngine(table, K=1, eps=0.1, delta=0.1, block=64,
+                              batch_size=4, deadline_ms=0.0,
+                              cache_entries=0, adaptive=True,
+                              use_pallas=False)
+        for i in range(8):
+            eng.submit(np.float32(1.0 + 0.001 * i)
+                       * table[3] + rng.normal(size=256).astype(np.float32)
+                       * np.float32(0.001))
+        eng.drain()
+        st = eng.stats()["adaptive"]
+        assert st["enabled"] and st["bound"] == "hoeffding"
+        assert st["samples"] == 8
+        assert sum(st["rounds_hist"].values()) == 8
+        assert 0.0 < st["mean_pull_frac"] <= 1.0
+
+    def test_engine_adaptive_off_stats_shape(self):
+        from repro.launch.serve import MIPSServeEngine
+
+        rng = np.random.default_rng(1)
+        table = rng.normal(size=(64, 128)).astype(np.float32)
+        eng = MIPSServeEngine(table, K=1, eps=0.2, block=64, batch_size=2,
+                              deadline_ms=0.0, cache_entries=0,
+                              use_pallas=False)
+        eng.submit(rng.normal(size=128).astype(np.float32))
+        eng.drain()
+        st = eng.stats()["adaptive"]
+        assert st == {"enabled": False, "bound": "hoeffding"}
+
+
+_ENV_CODE_PREAMBLE = r"""
+import os
+_flags = os.environ.get("XLA_FLAGS", "")
+if "xla_force_host_platform_device_count" not in _flags:
+    os.environ["XLA_FLAGS"] = (
+        _flags + " --xla_force_host_platform_device_count=2").strip()
+import jax, jax.numpy as jnp, numpy as np
+"""
+
+
+def _run(code: str, timeout=480):
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    r = subprocess.run([sys.executable, "-c", _ENV_CODE_PREAMBLE + code],
+                       env=env, capture_output=True, text=True,
+                       timeout=timeout)
+    assert "OK" in r.stdout, r.stdout + "\n" + r.stderr
+
+
+@pytest.mark.slow
+def test_sharded_adaptive_two_devices():
+    """2-device sharded path: adaptive=False stays bit-identical to the
+    single-device decode (transitively, to the PR-4 kernel), adaptive=True
+    keeps the exact merge and reports per-shard rounds_used."""
+    _run(r"""
+from repro.core.boundedme_jax import bounded_me_decode, make_plan
+from repro.distributed.sharding import sharded_bounded_me_decode
+mesh = jax.make_mesh((2,), ("model",))
+rng = np.random.default_rng(0)
+n, N, B, K = 512, 1024, 3, 3
+V = jnp.asarray(rng.normal(size=(n, N)), jnp.float32)
+Q = jnp.asarray(rng.normal(size=(B, N)), jnp.float32)
+key = jax.random.PRNGKey(7)
+kw = dict(mesh=mesh, K=K, eps=1e-4, delta=0.05, value_range=8.0, block=128)
+i0, s0, g0 = sharded_bounded_me_decode(V, Q, key, **kw)
+i1, s1, g1 = sharded_bounded_me_decode(V, Q, key, adaptive=False, **kw)
+np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
+np.testing.assert_array_equal(np.asarray(s0), np.asarray(s1))
+np.testing.assert_array_equal(np.asarray(g0), np.asarray(g1))
+# int8, adaptive=False bit-identity too
+i2, s2, _ = sharded_bounded_me_decode(V, Q, key, precision="int8", **kw)
+i3, s3, _ = sharded_bounded_me_decode(V, Q, key, precision="int8",
+                                      adaptive=False, **kw)
+np.testing.assert_array_equal(np.asarray(i2), np.asarray(i3))
+np.testing.assert_array_equal(np.asarray(s2), np.asarray(s3))
+# adaptive on an easy instance: exact merge intact + rounds exported
+V = 0.01 * np.asarray(rng.normal(size=(n, N)), np.float32)
+qv = np.asarray(rng.normal(size=N), np.float32)
+qv /= np.linalg.norm(qv)
+V[5] = 0.9 * qv
+V = jnp.asarray(V)
+Qe = jnp.asarray(np.stack([qv, 1.1 * qv, 0.9 * qv]))
+ia, sa, ga, rounds = sharded_bounded_me_decode(
+    V, Qe, key, mesh=mesh, K=1, eps=0.1, delta=0.05, value_range=4.0,
+    block=128, adaptive=True)
+assert np.all(np.asarray(ia)[:, 0] == 5)
+assert rounds.shape == (3, 2)
+truth = (np.asarray(V) @ np.asarray(Qe).T).T[:, 5] / N
+np.testing.assert_allclose(np.asarray(sa)[:, 0], truth, rtol=1e-5)
+print("OK")
+""")

@@ -86,3 +86,84 @@ class TestEmpiricalCoverage:
         rng = np.random.default_rng(1)
         x = rng.uniform(0, 1, 512)
         assert bounds.deviation_bound(512, 512, 0.01) == 0.0
+
+
+class TestFullCoverageEdge:
+    """ISSUE 5 satellite: m >= N edge behavior is clamped in `bounds`,
+    never left for callers to cap."""
+
+    def test_rho_m_is_exactly_zero_at_and_past_N(self):
+        for N in (2, 7, 100, 10_000):
+            assert bounds.rho_m(N, N) == 0.0
+            assert bounds.rho_m(N + 1, N) == 0.0
+            assert bounds.rho_m(10 * N, N) == 0.0
+
+    def test_m_required_clamps_nonfinite_u_to_N(self):
+        # eps small enough to overflow u to inf used to raise from
+        # ceil(inf/inf); now it returns full coverage
+        for N in (10, 1000, 1_000_000):
+            assert bounds.m_required(1e-300, 0.05, N) == N
+            assert bounds.m_required(1e-30, 0.05, N, value_range=1e30) == N
+
+    def test_deviation_bound_zero_past_N(self):
+        assert bounds.deviation_bound(501, 500, 0.1) == 0.0
+        assert bounds.bernstein_radius(501, 500, 0.1, 1.0, 0.3) == 0.0
+
+    def test_m_required_eb_clamps_to_N(self):
+        for N in (10, 1000):
+            assert bounds.m_required_eb(1e-300, 0.05, N) == N
+            assert 1 <= bounds.m_required_eb(0.5, 0.05, N) <= N
+
+
+class TestBernsteinFamily:
+    """The variance-aware empirical Bernstein–Serfling radius family."""
+
+    def test_radius_nonincreasing_in_m(self):
+        N = 2000
+        vals = [bounds.bernstein_radius(m, N, 0.05, 1.0, 0.25)
+                for m in range(1, N + 1)]
+        assert all(a >= b - 1e-12 for a, b in zip(vals, vals[1:]))
+        assert vals[-1] == 0.0
+
+    def test_low_variance_beats_hoeffding_radius(self):
+        # past the additive-term crossover (m ~ kappa^2 log(5/delta)),
+        # near-zero empirical variance certifies far tighter than the
+        # variance-blind Hoeffding-Serfling radius
+        N, delta = 5000, 0.05
+        for m in (500, 2000):
+            eb = bounds.bernstein_radius(m, N, delta, 1.0, std=0.01)
+            hs = bounds.deviation_bound(m, N, delta, 1.0)
+            assert eb < hs
+
+    def test_m_required_eb_shrinks_with_variance(self):
+        N, eps, delta = 50_000, 0.05, 0.05
+        m_hi = bounds.m_required_eb(eps, delta, N, std=0.5)   # worst case
+        m_lo = bounds.m_required_eb(eps, delta, N, std=0.01)
+        assert m_lo < m_hi <= N
+
+    def test_m_required_eb_satisfies_its_radius(self):
+        N, delta = 10_000, 0.05
+        for eps in (0.02, 0.1, 0.3):
+            for std in (0.01, 0.2, 0.5):
+                m = bounds.m_required_eb(eps, delta, N, 1.0, std)
+                assert bounds.bernstein_radius(m, N, delta, 1.0, std) <= eps
+                if m > 1:
+                    assert bounds.bernstein_radius(m - 1, N, delta, 1.0,
+                                                   std) > eps
+
+    def test_empirical_coverage_of_eb_radius(self):
+        """The anytime EB radius must cover the true mean on real samples
+        (statistical, seeded, generous slack)."""
+        rng = np.random.default_rng(7)
+        N, m, delta = 4000, 300, 0.1
+        x = rng.uniform(0.4, 0.6, N)          # low-variance list
+        mu = x.mean()
+        fails = 0
+        trials = 300
+        for _ in range(trials):
+            s = rng.choice(x, size=m, replace=False)
+            rad = bounds.bernstein_radius(m, N, delta, 0.2,
+                                          std=float(s.std()))
+            if abs(s.mean() - mu) > rad:
+                fails += 1
+        assert fails / trials <= delta + 0.06

@@ -1,0 +1,130 @@
+"""Statistical (eps, delta) guarantee acceptance harness (ISSUE 5).
+
+Nothing else in the repo tests the *contract itself* — only point
+regressions.  Here we measure the empirical suboptimality-violation rate
+over >= 200 seeded trials per configuration and require it to stay under
+``delta`` plus a binomial confidence margin, for:
+
+  * fp32 at the plan's ``eps``,
+  * int8 at the plan's honest ``eps_effective`` (DESIGN.md §10),
+  * each with ``adaptive`` off and on (DESIGN.md §12 — early exit must
+    not spend any extra failure probability),
+  * plus the variance-aware 'bernstein' bound family.
+
+Deterministic: fixed data/key seeds, so this is tier-1 safe.  The
+geometry is deliberately in the *non-saturated* regime (the last round
+still samples a strict subset of the blocks) so the bandit genuinely
+estimates — a fully-covered schedule would pass vacuously.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.boundedme_jax import bounded_me_batched, make_plan
+
+# shared geometry: 128 blocks, 16 arm tiles, schedule never reaches full
+# coverage (asserted below)
+N_ARMS, DIM, BLOCK, K = 128, 8192, 64, 2
+EPS, DELTA, VRANGE = 1.6, 0.2, 8.0
+TRIALS = 200
+
+
+def _instance(seed=0):
+    rng = np.random.default_rng(seed)
+    V = rng.normal(size=(N_ARMS, DIM)).astype(np.float32)
+    Q = rng.normal(size=(TRIALS, DIM)).astype(np.float32)
+    return V, Q
+
+
+def _violation_rate(V, Q, ids, eps_budget):
+    """Fraction of trials where the returned K arms are not eps-optimal.
+
+    Trial b is a violation when, comparing the descending-sorted *true*
+    mean products of the returned arms against the true top-K, any slot
+    falls more than ``eps_budget`` short (the paper's suboptimality
+    contract, at top-K rank granularity).
+    """
+    S = (V.astype(np.float64) @ Q.astype(np.float64).T).T / DIM  # (T, n)
+    ids = np.asarray(ids)
+    viols = 0
+    for b in range(Q.shape[0]):
+        true_top = np.sort(S[b])[::-1][:K]
+        got = np.sort(S[b][ids[b]])[::-1]
+        if np.any(true_top - got > eps_budget + 1e-7):
+            viols += 1
+    return viols / Q.shape[0]
+
+
+def _margin(delta, trials):
+    """Three-sigma binomial slack on an empirical rate at ``delta``."""
+    return 3.0 * np.sqrt(delta * (1.0 - delta) / trials)
+
+
+@pytest.mark.parametrize("precision,adaptive,bound", [
+    ("fp32", False, "hoeffding"),
+    ("fp32", True, "hoeffding"),
+    ("int8", False, "hoeffding"),
+    ("int8", True, "hoeffding"),
+    ("fp32", True, "bernstein"),
+])
+def test_empirical_violation_rate_within_delta(precision, adaptive, bound):
+    V, Q = _instance(seed=42)
+    plan = make_plan(N_ARMS, DIM, K=K, eps=EPS, delta=DELTA,
+                     value_range=VRANGE, block=BLOCK, precision=precision,
+                     bound=bound)
+    # the harness must have teeth: the schedule still *samples*
+    assert plan.schedule.rounds[-1].t_cum < plan.n_blocks
+    keys = jax.random.split(jax.random.PRNGKey(7), TRIALS)
+    out = bounded_me_batched(V, Q, keys, plan=plan, final_exact=True,
+                             use_pallas=False, adaptive=adaptive)
+    ids = out[0]
+    rate = _violation_rate(V, Q, ids, plan.eps_effective)
+    assert rate <= DELTA + _margin(DELTA, TRIALS), (
+        f"{precision}/adaptive={adaptive}/{bound}: violation rate {rate}")
+    if adaptive:
+        rounds = np.asarray(out[2])
+        n_rounds = len(plan.schedule.rounds)
+        assert rounds.shape == (TRIALS,)
+        assert np.all((rounds >= 1) & (rounds <= n_rounds))
+
+
+def test_int8_eps_effective_is_the_honest_budget():
+    """The int8 plan must audit its own quantization penalty: eps_effective
+    >= eps, collapsing to eps exactly when quant_err is 0."""
+    p8 = make_plan(N_ARMS, DIM, K=K, eps=EPS, delta=DELTA,
+                   value_range=VRANGE, block=BLOCK, precision="int8")
+    p32 = make_plan(N_ARMS, DIM, K=K, eps=EPS, delta=DELTA,
+                    value_range=VRANGE, block=BLOCK)
+    assert p8.quant_err > 0.0
+    assert p8.eps_effective >= EPS
+    assert p32.eps_effective == EPS
+
+
+def test_adaptive_certified_exits_are_sound_on_easy_stream():
+    """On a stream with planted easy winners, adaptive certifies early on
+    most queries AND the certified answers are exactly right — the
+    union-bound argument of DESIGN.md §12 in empirical form."""
+    rng = np.random.default_rng(3)
+    V = rng.normal(size=(N_ARMS, DIM)).astype(np.float32)
+    Q = rng.normal(size=(64, DIM)).astype(np.float32)
+    # every query's winner is its own self-similar row (score ~ 1 vs the
+    # ~ 1/sqrt(DIM) noise scores), spread across tiles
+    winners = (np.arange(64) * 13) % N_ARMS
+    for b, w in enumerate(winners):
+        V[w] = Q[b]
+    plan = make_plan(N_ARMS, DIM, K=1, eps=EPS, delta=DELTA,
+                     value_range=VRANGE, block=BLOCK)
+    keys = jax.random.split(jax.random.PRNGKey(9), 64)
+    ids, _, rounds = bounded_me_batched(V, Q, keys, plan=plan,
+                                        final_exact=True, use_pallas=False,
+                                        adaptive=True)
+    ids = np.asarray(ids)[:, 0]
+    rounds = np.asarray(rounds)
+    n_rounds = len(plan.schedule.rounds)
+    S = (V.astype(np.float64) @ Q.astype(np.float64).T).T / DIM
+    truth = np.argmax(S, axis=1)
+    early = rounds < n_rounds
+    assert early.mean() > 0.5              # the stream is genuinely easy
+    # certified-early answers are exact, not merely eps-close
+    assert np.all(ids[early] == truth[early])

@@ -51,11 +51,13 @@ API_CONTRACTS = {
     },
     "core/boundedme_jax.py": {
         "bounded_me_decode": ["(B, N)", "eps, delta", "k_out", "plan",
-                              "returns"],
-        "make_plan": ["range_mode", "precision"],
+                              "adaptive", "rounds_used", "returns"],
+        "make_plan": ["range_mode", "precision", "bound"],
     },
     "core/bounds.py": {
         "quantization_error": ["symmetric", "value_range", "bias"],
+        "bernstein_radius": ["empirical", "variance", "m >= N"],
+        "m_required_eb": ["binary search", "[1, N]"],
     },
     "core/quantize.py": {
         "quantize_tiles": ["(n_tiles, n_blocks", "int8", "scale"],
@@ -63,16 +65,18 @@ API_CONTRACTS = {
     },
     "core/schedule.py": {
         "flatten_schedule": ["FlatSchedule"],
-        "make_schedule": ["quant_err"],
+        "make_schedule": ["quant_err", "bound"],
+        "cert_coeffs": ["a_l", "b_l", "union bound", "quant_err"],
+        "pulls_through_round": ["rounds_used"],
     },
     "distributed/sharding.py": {
         "sharded_bounded_me_decode": ["eps", "delta", "shard", "merge",
                                       "gap", "ragged", "precision",
-                                      "returns"],
+                                      "adaptive", "returns"],
         "make_shard_plan": ["union bound", "k_out", "pad"],
     },
     "kernels/ops.py": {
-        "fused_cascade": ["k_out", "n_valid", "vscale"],
+        "fused_cascade": ["k_out", "n_valid", "vscale", "cert"],
         "fused_cascade_batched": ["k_out", "n_valid"],
     },
     "store/dynamic_table.py": {
