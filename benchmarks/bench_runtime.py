@@ -1,0 +1,156 @@
+"""PR-6 runtime benchmark: sustained throughput, tail latency, shedding.
+
+Emits the rows for ``BENCH_PR6.json`` (via `benchmarks.run`): the
+continuous-batching `ServeRuntime` driven by the reproducible bursty
+arrival trace (open loop, virtual clock — arrivals keep coming while the
+executor is busy, so queues really grow), in three tables:
+
+  * ``sustained`` — the same bursty stream served clean and under the
+    deterministic fault schedule (latency spikes + transient/persistent
+    dispatch faults): sustained rps, p50/p99, shed rate, availability,
+    retry/failed-batch counters.  The with-faults row is the robustness
+    headline: injected faults cost retries and latency, never a crash.
+  * ``overload_sweep`` — offered load stepped past capacity with a
+    degradation ladder configured: availability, shed rate, the fraction
+    served degraded and the eps_served histogram per rung, showing
+    accuracy being spent before availability (DESIGN.md §13).
+  * ``admission_modes`` — the same overload with no ladder (reject-only)
+    for the counterfactual, plus ``rung_costs``: the planned pull budget
+    at each eps rung.  On CPU the per-dispatch wall-clock is launch-
+    overhead dominated, so relaxing eps barely changes dispatch time and
+    ladder availability matches reject-only; the compute the ladder
+    sheds is visible in the rung pull budgets (the proxy that matters on
+    an accelerator, where pulls ~ time).
+
+Geometry is CPU-feasible on purpose; the *trends* (ladder engages before
+shedding, faults cost latency not availability) are what is tracked
+across PRs, not this container's absolute numbers.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.launch.admission import PriorityClass
+from repro.launch.faults import FaultInjector
+from repro.launch.serve import ServeRuntime, simulate_stream
+
+# high-dim geometry on purpose: the cascade saves *coordinate* pulls,
+# so the eps ladder only has compute to shed when n_blocks is large
+# (at 2048x4096/block=64 the pull budget drops ~3x from eps 0.4 to 3.2)
+_N_ARMS, _DIM, _K = 2048, 4096, 4
+_REQUESTS = 256
+_LANES = 8
+_QUEUE = 32
+_EPS, _EPS_FLOOR = 0.4, 3.2
+# generous per-request deadline: lets queues build under overload so the
+# ladder engages (and degrades) before deadline expiry sheds the tail
+_DEADLINE_MS = 200.0
+
+
+def _make_runtime(table, *, eps_floor=None, injector=None,
+                  queue_capacity=_QUEUE) -> ServeRuntime:
+    rt = ServeRuntime(
+        table, K=_K, eps=_EPS, delta=0.1, eps_floor=eps_floor,
+        degrade_rungs=4, lanes=_LANES, batch_wait_ms=1.0,
+        queue_capacity=queue_capacity, value_range=8.0, block=64,
+        max_retries=2, retry_backoff_ms=0.5, fault_injector=injector,
+        classes={"default": PriorityClass("default", priority=1,
+                                          deadline_ms=_DEADLINE_MS)},
+        cache_entries=0, recall_sample_rate=0.05)
+    rt.warmup()                # compile off the virtual clock
+    return rt
+
+
+def _row(stats: dict) -> dict:
+    o = stats["outcomes"]
+    total = max(1, stats["requests"])
+    return {
+        "offered_rps": stats["trace"]["offered_rps"],
+        "sustained_rps": stats["throughput_rps"],
+        "availability": stats["availability"],
+        "shed_rate": (o["overloaded"] + o["rejected"] + o["failed"])
+        / total,
+        "degraded_frac": o["degraded"] / total,
+        "p50_ms": stats["latency_ms"]["p50"],
+        "p99_ms": stats["latency_ms"]["p99"],
+        "peak_queue_depth": stats["queue"]["peak_depth"],
+        "served_per_rung": stats["degradation"]["served_per_rung"],
+        "retries": stats["faults"]["retries"],
+        "failed_batches": stats["faults"]["failed_batches"],
+        "outcomes": dict(o),
+    }
+
+
+def run(csv: bool = True) -> dict:
+    """Run the runtime scenarios; returns the BENCH_PR6 payload dict."""
+    rng = np.random.default_rng(0)
+    table = rng.normal(size=(_N_ARMS, _DIM)).astype(np.float32)
+    queries = rng.normal(size=(_REQUESTS, _DIM)).astype(np.float32)
+
+    out = {"geometry": {"n": _N_ARMS, "N": _DIM, "K": _K,
+                        "requests": _REQUESTS, "lanes": _LANES,
+                        "queue_capacity": _QUEUE, "eps": _EPS,
+                        "eps_floor": _EPS_FLOOR,
+                        "deadline_ms": _DEADLINE_MS},
+           "sustained": [], "overload_sweep": [], "admission_modes": []}
+
+    # -- sustained bursty load, clean vs injected faults ------------------
+    for label, injector in (
+            ("clean", None),
+            ("faults", FaultInjector(7, latency_rate=0.08, latency_ms=5.0,
+                                     error_rate=0.08,
+                                     persistent_rate=0.25))):
+        rt = _make_runtime(table, eps_floor=_EPS_FLOOR, injector=injector)
+        stats = simulate_stream(rt, queries, pattern="bursty", seed=1,
+                                open_loop=True, interarrival_ms=4.0)
+        row = {"scenario": label, **_row(stats)}
+        if injector is not None:
+            row["injected"] = injector.stats()
+        out["sustained"].append(row)
+        if csv:
+            print(f"sustained_{label},{row['sustained_rps']:.0f}rps,"
+                  f"p99={row['p99_ms']:.2f}ms,"
+                  f"shed={row['shed_rate']:.3f},"
+                  f"avail={row['availability']:.3f}")
+
+    # -- overload sweep: offered load vs the degradation ladder -----------
+    for ia_ms in (4.0, 1.0, 0.25, 0.05):
+        rt = _make_runtime(table, eps_floor=_EPS_FLOOR)
+        stats = simulate_stream(rt, queries, pattern="bursty", seed=2,
+                                open_loop=True, interarrival_ms=ia_ms)
+        row = {"interarrival_ms": ia_ms, **_row(stats)}
+        out["overload_sweep"].append(row)
+        if csv:
+            print(f"overload_ia{ia_ms},"
+                  f"offered={row['offered_rps']:.0f}rps,"
+                  f"avail={row['availability']:.3f},"
+                  f"degraded={row['degraded_frac']:.3f},"
+                  f"shed={row['shed_rate']:.3f}")
+
+    # -- counterfactual: same overload with no ladder (reject-only) -------
+    for label, floor in (("ladder", _EPS_FLOOR), ("reject_only", None)):
+        rt = _make_runtime(table, eps_floor=floor)
+        if label == "ladder":       # planned compute per rung (pull proxy)
+            out["rung_costs"] = [
+                {"eps": float(e),
+                 "total_pulls": int(ex.plan.schedule.total_pulls)}
+                for e, ex in zip(rt.ladder.eps_values, rt._rung_execs)]
+        stats = simulate_stream(rt, queries, pattern="bursty", seed=2,
+                                open_loop=True, interarrival_ms=0.25)
+        out["admission_modes"].append({"mode": label, **_row(stats)})
+        if csv:
+            r = out["admission_modes"][-1]
+            print(f"mode_{label},avail={r['availability']:.3f},"
+                  f"degraded={r['degraded_frac']:.3f},"
+                  f"shed={r['shed_rate']:.3f}")
+    if csv:
+        print("rung_costs," + ",".join(
+            f"eps={c['eps']:.2f}:pulls={c['total_pulls']}"
+            for c in out["rung_costs"]))
+    return out
+
+
+if __name__ == "__main__":
+    import json
+    print(json.dumps(run(), indent=2))

@@ -8,9 +8,12 @@ batched decode: us_per_call, pull-count speedup, kernel dispatch counts),
 deadline at B in {1, 8, 32}, LRU hit rates), ``BENCH_PR3.json``
 (int8 quantized sampling vs fp32 at B in {1, 8, 32}),
 ``BENCH_PR4.json`` (dynamic-store serving under churn + update cost vs
-LSH/PCA full rebuilds) and ``BENCH_PR5.json`` (adaptive early-exit mean
-pulls + rounds_used histograms, easy vs hard workloads) so numbers stay
-comparable across PRs.
+LSH/PCA full rebuilds), ``BENCH_PR5.json`` (adaptive early-exit mean
+pulls + rounds_used histograms, easy vs hard workloads) and
+``BENCH_PR6.json`` (continuous-batching runtime: sustained rps / p99 /
+shed rate under bursty load with and without injected faults, plus the
+overload sweep showing the eps degradation ladder engaging) so numbers
+stay comparable across PRs.
 """
 
 from __future__ import annotations
@@ -25,12 +28,14 @@ BENCH2_JSON = os.path.join(_ROOT, "BENCH_PR2.json")
 BENCH3_JSON = os.path.join(_ROOT, "BENCH_PR3.json")
 BENCH4_JSON = os.path.join(_ROOT, "BENCH_PR4.json")
 BENCH5_JSON = os.path.join(_ROOT, "BENCH_PR5.json")
+BENCH6_JSON = os.path.join(_ROOT, "BENCH_PR6.json")
 
 
 def main() -> None:
     from benchmarks import (bench_adaptive, bench_fused, bench_quant,
-                            bench_serve, bench_store, fig1_guarantee,
-                            fig23_synthetic, fig4_real, table1_complexity)
+                            bench_runtime, bench_serve, bench_store,
+                            fig1_guarantee, fig23_synthetic, fig4_real,
+                            table1_complexity)
     print("== fused cascade / batched decode (PR 1) ==")
     import jax
     meta = {"backend": jax.default_backend(),
@@ -59,6 +64,11 @@ def main() -> None:
     with open(BENCH5_JSON, "w") as f:
         json.dump(payload5, f, indent=2)
     print(f"[bench] wrote {BENCH5_JSON}")
+    print("== continuous-batching runtime under overload/faults (PR 6) ==")
+    payload6 = {"meta": meta, "benchmarks": bench_runtime.run()}
+    with open(BENCH6_JSON, "w") as f:
+        json.dump(payload6, f, indent=2)
+    print(f"[bench] wrote {BENCH6_JSON}")
     print("== table1: complexity/guarantees ==")
     table1_complexity.run()
     print("== fig1: guarantee validation (adversarial) ==")

@@ -1,0 +1,380 @@
+"""Admission control for the serving runtime (DESIGN.md §13).
+
+The paper's user-facing (eps, delta) knob is also the system's *overload*
+lever: unlike index-based MIPS (whose accuracy is frozen into the index),
+BoundedME can re-calibrate per dispatch, so a saturated server can shed
+**quality** — provably, inside the contract — before it sheds
+**availability**.  This module holds the policy half of that story:
+
+  * :class:`PriorityClass` — a named traffic class with a scheduling
+    priority and a per-request completion deadline;
+  * :class:`ServeResult` — the typed terminal outcome of every request.
+    The runtime *never* raises on bad input or overload: a request ends
+    as exactly one of ``ok`` / ``degraded`` / ``rejected`` /
+    ``overloaded`` / ``failed``, always carrying the (eps, delta) it was
+    actually served under (``eps_served``);
+  * :class:`AdmissionController` — a bounded priority queue with
+    poison-query validation (NaN/Inf/wrong-dim rejected at the door),
+    a quarantine of fingerprints that previously broke a dispatch,
+    displacement of lower-priority work when a full queue meets a more
+    urgent request, and deadline expiry at batch-assembly time;
+  * :class:`DegradationLadder` — the load -> eps policy: a precompiled
+    ladder of (eps) rungs from the contract eps up to a configured
+    ``eps_floor``; queue pressure picks the rung, so overload first
+    relaxes accuracy toward the floor and only then rejects.
+
+Everything here is host-side policy with no jax dependency — the
+scheduler/executor halves live in `repro.launch.engine`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import heapq
+import math
+from collections import OrderedDict
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+__all__ = [
+    "STATUSES", "PriorityClass", "ServeResult", "Ticket",
+    "AdmissionController", "DegradationLadder",
+]
+
+#: The closed set of terminal request outcomes.  ``ok`` and ``degraded``
+#: carry answers (degraded = served under a relaxed eps, recorded in
+#: ``eps_served``); the other three are typed refusals, never exceptions.
+STATUSES = ("ok", "degraded", "rejected", "overloaded", "failed")
+
+
+@dataclasses.dataclass(frozen=True)
+class PriorityClass:
+    """A named traffic class: scheduling priority + completion deadline.
+
+    ``priority`` orders batch assembly (lower = more urgent; FIFO within
+    a class).  ``deadline_ms`` is the per-request completion budget from
+    submit time: a request still queued past it is shed with a typed
+    ``overloaded`` result instead of serving an answer nobody is waiting
+    for.  ``sheddable=False`` exempts the class from displacement when
+    the queue is full (it can still expire on its own deadline).
+    """
+
+    name: str
+    priority: int = 1
+    deadline_ms: float = 50.0
+    sheddable: bool = True
+
+    @property
+    def deadline_s(self) -> float:
+        """The deadline budget in seconds (``inf`` when non-positive)."""
+        return self.deadline_ms * 1e-3 if self.deadline_ms > 0 else math.inf
+
+
+@dataclasses.dataclass
+class ServeResult:
+    """Typed terminal outcome of one request (DESIGN.md §13 failure model).
+
+    ``status`` is one of `STATUSES`.  ``ids``/``scores`` are set iff the
+    request was answered (``ok`` or ``degraded``); ``eps_served`` /
+    ``delta_served`` record the contract the answer actually met —
+    ``eps_served > eps`` marks graceful degradation under load, never
+    silently.  ``reason`` explains refusals (``poison: ...``,
+    ``queue full``, ``deadline``, ``quarantined``, dispatch error text);
+    ``retries`` counts dispatch retries this request rode through.
+    """
+
+    status: str
+    ids: Optional[np.ndarray] = None
+    scores: Optional[np.ndarray] = None
+    eps_served: Optional[float] = None
+    delta_served: Optional[float] = None
+    reason: str = ""
+    cls: str = "default"
+    latency_s: float = 0.0
+    retries: int = 0
+    cached: bool = False
+
+    @property
+    def answered(self) -> bool:
+        """True iff this outcome carries (ids, scores) meeting a contract."""
+        return self.status in ("ok", "degraded")
+
+
+@dataclasses.dataclass
+class Ticket:
+    """One admitted request waiting in the queue."""
+
+    req_id: int
+    q: np.ndarray
+    cls: PriorityClass
+    t_submit: float
+    t_deadline: float
+    cache_key: Optional[bytes]
+    fingerprint: bytes
+
+
+def _fingerprint(q: np.ndarray) -> bytes:
+    """Stable 16-byte digest of a query's exact float32 bytes."""
+    return hashlib.blake2b(np.ascontiguousarray(q, np.float32).tobytes(),
+                           digest_size=16).digest()
+
+
+class AdmissionController:
+    """Bounded priority queue + request validation + quarantine.
+
+    The runtime's front door (DESIGN.md §13): every query passes
+    `validate` (shape / dtype / finiteness — poison queries are rejected
+    here, before they can reach a kernel), then the quarantine check
+    (fingerprints that previously broke a dispatch are refused outright),
+    then capacity admission.  A full queue refuses with a typed
+    ``overloaded`` result — or, when the incoming request outranks queued
+    sheddable work, displaces the lowest-priority youngest victim
+    instead.  `take` assembles dispatch batches in (priority, FIFO)
+    order and expires tickets whose class deadline already passed.
+
+    All methods are O(log depth); no jax, no clock reads (callers pass
+    ``now`` explicitly, so virtual-clock simulation is exact).
+    """
+
+    def __init__(self, dim: int, *, queue_capacity: int = 64,
+                 classes: Optional[Dict[str, PriorityClass]] = None,
+                 default_class: str = "default",
+                 quarantine_capacity: int = 256):
+        if queue_capacity < 1:
+            raise ValueError(f"queue_capacity must be >= 1, "
+                             f"got {queue_capacity}")
+        self.dim = int(dim)
+        self.queue_capacity = int(queue_capacity)
+        self.classes = dict(classes) if classes else {}
+        if default_class not in self.classes:
+            self.classes[default_class] = PriorityClass(default_class)
+        self.default_class = default_class
+        self._heap: List[Tuple[int, float, int, Ticket]] = []
+        self._seq = 0
+        self._quarantine: "OrderedDict[bytes, str]" = OrderedDict()
+        self.quarantine_capacity = int(quarantine_capacity)
+        self.n_admitted = 0
+        self.n_rejected_poison = 0
+        self.n_rejected_quarantined = 0
+        self.n_overloaded = 0
+        self.n_displaced = 0
+        self.n_expired = 0
+        self.peak_depth = 0
+        self._depth_sum = 0.0
+        self._depth_samples = 0
+
+    # ---- validation / quarantine ----------------------------------------
+
+    def validate(self, q) -> Tuple[Optional[np.ndarray], str]:
+        """Coerce one query to (dim,) float32; returns ``(q, "")`` or
+        ``(None, reason)`` for poison input (wrong shape / dtype /
+        NaN / Inf).  Rejection happens here, at admission — a poison
+        query must never reach a dispatch, where its NaNs would poison
+        every lane of the micro-batch."""
+        try:
+            arr = np.asarray(q, np.float32)
+        except (TypeError, ValueError):
+            return None, "poison: not castable to float32"
+        if arr.shape != (self.dim,):
+            return None, (f"poison: query shape {arr.shape} != "
+                          f"({self.dim},)")
+        if not np.all(np.isfinite(arr)):
+            return None, "poison: non-finite (NaN/Inf) coordinates"
+        return arr, ""
+
+    def quarantined(self, fingerprint: bytes) -> Optional[str]:
+        """The quarantine reason for a fingerprint, or None."""
+        return self._quarantine.get(fingerprint)
+
+    def add_quarantine(self, fingerprint: bytes, reason: str) -> None:
+        """Quarantine a query fingerprint (bounded LRU of offenders).
+
+        Called by the runtime when a dispatch containing this query
+        failed past its retry budget: resubmissions of the same bytes
+        are refused at admission instead of re-breaking dispatches.
+        """
+        self._quarantine[fingerprint] = reason
+        self._quarantine.move_to_end(fingerprint)
+        while len(self._quarantine) > self.quarantine_capacity:
+            self._quarantine.popitem(last=False)
+
+    @staticmethod
+    def fingerprint(q: np.ndarray) -> bytes:
+        """Stable digest used for quarantine identity (exact bytes)."""
+        return _fingerprint(q)
+
+    # ---- queue -----------------------------------------------------------
+
+    @property
+    def depth(self) -> int:
+        """Requests currently queued (admitted, not yet dispatched)."""
+        return len(self._heap)
+
+    def resolve_class(self, cls: Optional[str]) -> PriorityClass:
+        """Look up a class by name (None = the default class)."""
+        name = self.default_class if cls is None else cls
+        try:
+            return self.classes[name]
+        except KeyError:
+            raise KeyError(
+                f"unknown priority class {name!r}; configured: "
+                f"{sorted(self.classes)}") from None
+
+    def admit(self, ticket: Ticket) -> Tuple[
+            Optional[ServeResult], List[Tuple[Ticket, ServeResult]]]:
+        """Try to enqueue a validated ticket.
+
+        Returns ``(verdict, displaced)``: ``verdict`` is None on success
+        or a typed ``rejected``/``overloaded`` `ServeResult`; ``displaced``
+        lists (ticket, overloaded-result) pairs for queued lower-priority
+        work evicted to make room.  Quarantined fingerprints are refused
+        here; capacity refusal prefers displacing the *lowest-priority,
+        youngest* sheddable victim when the incoming request strictly
+        outranks it.
+        """
+        reason = self.quarantined(ticket.fingerprint)
+        if reason is not None:
+            self.n_rejected_quarantined += 1
+            return ServeResult(status="rejected", cls=ticket.cls.name,
+                               reason=f"quarantined: {reason}"), []
+        displaced: List[Tuple[Ticket, ServeResult]] = []
+        if len(self._heap) >= self.queue_capacity:
+            victim_i = None
+            for i, (pri, t_sub, seq, tk) in enumerate(self._heap):
+                if not tk.cls.sheddable or pri <= ticket.cls.priority:
+                    continue
+                if victim_i is None:
+                    victim_i = i
+                    continue
+                vp, vt, vs, _ = self._heap[victim_i]
+                if (pri, t_sub, seq) > (vp, vt, vs):
+                    victim_i = i
+            if victim_i is None:
+                self.n_overloaded += 1
+                return ServeResult(
+                    status="overloaded", cls=ticket.cls.name,
+                    reason=f"queue full ({self.queue_capacity})"), []
+            _, _, _, victim = self._heap.pop(victim_i)
+            heapq.heapify(self._heap)
+            self.n_displaced += 1
+            displaced.append((victim, ServeResult(
+                status="overloaded", cls=victim.cls.name,
+                reason="displaced by higher-priority request")))
+        heapq.heappush(self._heap, (ticket.cls.priority, ticket.t_submit,
+                                    self._seq, ticket))
+        self._seq += 1
+        self.n_admitted += 1
+        self.peak_depth = max(self.peak_depth, len(self._heap))
+        return None, displaced
+
+    def oldest_submit(self) -> Optional[float]:
+        """Earliest ``t_submit`` among queued tickets (None when empty)."""
+        if not self._heap:
+            return None
+        return min(item[1] for item in self._heap)
+
+    def take(self, now: float, max_n: int, *, expire: bool = True) -> Tuple[
+            List[Ticket], List[Tuple[Ticket, ServeResult]]]:
+        """Pop up to ``max_n`` tickets in (priority, FIFO) order.
+
+        Tickets whose class deadline has already passed are *expired*
+        instead (typed ``overloaded`` with ``reason='deadline'``) — the
+        lane is better spent on a request someone is still waiting for.
+        ``expire=False`` (shutdown drain) serves them anyway.  Returns
+        ``(batch, expired)``.
+        """
+        batch: List[Ticket] = []
+        expired: List[Tuple[Ticket, ServeResult]] = []
+        while self._heap and len(batch) < max_n:
+            _, _, _, tk = heapq.heappop(self._heap)
+            if expire and now > tk.t_deadline:
+                self.n_expired += 1
+                expired.append((tk, ServeResult(
+                    status="overloaded", cls=tk.cls.name,
+                    reason="deadline",
+                    latency_s=now - tk.t_submit)))
+                continue
+            batch.append(tk)
+        self._depth_sum += len(self._heap)
+        self._depth_samples += 1
+        return batch, expired
+
+    def load(self) -> float:
+        """Queue pressure in [0, 1+]: depth / capacity."""
+        return len(self._heap) / self.queue_capacity
+
+    def stats(self) -> dict:
+        """Admission counters + queue depth telemetry as a plain dict."""
+        return {
+            "depth": len(self._heap),
+            "capacity": self.queue_capacity,
+            "peak_depth": self.peak_depth,
+            "mean_depth_at_dispatch": (
+                self._depth_sum / self._depth_samples
+                if self._depth_samples else 0.0),
+            "admitted": self.n_admitted,
+            "rejected_poison": self.n_rejected_poison,
+            "rejected_quarantined": self.n_rejected_quarantined,
+            "overloaded": self.n_overloaded,
+            "displaced": self.n_displaced,
+            "expired_deadline": self.n_expired,
+            "quarantine_entries": len(self._quarantine),
+        }
+
+
+class DegradationLadder:
+    """Load -> eps policy: relax accuracy toward a floor before refusing.
+
+    Precomputes ``rungs`` eps values geometrically interpolated from the
+    contract ``eps`` (rung 0) up to ``eps_floor`` (the worst accuracy the
+    operator will serve; DESIGN.md §13 degradation ladder).  `rung(load)`
+    maps queue pressure to a rung: below ``start`` load the ladder stays
+    at rung 0 (full quality); between ``start`` and 1.0 it climbs
+    linearly; at/above full queue it serves the floor.  The runtime
+    compiles one executor per rung, so switching rungs costs nothing at
+    dispatch time, and each response records its actual ``eps_served`` —
+    degradation is always visible, never silent.
+    """
+
+    def __init__(self, eps: float, eps_floor: Optional[float] = None, *,
+                 rungs: int = 3, start: float = 0.5):
+        if eps_floor is None:
+            eps_floor = eps
+        if eps_floor < eps:
+            raise ValueError(
+                f"eps_floor ({eps_floor}) must be >= eps ({eps}): "
+                f"degradation relaxes eps toward the floor, it cannot "
+                f"tighten it")
+        if not 0.0 < start <= 1.0:
+            raise ValueError(f"start must be in (0, 1], got {start}")
+        rungs = max(1, int(rungs))
+        if eps_floor == eps:
+            rungs = 1
+        if rungs == 1:
+            self.eps_values = [float(eps)]
+        else:
+            # geometric interpolation: early rungs give up little
+            # accuracy, the last rung lands exactly on the floor
+            ratio = (eps_floor / eps) ** (1.0 / (rungs - 1))
+            self.eps_values = [float(eps * ratio ** i)
+                               for i in range(rungs)]
+            self.eps_values[-1] = float(eps_floor)
+        self.eps = float(eps)
+        self.eps_floor = float(eps_floor)
+        self.start = float(start)
+
+    @property
+    def n_rungs(self) -> int:
+        """Number of rungs (1 = degradation disabled)."""
+        return len(self.eps_values)
+
+    def rung(self, load: float) -> int:
+        """Map queue pressure (depth/capacity) to a ladder rung index."""
+        if self.n_rungs == 1 or load < self.start:
+            return 0
+        if load >= 1.0:
+            return self.n_rungs - 1
+        frac = (load - self.start) / (1.0 - self.start)
+        return min(self.n_rungs - 1, 1 + int(frac * (self.n_rungs - 1)))

@@ -1,0 +1,193 @@
+"""Deterministic fault injection for the serving runtime (DESIGN.md §13).
+
+Robustness claims are worthless untested, and flaky fault tests are worse
+than none — so every fault here is drawn from a *seeded, stateless
+schedule*: the decision for dispatch ``i`` (or flush ``j``) is a pure
+function of ``(seed, fault kind, index, attempt)``, independent of call
+order, wall clock, or how many other fault kinds are enabled.  Two runs
+with the same seed inject byte-identical fault sequences; CI can assert
+exact counters.
+
+Three fault surfaces, matching the runtime's three failure domains:
+
+  * **latency spikes** — heavy-tailed extra seconds added to a
+    dispatch's virtual compute time (the virtual clock makes the spike
+    exact, not a sleep): exercises deadline expiry, queue growth and the
+    degradation ladder;
+  * **dispatch exceptions** — :class:`InjectedDispatchError` raised from
+    inside the executor call: exercises retry-with-backoff and, past the
+    retry budget, the fail-only-this-micro-batch path + quarantine;
+  * **store-flush failures** — :class:`repro.store.StoreFlushError`
+    raised from the store's ``fault_hook`` before any staged mutation is
+    applied: exercises the engine's keep-serving-stale-table path (the
+    staged ops stay staged and retry at the next poll).
+
+Attach with ``FaultInjector(...).attach(store)`` for the flush surface
+and pass the injector to `repro.launch.engine.ServeRuntime` for the
+dispatch surfaces.  `stats()` exports exactly what was injected so tests
+can reconcile observed behaviour against the schedule.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+__all__ = ["InjectedDispatchError", "FaultInjector"]
+
+# stable per-kind stream ids: entropy never collides across fault kinds
+_KIND_LATENCY = 1
+_KIND_ERROR = 2
+_KIND_FLUSH = 3
+_ROOT = 0x5EED_FA17  # namespace tag so injector streams never alias
+                     # other default_rng(seed) users in the process
+
+
+class InjectedDispatchError(RuntimeError):
+    """A dispatch exception injected by `FaultInjector` (never raised by
+    real executor code; tests match on this type to distinguish injected
+    faults from genuine regressions)."""
+
+
+class FaultInjector:
+    """Seeded, stateless fault schedule over dispatch/flush indices.
+
+    Args:
+      seed: the schedule seed — the *only* source of randomness.
+      latency_rate: probability a dispatch gets a latency spike.
+      latency_ms: spike scale; actual spikes are ``latency_ms * (1 + P)``
+        with P ~ Pareto(``latency_tail``) — heavy-tailed, like real
+        stragglers.
+      latency_tail: Pareto tail index of the spike distribution (smaller
+        = heavier tail).
+      error_rate: probability a dispatch raises
+        `InjectedDispatchError`.  When it fires, the first
+        ``fail_attempts(i)`` attempts fail — usually 1 (a transient the
+        retry absorbs); with probability ``persistent_rate`` the fault is
+        persistent (fails every attempt, forcing the micro-batch-failure
+        path).
+      persistent_rate: fraction of injected dispatch errors that never
+        stop failing (conditional on an error firing at all).
+      flush_failure_rate: probability a store `flush_updates` call is
+        failed (via the hook installed by `attach`).
+
+    Every decision method is pure in its index arguments; counters track
+    what was actually *queried and fired* so `stats()` reconciles with
+    runtime counters.
+    """
+
+    def __init__(self, seed: int = 0, *, latency_rate: float = 0.0,
+                 latency_ms: float = 25.0, latency_tail: float = 1.5,
+                 error_rate: float = 0.0, persistent_rate: float = 0.25,
+                 flush_failure_rate: float = 0.0):
+        for name, rate in (("latency_rate", latency_rate),
+                           ("error_rate", error_rate),
+                           ("persistent_rate", persistent_rate),
+                           ("flush_failure_rate", flush_failure_rate)):
+            if not 0.0 <= rate <= 1.0:
+                raise ValueError(f"{name} must be in [0, 1], got {rate}")
+        self.seed = int(seed)
+        self.latency_rate = float(latency_rate)
+        self.latency_ms = float(latency_ms)
+        self.latency_tail = float(latency_tail)
+        self.error_rate = float(error_rate)
+        self.persistent_rate = float(persistent_rate)
+        self.flush_failure_rate = float(flush_failure_rate)
+        self._flush_idx = 0
+        self.n_latency_injected = 0
+        self.injected_latency_s = 0.0
+        self.n_errors_injected = 0
+        self.n_persistent_errors = 0
+        self.n_flush_failures = 0
+
+    def _rng(self, kind: int, index: int) -> np.random.Generator:
+        """The stateless per-(kind, index) generator of the schedule."""
+        return np.random.default_rng(
+            np.random.SeedSequence([_ROOT, self.seed, kind, int(index)]))
+
+    # ---- dispatch surfaces ----------------------------------------------
+
+    def latency_s(self, dispatch_idx: int) -> float:
+        """Extra virtual seconds injected into dispatch ``dispatch_idx``
+        (0.0 when the schedule doesn't spike it)."""
+        if self.latency_rate <= 0.0:
+            return 0.0
+        rng = self._rng(_KIND_LATENCY, dispatch_idx)
+        if rng.random() >= self.latency_rate:
+            return 0.0
+        spike = self.latency_ms * 1e-3 * (1.0 + rng.pareto(
+            self.latency_tail))
+        self.n_latency_injected += 1
+        self.injected_latency_s += spike
+        return float(spike)
+
+    def fail_attempts(self, dispatch_idx: int) -> int:
+        """How many leading attempts of dispatch ``dispatch_idx`` fail.
+
+        0 = no injected error; 1..2 = transient (a retry will clear it);
+        a large value (persistent fault) outlasts any retry budget.
+        Pure in ``dispatch_idx`` — querying it twice is free.
+        """
+        if self.error_rate <= 0.0:
+            return 0
+        rng = self._rng(_KIND_ERROR, dispatch_idx)
+        if rng.random() >= self.error_rate:
+            return 0
+        if rng.random() < self.persistent_rate:
+            return 1_000_000           # outlasts any sane retry budget
+        return int(rng.integers(1, 3))  # transient: 1-2 failing attempts
+
+    def dispatch_error(self, dispatch_idx: int,
+                       attempt: int = 0) -> Optional[InjectedDispatchError]:
+        """The error to raise for (dispatch, attempt), or None.
+
+        Counts each fired (dispatch, attempt) injection once; the
+        persistent counter increments on the first attempt only.
+        """
+        fails = self.fail_attempts(dispatch_idx)
+        if attempt >= fails:
+            return None
+        self.n_errors_injected += 1
+        if fails > 2 and attempt == 0:
+            self.n_persistent_errors += 1
+        kind = "persistent" if fails > 2 else "transient"
+        return InjectedDispatchError(
+            f"injected {kind} dispatch fault "
+            f"(dispatch={dispatch_idx}, attempt={attempt})")
+
+    # ---- store-flush surface --------------------------------------------
+
+    def attach(self, store) -> None:
+        """Install this injector as ``store.fault_hook``.
+
+        The store calls the hook at the top of every `flush_updates`,
+        *before* taking staged mutations — a failed flush leaves the
+        staged queue intact (the store's torn-flush contract), so the
+        engine retries it at its next poll.
+        """
+        store.fault_hook = self._flush_hook
+
+    def _flush_hook(self) -> None:
+        from repro.store import StoreFlushError
+        idx, self._flush_idx = self._flush_idx, self._flush_idx + 1
+        if self.flush_failure_rate <= 0.0:
+            return
+        rng = self._rng(_KIND_FLUSH, idx)
+        if rng.random() < self.flush_failure_rate:
+            self.n_flush_failures += 1
+            raise StoreFlushError(
+                f"injected store flush failure (flush={idx})")
+
+    # ---- observability ---------------------------------------------------
+
+    def stats(self) -> dict:
+        """What the schedule actually injected, as a plain dict."""
+        return {
+            "seed": self.seed,
+            "latency_spikes": self.n_latency_injected,
+            "injected_latency_ms": self.injected_latency_s * 1e3,
+            "dispatch_errors": self.n_errors_injected,
+            "persistent_errors": self.n_persistent_errors,
+            "flush_failures": self.n_flush_failures,
+        }

@@ -1,25 +1,31 @@
-"""Serving: the MIPS request loop (micro-batching engine) + LM decode demo.
+"""Serving CLI: request-loop / runtime driver + LM decode demo.
 
 The paper's feature in production position: `--mips boundedme` replaces the
 full unembedding matvec at every decode step with the BoundedME bandit
 (per-query (eps, delta) knob, zero preprocessing — the vocab table can be
 hot-swapped between requests with no index rebuild).
 
-Two entry points:
+The serving classes themselves live in `repro.launch.engine`
+(`MIPSServeEngine`, `ServeRuntime`, `CascadeExecutor`, `QuantizedLRU`) and
+`repro.launch.admission` (priority classes, typed results, degradation
+ladder); they are re-exported here for backward compatibility.  This
+module owns the *driving*: seeded reproducible arrival traces
+(`arrival_trace`), the virtual-clock stream driver (`simulate_stream`),
+CLI argument validation, and three entry points:
 
-* :class:`MIPSServeEngine` — a real request loop (DESIGN.md §7): incoming
-  queries are micro-batched up to a batch deadline, each flush is one
-  fused-cascade dispatch (single-device `bounded_me_decode`, or
-  `sharded_bounded_me_decode` across a device mesh) with the query buffer
-  donated to jit, results are memoized in a small LRU keyed on quantized
-  queries, and per-request latency/recall counters are exported as a stats
-  dict.  Pass a `repro.store.DynamicTableStore` / `ShardedTableStore`
-  instead of a static table to serve a *live* corpus: upserts/deletes are
-  drained between flushes with zero recompilation and zero index rebuild
-  (DESIGN.md §11; `--dynamic --churn-rate 0.1` below).
+* ``--loop`` — the PR-2 micro-batching request loop (`MIPSServeEngine`):
 
       PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b \
           --smoke --loop --requests 256 --batch 8 --deadline-ms 2
+
+* ``--loop --runtime`` — the continuous-batching async runtime
+  (DESIGN.md §13: admission control, priority classes, overload
+  shedding via the eps degradation ladder, fault injection):
+
+      PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b \
+          --smoke --loop --runtime --requests 512 --pattern bursty \
+          --queue-capacity 32 --eps-floor 0.4 \
+          --inject-error-rate 0.05 --inject-latency-rate 0.05
 
 * the original batched prefill + greedy decode demo:
 
@@ -30,647 +36,183 @@ Two entry points:
 from __future__ import annotations
 
 import argparse
-import collections
 import dataclasses
 import json
-import struct
+import sys
 import time
-import warnings
-from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
+from repro.launch.admission import (STATUSES,  # noqa: F401
+                                    AdmissionController,
+                                    DegradationLadder, PriorityClass,
+                                    ServeResult)
+from repro.launch.engine import (CascadeExecutor,  # noqa: F401
+                                 MIPSServeEngine, QuantizedLRU,
+                                 ServeRuntime)
 from repro.models.model import init_params
 from repro.models.steps import decode_step, prefill_step
 
-__all__ = ["QuantizedLRU", "MIPSServeEngine", "simulate_stream", "main"]
+__all__ = ["QuantizedLRU", "MIPSServeEngine", "ServeRuntime",
+           "CascadeExecutor", "PriorityClass", "ServeResult",
+           "arrival_trace", "simulate_stream", "main"]
+
+#: namespace tag so trace streams never alias other default_rng users
+_TRACE_ROOT = 0x7AC3
 
 
-class QuantizedLRU:
-    """LRU result cache keyed on quantized queries.
+def arrival_trace(n: int, *, interarrival_ms: float = 0.1,
+                  pattern: str = "uniform", seed: int = 0,
+                  burst_factor: float = 8.0, burst_len: int = 16,
+                  tail: float = 1.5) -> np.ndarray:
+    """Reproducible (n,) arrival times in seconds for a query stream.
 
-    Keys are the bytes of ``round(q / resolution)`` (int32): any two
-    queries within ``resolution`` per coordinate share a cache line, which
-    is exactly the granularity at which an (eps, delta)-approximate answer
-    is reusable.  ``resolution=0`` disables quantization sharing (exact
-    byte equality only).  Capacity 0 disables the cache entirely.
+    Patterns (all with mean spacing ``interarrival_ms`` except bursty's
+    heavy tail):
+
+      * ``uniform`` — exactly ``i * interarrival_ms`` (deterministic,
+        seed-independent; the PR-2 default, byte-identical to the old
+        driver);
+      * ``poisson`` — i.i.d. exponential gaps (memoryless open-loop
+        traffic);
+      * ``bursty`` — geometric-length bursts of arrivals spaced
+        ``interarrival_ms / burst_factor`` apart, separated by
+        Pareto(``tail``) heavy-tailed quiet gaps — the overload pattern
+        the admission/degradation stack is tested under.
+
+    The trace is a pure function of ``(seed, pattern, parameters)`` —
+    two calls with the same arguments return byte-identical arrays, so
+    CI can assert exact shed/degrade counters against it.
     """
-
-    def __init__(self, capacity: int, resolution: float = 1e-3):
-        self.capacity = int(capacity)
-        self.resolution = float(resolution)
-        self._od: "collections.OrderedDict[bytes, object]" = \
-            collections.OrderedDict()
-        self.hits = 0
-        self.misses = 0
-        self.invalidations = 0
-
-    def key(self, q: np.ndarray) -> bytes:
-        """Quantize a (N,) query to its cache key."""
-        if self.resolution > 0:
-            return np.round(np.asarray(q, np.float32)
-                            / self.resolution).astype(np.int64).tobytes()
-        return np.asarray(q, np.float32).tobytes()   # exact bytes only
-
-    def get(self, key: bytes):
-        """Return the cached value or None; counts the hit/miss."""
-        hit = self._od.get(key)
-        if hit is None:
-            self.misses += 1
-            return None
-        self._od.move_to_end(key)
-        self.hits += 1
-        return hit
-
-    def put(self, key: bytes, value) -> None:
-        """Insert/update; evicts the least-recently-used past capacity."""
-        if self.capacity <= 0:
-            return
-        self._od[key] = value
-        self._od.move_to_end(key)
-        while len(self._od) > self.capacity:
-            self._od.popitem(last=False)
-
-    def invalidate(self) -> None:
-        """Drop every entry (table version bump: cached answers are stale).
-
-        Hit/miss counters survive; ``invalidations`` counts the calls.
-        The engine additionally salts its keys with the table version, so
-        even an entry that somehow survived an invalidation could never
-        answer a post-update query.
-        """
-        self._od.clear()
-        self.invalidations += 1
-
-    def __len__(self) -> int:
-        return len(self._od)
+    d = float(interarrival_ms) * 1e-3
+    if n <= 0:
+        return np.zeros(0, np.float64)
+    if pattern == "uniform":
+        return np.arange(n, dtype=np.float64) * d
+    rng = np.random.default_rng(
+        np.random.SeedSequence([_TRACE_ROOT, int(seed)]))
+    if pattern == "poisson":
+        gaps = rng.exponential(d, size=n)
+        gaps[0] = 0.0
+        return np.cumsum(gaps)
+    if pattern == "bursty":
+        gaps = np.empty(n, np.float64)
+        i = 0
+        while i < n:
+            blen = min(n - i, max(1, int(rng.geometric(1.0 / burst_len))))
+            # quiet gap before the burst, heavy-tailed so occasional
+            # lulls let the queue drain (and occasional back-to-back
+            # bursts overload it)
+            gaps[i] = (0.0 if i == 0
+                       else d * burst_len * (0.5 + rng.pareto(tail)))
+            gaps[i + 1:i + blen] = d / burst_factor
+            i += blen
+        return np.cumsum(gaps)
+    raise ValueError(f"unknown arrival pattern {pattern!r}; "
+                     f"use uniform | poisson | bursty")
 
 
-@dataclasses.dataclass
-class _Pending:
-    req_id: int
-    q: np.ndarray
-    t_submit: float
-    cache_key: Optional[bytes]
+def simulate_stream(engine, queries, *, interarrival_ms: float = 0.1,
+                    churn=None, pattern: str = "uniform", seed: int = 0,
+                    open_loop: bool = False, classes=None,
+                    burst_factor: float = 8.0, burst_len: int = 16,
+                    trace=None) -> dict:
+    """Drive a query stream through an engine/runtime on a virtual clock.
 
+    Arrivals follow a reproducible `arrival_trace` (``pattern`` /
+    ``seed``; or pass an explicit ``trace`` array) on a simulated clock
+    that only advances by (a) arrival spacing and (b) *measured* compute
+    time of each dispatch — batching/deadline/overload dynamics are
+    exercised exactly as in wall-clock serving, without sleeps.
 
-class MIPSServeEngine:
-    """Micro-batching MIPS request loop over a fixed item table.
+    ``open_loop=True`` stamps each submit at its *true* trace arrival
+    time even when the engine's virtual clock has already passed it,
+    and admits every arrival the clock has overtaken *before* the next
+    poll (arrivals keep coming while the server is busy — the load
+    model under which queues actually grow, batches fill, and shedding
+    fires).  The default closed-ish loop (arrivals wait for the clock,
+    one submit per poll) matches the PR-2 driver byte-for-byte on the
+    uniform pattern.
 
-    Requests (`submit`) are answered from the LRU when a quantized-equal
-    query was served recently; otherwise they queue until either
-    ``batch_size`` requests are waiting or the oldest has aged past
-    ``deadline_ms`` (`poll` applies both triggers), then the whole
-    micro-batch is served by ONE fused-cascade dispatch.  The padded
-    (batch_size, N) query buffer is donated to jit so steady-state serving
-    re-uses its device allocation instead of growing one per flush.
-
-    With ``mesh`` the flush runs `sharded_bounded_me_decode` (shard-local
-    cascades + exact cross-shard merge, DESIGN.md §7); otherwise the
-    single-device `bounded_me_decode`.  Results arrive via `result` as
-    ``(ids (K,), scores (K,))`` numpy arrays.
-
-    ``recall_sample_rate`` > 0 additionally rescoring a random fraction of
-    requests exhaustively on the host and folds top-K recall into
-    `stats` — the live accuracy counter for the (eps, delta) knob.
-
-    ``precision='int8'`` serves every flush on int8-quantized tiles under
-    quantization-widened confidence bounds (DESIGN.md §10, docs/TUNING.md):
-    roughly half the sampling-phase memory traffic per flush, with returned
-    scores still fp32-exact (candidate rescore).  The live ``recall``
-    stat is the operator's check that the widened (eps, delta) calibration
-    holds on real traffic.
-
-    ``adaptive=True`` (DESIGN.md §12) lets every query in a flush certify
-    early exit at round boundaries under the ``bound`` radius family
-    ('hoeffding' reuses the schedule's events; 'bernstein' is
-    variance-aware): easy queries stop pulling rounds early inside the
-    same (eps, delta) contract, and `stats()["adaptive"]` exports the
-    per-query ``rounds_used`` histogram plus the mean executed-pull
-    fraction.  Works on every path — single-device, sharded
-    (shard-local certification), and store-backed including the int8
-    shadow (certification radii carry the quantization bias).
-
-    **Live corpora** (DESIGN.md §11): ``table`` may be a
-    `repro.store.DynamicTableStore` (or `ShardedTableStore` for
-    multi-device serving) instead of a static array.  The engine then
-    serves the store's preallocated capacity buffer with the live-row
-    count riding in as a traced ``n_valid`` every flush, so
-    upsert/delete/append streams recompile nothing; staged mutations are
-    drained by `apply_updates` — called automatically at every `poll` /
-    `drain`, i.e. between micro-batch flushes — which also bumps the
-    engine's table version (salting + invalidating the LRU so no stale
-    answer survives), keeps the recall estimator on the store's live host
-    mirror, and re-derives the (eps, delta) schedule only when the
-    store's monotonic value range grows past the calibrated bound.
-    Returned ids are the store's stable *external* ids.  The engine
-    adopts the store's ``tile``/``block`` geometry and (for a
-    `DynamicTableStore` int8 shadow) its ``precision``.
-
-    Failure modes: queries must be (N,) float and finite — NaN/inf
-    propagate into scores and poison the LRU line; `submit` raises on a
-    shape mismatch.  The engine is not thread-safe; drive it from one
-    loop.
+    ``churn(engine, i)`` (optional) runs before each arrival — stage
+    store mutations there to simulate a live corpus.  ``classes(i)``
+    (optional, `ServeRuntime` only) names the priority class of arrival
+    ``i``.  Returns the engine stats dict plus ``virtual_s``,
+    ``throughput_rps`` and the ``trace`` metadata block (pattern, seed,
+    span, offered rate) that makes the run reproducible.
     """
-
-    def __init__(self, table, *, K: int = 1, eps: float = 0.1,
-                 delta: float = 0.1, value_range: Optional[float] = None,
-                 qmax_hint: float = 1.0, tile: int = 8, block: int = 512,
-                 batch_size: int = 8, deadline_ms: float = 2.0,
-                 cache_entries: int = 512, cache_resolution: float = 1e-3,
-                 mesh=None, model_axis: str = "model",
-                 n_valid: Optional[int] = None,
-                 recall_sample_rate: float = 0.0,
-                 use_pallas: Optional[bool] = None,
-                 precision: str = "fp32", range_slack: float = 1.0,
-                 adaptive: bool = False, bound: str = "hoeffding",
-                 seed: int = 0):
-        from repro.core.mips import table_abs_max
-        from repro.store import DynamicTableStore, ShardedTableStore
-
-        self._store = table if isinstance(
-            table, (DynamicTableStore, ShardedTableStore)) else None
-        self._qmax_hint = float(qmax_hint)
-        self._range_slack = float(range_slack)
-        self._use_pallas = use_pallas
-        if self._store is not None:
-            store = self._store
-            if isinstance(store, ShardedTableStore):
-                if mesh is not None and mesh is not store.mesh:
-                    raise ValueError("mesh differs from the store's mesh")
-                mesh = store.mesh
-                model_axis = store.model_axis
-            elif mesh is not None:
-                raise ValueError(
-                    "serving a mesh needs a ShardedTableStore")
-            if n_valid is not None:
-                raise ValueError("n_valid is store-managed")
-            # the store owns the kernel geometry (its int8 shadow and the
-            # engine's plan must agree tile-for-tile)
-            tile, block = store.tile, store.block
-            if store.precision == "int8":
-                precision = "int8"
-            n, N = store.capacity_rows, store.N
-            # clamp to the store's observed range exactly as apply_updates
-            # would on growth: a churned engine and a fresh engine on the
-            # store's snapshot then always calibrate identical plans
-            # (range_slack=1.0)
-            floor = 2.0 * self._qmax_hint * max(store.value_abs_max, 1e-30)
-            value_range = (floor if value_range is None
-                           else max(float(value_range), floor))
-        else:
-            self._table = jnp.asarray(table)
-            n, N = self._table.shape
-            if value_range is None:
-                # a-priori product-range bound: callers who know their
-                # query norms should pass an explicit value_range instead
-                value_range = 2.0 * qmax_hint * table_abs_max(self._table)
-        self.n, self.N, self.K = n, N, K
-        self.batch_size = int(batch_size)
-        self.deadline_s = float(deadline_ms) * 1e-3
-        self._mesh = mesh
-        self._model_axis = model_axis
-        self._eps, self._delta = float(eps), float(delta)
-        self._tile, self._block = int(tile), min(int(block), N)
-        self._precision = precision
-        self._adaptive = bool(adaptive)
-        self._bound = bound
-        self._n_valid = n_valid
-        self._use_shadow = (self._store is not None and mesh is None
-                            and self._store.precision == "int8")
-
-        self._build(float(value_range))   # sets plan (+ shard geometry)
-        if mesh is not None and self._store is None:
-            from repro.distributed.specs import serving_table_sharding
-            n_valid_eff = n if n_valid is None else n_valid
-            self._n_valid = n_valid_eff   # recall must mask pad rows too
-            if self._n_pad:  # ragged: pad rows host-side ONCE, pre-placing
-                self._table = jnp.pad(self._table,
-                                      ((0, self._n_pad), (0, 0)))
-            self._table = jax.device_put(
-                self._table, serving_table_sharding(mesh, model_axis))
-            # static per-shard validity prefixes, passed traced per flush
-            self._nv_static = np.clip(
-                n_valid_eff
-                - np.arange(mesh.shape[model_axis]) * self._n_local,
-                0, self._n_local).astype(np.int32)
-        elif mesh is None:
-            nv = n if n_valid is None else n_valid
-            self._nv_static = np.int32(nv)
-        self._key = jax.random.PRNGKey(seed)
-        self.cache = QuantizedLRU(cache_entries, cache_resolution)
-        self._version = 0 if self._store is None else self._store.version
-        self._pending: List[_Pending] = []
-        self._results: Dict[int, Tuple[np.ndarray, np.ndarray]] = {}
-        self._next_id = 0
-        self._recall_rate = float(recall_sample_rate)
-        self._recall_rng = np.random.default_rng(seed)
-        self._table_np = None   # host copy, materialized only for recall
-        self._lat: List[float] = []
-        self._recalls: List[float] = []
-        self._rounds: List[int] = []   # adaptive: per-query exit rounds
-        self.n_requests = 0
-        self.n_cache_hits = 0
-        self.n_batches = 0
-        self.n_deadline_flushes = 0
-        self.n_full_flushes = 0
-        self.n_updates = 0
-        self.n_update_flushes = 0
-        self.n_recalibrations = 0
-        self._update_time_s = 0.0
-        self._occupancy: List[int] = []
-
-    def _build(self, value_range: float) -> None:
-        """(Re)build the static plan + jitted flush fn for a value range.
-
-        Called once at construction and again only when `apply_updates`
-        observes the store's monotonic value range outgrowing the
-        calibrated bound — the single event that changes the schedule
-        (and therefore recompiles) on the dynamic path.
-        """
-        from repro.core.boundedme_jax import bounded_me_decode, make_plan
-
-        self._plan_value_range = float(value_range)
-        mesh, model_axis = self._mesh, self._model_axis
-        K, eps, delta = self.K, self._eps, self._delta
-        tile, block = self._tile, self._block
-        precision, use_pallas = self._precision, self._use_pallas
-        adaptive, bound = self._adaptive, self._bound
-        if mesh is not None:
-            from repro.distributed.sharding import (make_shard_plan,
-                                                    sharded_bounded_me_decode)
-            self.plan, self._n_local, self._n_pad, _ = make_shard_plan(
-                self.n, self.N, mesh.shape[model_axis], K=K, eps=eps,
-                delta=delta, value_range=value_range, tile=tile, block=block,
-                precision=precision, bound=bound)
-
-            def _flush_fn(tbl, Qbuf, key, nv):
-                out = sharded_bounded_me_decode(
-                    tbl, Qbuf, key, mesh=mesh, K=K, model_axis=model_axis,
-                    n_valid=nv, eps=eps, delta=delta,
-                    value_range=value_range, tile=tile, block=block,
-                    final_exact=True, use_pallas=use_pallas,
-                    precision=precision, adaptive=adaptive, bound=bound)
-                # rounds_used is (B, shards) when adaptive, else absent
-                return out[0], out[1], (out[3] if adaptive else None)
-
-            donate = 1
-        else:
-            plan = make_plan(self.n, self.N, K=K, eps=eps, delta=delta,
-                             value_range=value_range, tile=tile,
-                             block=block, precision=precision, bound=bound)
-            self.plan = plan
-            if self._use_shadow:
-                # the store maintains the int8 shadow incrementally; the
-                # flush consumes it instead of re-quantizing the table
-                def _flush_fn(tbl, V8, vscale, Qbuf, key, nv):
-                    out = bounded_me_decode(
-                        tbl, Qbuf, key, plan=plan, final_exact=True,
-                        use_pallas=use_pallas, n_valid=nv,
-                        quantized=(V8, vscale), adaptive=adaptive)
-                    return (out if adaptive else (*out, None))
-
-                donate = 3
-            else:
-                def _flush_fn(tbl, Qbuf, key, nv):
-                    # padding/dead rows are masked inside the cascade, so
-                    # they can never occupy the returned top-K slots
-                    out = bounded_me_decode(
-                        tbl, Qbuf, key, plan=plan, final_exact=True,
-                        use_pallas=use_pallas, n_valid=nv, adaptive=adaptive)
-                    return (out if adaptive else (*out, None))
-
-                donate = 1
-
-        # donate the query buffer: steady-state flushes recycle the same
-        # (batch_size, N) device allocation (no-op on backends without
-        # donation support, e.g. CPU)
-        self._fn = jax.jit(_flush_fn, donate_argnums=(donate,))
-
-    # ---- request path ---------------------------------------------------
-
-    @property
-    def pending_count(self) -> int:
-        """Requests accepted but not yet served (excludes cache hits)."""
-        return len(self._pending)
-
-    def submit(self, q, now: Optional[float] = None) -> int:
-        """Accept one (N,) query; returns its request id.
-
-        Cache hits complete immediately (latency ~0); misses queue for the
-        next micro-batch.  ``now`` (seconds, any monotonic origin) defaults
-        to wall clock — pass a virtual clock for simulation.  Staged store
-        mutations are drained first: a query submitted after an upsert
-        must never be answered from a pre-upsert cache line or table.
-        """
-        q = np.asarray(q, np.float32)
-        if q.shape != (self.N,):
-            raise ValueError(f"query shape {q.shape} != ({self.N},)")
-        self.apply_updates()
-        now = time.perf_counter() if now is None else now
-        rid = self._next_id
-        self._next_id += 1
-        self.n_requests += 1
-        # lookups are salted with the *current* (table version, K): a
-        # result cached before an update can never answer a post-update
-        # query, even if an invalidation were missed
-        ck = self.cache.key(q) if self.cache.capacity > 0 else None
-        if ck is not None:
-            hit = self.cache.get(self._salted(ck))
-            if hit is not None:
-                self._results[rid] = hit
-                self.n_cache_hits += 1
-                self._lat.append(0.0)
-                return rid
-        self._pending.append(_Pending(rid, q, now, ck))
-        return rid
-
-    def _salted(self, base_key: bytes) -> bytes:
-        """Prefix an LRU base key with the live (version, K) salt."""
-        return struct.pack("<qi", self._version, self.K) + base_key
-
-    def poll(self, now: Optional[float] = None) -> Tuple[List[int], float]:
-        """Flush micro-batches whose trigger fired; returns (ids, busy_s).
-
-        Triggers: ``batch_size`` requests waiting (full flush), or the
-        oldest pending request older than the batch deadline (deadline
-        flush).  ``busy_s`` is the wall time spent in compute, so virtual-
-        clock drivers can advance time by it.  Store-backed engines drain
-        staged table mutations first (`apply_updates`), so a flush never
-        serves a torn table and an update submitted before a query is
-        visible to it.
-        """
-        now = time.perf_counter() if now is None else now
-        self.apply_updates()
-        done: List[int] = []
-        busy = 0.0
-        while self._pending:
-            full = len(self._pending) >= self.batch_size
-            aged = now - self._pending[0].t_submit >= self.deadline_s
-            if not (full or aged):
-                break
-            if full:
-                self.n_full_flushes += 1
-            else:
-                self.n_deadline_flushes += 1
-            ids, dt = self._flush(now + busy)
-            done.extend(ids)
-            busy += dt
-        return done, busy
-
-    def drain(self, now: Optional[float] = None) -> Tuple[List[int], float]:
-        """Flush everything pending regardless of triggers (shutdown).
-
-        Also drains staged store mutations first, like `poll`.
-        """
-        now = time.perf_counter() if now is None else now
-        self.apply_updates()
-        done: List[int] = []
-        busy = 0.0
-        while self._pending:
-            self.n_deadline_flushes += 1
-            ids, dt = self._flush(now + busy)
-            done.extend(ids)
-            busy += dt
-        return done, busy
-
-    def result(self, req_id: int):
-        """Pop the (ids, scores) result for a completed request, or None."""
-        return self._results.pop(req_id, None)
-
-    # ---- updates (store-backed engines) ---------------------------------
-
-    def apply_updates(self) -> int:
-        """Drain the store's staged mutations; returns rows applied.
-
-        Runs between micro-batch flushes (`poll` / `drain` call it first),
-        so in-flight queries never observe a half-applied update burst.
-        On any applied mutation: bumps the engine's table version (the
-        LRU is invalidated and its keys salted so no pre-update answer
-        survives), drops the stale recall mirror (the estimator reads the
-        store's always-fresh host mirror anyway), and — only if the
-        store's monotonic value range grew past the calibrated bound —
-        re-derives the (eps, delta) schedule at ``range * range_slack``
-        (the lone recompile-triggering event, counted in
-        ``stats()["updates"]["recalibrations"]``).  No-op without a store.
-        """
-        store = self._store
-        if store is None:
-            return 0
-        applied = 0
-        if store.pending_updates:
-            t0 = time.perf_counter()
-            info = store.flush_updates()
-            applied = info["applied"]
-            self.n_updates += applied
-            self.n_update_flushes += 1
-            self._update_time_s += time.perf_counter() - t0
-        if store.version != self._version:
-            # covers staged mutations AND out-of-band ones (grow())
-            self._version = store.version
-            self.cache.invalidate()
-            self._table_np = None   # never serve stale recall ground truth
-        if store.capacity_rows != self.n:
-            # the store grew: shapes changed, rebuild plan + flush fn
-            self.n = store.capacity_rows
-            self._build(self._plan_value_range)
-            self.n_recalibrations += 1
-        needed = 2.0 * self._qmax_hint * store.value_abs_max
-        if needed > self._plan_value_range:
-            # value-range growth is the only other event that re-derives
-            # the schedule; range_slack > 1 buys headroom so a growing
-            # corpus recalibrates O(log growth) times, not per update
-            self._build(needed * self._range_slack)
-            self.n_recalibrations += 1
-        return applied
-
-    # ---- flush ----------------------------------------------------------
-
-    def _flush_args(self, Qbuf, key):
-        """Assemble per-flush operands (table/shadow/validity) in order."""
-        store = self._store
-        if store is None:
-            return (self._table, Qbuf, key, self._nv_static)
-        tbl = store.device_table()
-        if self._mesh is not None:
-            nv = store.n_valid_vector()
-        else:
-            nv = np.int32(store.n_live)
-        if self._use_shadow:
-            V8, vscale = store.quantized()
-            return (tbl, V8, vscale, Qbuf, key, nv)
-        return (tbl, Qbuf, key, nv)
-
-    def _flush(self, now: float) -> Tuple[List[int], float]:
-        batch = self._pending[:self.batch_size]
-        self._pending = self._pending[len(batch):]
-        Qbuf = np.zeros((self.batch_size, self.N), np.float32)
-        for i, p in enumerate(batch):
-            Qbuf[i] = p.q
-        key = jax.random.fold_in(self._key, self.n_batches)
-        t0 = time.perf_counter()
-        with warnings.catch_warnings():
-            # CPU backends warn that donation is unimplemented; harmless
-            warnings.filterwarnings("ignore",
-                                    message=".*[Dd]onat.*")
-            ids, scores, rounds = self._fn(
-                *self._flush_args(jnp.asarray(Qbuf), key))
-            jax.block_until_ready(scores)
-        dt = time.perf_counter() - t0
-        ids = np.asarray(ids)[:len(batch)]
-        scores = np.asarray(scores)[:len(batch)]
-        if rounds is not None:
-            # (B,) single-device, (B, shards) sharded: histogram every
-            # shard's exit round for the real (non-padding) batch rows
-            self._rounds.extend(
-                np.asarray(rounds)[:len(batch)].reshape(-1).tolist())
-        self.n_batches += 1
-        self._occupancy.append(len(batch))
-        done = []
-        for i, p in enumerate(batch):
-            # store-backed engines answer with stable external ids, never
-            # raw slots (a slot's occupant changes across swap-deletes)
-            out_ids = (self._store.external_ids(ids[i])
-                       if self._store is not None else ids[i].copy())
-            res = (out_ids, scores[i].copy())
-            self._results[p.req_id] = res
-            if p.cache_key is not None:
-                # salt at put time: if the version bumped while this
-                # request was queued, the result files under the live
-                # version (not a dead pre-update key)
-                self.cache.put(self._salted(p.cache_key), res)
-            self._lat.append((now - p.t_submit) + dt)
-            if (self._recall_rate > 0.0
-                    and self._recall_rng.random() < self._recall_rate):
-                self._recalls.append(self._recall_of(p.q, ids[i]))
-            done.append(p.req_id)
-        if len(self._lat) > 100_000:       # bound the stats memory
-            self._lat = self._lat[-10_000:]
-        if len(self._occupancy) > 100_000:
-            self._occupancy = self._occupancy[-10_000:]
-        if len(self._recalls) > 100_000:
-            self._recalls = self._recalls[-10_000:]
-        if len(self._rounds) > 100_000:
-            self._rounds = self._rounds[-10_000:]
-        return done, dt
-
-    def _recall_of(self, q: np.ndarray, got_slots: np.ndarray) -> float:
-        if self._store is not None:
-            # the store's host mirror is updated in O(rows touched) at
-            # every apply_updates, so live recall never goes stale
-            tbl = self._store.host_table()
-            s = tbl @ q
-            s[~self._store.live_mask()] = -np.inf
-        else:
-            if self._table_np is None:
-                self._table_np = np.asarray(self._table)
-            s = self._table_np @ q
-            if self._n_valid is not None:
-                s[self._n_valid:] = -np.inf
-        exact = np.argpartition(-s, self.K - 1)[:self.K]
-        return len(set(exact.tolist()) & set(got_slots.tolist())) / self.K
-
-    # ---- observability --------------------------------------------------
-
-    def _adaptive_stats(self) -> dict:
-        """Early-exit telemetry: rounds_used histogram + mean pull frac."""
-        out = {"enabled": self._adaptive, "bound": self._bound}
-        if not self._adaptive:
-            return out
-        from repro.core.schedule import pulls_through_round
-        hist: Dict[int, int] = {}
-        for r in self._rounds:
-            hist[int(r)] = hist.get(int(r), 0) + 1
-        pulls = pulls_through_round(self.plan.schedule)
-        total = max(1, int(pulls[-1]))
-        samples = max(1, len(self._rounds))
-        mean_pulls = sum(int(pulls[min(r, len(pulls) - 1)]) * c
-                         for r, c in hist.items()) / samples
-        out.update({
-            "samples": len(self._rounds),
-            "rounds_hist": {str(k): v for k, v in sorted(hist.items())},
-            "mean_rounds": (float(np.mean(self._rounds))
-                            if self._rounds else 0.0),
-            "mean_pull_frac": mean_pulls / total,
-        })
-        return out
-
-    def stats(self) -> dict:
-        """Per-request latency/recall counters as a plain dict.
-
-        latency_ms percentiles include cache hits (latency 0); recall is
-        over the sampled fraction only (``nan`` when nothing was sampled).
-        """
-        lat = np.asarray(self._lat, np.float64) * 1e3
-        occ = np.asarray(self._occupancy, np.float64)
-        return {
-            "requests": self.n_requests,
-            "completed": self.n_requests - len(self._pending),
-            "pending": len(self._pending),
-            "batches": self.n_batches,
-            "full_flushes": self.n_full_flushes,
-            "deadline_flushes": self.n_deadline_flushes,
-            "mean_batch_occupancy": float(occ.mean()) if occ.size else 0.0,
-            "cache": {"hits": self.cache.hits, "misses": self.cache.misses,
-                      "entries": len(self.cache),
-                      "hit_rate": (self.cache.hits
-                                   / max(1, self.cache.hits
-                                         + self.cache.misses))},
-            "latency_ms": {
-                "mean": float(lat.mean()) if lat.size else 0.0,
-                "p50": float(np.percentile(lat, 50)) if lat.size else 0.0,
-                "p95": float(np.percentile(lat, 95)) if lat.size else 0.0,
-                "max": float(lat.max()) if lat.size else 0.0},
-            "recall": {"samples": len(self._recalls),
-                       "mean": (float(np.mean(self._recalls))
-                                if self._recalls else float("nan"))},
-            "plan": {"rounds": len(self.plan.schedule.rounds),
-                     "pull_speedup": self.plan.schedule.speedup},
-            "adaptive": self._adaptive_stats(),
-            "updates": {
-                "applied": self.n_updates,
-                "update_flushes": self.n_update_flushes,
-                "recalibrations": self.n_recalibrations,
-                "version": self._version,
-                "cache_invalidations": self.cache.invalidations,
-                "rows_per_s": (self.n_updates / self._update_time_s
-                               if self._update_time_s > 0 else 0.0)},
-            **({"store": self._store.stats()}
-               if self._store is not None else {}),
-        }
-
-
-def simulate_stream(engine: MIPSServeEngine, queries, *,
-                    interarrival_ms: float = 0.1, churn=None) -> dict:
-    """Drive a query stream through the engine on a virtual clock.
-
-    Arrivals are spaced ``interarrival_ms`` apart on a simulated clock that
-    only advances by (a) arrival spacing and (b) *measured* compute time of
-    each flush — so batching/deadline dynamics are exercised exactly as in
-    wall-clock serving, without sleeps.  ``churn`` (optional) is called as
-    ``churn(engine, i)`` before each arrival — stage store mutations there
-    to simulate a live corpus; the engine drains them at its next poll
-    (mixed read/write streams, BENCH_PR4.json).  Returns the engine stats
-    dict plus ``virtual_s`` and ``throughput_rps``.
-    """
+    n = len(queries)
+    if trace is None:
+        trace = arrival_trace(n, interarrival_ms=interarrival_ms,
+                              pattern=pattern, seed=seed,
+                              burst_factor=burst_factor,
+                              burst_len=burst_len)
+    trace = np.asarray(trace, np.float64)
     now = 0.0
-    for i, q in enumerate(queries):
-        now = max(now, i * interarrival_ms * 1e-3)
-        if churn is not None:
-            churn(engine, i)
-        engine.submit(q, now=now)
+    i = 0
+    while i < n:
+        now = max(now, float(trace[i]))
+        # admit arrival i — and, open loop, every later arrival already
+        # overdue because the clock advanced while the server was busy.
+        # Without this the queue can never exceed one request and
+        # continuous batching degenerates to singleton dispatches.
+        while True:
+            if churn is not None:
+                churn(engine, i)
+            kw = {} if classes is None else {"cls": classes(i)}
+            engine.submit(queries[i],
+                          now=(float(trace[i]) if open_loop else now), **kw)
+            i += 1
+            if not (open_loop and i < n and float(trace[i]) <= now):
+                break
         _, busy = engine.poll(now=now)
         now += busy
+        # batch-wait timer: a real async loop flushes a partial batch
+        # after batch_wait even with no new arrival to wake it.  Poll at
+        # timer ticks across quiet gaps so a burst tail is not stuck
+        # queued (and expiring) until the next burst arrives.
+        t_next = float(trace[i]) if i < n else np.inf
+        while engine.pending_count and now + engine.deadline_s < t_next:
+            now += engine.deadline_s
+            _, busy = engine.poll(now=now)
+            now += busy
     while engine.pending_count:
         now += engine.deadline_s
         _, busy = engine.poll(now=now)
         now += busy
-    n = max(1, len(queries))
-    return {"virtual_s": now, "throughput_rps": n / max(now, 1e-9),
+    span = float(trace[-1]) if n else 0.0
+    return {"virtual_s": now,
+            "throughput_rps": max(1, n) / max(now, 1e-9),
+            "trace": {"pattern": pattern, "seed": int(seed),
+                      "interarrival_ms": float(interarrival_ms),
+                      "open_loop": bool(open_loop),
+                      "span_s": span,
+                      "offered_rps": n / max(span, 1e-9) if n else 0.0},
             **engine.stats()}
+
+
+def _make_churn(store, churn_rate: float, scale: float):
+    """The --dynamic mutation closure: upserts/delete+append per arrival."""
+    crng = np.random.default_rng(1)
+
+    def churn(eng, i):
+        if crng.random() >= churn_rate:
+            return
+        row = (scale * crng.normal(size=eng.N) / np.sqrt(eng.N)
+               ).astype(np.float32)
+        live = store.live_ids()
+        if crng.random() < 0.7 or live.size == 0:
+            tgt = (int(crng.choice(live)) if live.size
+                   else store.append(row) or 0)
+            store.upsert(tgt, row)
+        elif store.free_rows > 0:
+            store.delete(int(crng.choice(live)))
+            store.append(row)
+
+    return churn
 
 
 def _run_loop(args) -> None:
@@ -680,8 +222,10 @@ def _run_loop(args) -> None:
     `repro.store.DynamicTableStore` (or `ShardedTableStore` under
     ``--shards``) and ``--churn-rate`` of the arrivals additionally stage
     an embedding upsert or a delete+append pair — the live-corpus
-    scenario (DESIGN.md §11): a growing vocabulary served with zero
-    engine rebuilds.
+    scenario (DESIGN.md §11).  With ``--runtime`` the stream is served by
+    the continuous-batching `ServeRuntime` (DESIGN.md §13) under the
+    chosen arrival ``--pattern``, optionally with deterministic fault
+    injection (``--inject-*``).
     """
     cfg = get_config(args.arch)
     if args.smoke:
@@ -694,6 +238,8 @@ def _run_loop(args) -> None:
         mesh = make_serving_mesh(args.shards)
     block = min(512, cfg.d_model)
     churn = None
+    store = None
+    n_valid = cfg.vocab
     if args.dynamic:
         from repro.store import DynamicTableStore, ShardedTableStore
         table = np.asarray(table, np.float32)[:cfg.vocab]
@@ -705,57 +251,115 @@ def _run_loop(args) -> None:
             store = DynamicTableStore(
                 table, block=block, capacity_slack=args.capacity_slack,
                 precision=args.precision)
-        engine = MIPSServeEngine(
-            store, K=args.topk, eps=args.eps, delta=args.delta,
-            batch_size=args.batch, deadline_ms=args.deadline_ms,
-            mesh=mesh, recall_sample_rate=args.recall_rate,
-            cache_entries=args.cache_entries, precision=args.precision,
-            adaptive=args.adaptive, bound=args.bound)
+        table, n_valid = store, None
         if args.churn_rate > 0:
-            crng = np.random.default_rng(1)
-            scale = float(np.abs(table).max())
+            churn = _make_churn(store, args.churn_rate,
+                                float(store.value_abs_max))
 
-            def churn(eng, i):
-                if crng.random() >= args.churn_rate:
-                    return
-                row = (scale * crng.normal(size=eng.N) / np.sqrt(eng.N)
-                       ).astype(np.float32)
-                live = store.live_ids()
-                if crng.random() < 0.7 or live.size == 0:
-                    tgt = (int(crng.choice(live)) if live.size
-                           else store.append(row) or 0)
-                    store.upsert(tgt, row)
-                elif store.free_rows > 0:
-                    store.delete(int(crng.choice(live)))
-                    store.append(row)
+    common = dict(K=args.topk, eps=args.eps, delta=args.delta,
+                  mesh=mesh, recall_sample_rate=args.recall_rate,
+                  cache_entries=args.cache_entries,
+                  precision=args.precision, adaptive=args.adaptive,
+                  bound=args.bound)
+    if not args.dynamic:
+        common.update(block=block, n_valid=n_valid)
+
+    if args.runtime:
+        injector = None
+        if (args.inject_latency_rate > 0 or args.inject_error_rate > 0
+                or args.inject_flush_rate > 0):
+            from repro.launch.faults import FaultInjector
+            injector = FaultInjector(
+                args.fault_seed,
+                latency_rate=args.inject_latency_rate,
+                error_rate=args.inject_error_rate,
+                flush_failure_rate=args.inject_flush_rate)
+        classes = {
+            "interactive": PriorityClass(
+                "interactive", priority=0,
+                deadline_ms=args.request_deadline_ms, sheddable=False),
+            "default": PriorityClass(
+                "default", priority=1,
+                deadline_ms=args.request_deadline_ms),
+            "batch": PriorityClass(
+                "batch", priority=2,
+                deadline_ms=4 * args.request_deadline_ms),
+        }
+        engine = ServeRuntime(
+            table, eps_floor=args.eps_floor,
+            degrade_rungs=args.degrade_rungs, lanes=args.batch,
+            batch_wait_ms=args.deadline_ms,
+            queue_capacity=args.queue_capacity, classes=classes,
+            max_retries=args.max_retries, fault_injector=injector,
+            **common)
+        print(f"[serve] runtime: table=({engine.n},{engine.N}) "
+              f"K={args.topk} eps={args.eps} "
+              f"eps_floor={engine.ladder.eps_floor} "
+              f"rungs={engine.ladder.n_rungs} lanes={args.batch} "
+              f"queue={args.queue_capacity} "
+              f"pattern={args.pattern} "
+              f"shards={mesh.shape['model'] if mesh else 1} "
+              f"dynamic={bool(args.dynamic)} churn={args.churn_rate} "
+              f"faults={'on' if injector else 'off'}")
     else:
         engine = MIPSServeEngine(
-            table, K=args.topk, eps=args.eps, delta=args.delta,
-            batch_size=args.batch, deadline_ms=args.deadline_ms,
-            block=block, n_valid=cfg.vocab, mesh=mesh,
-            recall_sample_rate=args.recall_rate,
-            cache_entries=args.cache_entries, precision=args.precision,
-            adaptive=args.adaptive, bound=args.bound)
-    print(f"[serve] loop: table=({engine.n},{engine.N}) K={args.topk} "
-          f"eps={args.eps} batch={args.batch} "
-          f"deadline={args.deadline_ms}ms "
-          f"shards={mesh.shape['model'] if mesh else 1} "
-          f"dynamic={bool(args.dynamic)} churn={args.churn_rate} "
-          f"rounds={len(engine.plan.schedule.rounds)} "
-          f"precision={engine.plan.precision} "
-          f"adaptive={args.adaptive} bound={args.bound} "
-          f"eps_eff={engine.plan.eps_effective:.4f} "
-          f"pull_speedup={engine.plan.schedule.speedup:.2f}x")
+            table, batch_size=args.batch, deadline_ms=args.deadline_ms,
+            **common)
+        print(f"[serve] loop: table=({engine.n},{engine.N}) "
+              f"K={args.topk} eps={args.eps} batch={args.batch} "
+              f"deadline={args.deadline_ms}ms "
+              f"shards={mesh.shape['model'] if mesh else 1} "
+              f"dynamic={bool(args.dynamic)} churn={args.churn_rate} "
+              f"rounds={len(engine.plan.schedule.rounds)} "
+              f"precision={engine.plan.precision} "
+              f"adaptive={args.adaptive} bound={args.bound} "
+              f"eps_eff={engine.plan.eps_effective:.4f} "
+              f"pull_speedup={engine.plan.schedule.speedup:.2f}x")
     rng = np.random.default_rng(0)
     qs = rng.normal(size=(args.requests, engine.N)).astype(np.float32)
     if args.repeat_rate > 0:                  # cacheable duplicate queries
         n_dup = int(args.requests * args.repeat_rate)
         idx = rng.integers(0, max(1, args.requests - n_dup), n_dup)
         qs[args.requests - n_dup:] = qs[idx]
-    stats = simulate_stream(engine, qs,
-                            interarrival_ms=args.interarrival_ms,
-                            churn=churn)
+    cls_fn = None
+    if args.runtime:
+        crng = np.random.default_rng(args.stream_seed + 1)
+        names = ("interactive", "default", "default", "batch")
+        picks = crng.integers(0, len(names), args.requests)
+        cls_fn = lambda i: names[picks[i]]   # noqa: E731
+    stats = simulate_stream(
+        engine, qs, interarrival_ms=args.interarrival_ms, churn=churn,
+        pattern=args.pattern, seed=args.stream_seed,
+        open_loop=args.runtime, classes=cls_fn)
     print(json.dumps(stats, indent=2))
+    if args.runtime and args.check_outcomes:
+        _check_outcomes(args, stats)
+
+
+def _check_outcomes(args, stats: dict) -> None:
+    """--check-outcomes: fail the process unless the runtime held its
+    serving contract over the stream — reaching this line at all proves
+    no exception escaped `simulate_stream`; on top of that every request
+    must have finished with exactly one typed status from the closed
+    set, and the answered tail latency must stay inside 8x the request
+    deadline (expiry bounds queueing; dispatch + retries ride on top).
+    Used by the CI overload + fault-injection smoke job."""
+    o = stats["outcomes"]
+    unknown = set(o) - set(STATUSES)
+    if unknown:
+        sys.exit(f"[check] unknown outcome statuses: {sorted(unknown)}")
+    total = sum(o.values())
+    if total != stats["requests"]:
+        sys.exit(f"[check] {stats['requests']} requests but {total} "
+                 f"typed outcomes — a request finished without a "
+                 f"status, or with two")
+    bound = 8.0 * args.request_deadline_ms
+    p99 = stats["latency_ms"]["p99"]
+    if stats["completed"] and p99 > bound:
+        sys.exit(f"[check] p99 {p99:.1f}ms exceeds {bound:.0f}ms "
+                 f"(8x --request-deadline-ms)")
+    print(f"[check] OK: outcomes closed, {stats['requests']} requests "
+          f"all typed, p99 {p99:.1f}ms <= {bound:.0f}ms")
 
 
 def _run_decode_demo(args) -> None:
@@ -824,8 +428,65 @@ def _run_decode_demo(args) -> None:
     print(f"[serve] first sequences: {gen[0][:16].tolist()}")
 
 
-def main():
-    """CLI: `--loop` for the request loop, default for the decode demo."""
+def _validate_args(ap: argparse.ArgumentParser, args) -> None:
+    """Fail fast on inconsistent CLI combinations, with actionable errors.
+
+    Every check here would otherwise surface minutes later as a confusing
+    deep failure (a churn closure that never fires, a ladder that refuses
+    to build, a zero batch deadline that flushes every poll) — so the CLI
+    refuses up front and says what to change.
+    """
+    if args.churn_rate > 0 and not args.dynamic:
+        ap.error(f"--churn-rate {args.churn_rate} requires --dynamic: "
+                 f"churn mutates a DynamicTableStore, but without "
+                 f"--dynamic the table is a static array (add --dynamic, "
+                 f"or drop --churn-rate)")
+    if not 0.0 <= args.churn_rate <= 1.0:
+        ap.error(f"--churn-rate must be in [0, 1], got {args.churn_rate}")
+    if args.deadline_ms <= 0:
+        ap.error(f"--deadline-ms must be > 0, got {args.deadline_ms}: it "
+                 f"is the batch-assembly wait; 0 would flush a "
+                 f"single-request batch at every poll (for per-request "
+                 f"completion deadlines use --request-deadline-ms)")
+    if args.eps_floor is not None:
+        if not args.runtime:
+            ap.error("--eps-floor requires --runtime: the degradation "
+                     "ladder lives in the continuous-batching runtime "
+                     "(add --runtime, or drop --eps-floor)")
+        if args.eps_floor < args.eps:
+            ap.error(f"--eps-floor {args.eps_floor} must be >= --eps "
+                     f"{args.eps}: overload *relaxes* eps toward the "
+                     f"floor (a floor tighter than the contract would "
+                     f"mean degrading improves accuracy)")
+    for name, val in (("--inject-latency-rate", args.inject_latency_rate),
+                      ("--inject-error-rate", args.inject_error_rate),
+                      ("--inject-flush-rate", args.inject_flush_rate)):
+        if not 0.0 <= val <= 1.0:
+            ap.error(f"{name} must be in [0, 1], got {val}")
+        if val > 0 and not args.runtime:
+            ap.error(f"{name} requires --runtime: fault injection is "
+                     f"wired through the runtime's retry/quarantine "
+                     f"machinery (add --runtime)")
+    if args.inject_flush_rate > 0 and not args.dynamic:
+        ap.error("--inject-flush-rate requires --dynamic: flush faults "
+                 "fire inside a store's flush_updates, and without "
+                 "--dynamic there is no store")
+    if args.queue_capacity < 1:
+        ap.error(f"--queue-capacity must be >= 1, "
+                 f"got {args.queue_capacity}")
+    if args.request_deadline_ms <= 0:
+        ap.error(f"--request-deadline-ms must be > 0, got "
+                 f"{args.request_deadline_ms} (per-request completion "
+                 f"budget; requests older than it are shed)")
+    if args.batch < 1:
+        ap.error(f"--batch must be >= 1, got {args.batch}")
+    if not 0.0 <= args.repeat_rate <= 1.0:
+        ap.error(f"--repeat-rate must be in [0, 1], got {args.repeat_rate}")
+
+
+def _build_parser() -> argparse.ArgumentParser:
+    """The serve CLI parser (separate from `main` so tests can drive
+    `_validate_args` against real parsed argv)."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true")
@@ -845,14 +506,17 @@ def main():
                     choices=["hoeffding", "bernstein"],
                     help="certification radius family for --adaptive "
                          "(bernstein = variance-aware, more pulls/round)")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=4,
+                    help="micro-batch size (--loop) / kernel lanes "
+                         "(--runtime) / decode batch (demo)")
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--tokens", type=int, default=32)
     # request-loop mode
     ap.add_argument("--loop", action="store_true",
                     help="run the micro-batching MIPS request loop")
     ap.add_argument("--requests", type=int, default=256)
-    ap.add_argument("--deadline-ms", type=float, default=2.0)
+    ap.add_argument("--deadline-ms", type=float, default=2.0,
+                    help="batch-assembly wait (micro-batch deadline)")
     ap.add_argument("--interarrival-ms", type=float, default=0.1)
     ap.add_argument("--topk", type=int, default=4)
     ap.add_argument("--shards", type=int, default=1)
@@ -868,7 +532,56 @@ def main():
                          "table (needs --dynamic)")
     ap.add_argument("--capacity-slack", type=float, default=1.5,
                     help="store capacity headroom factor (--dynamic)")
+    # continuous-batching runtime mode (DESIGN.md §13)
+    ap.add_argument("--runtime", action="store_true",
+                    help="serve with the continuous-batching async "
+                         "runtime (admission control, priority classes, "
+                         "eps degradation ladder, typed refusals)")
+    ap.add_argument("--queue-capacity", type=int, default=64,
+                    help="bounded admission queue depth (--runtime)")
+    ap.add_argument("--eps-floor", type=float, default=None,
+                    help="worst eps the degradation ladder may serve "
+                         "under overload (>= --eps; default: no "
+                         "degradation)")
+    ap.add_argument("--degrade-rungs", type=int, default=3,
+                    help="precompiled eps rungs between --eps and "
+                         "--eps-floor")
+    ap.add_argument("--request-deadline-ms", type=float, default=50.0,
+                    help="per-request completion budget (--runtime); "
+                         "requests queued past it are shed, not served "
+                         "late")
+    ap.add_argument("--max-retries", type=int, default=2,
+                    help="dispatch retry budget before a micro-batch is "
+                         "failed (--runtime)")
+    ap.add_argument("--pattern", default="uniform",
+                    choices=["uniform", "poisson", "bursty"],
+                    help="arrival pattern of the simulated stream")
+    ap.add_argument("--stream-seed", type=int, default=0,
+                    help="seed of the reproducible arrival trace")
+    ap.add_argument("--inject-latency-rate", type=float, default=0.0,
+                    help="fault injection: per-dispatch latency-spike "
+                         "probability (--runtime)")
+    ap.add_argument("--inject-error-rate", type=float, default=0.0,
+                    help="fault injection: per-dispatch exception "
+                         "probability (--runtime)")
+    ap.add_argument("--inject-flush-rate", type=float, default=0.0,
+                    help="fault injection: store flush failure "
+                         "probability (--runtime --dynamic)")
+    ap.add_argument("--fault-seed", type=int, default=0,
+                    help="seed of the deterministic fault schedule")
+    ap.add_argument("--check-outcomes", action="store_true",
+                    help="after the stream, fail unless every request "
+                         "got a typed status from the closed set and "
+                         "p99 stayed inside 8x the request deadline "
+                         "(CI smoke contract; --runtime)")
+    return ap
+
+
+def main():
+    """CLI: `--loop` for the request loop, default for the decode demo."""
+    ap = _build_parser()
     args = ap.parse_args()
+    _validate_args(ap, args)
     if args.loop:
         _run_loop(args)
     else:

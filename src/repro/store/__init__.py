@@ -19,9 +19,15 @@ stores the serving engine mutates between micro-batch flushes:
 Both are consumed by `repro.launch.serve.MIPSServeEngine` — pass a store
 where a static table was expected and call ``engine.apply_updates()``
 (drained automatically at every `poll`).
+
+Both stores expose a ``fault_hook`` attribute (DESIGN.md §13): a
+callable run at the top of `flush_updates` that may raise
+:class:`StoreFlushError` *before* any staged mutation is taken, so a
+failed flush leaves the staged queue intact for retry — the flush
+failure surface the serving runtime's fault-injection harness drives.
 """
 
-from repro.store.dynamic_table import DynamicTableStore
+from repro.store.dynamic_table import DynamicTableStore, StoreFlushError
 from repro.store.sharded_table import ShardedTableStore
 
-__all__ = ["DynamicTableStore", "ShardedTableStore"]
+__all__ = ["DynamicTableStore", "ShardedTableStore", "StoreFlushError"]

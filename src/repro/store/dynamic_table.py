@@ -64,7 +64,21 @@ import numpy as np
 
 from repro.core.quantize import quantize_tiles
 
-__all__ = ["DynamicTableStore"]
+__all__ = ["DynamicTableStore", "StoreFlushError"]
+
+
+class StoreFlushError(RuntimeError):
+    """A store's `flush_updates` was failed before applying anything.
+
+    Raised by the store's ``fault_hook`` (installed e.g. by
+    `repro.launch.faults.FaultInjector.attach`) at the *top* of
+    `flush_updates`, before any staged mutation is taken: the staged
+    queue is left intact, so the caller can keep serving the current
+    table and retry the flush at its next poll (DESIGN.md §13 failure
+    model).  Real I/O-backed stores would raise it for a failed
+    persistence barrier; in this repo it is the typed flush-failure
+    surface the serving runtime's fault tests drive.
+    """
 
 
 @functools.partial(jax.jit, donate_argnums=(0,))
@@ -183,6 +197,11 @@ class DynamicTableStore:
         self.version = 0
         self._vmax = float(np.abs(init).max()) if init.size else 0.0
         self._staged: List[Tuple[str, int, Optional[np.ndarray]]] = []
+        #: optional zero-arg callable invoked at the top of
+        #: `flush_updates`; may raise `StoreFlushError` to fail the
+        #: flush before anything is applied (fault injection surface)
+        self.fault_hook = None
+        self.n_flush_failures = 0
         self.n_upserts = 0
         self.n_deletes = 0
         self.rows_written = 0
@@ -362,8 +381,20 @@ class DynamicTableStore:
         failing op is dropped, the ops staged after it stay staged, and
         the int8 shadow is still re-synchronized to everything already
         applied before the error re-raises — the store is never torn.
+
+        If a ``fault_hook`` is installed it runs first and may raise
+        `StoreFlushError` *before* anything is applied: the staged queue
+        is untouched (nothing applied, nothing dropped) and the caller
+        retries at its next flush opportunity.
         """
         t0 = time.perf_counter()
+        if self.fault_hook is not None:
+            try:
+                self.fault_hook()
+            except Exception:
+                # nothing taken yet: every staged op survives for retry
+                self.n_flush_failures += 1
+                raise
         dirty: set = set()
         applied = 0
         staged, self._staged = self._staged, []
@@ -439,4 +470,5 @@ class DynamicTableStore:
                 "deletes": self.n_deletes, "rows_written": self.rows_written,
                 "tiles_requantized": self.tiles_requantized,
                 "value_abs_max": self._vmax,
+                "flush_failures": self.n_flush_failures,
                 "pending": len(self._staged)}

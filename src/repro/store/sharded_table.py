@@ -133,6 +133,11 @@ class ShardedTableStore:
         self.version = 0
         self._vmax = float(np.abs(init).max()) if init.size else 0.0
         self._staged: List[Tuple[str, int, Optional[np.ndarray]]] = []
+        #: optional zero-arg callable run at the top of `flush_updates`;
+        #: may raise `StoreFlushError` to fail the flush with every
+        #: staged op intact (fault injection surface, DESIGN.md §13)
+        self.fault_hook = None
+        self.n_flush_failures = 0
         self.n_upserts = 0
         self.n_deletes = 0
         self.rows_written = 0
@@ -263,8 +268,16 @@ class ShardedTableStore:
         "version", "requantized_tiles", "seconds"}`` (the tile counter is
         always 0 here — the sharded int8 path quantizes in-jit).  A
         failing op is dropped and its successors stay staged, as in
-        `DynamicTableStore.flush_updates`."""
+        `DynamicTableStore.flush_updates`.  An installed ``fault_hook``
+        runs first and may raise `StoreFlushError` with the staged queue
+        untouched."""
         t0 = time.perf_counter()
+        if self.fault_hook is not None:
+            try:
+                self.fault_hook()
+            except Exception:
+                self.n_flush_failures += 1
+                raise
         applied = 0
         staged, self._staged = self._staged, []
         try:

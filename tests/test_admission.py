@@ -1,0 +1,204 @@
+"""Admission-control policy unit tests (DESIGN.md §13).
+
+Pure host-side: no jax, no engine — the bounded priority queue,
+validation, quarantine, displacement, deadline expiry and the
+degradation ladder are all exercised directly so failures point at the
+policy layer, not the serving stack above it.
+"""
+
+import numpy as np
+import pytest
+
+from repro.launch.admission import (STATUSES, AdmissionController,
+                                    DegradationLadder, PriorityClass,
+                                    ServeResult, Ticket)
+
+
+def _ticket(adm, q, *, rid=0, cls=None, t=0.0):
+    cls = cls or adm.resolve_class(None)
+    return Ticket(rid, q, cls, t, t + cls.deadline_s, None,
+                  adm.fingerprint(q))
+
+
+# ---- validation ---------------------------------------------------------
+
+def test_validate_accepts_finite_and_coerces():
+    adm = AdmissionController(4)
+    arr, reason = adm.validate([1, 2, 3, 4])
+    assert reason == ""
+    assert arr.dtype == np.float32 and arr.shape == (4,)
+
+
+@pytest.mark.parametrize("bad", [
+    np.full(4, np.nan, np.float32),
+    np.array([1.0, np.inf, 0.0, 0.0], np.float32),
+    np.zeros(3, np.float32),                      # wrong dim
+    np.zeros((2, 4), np.float32),                 # wrong rank
+    ["a", "b", "c", "d"],                         # not castable
+])
+def test_validate_rejects_poison(bad):
+    adm = AdmissionController(4)
+    arr, reason = adm.validate(bad)
+    assert arr is None
+    assert reason.startswith("poison:")
+
+
+# ---- queue capacity / overload ------------------------------------------
+
+def test_admit_fills_then_overloads_typed():
+    adm = AdmissionController(3, queue_capacity=2)
+    q = np.ones(3, np.float32)
+    for i in range(2):
+        verdict, displaced = adm.admit(_ticket(adm, q + i, rid=i, t=i))
+        assert verdict is None and not displaced
+    verdict, displaced = adm.admit(_ticket(adm, q + 9, rid=9, t=9.0))
+    assert isinstance(verdict, ServeResult)
+    assert verdict.status == "overloaded"
+    assert "queue full" in verdict.reason
+    assert not verdict.answered
+    assert adm.depth == 2 and adm.stats()["overloaded"] == 1
+
+
+def test_displacement_prefers_lowest_priority_youngest():
+    hi = PriorityClass("hi", priority=0, sheddable=False)
+    lo = PriorityClass("lo", priority=5)
+    adm = AdmissionController(2, queue_capacity=2,
+                              classes={"hi": hi, "lo": lo},
+                              default_class="lo")
+    q = np.ones(2, np.float32)
+    adm.admit(_ticket(adm, q, rid=0, cls=lo, t=0.0))
+    adm.admit(_ticket(adm, q + 1, rid=1, cls=lo, t=1.0))
+    verdict, displaced = adm.admit(_ticket(adm, q + 2, rid=2, cls=hi,
+                                           t=2.0))
+    assert verdict is None
+    assert len(displaced) == 1
+    victim, vres = displaced[0]
+    assert victim.req_id == 1          # youngest of the lowest priority
+    assert vres.status == "overloaded" and "displaced" in vres.reason
+    assert adm.depth == 2
+
+
+def test_nonsheddable_never_displaced():
+    hi = PriorityClass("hi", priority=0)
+    lo = PriorityClass("lo", priority=5, sheddable=False)
+    adm = AdmissionController(2, queue_capacity=1,
+                              classes={"hi": hi, "lo": lo},
+                              default_class="lo")
+    q = np.ones(2, np.float32)
+    adm.admit(_ticket(adm, q, rid=0, cls=lo))
+    verdict, displaced = adm.admit(_ticket(adm, q + 1, rid=1, cls=hi,
+                                           t=1.0))
+    assert verdict is not None and verdict.status == "overloaded"
+    assert not displaced and adm.depth == 1
+
+
+def test_equal_priority_does_not_displace():
+    adm = AdmissionController(2, queue_capacity=1)
+    q = np.ones(2, np.float32)
+    adm.admit(_ticket(adm, q, rid=0))
+    verdict, displaced = adm.admit(_ticket(adm, q + 1, rid=1, t=1.0))
+    assert verdict is not None and not displaced
+
+
+# ---- batch assembly ------------------------------------------------------
+
+def test_take_priority_then_fifo_order():
+    hi = PriorityClass("hi", priority=0, deadline_ms=0)   # no deadline
+    lo = PriorityClass("lo", priority=5, deadline_ms=0)
+    adm = AdmissionController(2, queue_capacity=8,
+                              classes={"hi": hi, "lo": lo},
+                              default_class="lo")
+    q = np.ones(2, np.float32)
+    adm.admit(_ticket(adm, q, rid=0, cls=lo, t=0.0))
+    adm.admit(_ticket(adm, q + 1, rid=1, cls=hi, t=1.0))
+    adm.admit(_ticket(adm, q + 2, rid=2, cls=hi, t=2.0))
+    batch, expired = adm.take(3.0, 8)
+    assert [t.req_id for t in batch] == [1, 2, 0]
+    assert not expired
+
+
+def test_take_expires_past_deadline_as_typed_overloaded():
+    cls = PriorityClass("default", deadline_ms=10.0)
+    adm = AdmissionController(2, queue_capacity=8,
+                              classes={"default": cls})
+    q = np.ones(2, np.float32)
+    adm.admit(_ticket(adm, q, rid=0, t=0.0))          # deadline at 0.010
+    adm.admit(_ticket(adm, q + 1, rid=1, t=0.05))
+    batch, expired = adm.take(0.051, 8)
+    assert [t.req_id for t in batch] == [1]
+    assert len(expired) == 1
+    tk, res = expired[0]
+    assert tk.req_id == 0
+    assert res.status == "overloaded" and res.reason == "deadline"
+    assert res.latency_s == pytest.approx(0.051)
+    assert adm.stats()["expired_deadline"] == 1
+
+
+def test_take_expire_false_serves_late_tickets():
+    adm = AdmissionController(2, queue_capacity=8)
+    q = np.ones(2, np.float32)
+    adm.admit(_ticket(adm, q, rid=0, t=0.0))
+    batch, expired = adm.take(1e9, 8, expire=False)
+    assert [t.req_id for t in batch] == [0] and not expired
+
+
+# ---- quarantine ----------------------------------------------------------
+
+def test_quarantined_fingerprint_refused_at_admit():
+    adm = AdmissionController(2, queue_capacity=8)
+    q = np.ones(2, np.float32)
+    fp = adm.fingerprint(q)
+    adm.add_quarantine(fp, "dispatch failure")
+    verdict, _ = adm.admit(_ticket(adm, q, rid=0))
+    assert verdict.status == "rejected"
+    assert "quarantined" in verdict.reason
+    assert adm.stats()["rejected_quarantined"] == 1
+
+
+def test_quarantine_is_bounded_lru():
+    adm = AdmissionController(2, queue_capacity=8, quarantine_capacity=2)
+    fps = [adm.fingerprint(np.full(2, float(i), np.float32))
+           for i in range(3)]
+    for fp in fps:
+        adm.add_quarantine(fp, "x")
+    assert adm.quarantined(fps[0]) is None        # evicted, oldest
+    assert adm.quarantined(fps[2]) is not None
+
+
+# ---- degradation ladder --------------------------------------------------
+
+def test_ladder_floor_below_eps_raises():
+    with pytest.raises(ValueError, match="cannot.*tighten"):
+        DegradationLadder(0.3, 0.1)
+
+
+def test_ladder_rungs_geometric_and_endpoints():
+    lad = DegradationLadder(0.1, 0.4, rungs=3)
+    assert lad.eps_values[0] == pytest.approx(0.1)
+    assert lad.eps_values[-1] == pytest.approx(0.4)
+    assert lad.eps_values == sorted(lad.eps_values)
+    # geometric: constant ratio
+    r = lad.eps_values[1] / lad.eps_values[0]
+    assert lad.eps_values[2] / lad.eps_values[1] == pytest.approx(r)
+
+
+def test_ladder_disabled_when_floor_equals_eps():
+    lad = DegradationLadder(0.2, 0.2, rungs=5)
+    assert lad.n_rungs == 1
+    assert lad.rung(2.0) == 0
+
+
+def test_ladder_rung_mapping_monotone():
+    lad = DegradationLadder(0.1, 0.8, rungs=4, start=0.5)
+    loads = [0.0, 0.3, 0.49, 0.5, 0.7, 0.9, 1.0, 3.0]
+    rungs = [lad.rung(x) for x in loads]
+    assert rungs[0] == 0 and rungs[2] == 0      # below start: full quality
+    assert rungs[-1] == lad.n_rungs - 1         # saturated: the floor
+    assert rungs == sorted(rungs)
+
+
+# ---- results -------------------------------------------------------------
+
+def test_serve_result_answered_property_matches_status_set():
+    for s in STATUSES:
+        assert ServeResult(status=s).answered == (s in ("ok", "degraded"))

@@ -1,0 +1,134 @@
+"""Fault-injection harness tests (DESIGN.md §13).
+
+The injector's whole value is determinism: the same seed must produce the
+same fault schedule regardless of query order or which surfaces are
+enabled, so CI can assert exact counters.  These tests pin that contract
+plus the store flush-failure surface (staged mutations survive a failed
+flush).
+"""
+
+import numpy as np
+import pytest
+
+from repro.launch.faults import FaultInjector, InjectedDispatchError
+from repro.store import DynamicTableStore, StoreFlushError
+
+
+# ---- determinism ---------------------------------------------------------
+
+def test_schedule_is_pure_in_index():
+    a = FaultInjector(3, latency_rate=0.3, error_rate=0.3)
+    b = FaultInjector(3, latency_rate=0.3, error_rate=0.3)
+    # query b in a different order: identical per-index decisions
+    fa = [a.fail_attempts(i) for i in range(50)]
+    fb = [b.fail_attempts(i) for i in reversed(range(50))][::-1]
+    assert fa == fb
+    la = [a.latency_s(i) for i in range(50)]
+    lb = [b.latency_s(i) for i in range(50)]
+    assert la == lb
+    # and querying twice changes nothing
+    assert [a.fail_attempts(i) for i in range(50)] == fa
+
+
+def test_different_seeds_differ():
+    a = [FaultInjector(s, error_rate=0.5).fail_attempts(i)
+         for s in (0, 1) for i in range(40)]
+    assert a[:40] != a[40:]
+
+
+def test_kinds_are_independent_streams():
+    # enabling latency must not shift the error schedule
+    only_err = FaultInjector(9, error_rate=0.4)
+    both = FaultInjector(9, error_rate=0.4, latency_rate=0.9)
+    assert ([only_err.fail_attempts(i) for i in range(60)]
+            == [both.fail_attempts(i) for i in range(60)])
+
+
+# ---- rates / validation --------------------------------------------------
+
+def test_zero_rates_inject_nothing():
+    inj = FaultInjector(0)
+    assert all(inj.latency_s(i) == 0.0 for i in range(20))
+    assert all(inj.dispatch_error(i) is None for i in range(20))
+    s = inj.stats()
+    assert s["latency_spikes"] == 0 and s["dispatch_errors"] == 0
+
+
+@pytest.mark.parametrize("kw", [{"latency_rate": 1.5},
+                                {"error_rate": -0.1},
+                                {"flush_failure_rate": 2.0}])
+def test_invalid_rates_raise(kw):
+    with pytest.raises(ValueError, match=r"\[0, 1\]"):
+        FaultInjector(0, **kw)
+
+
+# ---- dispatch error semantics -------------------------------------------
+
+def test_transient_errors_clear_within_two_attempts():
+    inj = FaultInjector(5, error_rate=1.0, persistent_rate=0.0)
+    for i in range(30):
+        fails = inj.fail_attempts(i)
+        assert fails in (1, 2)
+        assert isinstance(inj.dispatch_error(i, 0), InjectedDispatchError)
+        assert inj.dispatch_error(i, fails) is None   # retry clears it
+
+
+def test_persistent_errors_outlast_any_retry_budget():
+    inj = FaultInjector(5, error_rate=1.0, persistent_rate=1.0)
+    err = inj.dispatch_error(0, 0)
+    assert "persistent" in str(err)
+    assert inj.dispatch_error(0, 100) is not None
+    assert inj.stats()["persistent_errors"] == 1
+
+
+def test_latency_spikes_heavy_tailed_and_counted():
+    inj = FaultInjector(2, latency_rate=1.0, latency_ms=10.0)
+    spikes = [inj.latency_s(i) for i in range(200)]
+    assert all(s >= 10e-3 for s in spikes)        # at least the scale
+    assert max(spikes) > 3 * np.median(spikes)    # a real tail
+    st = inj.stats()
+    assert st["latency_spikes"] == 200
+    assert st["injected_latency_ms"] == pytest.approx(sum(spikes) * 1e3)
+
+
+# ---- store flush surface -------------------------------------------------
+
+def test_flush_hook_fails_flush_with_staged_intact():
+    store = DynamicTableStore(np.eye(4, 6, dtype=np.float32))
+    inj = FaultInjector(0, flush_failure_rate=1.0)
+    inj.attach(store)
+    store.upsert(0, np.full(6, 2.0, np.float32))
+    v0 = store.version
+    with pytest.raises(StoreFlushError, match="injected"):
+        store.flush_updates()
+    # the torn-flush contract: nothing applied, everything still staged
+    assert store.pending_updates == 1
+    assert store.version == v0
+    assert store.n_flush_failures == 1
+    assert inj.stats()["flush_failures"] == 1
+    # disable the schedule: the retried flush applies the survivor
+    inj.flush_failure_rate = 0.0
+    info = store.flush_updates()
+    assert info["applied"] == 1
+    assert store.host_table()[0, 0] == 2.0
+
+
+def test_flush_schedule_deterministic_per_flush_index():
+    def run():
+        store = DynamicTableStore(np.eye(4, 6, dtype=np.float32))
+        inj = FaultInjector(11, flush_failure_rate=0.5)
+        inj.attach(store)
+        outcomes = []
+        for i in range(20):
+            store.upsert(0, np.full(6, float(i), np.float32))
+            try:
+                store.flush_updates()
+                outcomes.append(True)
+            except StoreFlushError:
+                outcomes.append(False)
+                store._staged.clear()   # drop so indices stay aligned
+        return outcomes
+
+    a, b = run(), run()
+    assert a == b
+    assert True in a and False in a

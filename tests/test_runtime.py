@@ -1,0 +1,482 @@
+"""Continuous-batching runtime tests (DESIGN.md §13).
+
+The robustness contract under test: every request submitted to
+`ServeRuntime` terminates as a typed `ServeResult` — answered within its
+admitted (eps, delta) or refused with a reason — and *no* traffic
+(poison queries, overload bursts, injected dispatch faults, store flush
+failures) ever raises out of the engine.
+"""
+
+import numpy as np
+import pytest
+
+from repro.launch.admission import STATUSES, PriorityClass
+from repro.launch.faults import FaultInjector, InjectedDispatchError
+from repro.launch.serve import ServeRuntime, arrival_trace, simulate_stream
+from repro.store import DynamicTableStore
+
+N_ROWS, DIM = 192, 24
+
+
+def _table(seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.normal(size=(N_ROWS, DIM)).astype(np.float32)
+
+
+def _queries(n, seed=1):
+    rng = np.random.default_rng(seed)
+    return rng.normal(size=(n, DIM)).astype(np.float32)
+
+
+def _rt(table=None, **kw):
+    kw.setdefault("K", 4)
+    kw.setdefault("eps", 0.2)
+    kw.setdefault("delta", 0.1)
+    kw.setdefault("lanes", 4)
+    kw.setdefault("batch_wait_ms", 1.0)
+    kw.setdefault("queue_capacity", 16)
+    return ServeRuntime(_table() if table is None else table, **kw)
+
+
+def _drain_all(rt, now=0.0):
+    done, busy = rt.drain(now=now)
+    return done, now + busy
+
+
+# ---- happy path ---------------------------------------------------------
+
+def test_light_load_serves_everything_ok():
+    rt = _rt()
+    rt.warmup()
+    qs = _queries(40)
+    stats = simulate_stream(rt, qs, interarrival_ms=5.0)
+    assert stats["availability"] == 1.0
+    assert stats["outcomes"]["ok"] == 40
+    assert sum(stats["outcomes"].values()) == 40
+    assert stats["latency_ms"]["p99"] >= stats["latency_ms"]["p50"]
+    for rid in range(40):
+        res = rt.result(rid)
+        assert res is not None and res.status == "ok"
+        assert res.ids.shape == (4,) and res.scores.shape == (4,)
+        assert res.eps_served == pytest.approx(0.2)
+        assert res.delta_served == pytest.approx(0.1)
+
+
+def test_answers_meet_contract_recall():
+    rt = _rt(eps=0.05, recall_sample_rate=1.0)
+    rt.warmup()
+    stats = simulate_stream(rt, _queries(32), interarrival_ms=5.0)
+    assert stats["recall"]["samples"] > 0
+    assert stats["recall"]["mean"] > 0.8
+
+
+def test_every_status_is_typed_and_closed():
+    rt = _rt()
+    rt.warmup()
+    qs = _queries(60)
+    qs[5] = np.nan                                  # poison
+    simulate_stream(rt, qs, pattern="bursty", seed=3, open_loop=True,
+                    interarrival_ms=0.01)
+    seen = set()
+    for rid in range(60):
+        res = rt.result(rid)
+        assert res is not None, f"request {rid} has no terminal result"
+        assert res.status in STATUSES
+        if res.answered:
+            assert res.eps_served is not None
+        else:
+            assert res.reason
+        seen.add(res.status)
+    assert "rejected" in seen                       # the poison query
+
+
+# ---- admission ----------------------------------------------------------
+
+def test_poison_rejected_then_engine_keeps_serving():
+    rt = _rt()
+    rt.warmup()
+    r_bad = rt.submit(np.full(DIM, np.inf, np.float32), now=0.0)
+    bad = rt.result(r_bad)
+    assert bad.status == "rejected" and "poison" in bad.reason
+    r_good = rt.submit(_queries(1)[0], now=0.0)
+    rt.poll(now=0.01)
+    assert rt.result(r_good).status == "ok"
+    assert rt.stats()["queue"]["rejected_poison"] == 1
+
+
+def test_wrong_dim_rejected_not_raised():
+    rt = _rt()
+    rid = rt.submit(np.ones(DIM + 3, np.float32), now=0.0)
+    res = rt.result(rid)
+    assert res.status == "rejected" and "shape" in res.reason
+
+
+def test_overload_sheds_typed_and_never_crashes():
+    rt = _rt(queue_capacity=8)
+    rt.warmup()
+    qs = _queries(300)
+    stats = simulate_stream(rt, qs, pattern="bursty", seed=1,
+                            open_loop=True, interarrival_ms=0.01)
+    assert sum(stats["outcomes"].values()) == 300
+    assert stats["outcomes"]["overloaded"] > 0          # shedding fired
+    assert stats["outcomes"]["failed"] == 0             # but nothing broke
+    assert 0.0 < stats["availability"] < 1.0
+    assert stats["queue"]["peak_depth"] <= 8
+    # engine is still healthy after the storm
+    rid = rt.submit(_queries(1, seed=9)[0], now=1e6)
+    rt.poll(now=1e6 + 0.01)
+    assert rt.result(rid).status == "ok"
+
+
+def test_interactive_displaces_batch_when_full():
+    classes = {
+        "interactive": PriorityClass("interactive", priority=0,
+                                     sheddable=False, deadline_ms=0),
+        "batch": PriorityClass("batch", priority=2, deadline_ms=0),
+    }
+    rt = _rt(queue_capacity=3, classes=classes,
+             default_class="batch")
+    rt.warmup()
+    qs = _queries(4)
+    rids = [rt.submit(qs[i], now=float(i) * 1e-6, cls="batch")
+            for i in range(3)]
+    ri = rt.submit(qs[3], now=1e-5, cls="interactive")
+    displaced = [r for r in rids if rt._results.get(r) is not None]
+    assert len(displaced) == 1
+    res = rt.result(displaced[0])
+    assert res.status == "overloaded" and "displaced" in res.reason
+    rt.drain(now=1.0)
+    assert rt.result(ri).answered
+    assert rt.stats()["classes"]["interactive"]["answered"] == 1
+    assert rt.stats()["classes"]["batch"]["shed"] == 1
+
+
+def test_request_deadline_expires_as_typed_overloaded():
+    classes = {"default": PriorityClass("default", deadline_ms=1.0)}
+    rt = _rt(classes=classes)
+    rt.warmup()
+    rid = rt.submit(_queries(1)[0], now=0.0)
+    rt.poll(now=0.5)                    # long past the 1 ms deadline
+    res = rt.result(rid)
+    assert res.status == "overloaded" and res.reason == "deadline"
+    assert rt.stats()["queue"]["expired_deadline"] == 1
+
+
+# ---- degradation ladder --------------------------------------------------
+
+def test_pressure_degrades_eps_before_rejecting():
+    rt = _rt(eps=0.2, eps_floor=0.8, degrade_rungs=3, queue_capacity=20)
+    rt.warmup()
+    qs = _queries(20, seed=4)
+    rids = [rt.submit(qs[i], now=0.0) for i in range(20)]
+    rt.drain(now=0.0)
+    results = [rt.result(r) for r in rids]
+    assert all(r.answered for r in results)         # nobody refused
+    degraded = [r for r in results if r.status == "degraded"]
+    assert degraded, "full queue must climb the ladder"
+    for r in degraded:
+        assert r.eps_served > 0.2
+        assert r.eps_served <= 0.8 + 1e-9
+    st = rt.stats()["degradation"]
+    assert sum(st["served_per_rung"][1:]) == len(degraded)
+    assert st["rungs"][0] == pytest.approx(0.2)
+    assert st["rungs"][-1] == pytest.approx(0.8)
+
+
+def test_deadline_urgency_degrades_even_with_shallow_queue():
+    # open-loop overload under tight deadlines never builds queue depth
+    # (requests expire first), so pressure must also come from urgency:
+    # a batch that burned most of its deadline budget waiting dispatches
+    # at a degraded rung even though depth/capacity stays tiny.
+    rt = _rt(eps=0.2, eps_floor=0.8, degrade_rungs=3, queue_capacity=64)
+    rt.warmup()
+    qs = _queries(3, seed=11)
+    rids = [rt.submit(q, now=0.0) for q in qs]
+    # 3 requests in a 64-slot queue: load ~0.06, far below degrade_start.
+    # Poll at 70% of the default 50 ms deadline: urgency 0.7 → rung > 0.
+    rt.poll(now=0.035)
+    results = [rt.result(r) for r in rids]
+    assert all(r.status == "degraded" for r in results)
+    assert all(r.eps_served > 0.2 for r in results)
+
+
+def test_degraded_results_never_cached_as_full_quality():
+    rt = _rt(eps=0.2, eps_floor=0.8, degrade_rungs=2, queue_capacity=8,
+             cache_entries=64)
+    rt.warmup()
+    q = _queries(1, seed=5)[0]
+    fill = _queries(8, seed=6)
+    rid = rt.submit(q, now=0.0)
+    for i in range(7):
+        rt.submit(fill[i], now=0.0)
+    rt.drain(now=0.0)                   # full queue: q served degraded
+    first = rt.result(rid)
+    assert first.status == "degraded"
+    # resubmit the same query with an idle queue: a degraded answer must
+    # NOT satisfy it from the cache
+    r2 = rt.submit(q, now=10.0)
+    rt.poll(now=10.01)
+    second = rt.result(r2)
+    assert second.status == "ok" and not second.cached
+    assert second.eps_served == pytest.approx(0.2)
+    # but the full-quality serve IS cacheable
+    r3 = rt.submit(q, now=20.0)
+    third = rt.result(r3)
+    assert third.status == "ok" and third.cached
+
+
+def test_no_floor_means_single_rung_no_degradation():
+    rt = _rt(queue_capacity=4)
+    assert rt.ladder.n_rungs == 1
+    rt.warmup()
+    rids = [rt.submit(q, now=0.0) for q in _queries(4, seed=7)]
+    rt.drain(now=0.0)
+    assert all(rt.result(r).status == "ok" for r in rids)
+
+
+# ---- faults -------------------------------------------------------------
+
+def test_transient_dispatch_fault_retries_to_success():
+    inj = FaultInjector(5, error_rate=1.0, persistent_rate=0.0)
+    rt = _rt(fault_injector=inj, max_retries=2, retry_backoff_ms=1.0)
+    rt.warmup()
+    rid = rt.submit(_queries(1)[0], now=0.0)
+    _, busy = rt.poll(now=0.01)
+    res = rt.result(rid)
+    assert res.status == "ok" and res.retries >= 1
+    assert busy > rt.retry_backoff_s * 0.9      # backoff hit the clock
+    st = rt.stats()["faults"]
+    assert st["retries"] >= 1 and st["failed_batches"] == 0
+
+
+def test_persistent_fault_fails_only_the_batch_and_quarantines():
+    inj = FaultInjector(5, error_rate=1.0, persistent_rate=1.0)
+    rt = _rt(fault_injector=inj, max_retries=1)
+    rt.warmup()
+    q = _queries(1)[0]
+    rid = rt.submit(q, now=0.0)
+    rt.poll(now=0.01)                    # never raises out of the engine
+    res = rt.result(rid)
+    assert res.status == "failed"
+    assert "retries" in res.reason and res.retries == 1
+    # identical bytes are refused at admission now
+    r2 = rt.submit(q, now=2.0)
+    res2 = rt.result(r2)
+    assert res2.status == "rejected" and "quarantined" in res2.reason
+    st = rt.stats()
+    assert st["faults"]["failed_batches"] == 1
+    assert st["queue"]["rejected_quarantined"] == 1
+    # the engine itself survives: disable the schedule, serve normally
+    inj.error_rate = 0.0
+    r3 = rt.submit(_queries(1, seed=8)[0], now=3.0)
+    rt.poll(now=3.01)
+    assert rt.result(r3).status == "ok"
+
+
+def test_injected_faults_never_escape_simulate_stream():
+    inj = FaultInjector(1, error_rate=0.3, persistent_rate=0.3,
+                        latency_rate=0.2, latency_ms=2.0)
+    rt = _rt(fault_injector=inj, max_retries=2, queue_capacity=32)
+    rt.warmup()
+    stats = simulate_stream(rt, _queries(150), pattern="bursty", seed=2,
+                            open_loop=True, interarrival_ms=0.05)
+    assert sum(stats["outcomes"].values()) == 150   # zero crashes
+    assert stats["faults"]["dispatch_errors"] > 0   # faults really fired
+    inj_stats = stats["faults"]["injected"]
+    assert inj_stats["dispatch_errors"] == stats["faults"]["dispatch_errors"]
+
+
+def test_store_flush_failure_keeps_serving_and_retries():
+    store = DynamicTableStore(_table(), capacity_slack=1.5)
+    inj = FaultInjector(0, flush_failure_rate=1.0)
+    rt = _rt(table=store, fault_injector=inj)
+    rt.warmup()
+    store.upsert(0, np.full(DIM, 0.5, np.float32))
+    rid = rt.submit(_queries(1)[0], now=0.0)
+    rt.poll(now=0.01)                        # flush fails inside; no raise
+    assert rt.result(rid).status == "ok"     # served on the current table
+    st = rt.stats()
+    assert st["faults"]["store_flush_failures"] >= 1
+    assert store.pending_updates == 1        # staged op intact
+    inj.flush_failure_rate = 0.0             # fault clears
+    rt.poll(now=2.0)
+    assert store.pending_updates == 0        # retried flush applied
+    assert rt.stats()["updates"]["applied"] == 1
+    assert rt.cache.invalidations >= 1       # version bump invalidated
+
+
+# ---- scheduler ----------------------------------------------------------
+
+def test_continuous_refill_backfills_between_dispatches():
+    rt = _rt(lanes=4, queue_capacity=32)
+    rt.warmup()
+    # 10 requests queued at once: one poll must serve them all (4+4+2)
+    # because work conservation dispatches the backlog without waiting
+    # out the batch deadline again
+    rids = [rt.submit(q, now=0.0) for q in _queries(10, seed=11)]
+    done, _ = rt.poll(now=0.005)
+    assert sorted(done) == sorted(rids)
+    st = rt.stats()
+    assert st["dispatches"] == 3
+    assert st["full_dispatches"] == 2
+    assert st["lanes"]["mean_occupancy"] == pytest.approx(10 / 3)
+
+
+def test_partial_young_batch_waits_for_deadline():
+    rt = _rt(lanes=4, batch_wait_ms=5.0)
+    rt.warmup()
+    rt.submit(_queries(1)[0], now=0.0)
+    done, _ = rt.poll(now=0.001)       # younger than the 5 ms wait
+    assert done == []
+    done, _ = rt.poll(now=0.006)       # aged past it
+    assert len(done) == 1
+
+
+def test_warmup_compiles_every_rung_off_clock():
+    rt = _rt(eps=0.2, eps_floor=0.6, degrade_rungs=3)
+    assert rt.warmup() > 0.0
+    sizes = [ex._fn._cache_size() for ex in rt._rung_execs]
+    assert sizes == [1, 1, 1]
+    simulate_stream(rt, _queries(8), interarrival_ms=5.0)
+    assert [ex._fn._cache_size() for ex in rt._rung_execs][0] == 1
+
+
+# ---- arrival traces / driver --------------------------------------------
+
+def test_arrival_trace_uniform_matches_legacy_spacing():
+    t = arrival_trace(5, interarrival_ms=2.0, pattern="uniform", seed=99)
+    assert np.allclose(t, np.arange(5) * 2e-3)
+
+
+@pytest.mark.parametrize("pattern", ["poisson", "bursty"])
+def test_arrival_trace_reproducible_and_seeded(pattern):
+    a = arrival_trace(64, pattern=pattern, seed=3)
+    b = arrival_trace(64, pattern=pattern, seed=3)
+    c = arrival_trace(64, pattern=pattern, seed=4)
+    assert np.array_equal(a, b)
+    assert not np.array_equal(a, c)
+    assert np.all(np.diff(a) >= 0)          # arrival times nondecreasing
+
+
+def test_bursty_trace_is_actually_bursty():
+    t = arrival_trace(256, interarrival_ms=1.0, pattern="bursty", seed=0)
+    gaps = np.diff(t)
+    # intra-burst gaps are far below the mean spacing, quiet gaps far above
+    assert gaps.min() < 0.3e-3
+    assert gaps.max() > 3e-3
+
+
+def test_simulate_stream_reports_trace_metadata():
+    rt = _rt()
+    rt.warmup()
+    stats = simulate_stream(rt, _queries(16), pattern="poisson", seed=7,
+                            open_loop=True, interarrival_ms=1.0)
+    tr = stats["trace"]
+    assert tr["pattern"] == "poisson" and tr["seed"] == 7
+    assert tr["open_loop"] is True
+    assert tr["span_s"] > 0 and tr["offered_rps"] > 0
+
+
+def test_stats_schema_has_tail_latency_and_counters():
+    rt = _rt()
+    rt.warmup()
+    simulate_stream(rt, _queries(12), interarrival_ms=2.0)
+    st = rt.stats()
+    for key in ("p50", "p95", "p99", "max", "mean"):
+        assert key in st["latency_ms"]
+    for key in ("depth", "capacity", "peak_depth", "admitted",
+                "rejected_poison", "overloaded", "displaced",
+                "expired_deadline"):
+        assert key in st["queue"]
+    for key in ("retries", "dispatch_errors", "failed_batches",
+                "store_flush_failures"):
+        assert key in st["faults"]
+    assert set(st["outcomes"]) == set(STATUSES)
+    assert st["lanes"]["lanes"] == 4
+
+
+# ---- lane accounting -----------------------------------------------------
+
+def test_dispatch_lane_stats_non_adaptive():
+    from repro.distributed.sharding import dispatch_lane_stats
+    rt = _rt()
+    out = dispatch_lane_stats(None, schedule=rt.plan.schedule, lanes=8,
+                              filled=5)
+    assert out["occupancy"] == 5
+    assert out["lane_util"] == pytest.approx(5 / 8)
+    assert out["executed_pull_frac"] == 1.0
+    assert out["wasted_lane_frac"] == pytest.approx(3 / 8)
+
+
+def test_dispatch_lane_stats_adaptive_reduces_pull_frac():
+    from repro.core.schedule import pulls_through_round
+    from repro.distributed.sharding import dispatch_lane_stats
+    rt = _rt()
+    sched = rt.plan.schedule
+    if len(sched.rounds) < 2:
+        pytest.skip("schedule too short to early-exit")
+    early = np.zeros(4, np.int64)            # every lane exits round 0
+    out = dispatch_lane_stats(early, schedule=sched, lanes=4, filled=4)
+    pulls = pulls_through_round(sched)
+    assert out["executed_pull_frac"] == pytest.approx(
+        pulls[0] / pulls[-1])
+    late = np.full(4, len(sched.rounds) - 1, np.int64)
+    out_late = dispatch_lane_stats(late, schedule=sched, lanes=4, filled=4)
+    assert out_late["executed_pull_frac"] == pytest.approx(1.0)
+
+
+# ---- CLI validation (PR-6 satellite) -------------------------------------
+
+def _parse(argv, capsys):
+    """Parse + validate argv; returns the stderr of a rejection."""
+    from repro.launch.serve import _build_parser, _validate_args
+    ap = _build_parser()
+    args = ap.parse_args(argv)
+    with pytest.raises(SystemExit):
+        _validate_args(ap, args)
+    return capsys.readouterr().err
+
+
+def test_cli_churn_without_dynamic_is_actionable(capsys):
+    err = _parse(["--arch", "x", "--loop", "--churn-rate", "0.1"], capsys)
+    assert "--churn-rate" in err and "--dynamic" in err
+    assert "add --dynamic" in err
+
+
+def test_cli_zero_deadline_rejected(capsys):
+    err = _parse(["--arch", "x", "--loop", "--deadline-ms", "0"], capsys)
+    assert "--deadline-ms" in err and "> 0" in err
+    assert "--request-deadline-ms" in err       # points at the right knob
+
+
+def test_cli_eps_floor_below_eps_rejected(capsys):
+    err = _parse(["--arch", "x", "--loop", "--runtime",
+                  "--eps", "0.3", "--eps-floor", "0.1"], capsys)
+    assert "--eps-floor" in err and "relax" in err
+
+
+def test_cli_eps_floor_requires_runtime(capsys):
+    err = _parse(["--arch", "x", "--loop", "--eps-floor", "0.5"], capsys)
+    assert "--runtime" in err
+
+
+def test_cli_fault_injection_requires_runtime(capsys):
+    err = _parse(["--arch", "x", "--loop",
+                  "--inject-error-rate", "0.5"], capsys)
+    assert "--inject-error-rate" in err and "--runtime" in err
+
+
+def test_cli_flush_faults_require_dynamic(capsys):
+    err = _parse(["--arch", "x", "--loop", "--runtime",
+                  "--inject-flush-rate", "0.5"], capsys)
+    assert "--dynamic" in err
+
+
+def test_cli_valid_combination_passes():
+    from repro.launch.serve import _build_parser, _validate_args
+    ap = _build_parser()
+    args = ap.parse_args(
+        ["--arch", "x", "--loop", "--runtime", "--dynamic",
+         "--churn-rate", "0.1", "--eps-floor", "0.5",
+         "--inject-flush-rate", "0.2", "--pattern", "bursty"])
+    _validate_args(ap, args)            # no SystemExit

@@ -294,3 +294,52 @@ class TestKOutPlumbing:
         with pytest.raises(ValueError, match="k_out"):
             bounded_me_decode(V, Q, jax.random.PRNGKey(0), plan=plan,
                               use_pallas=False, k_out=plan.k_out_cap + 1)
+
+
+class TestQuantizedLRUEdgeCases:
+    """PR-6 satellite: LRU corner cases the serving stack leans on."""
+
+    def test_capacity_zero_disables_cache_with_version_salting(self):
+        # a capacity-0 cache must be a true no-op even through the
+        # engine's version-salted key path (store updates bump versions)
+        from repro.store import DynamicTableStore
+        rng = np.random.default_rng(0)
+        store = DynamicTableStore(
+            rng.normal(size=(64, 16)).astype(np.float32))
+        eng = MIPSServeEngine(store, K=2, eps=0.3, delta=0.2,
+                              batch_size=2, cache_entries=0)
+        q = rng.normal(size=16).astype(np.float32)
+        for rep in range(3):
+            if rep == 1:     # version bump mid-stream
+                store.upsert(0, rng.normal(size=16).astype(np.float32))
+            rid = eng.submit(q, now=float(rep))
+            eng.drain(now=float(rep))
+            assert eng.result(rid) is not None
+        assert eng.n_cache_hits == 0
+        assert len(eng.cache) == 0
+        assert eng.cache.put(b"k", ("v",)) is None and len(eng.cache) == 0
+
+    def test_eviction_order_after_invalidation(self):
+        # invalidate() must fully reset recency: entries inserted after
+        # it evict in their OWN insertion order, not a stale pre-clear one
+        lru = QuantizedLRU(2, resolution=0.0)
+        lru.put(b"a", 1)
+        lru.put(b"b", 2)
+        lru.invalidate()
+        assert len(lru) == 0 and lru.invalidations == 1
+        lru.put(b"c", 3)
+        lru.put(b"d", 4)
+        assert lru.get(b"c") == 3          # refresh c: d is now LRU
+        lru.put(b"e", 5)                   # evicts d, not c
+        assert lru.get(b"d") is None
+        assert lru.get(b"c") == 3 and lru.get(b"e") == 5
+        # pre-invalidation keys stayed dead through it all
+        assert lru.get(b"a") is None and lru.get(b"b") is None
+
+    def test_quantization_shares_lines_at_resolution(self):
+        lru = QuantizedLRU(8, resolution=1e-2)
+        q1 = np.zeros(4, np.float32)
+        q2 = q1 + 1e-3                     # within resolution: same line
+        q3 = q1 + 1.0                      # far away: distinct line
+        assert lru.key(q1) == lru.key(q2)
+        assert lru.key(q1) != lru.key(q3)

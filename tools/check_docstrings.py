@@ -34,6 +34,9 @@ AUDITED_MODULES = [
     "kernels/ops.py",
     "kernels/fused_cascade.py",
     "launch/serve.py",
+    "launch/engine.py",
+    "launch/admission.py",
+    "launch/faults.py",
     "launch/mesh.py",
     "models/steps.py",
     "store/__init__.py",
@@ -74,6 +77,8 @@ API_CONTRACTS = {
                                       "gap", "ragged", "precision",
                                       "adaptive", "returns"],
         "make_shard_plan": ["union bound", "k_out", "pad"],
+        "dispatch_lane_stats": ["occupancy", "executed_pull_frac",
+                                "lanes", "adaptive"],
     },
     "kernels/ops.py": {
         "fused_cascade": ["k_out", "n_valid", "vscale", "cert"],
@@ -92,9 +97,31 @@ API_CONTRACTS = {
         "ShardedTableStore.n_valid_vector": ["per-shard"],
     },
     "launch/serve.py": {
+        "arrival_trace": ["uniform", "poisson", "bursty", "seed"],
+        "simulate_stream": ["virtual", "open_loop", "trace"],
+    },
+    "launch/engine.py": {
         "MIPSServeEngine.apply_updates": ["version", "recall",
                                           "value range", "recompile"],
         "QuantizedLRU.invalidate": ["version", "salt"],
+        "CascadeExecutor.dispatch": ["lanes", "seconds", "rounds_used"],
+        "ServeRuntime.submit": ["admission", "poison", "never raises"],
+        "ServeRuntime.poll": ["work conservation", "batch_wait",
+                              "expired"],
+        "ServeRuntime.stats": ["p50", "p95", "p99", "outcomes",
+                               "eps_served"],
+    },
+    "launch/admission.py": {
+        "AdmissionController.admit": ["overloaded", "displac",
+                                      "quarantine"],
+        "AdmissionController.validate": ["poison", "NaN"],
+        "AdmissionController.take": ["deadline", "expire", "priority"],
+        "DegradationLadder": ["eps_floor", "rung", "eps_served"],
+        "ServeResult": ["eps_served", "degraded", "never"],
+    },
+    "launch/faults.py": {
+        "FaultInjector": ["seed", "latency", "persistent", "flush"],
+        "FaultInjector.attach": ["fault_hook", "staged", "intact"],
     },
 }
 
