@@ -1,0 +1,121 @@
+"""PR-7 perf benchmark: coordinate-sampling pull mode vs row pulls.
+
+Emits the rows for ``BENCH_PR7.json`` (via `benchmarks.run`): a sweep
+over d in {128, 512, 2048, 8192} at fixed (n, K, eps, delta) comparing
+the three pull modes (DESIGN.md §14) on
+
+  * **certified multiplies** — ``plan.total_multiplies``, the honest
+    width-weighted cost model (`Schedule.total_coords` per arm tile):
+    a row pull prices ``tile * 512`` MACs, a coord pull only
+    ``tile * coord_block``;
+  * **measured wall time** of the jnp decode path on this host, and
+  * **measured contract compliance** — eps-suboptimality violations
+    against the exact answer (must be zero; at eps=3.0 >> the ~1/sqrt(d)
+    score gaps of gaussian data, *any* arm is eps-optimal, so raw recall
+    is reported for context but is not the acceptance metric).
+
+The acceptance claims: coord's pull cost grows *sublinearly* in d where
+row's grows linearly (its without-replacement population d_blocks keeps
+growing, so the fixed-m radius keeps shrinking, while row's single-shot
+population is pinned at d/512); and the hybrid dispatcher is never more
+than 10% worse than the better single mode (true by construction —
+`choose_pull_mode` prices both plans — but measured here anyway).
+``range_mode='exact'`` keeps sizing honest per d; eps is deliberately
+loose (3.0) so the schedule genuinely samples at every d.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core.boundedme_jax import bounded_me_decode, make_plan
+
+_N_ARMS, _K, _B = 1024, 2, 4
+_EPS, _DELTA, _VR = 3.0, 0.1, 2.0
+_DIMS = (128, 512, 2048, 8192)
+_COORD_BLOCK = 128
+_MODES = ("row", "coord", "hybrid")
+
+
+def _time_ms(fn, reps: int = 3, warmup: int = 1) -> float:
+    for _ in range(warmup):
+        jax.block_until_ready(fn())
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn()
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e3
+
+
+def run(csv: bool = True) -> dict:
+    """Run the pull-mode sweep; returns the BENCH_PR7 payload."""
+    key = jax.random.PRNGKey(0)
+    out = {"geometry": {"n": _N_ARMS, "K": _K, "batch": _B, "eps": _EPS,
+                        "delta": _DELTA, "value_range": _VR,
+                        "coord_block": _COORD_BLOCK,
+                        "range_mode": "exact"},
+           "dims": []}
+    for d in _DIMS:
+        rng = np.random.default_rng(d)
+        V = rng.normal(size=(_N_ARMS, d)).astype(np.float32)
+        Q = rng.normal(size=(_B, d)).astype(np.float32)
+        S = (V.astype(np.float64) @ Q.astype(np.float64).T).T / d  # (B, n)
+        truth = np.argsort(-S, axis=1)[:, :_K]
+        true_top = np.sort(S, axis=1)[:, ::-1][:, :_K]
+        row = {"d": d, "modes": {}}
+        for mode in _MODES:
+            plan = make_plan(_N_ARMS, d, K=_K, eps=_EPS, delta=_DELTA,
+                             value_range=_VR, range_mode="exact",
+                             pull_mode=mode, coord_block=_COORD_BLOCK)
+            ms = _time_ms(lambda: bounded_me_decode(
+                V, Q, key, plan=plan, final_exact=True, use_pallas=False))
+            ids, _ = bounded_me_decode(V, Q, key, plan=plan,
+                                       final_exact=True, use_pallas=False)
+            ids = np.asarray(ids)[:, :_K]
+            recall = sum(len(set(ids[b]) & set(truth[b]))
+                         for b in range(_B)) / truth.size
+            got = np.sort(np.take_along_axis(S, ids, axis=1),
+                          axis=1)[:, ::-1]
+            subopt = np.maximum(true_top - got, 0.0)
+            violations = int((subopt.max(axis=1)
+                              > plan.eps_effective + 1e-7).sum())
+            row["modes"][mode] = {
+                "resolved": plan.pull_mode, "block": plan.block,
+                "total_pulls": int(plan.schedule.total_pulls),
+                "total_multiplies": int(plan.total_multiplies),
+                "ms": ms, "recall": recall,
+                "max_suboptimality": float(subopt.max()),
+                "eps_violations": violations,
+            }
+            if csv:
+                print(f"coord_sweep,d={d},{mode},"
+                      f"resolved={plan.pull_mode}"
+                      f";multiplies={int(plan.total_multiplies)}"
+                      f";ms={ms:.1f};recall={recall:.3f}"
+                      f";max_subopt={subopt.max():.4f}"
+                      f";eps_violations={violations}")
+        m = row["modes"]
+        best = min(m["row"]["total_multiplies"],
+                   m["coord"]["total_multiplies"])
+        row["hybrid_overhead"] = m["hybrid"]["total_multiplies"] / best - 1.0
+        out["dims"].append(row)
+
+    # the sublinearity claim, explicit: coord cost growth factor across the
+    # d sweep vs row's (row is ~linear in d once its schedule saturates)
+    def growth(mode):
+        ms_ = [r["modes"][mode]["total_multiplies"] for r in out["dims"]]
+        return ms_[-1] / ms_[0]
+
+    out["growth_factor_row"] = growth("row")
+    out["growth_factor_coord"] = growth("coord")
+    out["coord_sublinear_vs_row"] = \
+        out["growth_factor_coord"] < out["growth_factor_row"]
+    if csv:
+        print(f"coord_sweep,summary,,"
+              f"growth_row={out['growth_factor_row']:.2f}x"
+              f";growth_coord={out['growth_factor_coord']:.2f}x"
+              f";coord_sublinear={out['coord_sublinear_vs_row']}")
+    return out

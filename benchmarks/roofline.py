@@ -1,205 +1,193 @@
-"""Roofline analysis from the dry-run artifacts (deliverable g).
+"""Pull-loop roofline: bytes moved per pull, row vs coord mode (ISSUE 7).
 
-Per (arch x shape) on the single-pod 16x16 mesh:
-  compute term    = HLO_FLOPs_per_chip / peak_FLOPs          [s]
-  memory term     = HLO_bytes_per_chip / HBM_bw              [s]
-  collective term = collective_bytes_per_chip / link_bw      [s]
-(cost_analysis reports the per-chip SPMD program, so no /chips is applied.)
+The BoundedME cascade is a pure streaming workload: every pull DMAs one
+``tile x block`` slab of the table from HBM into VMEM and spends
+``2 * tile * block`` MACs on it, so its arithmetic intensity is pinned
+near ``2 / dtype_bytes`` flops per byte — three orders of magnitude under
+the v5e machine balance (``PEAK_FLOPS / HBM_BW`` ~ 241 flops/byte).  The
+cascade is therefore *always* memory-bound and the only lever is the
+numerator: total bytes moved.  That is exactly what the coordinate pull
+mode (DESIGN.md §14) attacks — a coord pull moves ``tile * coord_block``
+table bytes instead of ``tile * 512``, so the per-pull DMA shrinks 4x at
+the default widths while the schedule grows only like the
+without-replacement radius over ``d_blocks = ceil(d / coord_block)``.
 
-Also reported: MODEL_FLOPS = 6*N_active*D (train) or 2*N_active*tokens
-(serve), the useful-compute ratio MODEL_FLOPS / (HLO_FLOPs * chips), the
-dominant term, and a one-line lever.  Prefers `_unrolled` dry-run records
-(exact FLOPs); scanned records are marked, their FLOPs being per-layer
-undercounts.  An analytic attention-chunk correction is applied for
-train/prefill cells (the q-chunk lax.map body is counted once by XLA).
+Per (pull_mode x precision) cell at the PR-7 bench geometry we report the
+analytic per-pull traffic (table slab + query block + int8 scales), the
+schedule's certified pull count, total bytes / flops / arithmetic
+intensity, the HBM-bound step-time floor at v5e bandwidth, and a
+*measured* wall-clock of the jnp cascade on this host, converted to
+achieved bytes/s.  The CPU number tracks the trend only — the ordering
+(coord moves fewer bytes than row at large d) is the claim, the v5e
+floor times are the model.
+
+Importable API: ``analyse(plan) -> dict``, ``run(csv=True) -> dict``
+(the BENCH_PR7 ``roofline`` payload), ``main()`` (writes
+``results/roofline.md``).
 """
 
 from __future__ import annotations
 
-import glob
-import json
 import os
-from typing import Dict, Optional
+import time
 
-from repro.configs import REGISTRY, SHAPES, cells
+import jax
+import numpy as np
+
+from repro.core.boundedme_jax import BlockedPlan, bounded_me_decode, make_plan
 
 PEAK_FLOPS = 197e12       # TPU v5e bf16 per chip
 HBM_BW = 819e9            # bytes/s per chip
-LINK_BW = 50e9            # bytes/s per ICI link
-RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
-ATTN_CHUNK = 512
+MACHINE_BALANCE = PEAK_FLOPS / HBM_BW   # ~241 flops per HBM byte
+
+# PR-7 bench geometry (matches benchmarks/bench_coord.py at its largest d)
+_N, _D, _K, _B = 1024, 8192, 2, 4
+_EPS, _DELTA, _VR = 3.0, 0.1, 2.0
+_COORD_BLOCK = 128
 
 
-def model_flops(cfg, shape) -> float:
-    """Useful FLOPs per step: the 6ND / 2ND convention + attention."""
-    Na = cfg.active_params()
-    B, S = shape.global_batch, shape.seq_len
-    if shape.kind == "train":
-        base = 6.0 * Na * B * S
-        attn = 0.0
-        if cfg.family != "ssm":
-            frac_attn = (1.0 / cfg.attn_period) if cfg.attn_period else 1.0
-            n_attn = cfg.n_layers * frac_attn
-            attn = 3 * 2 * 2 * B * cfg.n_heads * cfg.head_dim * S * S / 2 \
-                * n_attn
-        return base + attn
-    if shape.kind == "prefill":
-        base = 2.0 * Na * B * S
-        attn = 0.0
-        if cfg.family != "ssm":
-            frac_attn = (1.0 / cfg.attn_period) if cfg.attn_period else 1.0
-            attn = 2 * 2 * B * cfg.n_heads * cfg.head_dim * S * S / 2 \
-                * cfg.n_layers * frac_attn
-        return base + attn
-    # decode: one token, attention over the full cache
-    base = 2.0 * Na * B
-    attn = 0.0
-    if cfg.family != "ssm":
-        frac_attn = (1.0 / cfg.attn_period) if cfg.attn_period else 1.0
-        attn = 2 * 2 * B * cfg.n_heads * cfg.head_dim * S \
-            * cfg.n_layers * frac_attn
-    return base + attn
+def pull_bytes(plan: BlockedPlan) -> int:
+    """HBM bytes one pull moves: table slab + query block (+ int8 scales).
 
-
-def analytic_hbm_bytes(cfg, shape, chips: int = 256) -> float:
-    """Per-chip HBM traffic model (cost_analysis 'bytes accessed' counts
-    every fused intermediate, overstating HBM by ~10x; this is the standard
-    weights+activations+cache accounting instead).
-
-    train:   params (fwd read + bwd read + update rw) + f32 moments rw
-             + remat'd layer-boundary activations (2x write+read)
-    prefill: params read + KV write + boundary activations
-    decode:  params read + full KV-cache read + state
+    The table slab is ``tile * block`` at the sampling precision's element
+    width; the query block is always fp32 (it is the unquantized operand of
+    the asymmetric int8 scheme, DESIGN.md §10) and is re-read per pull in
+    the streaming model; int8 adds ``tile`` per-row dequant scales plus the
+    query block's one scale, 4 bytes each.
     """
-    p_bytes = cfg.n_params() * 2 / chips                     # bf16, sharded
-    B, S = shape.global_batch, shape.seq_len
-    d, L = cfg.d_model, cfg.n_layers
-    # remat'd layer-boundary activations: bf16, write+read, x2 for recompute
-    act = L * (B * S / chips) * d * 2 * 2 * 2
-    if shape.kind == "train":
-        moments = cfg.n_params() * (2 if cfg.n_params() > 50e9 else 4) \
-            * 2 / chips                                      # mu+nu r/w -> x2
-        w = p_bytes * 4                                      # fwd+bwd+rw upd
-        return w + moments + act * 2
-    kvh = cfg.n_kv_heads * cfg.head_dim
-    frac_attn = (1.0 / cfg.attn_period) if cfg.attn_period else 1.0
-    if cfg.family == "ssm":
-        frac_attn = 0.0
-    kv_bytes = B * S * kvh * 2 * L * frac_attn * 2 / chips   # k and v
-    if shape.kind == "prefill":
-        return p_bytes + kv_bytes + act
-    # decode: every step streams all weights + the whole cache
-    return p_bytes + kv_bytes + B * d * L * 2 * 4 / chips
+    elem = 1 if plan.precision == "int8" else 4
+    table = plan.tile * plan.block * elem
+    query = plan.block * 4
+    scales = (plan.tile + 1) * 4 if plan.precision == "int8" else 0
+    return table + query + scales
 
 
-def attn_chunk_correction(cfg, shape, n_devices: int) -> float:
-    """Per-chip FLOPs missed because the q-chunk lax.map is counted once."""
-    if shape.kind == "decode" or cfg.family == "ssm":
-        return 0.0
-    S = shape.seq_len if shape.kind != "prefill" else shape.seq_len
-    n_chunks = max(1, S // ATTN_CHUNK)
-    if n_chunks <= 1:
-        return 0.0
-    frac_attn = (1.0 / cfg.attn_period) if cfg.attn_period else 1.0
-    mult = 3 if shape.kind == "train" else 1  # fwd+bwd(+remat fwd) ~ 3x
-    attn = 2 * 2 * shape.global_batch * cfg.n_heads * cfg.head_dim \
-        * S * S / 2 * cfg.n_layers * frac_attn * mult
-    return attn * (1.0 - 1.0 / n_chunks) / n_devices
+def pull_flops(plan: BlockedPlan) -> int:
+    """MACs one pull performs: the ``tile x block`` tile-dot, counted 2x."""
+    return 2 * plan.tile * plan.block
 
 
-def load_cell(arch: str, shape: str, mesh: str = "single",
-              suffix: str = "") -> Optional[Dict]:
-    for suf in ("_unrolled", "") if not suffix else (suffix,):
-        path = os.path.join(RESULTS, f"{arch}_{shape}_{mesh}{suf}.json")
-        if os.path.exists(path):
-            with open(path) as f:
-                rec = json.load(f)
-            if rec.get("ok"):
-                return rec
-    return None
+def analyse(plan: BlockedPlan) -> dict:
+    """Roofline terms for one plan's full certified schedule.
 
-
-def analyse(rec: Dict, cfg, shape) -> Dict:
-    chips = rec["n_devices"]
-    corr = 0.0 if rec.get("unrolled") else None  # scanned: FLOPs undercount
-    flops_chip = rec["flops"]
-    if rec.get("unrolled"):
-        flops_chip += attn_chunk_correction(cfg, shape, chips)
-    t_comp = flops_chip / PEAK_FLOPS
-    t_mem_hlo = rec["hlo_bytes_accessed"] / HBM_BW
-    t_mem = analytic_hbm_bytes(cfg, shape, chips) / HBM_BW
-    coll = rec["collectives"]["total_bytes"]
-    t_coll = coll / LINK_BW
-    mf = model_flops(cfg, shape)
-    ratio = mf / (flops_chip * chips) if flops_chip > 0 else float("nan")
-    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
-    dom = max(terms, key=terms.get)
-    bound = max(terms.values())
-    frac = {k: v / bound for k, v in terms.items()}
+    Returns per-pull and total bytes/flops, arithmetic intensity vs the
+    v5e machine balance, the memory-bound step-time floor at ``HBM_BW``,
+    and the (always 'memory') binding term — the cascade's intensity sits
+    ~100x below balance at every supported geometry.
+    """
+    bpp, fpp = pull_bytes(plan), pull_flops(plan)
+    pulls = int(plan.schedule.total_pulls)
+    total_bytes, total_flops = pulls * bpp, pulls * fpp
+    t_mem = total_bytes / HBM_BW
+    t_comp = total_flops / PEAK_FLOPS
     return {
-        "arch": rec["arch"], "shape": rec["shape"],
-        "t_compute_s": t_comp, "t_memory_s": t_mem,
-        "t_memory_hlo_s": t_mem_hlo, "t_collective_s": t_coll,
-        "dominant": dom, "model_flops": mf, "hlo_flops_chip": flops_chip,
-        "useful_ratio": ratio, "exact_flops": bool(rec.get("unrolled")),
-        "step_bound_s": bound,
-        "roofline_fraction": t_comp / bound if bound > 0 else 0.0,
+        "pull_mode": plan.pull_mode, "precision": plan.precision,
+        "tile": plan.tile, "block": plan.block,
+        "n_blocks": plan.n_blocks, "total_pulls": pulls,
+        "bytes_per_pull": bpp, "flops_per_pull": fpp,
+        "total_bytes": total_bytes, "total_flops": total_flops,
+        "intensity_flops_per_byte": fpp / bpp,
+        "machine_balance": MACHINE_BALANCE,
+        "bound": "memory" if fpp / bpp < MACHINE_BALANCE else "compute",
+        "t_mem_floor_s": t_mem, "t_compute_s": t_comp,
     }
 
 
-LEVERS = {
-    ("compute", "train"): "more chips / reduce remat recompute",
-    ("compute", "prefill"): "attention-kernel fusion (flash) to cut "
-                            "softmax overhead FLOPs",
-    ("compute", "decode"): "batch more requests per step",
-    ("memory", "train"): "larger per-chip batch to raise arithmetic "
-                         "intensity; fuse optimizer update",
-    ("memory", "prefill"): "KV-cache layout fusion; wider q-chunks",
-    ("memory", "decode"): "weights dominate: raise batch or quantize; "
-                          "BoundedME cuts unembed reads",
-    ("collective", "train"): "overlap grad all-reduce with bwd; "
-                             "compress cross-pod grads to bf16",
-    ("collective", "prefill"): "shift TP collectives to reduce-scatter + "
-                               "all-gather pairs; overlap with compute",
-    ("collective", "decode"): "replicate small weights to drop all-gathers"
-                              "; merge per-layer collectives",
-}
+def _measure_ms(plan: BlockedPlan, reps: int = 3) -> float:
+    rng = np.random.default_rng(0)
+    V = rng.normal(size=(_N, _D)).astype(np.float32)
+    Q = rng.normal(size=(_B, _D)).astype(np.float32)
+    key = jax.random.PRNGKey(0)
+
+    def f():
+        return bounded_me_decode(V, Q, key, plan=plan, final_exact=False,
+                                 use_pallas=False)
+
+    jax.block_until_ready(f())          # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = f()
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e3
 
 
-def table(mesh: str = "single") -> str:
-    rows = []
-    header = ("| arch | shape | compute s | memory s | collective s | "
-              "dominant | MODEL_FLOPS | useful ratio | note |")
-    sep = "|" + "---|" * 9
-    rows.append(header)
-    rows.append(sep)
-    for cfg, shp, skip in cells():
-        if skip:
-            rows.append(f"| {cfg.name} | {shp.name} | — | — | — | — | — | — "
-                        f"| SKIP: {skip} |")
-            continue
-        rec = load_cell(cfg.name, shp.name, mesh)
-        if rec is None:
-            rows.append(f"| {cfg.name} | {shp.name} | — | — | — | — | — | — "
-                        f"| missing |")
-            continue
-        a = analyse(rec, cfg, shp)
-        lever = LEVERS[(a["dominant"], shp.kind)]
-        note = ("" if a["exact_flops"] else "scanned-FLOPs; ") + lever
+def run(csv: bool = True) -> dict:
+    """Analytic + measured roofline over pull_mode x precision."""
+    out = {"geometry": {"n": _N, "d": _D, "K": _K, "batch": _B,
+                        "eps": _EPS, "delta": _DELTA,
+                        "value_range": _VR, "coord_block": _COORD_BLOCK,
+                        "range_mode": "exact"},
+           "machine": {"peak_flops": PEAK_FLOPS, "hbm_bw": HBM_BW,
+                       "machine_balance": MACHINE_BALANCE},
+           "cells": []}
+    kw = dict(K=_K, eps=_EPS, delta=_DELTA, value_range=_VR,
+              range_mode="exact", coord_block=_COORD_BLOCK)
+    hyb = make_plan(_N, _D, pull_mode="hybrid", **kw)
+    out["hybrid_resolves_to"] = hyb.pull_mode
+    for pull_mode in ("row", "coord"):
+        for precision in ("fp32", "int8"):
+            plan = make_plan(_N, _D, pull_mode=pull_mode,
+                             precision=precision, **kw)
+            cell = analyse(plan)
+            ms = _measure_ms(plan)
+            cell["measured_ms_host"] = ms
+            # B queries share each pull's table slab in the batched path
+            cell["achieved_bytes_per_s_host"] = \
+                cell["total_bytes"] / (ms * 1e-3)
+            out["cells"].append(cell)
+            if csv:
+                print(f"roofline,{pull_mode},{precision},"
+                      f"bytes_per_pull={cell['bytes_per_pull']}"
+                      f";pulls={cell['total_pulls']}"
+                      f";total_MB={cell['total_bytes'] / 1e6:.2f}"
+                      f";intensity={cell['intensity_flops_per_byte']:.3f}"
+                      f";v5e_floor_us={cell['t_mem_floor_s'] * 1e6:.1f}"
+                      f";host_ms={ms:.1f}")
+    row_b = next(c for c in out["cells"]
+                 if c["pull_mode"] == "row" and c["precision"] == "fp32")
+    coord_b = next(c for c in out["cells"]
+                   if c["pull_mode"] == "coord" and c["precision"] == "fp32")
+    out["coord_bytes_ratio"] = coord_b["total_bytes"] / row_b["total_bytes"]
+    if csv:
+        print(f"roofline,summary,fp32,"
+              f"coord_total_bytes/row_total_bytes="
+              f"{out['coord_bytes_ratio']:.3f}"
+              f";hybrid={out['hybrid_resolves_to']}")
+    return out
+
+
+def table(payload: dict | None = None) -> str:
+    """Markdown roofline table (for ``results/roofline.md``)."""
+    payload = payload or run(csv=False)
+    rows = ["| mode | prec | block | B/pull | pulls | total MB | "
+            "flops/B | bound | v5e floor us | host ms |",
+            "|" + "---|" * 10]
+    for c in payload["cells"]:
         rows.append(
-            f"| {a['arch']} | {a['shape']} | {a['t_compute_s']:.3e} "
-            f"| {a['t_memory_s']:.3e} | {a['t_collective_s']:.3e} "
-            f"| **{a['dominant']}** | {a['model_flops']:.3e} "
-            f"| {a['useful_ratio']:.2f} | {note} |")
+            f"| {c['pull_mode']} | {c['precision']} | {c['block']} "
+            f"| {c['bytes_per_pull']} | {c['total_pulls']} "
+            f"| {c['total_bytes'] / 1e6:.2f} "
+            f"| {c['intensity_flops_per_byte']:.3f} | {c['bound']} "
+            f"| {c['t_mem_floor_s'] * 1e6:.1f} "
+            f"| {c['measured_ms_host']:.1f} |")
+    g = payload["geometry"]
+    rows.append("")
+    rows.append(f"fp32 coord/row total-bytes ratio: "
+                f"{payload['coord_bytes_ratio']:.3f} at n={g['n']} "
+                f"d={g['d']} (hybrid -> {payload['hybrid_resolves_to']}); "
+                f"machine balance {payload['machine']['machine_balance']:.0f}"
+                f" flops/byte, every cell memory-bound.")
     return "\n".join(rows)
 
 
 def main():
-    md = table()
-    out = os.path.join(os.path.dirname(__file__), "..", "results",
-                       "roofline.md")
+    payload = run(csv=True)
+    md = table(payload)
+    res_dir = os.path.join(os.path.dirname(__file__), "..", "results")
+    os.makedirs(res_dir, exist_ok=True)
+    out = os.path.join(res_dir, "roofline.md")
     with open(out, "w") as f:
-        f.write("# Roofline (single-pod 16x16, v5e constants)\n\n")
+        f.write("# Pull-loop roofline (v5e constants, row vs coord)\n\n")
         f.write(md + "\n")
     print(md)
 

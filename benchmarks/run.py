@@ -1,7 +1,7 @@
 """Benchmark driver: one function per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV rows per benchmark, then the
-roofline table from the dry-run artifacts (if present).  Also writes the
+pull-loop roofline table (``results/roofline.md``).  Also writes the
 machine-readable perf trajectories: ``BENCH_PR1.json`` (fused cascade /
 batched decode: us_per_call, pull-count speedup, kernel dispatch counts),
 ``BENCH_PR2.json`` (serve-loop micro-batching: throughput vs batch
@@ -12,8 +12,11 @@ LSH/PCA full rebuilds), ``BENCH_PR5.json`` (adaptive early-exit mean
 pulls + rounds_used histograms, easy vs hard workloads) and
 ``BENCH_PR6.json`` (continuous-batching runtime: sustained rps / p99 /
 shed rate under bursty load with and without injected faults, plus the
-overload sweep showing the eps degradation ladder engaging) so numbers
-stay comparable across PRs.
+overload sweep showing the eps degradation ladder engaging) and
+``BENCH_PR7.json`` (coordinate-sampling pull mode: certified multiplies
++ wall time per pull mode over the d sweep, hybrid dispatch overhead,
+and the pull-loop roofline's bytes-per-pull cells) so numbers stay
+comparable across PRs.
 """
 
 from __future__ import annotations
@@ -29,13 +32,14 @@ BENCH3_JSON = os.path.join(_ROOT, "BENCH_PR3.json")
 BENCH4_JSON = os.path.join(_ROOT, "BENCH_PR4.json")
 BENCH5_JSON = os.path.join(_ROOT, "BENCH_PR5.json")
 BENCH6_JSON = os.path.join(_ROOT, "BENCH_PR6.json")
+BENCH7_JSON = os.path.join(_ROOT, "BENCH_PR7.json")
 
 
 def main() -> None:
-    from benchmarks import (bench_adaptive, bench_fused, bench_quant,
-                            bench_runtime, bench_serve, bench_store,
-                            fig1_guarantee, fig23_synthetic, fig4_real,
-                            table1_complexity)
+    from benchmarks import (bench_adaptive, bench_coord, bench_fused,
+                            bench_quant, bench_runtime, bench_serve,
+                            bench_store, fig1_guarantee, fig23_synthetic,
+                            fig4_real, roofline, table1_complexity)
     print("== fused cascade / batched decode (PR 1) ==")
     import jax
     meta = {"backend": jax.default_backend(),
@@ -69,6 +73,12 @@ def main() -> None:
     with open(BENCH6_JSON, "w") as f:
         json.dump(payload6, f, indent=2)
     print(f"[bench] wrote {BENCH6_JSON}")
+    print("== coordinate pull mode + roofline (PR 7) ==")
+    payload7 = {"meta": meta, "benchmarks": bench_coord.run(),
+                "roofline": roofline.run()}
+    with open(BENCH7_JSON, "w") as f:
+        json.dump(payload7, f, indent=2)
+    print(f"[bench] wrote {BENCH7_JSON}")
     print("== table1: complexity/guarantees ==")
     table1_complexity.run()
     print("== fig1: guarantee validation (adversarial) ==")
@@ -79,12 +89,14 @@ def main() -> None:
     fig23_synthetic.run("uniform")
     print("== fig4: real-world proxy (MF embeddings) ==")
     fig4_real.run()
-    print("== roofline (from dry-run artifacts) ==")
-    try:
-        from benchmarks import roofline
-        roofline.main()
-    except Exception as e:  # dry-run may not have been executed yet
-        print(f"roofline skipped: {e}")
+    print("== pull-loop roofline (results/roofline.md) ==")
+    md = roofline.table(payload7["roofline"])
+    res_dir = os.path.join(_ROOT, "results")
+    os.makedirs(res_dir, exist_ok=True)
+    with open(os.path.join(res_dir, "roofline.md"), "w") as f:
+        f.write("# Pull-loop roofline (v5e constants, row vs coord)\n\n")
+        f.write(md + "\n")
+    print(md)
 
 
 if __name__ == '__main__':

@@ -53,8 +53,8 @@ from repro.core.quantize import quantize_blocks, quantize_tiles
 from repro.core.schedule import (Schedule, cert_coeffs, flatten_schedule,
                                  make_schedule)
 
-__all__ = ["BlockedPlan", "make_plan", "bounded_me_blocked",
-           "bounded_me_batched", "bounded_me_decode"]
+__all__ = ["BlockedPlan", "make_plan", "choose_pull_mode",
+           "bounded_me_blocked", "bounded_me_batched", "bounded_me_decode"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -70,6 +70,7 @@ class BlockedPlan:
     n_blocks: int       # padded coordinate blocks
     schedule: Schedule  # over (n_tiles "arms", n_blocks "rewards", K_tiles)
     precision: str = "fp32"   # sampling arithmetic: 'fp32' | 'int8' (§10)
+    pull_mode: str = "row"    # resolved reward stream: 'row' | 'coord' (§14)
 
     @property
     def k_tiles(self) -> int:
@@ -125,12 +126,52 @@ class BlockedPlan:
         return self.naive_multiplies / max(1, self.total_multiplies)
 
 
+def choose_pull_mode(row_plan: BlockedPlan, coord_plan: BlockedPlan, *,
+                     row_margin: float = 0.10) -> str:
+    """The hybrid dispatcher's decision rule (DESIGN.md §14, TUNING.md).
+
+    Given the two fully priced candidate plans for the same
+    ``(n, d, K, eps, delta)`` query geometry, returns ``'row'`` or
+    ``'coord'`` — whichever plan's certified ``total_multiplies`` (the
+    width-weighted cost `Schedule.total_coords` times the arm-tile rows)
+    is cheaper.  Row pulls are wider MXU tile-dots with better hardware
+    utilization per multiply, so row mode is preferred whenever it is
+    within ``row_margin`` (default 10%) of the coordinate plan; coord
+    mode must beat row by more than the margin to win.  By construction
+    the hybrid plan is therefore never more than ``row_margin`` worse
+    than the better single mode — in multiplies, before hardware
+    effects that favor the row shape further.
+    """
+    if not 0.0 <= row_margin:
+        raise ValueError(f"row_margin must be >= 0, got {row_margin}")
+    row_cost = row_plan.total_multiplies
+    coord_cost = coord_plan.total_multiplies
+    return "row" if row_cost <= coord_cost * (1.0 + row_margin) else "coord"
+
+
 def make_plan(n: int, N: int, K: int = 1, eps: float = 0.1, delta: float = 0.05,
               value_range: float = 1.0, tile: int = 8, block: int = 512,
               range_mode: str = "clt",
               precision: str = "fp32",
-              bound: str = "hoeffding") -> BlockedPlan:
+              bound: str = "hoeffding",
+              pull_mode: str = "row",
+              coord_block: int = 128) -> BlockedPlan:
     """Build the static plan.
+
+    pull_mode:
+      * 'row' (default) — pulls sample whole feature blocks of width
+        ``min(block, N)`` per arm tile; per-pull cost grows with d until
+        the block cap.
+      * 'coord' — the BanditMIPS coordinate estimator (DESIGN.md §14):
+        pulls sample *narrow* feature blocks of width ``min(coord_block,
+        N)`` without replacement under a shared per-query permutation,
+        so the schedule's reward population is ``n_blocks = ceil(N /
+        coord_block)`` and the certified pull cost becomes sublinear in
+        d.  Same kernel, same bounds — only the block geometry changes.
+      * 'hybrid' — prices BOTH candidate plans and returns the cheaper
+        by `choose_pull_mode` (row preferred within a 10% multiply
+        margin, since row pulls are wider MXU tile-dots); the returned
+        plan's ``pull_mode`` is the resolved concrete mode.
 
     range_mode:
       * 'exact' — block means are bounded by the per-coordinate product range
@@ -159,6 +200,21 @@ def make_plan(n: int, N: int, K: int = 1, eps: float = 0.1, delta: float = 0.05,
         Bernstein–Serfling radii with per-tile running mean/M2
         accumulators (`repro.core.schedule.cert_coeffs`, DESIGN.md §12).
     """
+    if pull_mode == "hybrid":
+        kwargs = dict(K=K, eps=eps, delta=delta, value_range=value_range,
+                      tile=tile, range_mode=range_mode, precision=precision,
+                      bound=bound, coord_block=coord_block)
+        row_plan = make_plan(n, N, block=block, pull_mode="row", **kwargs)
+        coord_plan = make_plan(n, N, block=block, pull_mode="coord", **kwargs)
+        winner = choose_pull_mode(row_plan, coord_plan)
+        return row_plan if winner == "row" else coord_plan
+    if pull_mode == "coord":
+        if coord_block < 1:
+            raise ValueError(f"coord_block must be >= 1, got {coord_block}")
+        block = coord_block       # narrow feature tiles: N becomes d_blocks
+    elif pull_mode != "row":
+        raise ValueError(f"unknown pull_mode {pull_mode!r} "
+                         f"(expected 'row', 'coord' or 'hybrid')")
     block = min(block, N)
     tile = min(tile, n)
     n_tiles = -(-n // tile)
@@ -180,9 +236,11 @@ def make_plan(n: int, N: int, K: int = 1, eps: float = 0.1, delta: float = 0.05,
     else:
         raise ValueError(f"unknown range_mode {range_mode!r}")
     sched = make_schedule(n_tiles, n_blocks, K=k_tiles, eps=eps, delta=delta,
-                          value_range=eff_range, quant_err=qerr, bound=bound)
+                          value_range=eff_range, quant_err=qerr, bound=bound,
+                          pull_mode=pull_mode, pull_width=block)
     return BlockedPlan(n=n, N=N, K=K, tile=tile, block=block, n_tiles=n_tiles,
-                       n_blocks=n_blocks, schedule=sched, precision=precision)
+                       n_blocks=n_blocks, schedule=sched, precision=precision,
+                       pull_mode=pull_mode)
 
 
 def _pad_operands(V: jnp.ndarray, q: jnp.ndarray, plan: BlockedPlan
@@ -487,6 +545,7 @@ def bounded_me_blocked(V, q, key, *, K: int = 1, eps: float = 0.1,
                        final_exact: bool = False, use_pallas: bool = False,
                        precision: str = "fp32", adaptive: bool = False,
                        bound: str = "hoeffding",
+                       pull_mode: str = "row", coord_block: int = 128,
                        plan: Optional[BlockedPlan] = None):
     """Top-K MIPS over rows of ``V`` for query ``q`` (single query).
 
@@ -498,14 +557,18 @@ def bounded_me_blocked(V, q, key, *, K: int = 1, eps: float = 0.1,
     ``adaptive=True`` certifies early exit at round boundaries under the
     plan's ``bound`` radius family and returns a 4-tuple
     ``(ids, scores, rounds_used, plan)`` (DESIGN.md §12);
-    ``adaptive=False`` is bit-identical to not passing it.  When ``plan``
-    is given its own precision/bound win.
+    ``adaptive=False`` is bit-identical to not passing it.
+    ``pull_mode`` selects the reward stream — 'row', 'coord' (narrow
+    ``coord_block``-wide feature tiles, DESIGN.md §14) or 'hybrid'
+    (cheaper of the two by `choose_pull_mode`).  When ``plan`` is given
+    its own precision/bound/pull_mode win.
     """
     n, N = V.shape
     if plan is None:
         plan = make_plan(n, N, K=K, eps=eps, delta=delta,
                          value_range=value_range, tile=tile, block=block,
-                         precision=precision, bound=bound)
+                         precision=precision, bound=bound,
+                         pull_mode=pull_mode, coord_block=coord_block)
     out = _run_blocked(jnp.asarray(V), jnp.asarray(q), key, plan=plan,
                        final_exact=final_exact, use_pallas=use_pallas,
                        adaptive=adaptive)

@@ -23,6 +23,8 @@ __all__ = [
     "deviation_bound",
     "bernstein_radius",
     "m_required_eb",
+    "coord_radius",
+    "coord_m_required",
     "hoeffding_required",
     "lil_required",
     "quantization_error",
@@ -171,6 +173,67 @@ def m_required_eb(eps: float, delta: float, N: int, value_range: float = 1.0,
         else:
             lo = mid + 1
     return lo
+
+
+def coord_radius(m: int, d_blocks: int, delta: float, value_range: float = 1.0,
+                 quant_err: float = 0.0) -> float:
+    """Deviation radius of the coordinate-sampling estimator (BanditMIPS).
+
+    The coordinate pull mode estimates each inner product ``<q, v_i>`` by
+    sampling ``m`` of the ``d_blocks`` feature blocks *without replacement*
+    under a shared per-query permutation; each observed block-mean is an
+    unbiased reward whose per-observation range is ``value_range`` (the
+    a-priori bound on a per-coordinate product, or the block-mean range
+    under CLT calibration).  The radius is therefore the same
+    Hoeffding–Serfling family as the row estimator — `deviation_bound` —
+    but over the *feature-block* population ``N = d_blocks`` instead of
+    the row-tile population, which is what makes the certified pull cost
+    independent of the number of arms and sublinear in d.
+
+    With quantized (int8) rewards each observation's range is widened by
+    ``2 * quant_err`` (the rounding perturbation enters on both ends of
+    the per-observation interval); the *deterministic* bias itself is
+    budgeted by `coord_m_required` (``dev = eps - quant_err``), matching
+    the ``Schedule.eps_effective`` accounting of the row estimator, so
+    ``coord_radius(m, N, d, v, qe) == coord_radius(m, N, d, v + 2*qe, 0)``
+    identically.
+
+    Returns exactly 0.0 for ``m >= d_blocks`` (full coverage: the
+    empirical block-mean is the inner product).  Monotone nonincreasing
+    in ``m``.
+    """
+    if quant_err < 0.0:
+        raise ValueError(f"quant_err must be >= 0, got {quant_err}")
+    if m >= d_blocks:
+        return 0.0
+    return deviation_bound(m, d_blocks, delta, value_range + 2.0 * quant_err)
+
+
+def coord_m_required(eps: float, delta: float, d_blocks: int,
+                     value_range: float = 1.0, quant_err: float = 0.0) -> int:
+    """Minimal coordinate-block sample count for an ``(eps, delta)`` estimate.
+
+    Inverts `coord_radius`: the smallest ``m`` with
+    ``coord_radius(m, d_blocks, delta, value_range, quant_err) <= eps``.
+    The deterministic quantization bias is subtracted from the budget
+    first (``dev = eps - quant_err``); if the bias alone exhausts the
+    budget the only valid answer is full coverage ``m = d_blocks``
+    (sampling cannot reduce a deterministic bias).  Like `m_required`,
+    non-finite intermediate terms as ``eps → 0`` clamp to full coverage
+    rather than raising — ``m = d_blocks`` has zero sampling error, so
+    full coverage satisfies every ``eps >= quant_err``.  Always in
+    ``[1, d_blocks]``.
+    """
+    if not 0.0 < eps:
+        raise ValueError(f"eps must be > 0, got {eps}")
+    if quant_err < 0.0:
+        raise ValueError(f"quant_err must be >= 0, got {quant_err}")
+    if d_blocks <= 1:
+        return 1
+    dev = eps - quant_err
+    if dev <= 0.0:
+        return d_blocks
+    return m_required(dev, delta, d_blocks, value_range + 2.0 * quant_err)
 
 
 def quantization_error(value_range: float, bits: int = 8) -> float:

@@ -21,12 +21,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.boundedme_jax import (BlockedPlan, bounded_me_batched,
-                                      bounded_me_blocked, make_plan)
+                                      bounded_me_blocked, choose_pull_mode,
+                                      make_plan)
 from repro.distributed.sharding import sharded_bounded_me_decode
 
 __all__ = ["mips_topk", "nns_topk", "sharded_mips_topk", "exact_topk",
            "sharded_bounded_me_decode", "default_value_range",
-           "table_abs_max"]
+           "table_abs_max", "choose_pull_mode"]
 
 
 def exact_topk(V, q, K: int = 1) -> Tuple[jnp.ndarray, jnp.ndarray]:
@@ -97,7 +98,8 @@ def mips_topk(V, q, K: int = 1, *, method: str = "boundedme",
               key: Optional[jax.Array] = None, tile: int = 8,
               block: int = 512, final_exact: bool = False,
               use_pallas: bool = False, precision: str = "fp32",
-              adaptive: bool = False, bound: str = "hoeffding"):
+              adaptive: bool = False, bound: str = "hoeffding",
+              pull_mode: str = "row", coord_block: int = 128):
     """Top-K maximum inner product search over the rows of ``V``.
 
     Zero preprocessing: ``V`` can be hot-swapped between calls with no
@@ -138,6 +140,16 @@ def mips_topk(V, q, K: int = 1, *, method: str = "boundedme",
         the schedule's own events) or 'bernstein' (variance-aware
         empirical-Bernstein radii; reserves half of each round's delta
         budget and carries running mean/M2 accumulators).
+      pull_mode: reward stream (DESIGN.md §14) — 'row' (default; pulls
+        are ``block``-wide feature blocks per arm tile), 'coord' (the
+        BanditMIPS coordinate estimator: narrow ``coord_block``-wide
+        feature tiles sampled without replacement under a shared
+        per-query permutation, making certified pull cost sublinear in
+        d), or 'hybrid' (prices both candidate plans and dispatches to
+        the cheaper via `choose_pull_mode`; row wins ties within a 10%
+        multiply margin — the decision rule is documented in TUNING.md).
+      coord_block: feature-tile width of the 'coord' estimator (default
+        128, the TPU lane width).
 
     Returns:
       ``(ids (K,) int32, scores (K,) f32)``; scores estimate (q . v)/N.
@@ -157,7 +169,7 @@ def mips_topk(V, q, K: int = 1, *, method: str = "boundedme",
         V, q, key, K=K, eps=eps, delta=delta, value_range=value_range,
         tile=tile, block=block, final_exact=final_exact,
         use_pallas=use_pallas, precision=precision, adaptive=adaptive,
-        bound=bound)
+        bound=bound, pull_mode=pull_mode, coord_block=coord_block)
     return out[0], out[1]
 
 
@@ -185,7 +197,8 @@ def sharded_mips_topk(table, queries, keys, K: int, *, mesh,
                       tile: int = 8, block: int = 512,
                       final_exact: bool = True,
                       use_pallas: Optional[bool] = None,
-                      precision: str = "fp32"):
+                      precision: str = "fp32",
+                      pull_mode: str = "row", coord_block: int = 128):
     """Distributed batched MIPS via shard_map: shard-local bandits, K-merge.
 
     ``table`` (n, N) is sharded on rows over ``model_axis``; each shard runs
@@ -208,8 +221,11 @@ def sharded_mips_topk(table, queries, keys, K: int, *, mesh,
         query samples its own block permutation — contrast with the
         shared-permutation decode engine).
       K / eps / delta / value_range / tile / block / final_exact /
-        precision: as in `mips_topk`; delta is split across shards by
-        union bound (each shard's int8 plan widens its own bounds).
+        precision / pull_mode / coord_block: as in `mips_topk`; delta is
+        split across shards by union bound (each shard's int8 plan widens
+        its own bounds).  The pull-mode choice is shard-local — each
+        shard prices its own (n_local, N) geometry — while the exact
+        cross-shard K-merge is untouched by the pull mode.
       mesh / model_axis / batch_axes: device mesh, arm-sharding axis name,
         and optional query-batch sharding axes.
       n_valid: real row count when ``table`` carries padding rows (e.g. a
@@ -232,7 +248,8 @@ def sharded_mips_topk(table, queries, keys, K: int, *, mesh,
     if plan is None:
         plan = make_plan(n_local, N, K=K, eps=eps, delta=delta / n_shards,
                          value_range=value_range, tile=tile, block=block,
-                         precision=precision)
+                         precision=precision, pull_mode=pull_mode,
+                         coord_block=coord_block)
 
     def local(table_l, q_l, keys_l):
         ids, scores = bounded_me_batched(table_l, q_l, keys_l, plan=plan,

@@ -54,11 +54,27 @@ class Schedule:
     rounds: Tuple[Round, ...]  # tuple => hashable => usable as a jit static
     quant_err: float = 0.0     # per-reward bias absorbed by the bounds (§10)
     bound: str = "hoeffding"   # radius family: 'hoeffding' | 'bernstein'
+    pull_mode: str = "row"     # reward stream: 'row' | 'coord' (DESIGN.md §14)
+    pull_width: int = 1        # coordinates touched per pull (honest cost)
 
     @property
     def total_pulls(self) -> int:
         """Exact sample complexity (sum over rounds of survivors x new pulls)."""
         return sum(r.n_arms * r.t_new for r in self.rounds)
+
+    @property
+    def total_coords(self) -> int:
+        """Honest cross-mode cost: coordinates touched, not pulls issued.
+
+        A 'row'-mode pull and a 'coord'-mode pull are different units of
+        work — a row pull reads ``pull_width`` = block coordinates of one
+        arm tile, a coord pull reads ``pull_width`` = coord_block of them.
+        ``total_pulls`` alone would make narrow pulls look free;
+        ``total_coords = total_pulls * pull_width`` is the width-weighted
+        count that `BlockedPlan.total_multiplies` and the hybrid
+        dispatcher compare across pull modes (DESIGN.md §14).
+        """
+        return self.total_pulls * self.pull_width
 
     @property
     def naive_pulls(self) -> int:
@@ -328,7 +344,9 @@ def _round_pulls(n_l: int, K: int, eps_l: float, delta_l: float, N: int,
 def make_schedule(n: int, N: int, K: int = 1, eps: float = 0.1,
                   delta: float = 0.05, value_range: float = 1.0,
                   quant_err: float = 0.0,
-                  bound: str = "hoeffding") -> Schedule:
+                  bound: str = "hoeffding",
+                  pull_mode: str = "row",
+                  pull_width: int = 1) -> Schedule:
     """Build the static round plan of Algorithm 1.
 
     eps_1 = eps/4, delta_1 = delta/2; eps_{l+1} = 3/4 eps_l,
@@ -337,6 +355,27 @@ def make_schedule(n: int, N: int, K: int = 1, eps: float = 0.1,
     ``quant_err`` widens every round's pull count so a per-reward bias of
     that size (low-precision sampling arithmetic) is absorbed into the
     confidence radii (see `_round_pulls` and DESIGN.md §10).
+
+    ``pull_mode`` records which reward stream the schedule prices
+    (DESIGN.md §14) and ``pull_width`` how many coordinates one pull
+    touches, feeding `Schedule.total_coords`:
+
+      * 'row' (default) — rewards are block-means of whole feature blocks
+        per arm tile; ``N`` is the feature-block count at the row block
+        width (typically ``min(512, d)``).
+      * 'coord' — the BanditMIPS coordinate estimator: rewards are means
+        of *narrow* feature blocks sampled without replacement under a
+        shared per-query permutation, so ``N = d_blocks = ceil(d /
+        coord_block)`` is larger and each pull is cheaper.  The round
+        structure is identical — the Hoeffding–Serfling / Bernstein
+        machinery only sees the population size ``N`` — which is why the
+        whole kernel path is reused unchanged.
+
+    The composite 'hybrid' mode is *not* a schedule-level concept: it is
+    resolved to 'row' or 'coord' by ``make_plan`` (which prices both
+    candidate plans and keeps the cheaper; see
+    `repro.core.boundedme_jax.choose_pull_mode`), so passing it here
+    raises.
 
     ``bound`` selects the radius family the adaptive early-exit path uses
     to certify queries at round boundaries (`cert_coeffs`, DESIGN.md §12):
@@ -358,9 +397,19 @@ def make_schedule(n: int, N: int, K: int = 1, eps: float = 0.1,
     if bound not in ("hoeffding", "bernstein"):
         raise ValueError(f"unknown bound {bound!r} "
                          f"(expected 'hoeffding' or 'bernstein')")
+    if pull_mode == "hybrid":
+        raise ValueError(
+            "pull_mode='hybrid' is resolved by make_plan (it prices both "
+            "candidate plans via choose_pull_mode); make_schedule only "
+            "accepts the concrete modes 'row' and 'coord'")
+    if pull_mode not in ("row", "coord"):
+        raise ValueError(f"unknown pull_mode {pull_mode!r} "
+                         f"(expected 'row' or 'coord')")
+    if pull_width < 1:
+        raise ValueError(f"pull_width must be >= 1, got {pull_width}")
     if K >= n:
         return Schedule(n, N, K, eps, delta, value_range, (), quant_err,
-                        bound)
+                        bound, pull_mode, pull_width)
     rounds: List[Round] = []
     n_l, eps_l, delta_l, t_prev, l = n, eps / 4.0, delta / 2.0, 0, 1
     while n_l > K:
@@ -373,4 +422,4 @@ def make_schedule(n: int, N: int, K: int = 1, eps: float = 0.1,
         n_l, t_prev, l = n_keep, t_l, l + 1
         eps_l, delta_l = 0.75 * eps_l, 0.5 * delta_l
     return Schedule(n, N, K, eps, delta, value_range, tuple(rounds),
-                    quant_err, bound)
+                    quant_err, bound, pull_mode, pull_width)

@@ -194,7 +194,8 @@ def make_shard_plan(n: int, N: int, n_shards: int, *, K: int = 1,
                     eps: float = 0.05, delta: float = 0.05,
                     value_range: float = 4.0, tile: int = 8,
                     block: int = 512, precision: str = "fp32",
-                    bound: str = "hoeffding"):
+                    bound: str = "hoeffding", pull_mode: str = "row",
+                    coord_block: int = 128):
     """Shard-local BlockedPlan + padding geometry for an arm-sharded table.
 
     Splits an (n, N) item matrix into ``n_shards`` row shards of
@@ -219,7 +220,13 @@ def make_shard_plan(n: int, N: int, n_shards: int, *, K: int = 1,
     * ``bound`` selects the certification radius family of the adaptive
       early-exit path (DESIGN.md §12) — certification is *shard-local*
       (each shard certifies its own top-K at its own ``delta / n_shards``
-      budget), so the exact cross-shard merge argument is untouched.
+      budget), so the exact cross-shard merge argument is untouched;
+    * ``pull_mode`` / ``coord_block`` select the reward stream
+      (DESIGN.md §14) — the coord/hybrid schedule is likewise
+      *shard-local* (each shard prices its own (n_local, N) geometry;
+      'hybrid' resolves per shard plan, identically on every shard since
+      all shards share one geometry), and merge scores stay exact, so the
+      pull mode never touches the cross-shard merge argument.
 
     Returns ``(plan, n_local, n_pad, k_out)``.
     """
@@ -234,7 +241,8 @@ def make_shard_plan(n: int, N: int, n_shards: int, *, K: int = 1,
     K_local = min(K, n_local)
     plan = make_plan(n_local, N, K=K_local, eps=eps, delta=delta / n_shards,
                      value_range=value_range, tile=tile, block=block,
-                     precision=precision, bound=bound)
+                     precision=precision, bound=bound, pull_mode=pull_mode,
+                     coord_block=coord_block)
     k_out = max(K_local, min(K_local + 1, plan.k_out_cap, n_local))
     return plan, n_local, n_pad, k_out
 
@@ -249,6 +257,8 @@ def sharded_bounded_me_decode(table, Q, key, *, mesh: Mesh, K: int = 1,
                               precision: str = "fp32",
                               adaptive: bool = False,
                               bound: str = "hoeffding",
+                              pull_mode: str = "row",
+                              coord_block: int = 128,
                               return_candidates: bool = False):
     """Multi-device batched-decode MIPS: per-shard fused cascade + exact merge.
 
@@ -310,6 +320,13 @@ def sharded_bounded_me_decode(table, Q, key, *, mesh: Mesh, K: int = 1,
         the exact cross-shard merge — and with it the global
         (eps, delta) argument — is untouched.  ``adaptive=False`` is
         bit-identical to the pre-adaptive path.
+      pull_mode / coord_block: reward stream per shard (DESIGN.md §14) —
+        'row' (default), 'coord' (narrow feature tiles; shard-local
+        coordinate schedules over the shard's own (n_local, N) geometry)
+        or 'hybrid' (each shard resolves to the cheaper concrete mode —
+        deterministically identical across shards, which all share one
+        geometry).  Merge scores remain exact inner products under every
+        mode, so the exact cross-shard merge is untouched.
       return_candidates: also return the pre-merge per-shard candidate
         sets — a dict of ``ids/scores/gaps`` arrays shaped
         (B, shards, k_out) — for diagnostics and tests.
@@ -337,7 +354,8 @@ def sharded_bounded_me_decode(table, Q, key, *, mesh: Mesh, K: int = 1,
     n_shards = mesh.shape[model_axis]
     plan, n_local, n_pad, k_out = make_shard_plan(
         n, N, n_shards, K=K, eps=eps, delta=delta, value_range=value_range,
-        tile=tile, block=block, precision=precision, bound=bound)
+        tile=tile, block=block, precision=precision, bound=bound,
+        pull_mode=pull_mode, coord_block=coord_block)
     if n_pad:
         table = jnp.pad(table, ((0, n_pad), (0, 0)))
     key = jnp.asarray(key)

@@ -59,6 +59,22 @@ the frozen accumulator (every survivor froze at the same pull count, so
 scheduled-denominator means are a positive rescale of the true means and
 every later ranking is unchanged), the final extraction normalizes by the
 *actual* pull count, and a third output reports per-query ``rounds_used``.
+
+Coordinate-sampling pull mode (DESIGN.md §14): the kernel is fully generic
+in the feature-tile width ``C`` — a pull step DMAs one surviving ``(R, C)``
+feature tile ``V_ref.at[tile, col]`` regardless of whether the plan calls
+that tile a 'row'-mode block (C = min(512, d)) or a 'coord'-mode narrow
+feature tile (C = coord_block, default 128 = the TPU lane width, so the
+narrow tiles stay MXU/VPU-legal).  ``pull_mode='coord'`` therefore needs
+ZERO kernel changes: `make_plan` re-blocks the feature axis so the flat
+schedule's column ids index ``n_blocks = ceil(d / coord_block)`` narrow
+tiles, and the same double-buffered DMA pipeline, survivor bookkeeping,
+int8 scale grids (``vscale (n_tiles, n_blocks)``/``qscale`` follow the
+plan's blocking automatically) and adaptive certification lanes serve both
+reward streams.  Per-pull HBM traffic drops from ``R * 512`` to
+``R * coord_block`` operand elements — the whole point at large d — while
+the permutation/ordering semantics (and hence kernel == fallback bitwise
+parity) are unchanged.
 """
 
 from __future__ import annotations

@@ -3,6 +3,11 @@
 On non-TPU backends (this CPU container) the kernels run in interpret mode,
 which executes the kernel body in Python for correctness validation; on TPU
 they lower to Mosaic.  The pure-jnp oracles live in ``repro.kernels.ref``.
+
+Every wrapper is generic in the feature-tile width ``C``: the same entry
+points serve 'row'-mode plans (wide blocks) and 'coord'-mode plans (narrow
+coordinate tiles, DESIGN.md §14) — callers select the pull mode purely
+through the plan geometry baked into the operands and flat schedule.
 """
 
 from __future__ import annotations

@@ -155,7 +155,8 @@ class CascadeExecutor:
                  n_valid: Optional[int] = None,
                  use_pallas: Optional[bool] = None,
                  precision: str = "fp32", range_slack: float = 1.0,
-                 adaptive: bool = False, bound: str = "hoeffding"):
+                 adaptive: bool = False, bound: str = "hoeffding",
+                 pull_mode: str = "row", coord_block: int = 128):
         from repro.core.mips import table_abs_max
         from repro.store import DynamicTableStore, ShardedTableStore
 
@@ -205,9 +206,23 @@ class CascadeExecutor:
         self.precision = precision
         self.adaptive = bool(adaptive)
         self._bound = bound
+        self.pull_mode = pull_mode
+        self._coord_block = int(coord_block)
         self._n_valid = n_valid
         self._use_shadow = (self.store is not None and mesh is None
                             and self.store.precision == "int8")
+        if self._use_shadow and pull_mode != "row":
+            # the store's incrementally maintained int8 shadow is quantized
+            # at the store's own (tile, block) cells; a coord (or
+            # coord-resolvable hybrid) plan re-blocks the feature axis at
+            # coord_block width, which the shadow cannot serve.  fp32
+            # stores and sharded int8 stores (which quantize in-jit at the
+            # plan's geometry) support every pull mode.
+            raise ValueError(
+                f"pull_mode={pull_mode!r} is incompatible with a "
+                f"single-device int8 store shadow (its quantization cells "
+                f"are fixed at the store's block width); use pull_mode="
+                f"'row', an fp32 store, or a ShardedTableStore")
         self.n_recalibrations = 0
         self._seen_version = (0 if self.store is None
                               else self.store.version)
@@ -248,13 +263,15 @@ class CascadeExecutor:
         tile, block = self._tile, self._block
         precision, use_pallas = self.precision, self._use_pallas
         adaptive, bound = self.adaptive, self._bound
+        pull_mode, coord_block = self.pull_mode, self._coord_block
         if mesh is not None:
             from repro.distributed.sharding import (make_shard_plan,
                                                     sharded_bounded_me_decode)
             self.plan, self._n_local, self._n_pad, _ = make_shard_plan(
                 self.n, self.N, mesh.shape[model_axis], K=K, eps=eps,
                 delta=delta, value_range=value_range, tile=tile, block=block,
-                precision=precision, bound=bound)
+                precision=precision, bound=bound, pull_mode=pull_mode,
+                coord_block=coord_block)
 
             def _flush_fn(tbl, Qbuf, key, nv):
                 out = sharded_bounded_me_decode(
@@ -262,7 +279,8 @@ class CascadeExecutor:
                     n_valid=nv, eps=eps, delta=delta,
                     value_range=value_range, tile=tile, block=block,
                     final_exact=True, use_pallas=use_pallas,
-                    precision=precision, adaptive=adaptive, bound=bound)
+                    precision=precision, adaptive=adaptive, bound=bound,
+                    pull_mode=pull_mode, coord_block=coord_block)
                 # rounds_used is (B, shards) when adaptive, else absent
                 return out[0], out[1], (out[3] if adaptive else None)
 
@@ -270,7 +288,8 @@ class CascadeExecutor:
         else:
             plan = make_plan(self.n, self.N, K=K, eps=eps, delta=delta,
                              value_range=value_range, tile=tile,
-                             block=block, precision=precision, bound=bound)
+                             block=block, precision=precision, bound=bound,
+                             pull_mode=pull_mode, coord_block=coord_block)
             self.plan = plan
             if self._use_shadow:
                 # the store maintains the int8 shadow incrementally; the
@@ -443,6 +462,16 @@ class MIPSServeEngine:
     (shard-local certification), and store-backed including the int8
     shadow (certification radii carry the quantization bias).
 
+    ``pull_mode`` selects the reward stream per flush (DESIGN.md §14):
+    'row' (default), 'coord' (the BanditMIPS coordinate estimator —
+    narrow ``coord_block``-wide feature tiles, certified pull cost
+    sublinear in d; best for high-dimensional embedding tables) or
+    'hybrid' (the executor prices both candidate plans and serves the
+    cheaper, row-preferred within a 10% multiply margin).  One
+    incompatibility, rejected at construction: a single-device int8
+    store shadow fixes the quantization-block geometry, so it serves
+    ``pull_mode='row'`` only.
+
     **Live corpora** (DESIGN.md §11): ``table`` may be a
     `repro.store.DynamicTableStore` (or `ShardedTableStore` for
     multi-device serving) instead of a static array.  The engine then
@@ -477,13 +506,15 @@ class MIPSServeEngine:
                  use_pallas: Optional[bool] = None,
                  precision: str = "fp32", range_slack: float = 1.0,
                  adaptive: bool = False, bound: str = "hoeffding",
+                 pull_mode: str = "row", coord_block: int = 128,
                  seed: int = 0):
         self._exec = CascadeExecutor(
             table, K=K, eps=eps, delta=delta, value_range=value_range,
             qmax_hint=qmax_hint, tile=tile, block=block, lanes=batch_size,
             mesh=mesh, model_axis=model_axis, n_valid=n_valid,
             use_pallas=use_pallas, precision=precision,
-            range_slack=range_slack, adaptive=adaptive, bound=bound)
+            range_slack=range_slack, adaptive=adaptive, bound=bound,
+            pull_mode=pull_mode, coord_block=coord_block)
         self.K = K
         self.batch_size = int(batch_size)
         self.deadline_s = float(deadline_ms) * 1e-3
@@ -841,6 +872,7 @@ class ServeRuntime:
                  use_pallas: Optional[bool] = None,
                  precision: str = "fp32", range_slack: float = 1.0,
                  adaptive: bool = False, bound: str = "hoeffding",
+                 pull_mode: str = "row", coord_block: int = 128,
                  seed: int = 0):
         if batch_wait_ms <= 0:
             raise ValueError(f"batch_wait_ms must be > 0, "
@@ -851,12 +883,17 @@ class ServeRuntime:
             raise ValueError(f"max_retries must be >= 0, got {max_retries}")
         self.ladder = DegradationLadder(eps, eps_floor, rungs=degrade_rungs,
                                         start=degrade_start)
+        # pull_mode='hybrid' resolves per rung: relaxed-eps rungs have
+        # smaller schedules, so the row/coord winner may legitimately
+        # differ across the ladder (each rung's plan records its own
+        # resolved mode)
         self._rung_execs = [CascadeExecutor(
             table, K=K, eps=e, delta=delta, value_range=value_range,
             qmax_hint=qmax_hint, tile=tile, block=block, lanes=lanes,
             mesh=mesh, model_axis=model_axis, n_valid=n_valid,
             use_pallas=use_pallas, precision=precision,
-            range_slack=range_slack, adaptive=adaptive, bound=bound)
+            range_slack=range_slack, adaptive=adaptive, bound=bound,
+            pull_mode=pull_mode, coord_block=coord_block)
             for e in self.ladder.eps_values]
         ex0 = self._rung_execs[0]
         self.K = K

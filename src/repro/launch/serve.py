@@ -260,7 +260,7 @@ def _run_loop(args) -> None:
                   mesh=mesh, recall_sample_rate=args.recall_rate,
                   cache_entries=args.cache_entries,
                   precision=args.precision, adaptive=args.adaptive,
-                  bound=args.bound)
+                  bound=args.bound, pull_mode=args.pull_mode)
     if not args.dynamic:
         common.update(block=block, n_valid=n_valid)
 
@@ -300,6 +300,7 @@ def _run_loop(args) -> None:
               f"pattern={args.pattern} "
               f"shards={mesh.shape['model'] if mesh else 1} "
               f"dynamic={bool(args.dynamic)} churn={args.churn_rate} "
+              f"pull_mode={args.pull_mode} "
               f"faults={'on' if injector else 'off'}")
     else:
         engine = MIPSServeEngine(
@@ -313,6 +314,8 @@ def _run_loop(args) -> None:
               f"rounds={len(engine.plan.schedule.rounds)} "
               f"precision={engine.plan.precision} "
               f"adaptive={args.adaptive} bound={args.bound} "
+              f"pull_mode={engine.plan.pull_mode} "
+              f"block={engine.plan.block} "
               f"eps_eff={engine.plan.eps_effective:.4f} "
               f"pull_speedup={engine.plan.schedule.speedup:.2f}x")
     rng = np.random.default_rng(0)
@@ -482,6 +485,13 @@ def _validate_args(ap: argparse.ArgumentParser, args) -> None:
         ap.error(f"--batch must be >= 1, got {args.batch}")
     if not 0.0 <= args.repeat_rate <= 1.0:
         ap.error(f"--repeat-rate must be in [0, 1], got {args.repeat_rate}")
+    if (args.pull_mode != "row" and args.dynamic
+            and args.precision == "int8" and args.shards <= 1):
+        ap.error(f"--pull-mode {args.pull_mode} is incompatible with a "
+                 f"single-device int8 store (--dynamic --precision int8): "
+                 f"the store's incrementally maintained int8 shadow fixes "
+                 f"the quantization-block geometry, which only the 'row' "
+                 f"plan matches (use --pull-mode row, fp32, or --shards 2+)")
 
 
 def _build_parser() -> argparse.ArgumentParser:
@@ -506,6 +516,13 @@ def _build_parser() -> argparse.ArgumentParser:
                     choices=["hoeffding", "bernstein"],
                     help="certification radius family for --adaptive "
                          "(bernstein = variance-aware, more pulls/round)")
+    ap.add_argument("--pull-mode", default="row",
+                    choices=["row", "coord", "hybrid"],
+                    help="reward stream of the cascade (DESIGN.md §14): "
+                         "'row' samples wide feature blocks, 'coord' the "
+                         "BanditMIPS coordinate estimator (pull cost "
+                         "sublinear in d), 'hybrid' prices both plans and "
+                         "serves the cheaper")
     ap.add_argument("--batch", type=int, default=4,
                     help="micro-batch size (--loop) / kernel lanes "
                          "(--runtime) / decode batch (demo)")

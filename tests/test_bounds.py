@@ -167,3 +167,68 @@ class TestBernsteinFamily:
             if abs(s.mean() - mu) > rad:
                 fails += 1
         assert fails / trials <= delta + 0.06
+
+
+class TestCoordFamily:
+    """The coordinate-estimator radius family (ISSUE 7, DESIGN.md §14)."""
+
+    def test_monotone_nonincreasing_in_m(self):
+        d_blocks, delta = 64, 0.1
+        radii = [bounds.coord_radius(m, d_blocks, delta, 2.0)
+                 for m in range(1, d_blocks + 1)]
+        assert all(a >= b for a, b in zip(radii, radii[1:]))
+
+    def test_exactly_zero_at_full_coverage(self):
+        for d_blocks in (2, 16, 64, 257):
+            for extra in (0, 1, 10):
+                assert bounds.coord_radius(d_blocks + extra, d_blocks,
+                                           0.05, 3.0) == 0.0
+
+    def test_value_range_scaling_is_linear(self):
+        d_blocks, delta = 128, 0.05
+        for m in (1, 7, 64):
+            r1 = bounds.coord_radius(m, d_blocks, delta, 1.0)
+            r2 = bounds.coord_radius(m, d_blocks, delta, 2.0)
+            assert r2 == pytest.approx(2.0 * r1, rel=1e-12)
+
+    def test_quant_err_widens_as_range(self):
+        # the widening identity pinned by the docstring: the int8 bias
+        # enters the radius purely as +2*quant_err of range
+        d_blocks, delta, vr, qe = 64, 0.1, 2.0, 0.125
+        for m in (1, 5, 33):
+            assert (bounds.coord_radius(m, d_blocks, delta, vr, qe)
+                    == bounds.coord_radius(m, d_blocks, delta,
+                                           vr + 2.0 * qe, 0.0))
+            assert (bounds.coord_radius(m, d_blocks, delta, vr, qe)
+                    > bounds.coord_radius(m, d_blocks, delta, vr, 0.0))
+
+    def test_m_required_inverts_radius(self):
+        d_blocks, delta, vr = 256, 0.05, 2.0
+        for eps in (0.05, 0.2, 1.0):
+            m = bounds.coord_m_required(eps, delta, d_blocks, vr)
+            assert 1 <= m <= d_blocks
+            assert bounds.coord_radius(m, d_blocks, delta, vr) <= eps
+            if m > 1:
+                assert bounds.coord_radius(m - 1, d_blocks, delta, vr) > eps
+
+    def test_overflow_clamps_to_full_coverage(self):
+        # eps -> 0: u_term overflows to inf; must clamp to d_blocks, never
+        # raise or return nan (the m_required edge behavior, inherited)
+        for eps in (1e-300, 1e-30):
+            assert bounds.coord_m_required(eps, 0.05, 64) == 64
+
+    def test_quant_bias_exhausting_budget_forces_full_coverage(self):
+        # deterministic bias >= eps: sampling cannot help; only full
+        # coverage (zero sampling error) is valid
+        assert bounds.coord_m_required(0.1, 0.05, 64, 2.0,
+                                       quant_err=0.1) == 64
+        assert bounds.coord_m_required(0.1, 0.05, 64, 2.0,
+                                       quant_err=0.2) == 64
+        # bias strictly inside the budget: strictly fewer than full
+        # coverage once eps is loose enough
+        m = bounds.coord_m_required(4.0, 0.05, 64, 2.0, quant_err=0.1)
+        assert m < 64
+
+    def test_degenerate_single_block(self):
+        assert bounds.coord_m_required(0.5, 0.05, 1) == 1
+        assert bounds.coord_radius(1, 1, 0.05) == 0.0

@@ -1,11 +1,14 @@
-"""Property-based differential fuzzer for the fused cascade (ISSUE 5).
+"""Property-based differential fuzzer for the fused cascade (ISSUE 5 + 7).
 
 Three independent implementations of the same flat-schedule program —
 the Pallas kernel (interpret mode), the `lax.scan`/dense jnp fallback,
 and the deliberately naive numpy oracle (`repro.kernels.ref`) — must
 agree across randomized geometry: ragged n and N, K > tile, caller
 padding via ``n_valid``, fp32/int8 precision, hoeffding/bernstein bound
-families, adaptive on/off, and widened ``k_out``.
+families, adaptive on/off, widened ``k_out``, and (ISSUE 7) the pull
+mode — 'row', 'coord' (narrow coordinate tiles, including d not a
+multiple of the feature-tile width) and 'hybrid' (whichever concrete
+mode the dispatcher resolves must itself pass the trio check).
 
 Agreement contract (the same one the PR-1/PR-3 suites pin):
 
@@ -76,13 +79,15 @@ def _oracle_decode(V, Q, key, plan, *, k_out, n_valid, adaptive):
 
 
 def _check_trio(n, N, K, tile, block, n_valid, precision, bound, adaptive,
-                B, eps, widen_k_out, seed):
+                B, eps, widen_k_out, seed, pull_mode="row", coord_block=128):
     rng = np.random.default_rng(seed)
     V = rng.normal(size=(n, N)).astype(np.float32)
     Q = rng.normal(size=(B, N)).astype(np.float32)
     plan = make_plan(n, N, K=K, eps=eps, delta=0.1, value_range=8.0,
                      tile=tile, block=block, precision=precision,
-                     bound=bound)
+                     bound=bound, pull_mode=pull_mode,
+                     coord_block=coord_block)
+    assert plan.pull_mode in ("row", "coord")   # hybrid resolves concrete
     k_out = min(plan.K + 2, plan.k_out_cap) if widen_k_out else plan.K
     key = jax.random.PRNGKey(seed)
     kw = dict(plan=plan, final_exact=False, k_out=k_out, n_valid=n_valid,
@@ -132,6 +137,33 @@ def test_grid_kernel_fallback_oracle_bitwise(n, N, K, tile, block, n_valid,
                                              precision, bound, adaptive, B):
     _check_trio(n, N, K, tile, block, n_valid, precision, bound, adaptive,
                 B, eps=0.7, widen_k_out=(K < n), seed=n + 7 * K)
+
+
+# coordinate / hybrid pull modes (ISSUE 7) — same trio contract, narrow
+# feature tiles; includes d NOT a multiple of the coord tile (700 % 128,
+# 300 % 96, 257 % 64 != 0, exercising the zero-padded ragged last tile)
+COORD_GRID = [
+    # n,  N,   K, tile, cb,  n_valid, precision, bound,      adapt, B, mode
+    (96,  512, 2, 8,    128, 96,  "fp32", "hoeffding", False, 2, "coord"),
+    (100, 700, 3, 8,    128, 87,  "fp32", "bernstein", True,  1, "coord"),
+    (96,  512, 2, 8,    128, 96,  "int8", "hoeffding", True,  2, "coord"),
+    (77,  300, 4, 8,    96,  60,  "int8", "bernstein", True,  3, "coord"),
+    (33,  257, 1, 8,    64,  33,  "fp32", "hoeffding", True,  1, "coord"),
+    (96,  512, 2, 8,    128, 96,  "fp32", "hoeffding", False, 2, "hybrid"),
+    (100, 700, 3, 8,    128, 87,  "int8", "hoeffding", True,  2, "hybrid"),
+]
+
+
+@pytest.mark.parametrize(
+    "n,N,K,tile,cb,n_valid,precision,bound,adaptive,B,mode", COORD_GRID)
+def test_coord_grid_kernel_fallback_oracle_bitwise(
+        n, N, K, tile, cb, n_valid, precision, bound, adaptive, B, mode):
+    # row block stays at 128 — the width envelope the bitwise contract has
+    # always been pinned at (a hybrid resolving to 'row' then lands on the
+    # same geometry the row GRID already certifies)
+    _check_trio(n, N, K, tile, 128, n_valid, precision, bound, adaptive,
+                B, eps=0.7, widen_k_out=(K < n), seed=n + 7 * K,
+                pull_mode=mode, coord_block=cb)
 
 
 def test_fewer_live_rows_than_k_out_no_duplicates():
@@ -185,5 +217,10 @@ def test_fuzz_kernel_fallback_oracle_bitwise(data):
     eps = data.draw(st.sampled_from([0.4, 0.8, 1.6]), label="eps")
     widen = data.draw(st.booleans(), label="widen_k_out")
     seed = data.draw(st.integers(0, 2**16), label="seed")
+    pull_mode = data.draw(st.sampled_from(["row", "coord", "hybrid"]),
+                          label="pull_mode")
+    coord_block = data.draw(st.sampled_from([32, 64, 96, 128]),
+                            label="coord_block")
     _check_trio(n, N, K, tile, block, n_valid, precision, bound, adaptive,
-                B, eps=eps, widen_k_out=widen, seed=seed)
+                B, eps=eps, widen_k_out=widen, seed=seed,
+                pull_mode=pull_mode, coord_block=coord_block)

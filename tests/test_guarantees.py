@@ -9,7 +9,12 @@ over >= 200 seeded trials per configuration and require it to stay under
   * int8 at the plan's honest ``eps_effective`` (DESIGN.md §10),
   * each with ``adaptive`` off and on (DESIGN.md §12 — early exit must
     not spend any extra failure probability),
-  * plus the variance-aware 'bernstein' bound family.
+  * plus the variance-aware 'bernstein' bound family,
+  * across the full ``pull_mode ∈ {row, coord, hybrid} × {fp32, int8}``
+    grid (ISSUE 7, DESIGN.md §14): the coordinate estimator must honor
+    the identical contract over its d_blocks-sized reward population,
+    and a hybrid plan must agree exactly with whichever concrete mode
+    `choose_pull_mode` selects.
 
 Deterministic: fixed data/key seeds, so this is tier-1 safe.  The
 geometry is deliberately in the *non-saturated* regime (the last round
@@ -21,7 +26,8 @@ import jax
 import numpy as np
 import pytest
 
-from repro.core.boundedme_jax import bounded_me_batched, make_plan
+from repro.core.boundedme_jax import (bounded_me_batched, choose_pull_mode,
+                                      make_plan)
 
 # shared geometry: 128 blocks, 16 arm tiles, schedule never reaches full
 # coverage (asserted below)
@@ -61,18 +67,28 @@ def _margin(delta, trials):
     return 3.0 * np.sqrt(delta * (1.0 - delta) / trials)
 
 
-@pytest.mark.parametrize("precision,adaptive,bound", [
-    ("fp32", False, "hoeffding"),
-    ("fp32", True, "hoeffding"),
-    ("int8", False, "hoeffding"),
-    ("int8", True, "hoeffding"),
-    ("fp32", True, "bernstein"),
+# full pull_mode x precision grid (ISSUE 7) on top of the ISSUE-5 axes;
+# coord uses a 32-wide coordinate tile => 256 feature blocks, a larger
+# without-replacement population than row's 128 wide blocks
+@pytest.mark.parametrize("precision,adaptive,bound,pull_mode", [
+    ("fp32", False, "hoeffding", "row"),
+    ("fp32", True, "hoeffding", "row"),
+    ("int8", False, "hoeffding", "row"),
+    ("int8", True, "hoeffding", "row"),
+    ("fp32", True, "bernstein", "row"),
+    ("fp32", False, "hoeffding", "coord"),
+    ("fp32", True, "hoeffding", "coord"),
+    ("int8", False, "hoeffding", "coord"),
+    ("fp32", True, "bernstein", "coord"),
+    ("fp32", False, "hoeffding", "hybrid"),
+    ("int8", False, "hoeffding", "hybrid"),
 ])
-def test_empirical_violation_rate_within_delta(precision, adaptive, bound):
+def test_empirical_violation_rate_within_delta(precision, adaptive, bound,
+                                               pull_mode):
     V, Q = _instance(seed=42)
     plan = make_plan(N_ARMS, DIM, K=K, eps=EPS, delta=DELTA,
                      value_range=VRANGE, block=BLOCK, precision=precision,
-                     bound=bound)
+                     bound=bound, pull_mode=pull_mode, coord_block=32)
     # the harness must have teeth: the schedule still *samples*
     assert plan.schedule.rounds[-1].t_cum < plan.n_blocks
     keys = jax.random.split(jax.random.PRNGKey(7), TRIALS)
@@ -81,12 +97,41 @@ def test_empirical_violation_rate_within_delta(precision, adaptive, bound):
     ids = out[0]
     rate = _violation_rate(V, Q, ids, plan.eps_effective)
     assert rate <= DELTA + _margin(DELTA, TRIALS), (
-        f"{precision}/adaptive={adaptive}/{bound}: violation rate {rate}")
+        f"{precision}/adaptive={adaptive}/{bound}/{pull_mode}: "
+        f"violation rate {rate}")
     if adaptive:
         rounds = np.asarray(out[2])
         n_rounds = len(plan.schedule.rounds)
         assert rounds.shape == (TRIALS,)
         assert np.all((rounds >= 1) & (rounds <= n_rounds))
+
+
+@pytest.mark.parametrize("precision", ["fp32", "int8"])
+def test_hybrid_agrees_with_its_selected_mode(precision):
+    """A hybrid plan IS the winner's plan — same schedule, same geometry,
+    same answers — so its guarantee inherits from the concrete mode's
+    harness run above, by identity rather than by re-measurement."""
+    kw = dict(K=K, eps=EPS, delta=DELTA, value_range=VRANGE, block=BLOCK,
+              precision=precision, coord_block=32)
+    hyb = make_plan(N_ARMS, DIM, pull_mode="hybrid", **kw)
+    row = make_plan(N_ARMS, DIM, pull_mode="row", **kw)
+    coord = make_plan(N_ARMS, DIM, pull_mode="coord", **kw)
+    assert hyb.pull_mode in ("row", "coord")
+    assert hyb.pull_mode == choose_pull_mode(row, coord)
+    assert hyb == (row if hyb.pull_mode == "row" else coord)
+    # the dispatcher's contract: never >10% worse than the better mode
+    best = min(row.total_multiplies, coord.total_multiplies)
+    assert hyb.total_multiplies <= 1.10 * best
+    # and the answers are literally the winner's answers
+    V, Q = _instance(seed=11)
+    keys = jax.random.split(jax.random.PRNGKey(5), 16)
+    win = row if hyb.pull_mode == "row" else coord
+    ids_h, sc_h = bounded_me_batched(V, Q[:16], keys, plan=hyb,
+                                     final_exact=True, use_pallas=False)
+    ids_w, sc_w = bounded_me_batched(V, Q[:16], keys, plan=win,
+                                     final_exact=True, use_pallas=False)
+    np.testing.assert_array_equal(np.asarray(ids_h), np.asarray(ids_w))
+    np.testing.assert_array_equal(np.asarray(sc_h), np.asarray(sc_w))
 
 
 def test_int8_eps_effective_is_the_honest_budget():

@@ -1,0 +1,241 @@
+"""Pull-mode plumbing: coord geometry, hybrid dispatch, serving (ISSUE 7).
+
+The statistical contract of the coordinate estimator is certified by
+`tests/test_guarantees.py` and its kernel parity by
+`tests/test_fuzz_cascade.py`; this file pins everything around those —
+the schedule-level cost model (`Schedule.total_coords`), plan geometry,
+the `choose_pull_mode` decision rule, end-to-end correctness through
+`mips_topk`, the serving engines (including the int8-store-shadow
+incompatibility, rejected at construction), the serve CLI validation,
+and the shard-local coord schedules of `sharded_bounded_me_decode`
+(subprocess, 2 fake CPU devices — same isolation rule as
+tests/test_sharded_serve.py).
+"""
+
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.boundedme_jax import choose_pull_mode, make_plan
+from repro.core.mips import mips_topk
+from repro.core.schedule import make_schedule
+
+_ENV_CODE_PREAMBLE = r"""
+import os
+_flags = os.environ.get("XLA_FLAGS", "")
+if "xla_force_host_platform_device_count" not in _flags:
+    os.environ["XLA_FLAGS"] = (
+        _flags + " --xla_force_host_platform_device_count=2").strip()
+import jax, jax.numpy as jnp, numpy as np
+"""
+
+
+def _run(code: str, timeout=480):
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    r = subprocess.run([sys.executable, "-c", _ENV_CODE_PREAMBLE + code],
+                       env=env, capture_output=True, text=True,
+                       timeout=timeout)
+    assert "OK" in r.stdout, r.stdout + "\n" + r.stderr
+
+
+class TestScheduleCostModel:
+    def test_total_coords_is_width_weighted(self):
+        s = make_schedule(64, 32, K=2, eps=0.5, delta=0.1, value_range=1.0,
+                          pull_mode="coord", pull_width=128)
+        assert s.pull_mode == "coord"
+        assert s.total_coords == s.total_pulls * 128
+
+    def test_row_default_width_one(self):
+        s = make_schedule(64, 32, K=2, eps=0.5, delta=0.1, value_range=1.0)
+        assert s.pull_mode == "row" and s.pull_width == 1
+        assert s.total_coords == s.total_pulls
+
+    def test_hybrid_rejected_at_schedule_level(self):
+        with pytest.raises(ValueError, match="resolved by make_plan"):
+            make_schedule(64, 32, pull_mode="hybrid")
+
+    def test_unknown_mode_and_bad_width_rejected(self):
+        with pytest.raises(ValueError, match="unknown pull_mode"):
+            make_schedule(64, 32, pull_mode="diag")
+        with pytest.raises(ValueError, match="pull_width"):
+            make_schedule(64, 32, pull_width=0)
+
+
+class TestPlanGeometry:
+    def test_coord_plan_reblocks_the_feature_axis(self):
+        d, cb = 1000, 128
+        p = make_plan(256, d, K=2, eps=0.5, delta=0.1, pull_mode="coord",
+                      coord_block=cb)
+        assert p.pull_mode == "coord"
+        assert p.block == cb
+        assert p.n_blocks == -(-d // cb)
+        assert p.schedule.pull_mode == "coord"
+        assert p.schedule.pull_width == p.block
+
+    def test_coord_block_clamped_to_dim(self):
+        p = make_plan(64, 48, K=1, pull_mode="coord", coord_block=128)
+        assert p.block == 48 and p.n_blocks == 1
+
+    def test_row_plan_unchanged_by_coord_block(self):
+        a = make_plan(256, 2048, K=2, pull_mode="row", coord_block=16)
+        b = make_plan(256, 2048, K=2, pull_mode="row", coord_block=128)
+        assert a == b and a.block == 512
+
+    def test_unknown_pull_mode_rejected(self):
+        with pytest.raises(ValueError, match="unknown pull_mode"):
+            make_plan(64, 128, pull_mode="diag")
+        with pytest.raises(ValueError, match="coord_block"):
+            make_plan(64, 128, pull_mode="coord", coord_block=0)
+
+
+class TestHybridDispatch:
+    def test_margin_rule(self):
+        row = make_plan(1024, 8192, K=2, eps=3.0, delta=0.1,
+                        value_range=2.0, range_mode="exact",
+                        pull_mode="row")
+        coord = make_plan(1024, 8192, K=2, eps=3.0, delta=0.1,
+                          value_range=2.0, range_mode="exact",
+                          pull_mode="coord")
+        assert coord.total_multiplies < row.total_multiplies / 1.10
+        assert choose_pull_mode(row, coord) == "coord"
+        # with an enormous margin, row always wins ties
+        assert choose_pull_mode(row, coord, row_margin=10.0) == "row"
+        # identical plans: row wins at any nonnegative margin
+        assert choose_pull_mode(row, row, row_margin=0.0) == "row"
+        with pytest.raises(ValueError, match="row_margin"):
+            choose_pull_mode(row, coord, row_margin=-0.1)
+
+    def test_hybrid_never_worse_than_best_by_margin(self):
+        for d in (128, 512, 2048, 8192):
+            kw = dict(K=2, eps=3.0, delta=0.1, value_range=2.0,
+                      range_mode="exact")
+            row = make_plan(1024, d, pull_mode="row", **kw)
+            coord = make_plan(1024, d, pull_mode="coord", **kw)
+            hyb = make_plan(1024, d, pull_mode="hybrid", **kw)
+            best = min(row.total_multiplies, coord.total_multiplies)
+            assert hyb.total_multiplies <= 1.10 * best
+            assert hyb == (row if hyb.pull_mode == "row" else coord)
+
+
+class TestEndToEnd:
+    def test_mips_topk_all_modes_find_the_winner(self):
+        rng = np.random.default_rng(0)
+        n, d, K = 200, 777, 3
+        V = rng.normal(size=(n, d)).astype(np.float32)
+        q = rng.normal(size=(d,)).astype(np.float32)
+        truth = np.argsort(-(V @ q))[:K]
+        for pm in ("row", "coord", "hybrid"):
+            ids, scores = mips_topk(V, q, K, eps=1e-4, delta=0.05,
+                                    value_range=8.0, final_exact=True,
+                                    pull_mode=pm, coord_block=128)
+            np.testing.assert_array_equal(np.sort(np.asarray(ids)),
+                                          np.sort(truth)), pm
+            np.testing.assert_allclose(np.asarray(scores),
+                                       (V @ q)[np.asarray(ids)] / d,
+                                       rtol=1e-5), pm
+
+
+class TestServingEngines:
+    def _workload(self, seed=0, n=128, d=512):
+        rng = np.random.default_rng(seed)
+        V = rng.normal(size=(n, d)).astype(np.float32)
+        Q = rng.normal(size=(8, d)).astype(np.float32)
+        return V, Q
+
+    @pytest.mark.parametrize("pull_mode", ["coord", "hybrid"])
+    def test_engine_serves_and_records_resolved_mode(self, pull_mode):
+        from repro.launch.engine import MIPSServeEngine
+
+        V, Q = self._workload()
+        eng = MIPSServeEngine(V, K=2, eps=1e-4, delta=0.1, value_range=8.0,
+                              batch_size=4, pull_mode=pull_mode,
+                              coord_block=128)
+        assert eng.plan.pull_mode in ("row", "coord")
+        if pull_mode == "coord":
+            assert eng.plan.pull_mode == "coord"
+            assert eng.plan.block == 128
+        rids = [eng.submit(q) for q in Q]
+        eng.drain()
+        truth = np.argsort(-(V @ Q.T), axis=0)[:2].T
+        for b, rid in enumerate(rids):
+            ids, _ = eng.result(rid)
+            assert sorted(ids.tolist()) == sorted(truth[b].tolist())
+
+    def test_runtime_hybrid_resolves_per_rung(self):
+        from repro.launch.engine import ServeRuntime
+
+        V, _ = self._workload()
+        rt = ServeRuntime(V, K=2, eps=0.4, eps_floor=1.6, degrade_rungs=3,
+                          delta=0.1, value_range=8.0, lanes=4,
+                          pull_mode="hybrid")
+        for ex in rt._rung_execs:
+            assert ex.plan.pull_mode in ("row", "coord")
+
+    def test_int8_store_shadow_rejects_non_row(self):
+        from repro.launch.engine import MIPSServeEngine
+        from repro.store import DynamicTableStore
+
+        V, _ = self._workload()
+        store = DynamicTableStore(V, block=128, precision="int8")
+        with pytest.raises(ValueError, match="int8 store shadow"):
+            MIPSServeEngine(store, K=2, pull_mode="coord")
+        with pytest.raises(ValueError, match="int8 store shadow"):
+            MIPSServeEngine(store, K=2, pull_mode="hybrid")
+        # row still works, and fp32 stores take any mode
+        MIPSServeEngine(store, K=2, pull_mode="row")
+        fp32_store = DynamicTableStore(V, block=128, precision="fp32")
+        eng = MIPSServeEngine(fp32_store, K=2, eps=1e-4, value_range=8.0,
+                              pull_mode="coord")
+        assert eng.plan.pull_mode == "coord"
+
+    def test_cli_rejects_int8_dynamic_coord(self):
+        from repro.launch.serve import _build_parser, _validate_args
+
+        ap = _build_parser()
+        argv = ["--arch", "tiny", "--loop", "--dynamic",
+                "--precision", "int8", "--pull-mode", "coord"]
+        with pytest.raises(SystemExit):
+            _validate_args(ap, ap.parse_args(argv))
+        # sharded int8 quantizes in-jit at the plan's geometry: allowed
+        args = ap.parse_args(argv + ["--shards", "2"])
+        _validate_args(ap, args)
+        # and fp32 dynamic coord is fine
+        args = ap.parse_args(["--arch", "tiny", "--loop", "--dynamic",
+                              "--pull-mode", "coord"])
+        _validate_args(ap, args)
+
+
+@pytest.mark.slow
+def test_sharded_decode_coord_matches_single_device():
+    """Shard-local coordinate schedules, exact cross-shard merge: the
+    2-device sharded coord path must return the true top-K with exact
+    scores, and agree with the single-device coord decode path."""
+    _run(r"""
+from repro.core.boundedme_jax import bounded_me_decode, make_plan
+from repro.distributed.sharding import sharded_bounded_me_decode
+mesh = jax.make_mesh((2,), ("model",))
+rng = np.random.default_rng(0)
+n, N, B, K = 512, 1024, 3, 3
+V = jnp.asarray(rng.normal(size=(n, N)), jnp.float32)
+Q = jnp.asarray(rng.normal(size=(B, N)), jnp.float32)
+key = jax.random.PRNGKey(7)
+for mode in ("coord", "hybrid"):
+    i2, s2, gaps = sharded_bounded_me_decode(
+        V, Q, key, mesh=mesh, K=K, eps=1e-4, delta=0.05, value_range=8.0,
+        block=128, pull_mode=mode, coord_block=128)
+    truth = np.argsort(-(np.asarray(V) @ np.asarray(Q).T), axis=0)[:K].T
+    exact = np.take_along_axis(
+        (np.asarray(V) @ np.asarray(Q).T).T / N, truth, axis=1)
+    assert np.array_equal(np.sort(np.asarray(i2), axis=1),
+                          np.sort(truth, axis=1)), mode
+    order = np.argsort(-np.asarray(s2), axis=1)
+    np.testing.assert_allclose(
+        np.sort(np.asarray(s2), axis=1)[:, ::-1], exact, rtol=1e-5)
+print("OK")
+""")

@@ -55,12 +55,16 @@ API_CONTRACTS = {
     "core/boundedme_jax.py": {
         "bounded_me_decode": ["(B, N)", "eps, delta", "k_out", "plan",
                               "adaptive", "rounds_used", "returns"],
-        "make_plan": ["range_mode", "precision", "bound"],
+        "make_plan": ["range_mode", "precision", "bound", "pull_mode",
+                      "coord_block", "hybrid"],
+        "choose_pull_mode": ["row_margin", "total_multiplies", "hybrid"],
     },
     "core/bounds.py": {
         "quantization_error": ["symmetric", "value_range", "bias"],
         "bernstein_radius": ["empirical", "variance", "m >= N"],
         "m_required_eb": ["binary search", "[1, N]"],
+        "coord_radius": ["d_blocks", "quant_err", "without replacement"],
+        "coord_m_required": ["d_blocks", "eps", "full coverage"],
     },
     "core/quantize.py": {
         "quantize_tiles": ["(n_tiles, n_blocks", "int8", "scale"],
@@ -68,7 +72,8 @@ API_CONTRACTS = {
     },
     "core/schedule.py": {
         "flatten_schedule": ["FlatSchedule"],
-        "make_schedule": ["quant_err", "bound"],
+        "make_schedule": ["quant_err", "bound", "pull_mode", "pull_width"],
+        "Schedule.total_coords": ["pull_width", "cost"],
         "cert_coeffs": ["a_l", "b_l", "union bound", "quant_err"],
         "pulls_through_round": ["rounds_used"],
     },
