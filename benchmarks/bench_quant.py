@@ -1,7 +1,7 @@
-"""PR-3 perf benchmark: int8 quantized sampling cascade vs fp32.
+"""PR-3/PR-8 perf benchmarks: the quantized sampling precision ladder.
 
-Emits the rows for ``BENCH_PR3.json`` (via `benchmarks.run`): for each
-decode batch size B in {1, 8, 32}, wall time and throughput of the
+`run` emits the rows for ``BENCH_PR3.json`` (via `benchmarks.run`): for
+each decode batch size B in {1, 8, 32}, wall time and throughput of the
 batched decode path at ``precision='fp32'`` vs ``precision='int8'`` —
 both the pure sampling phase (``final_exact=False``: cascade only, the
 part whose memory traffic int8 halves) and the serving configuration
@@ -11,9 +11,16 @@ the per-call table quantization (this path quantizes in-jit; a
 production deployment would hoist it out of the dispatch — see
 docs/TUNING.md), so the reported win is a lower bound.
 
+`run_pr8` emits ``BENCH_PR8.json``: the full fp32/int8/int4/pq ladder
+on a planted, pq-compressible workload (clustered subspaces + planted
+self-similar winners), reporting bytes pulled per sampled coordinate,
+total pulled sampling bytes, recall vs exact top-K, and wall time per
+tier — the acceptance number is int4/pq pulling >= 2x fewer bytes per
+pull than int8 at unchanged recall (DESIGN.md §10).
+
 Numbers from this CPU container track the trend only; the HBM-traffic
-halving that motivates the int8 path (DESIGN.md §10) needs TPU hardware
-to show its full effect.
+reduction that motivates the quantized tiers (DESIGN.md §10) needs TPU
+hardware to show its full effect.
 """
 
 from __future__ import annotations
@@ -24,7 +31,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.boundedme_jax import bounded_me_decode, make_plan
+from repro.core.boundedme_jax import (bounded_me_decode, make_plan,
+                                      measured_plan_quant_err)
 
 # the PR-1 acceptance geometry (B=32, n=32768, N=4096) so the int8 rows
 # are directly comparable with BENCH_PR1.json's decode numbers
@@ -105,4 +113,124 @@ def run(csv: bool = True) -> dict:
     if csv:
         print(f"quant_recall,,worst_gap={worst:.5f}"
               f";eps_eff={plans['int8'].eps_effective:.4f}")
+    return out
+
+
+# ---------------------------------------------------------------------------
+# PR-8: the full precision ladder on a planted, pq-compressible workload
+# ---------------------------------------------------------------------------
+
+_P8_N, _P8_DIM, _P8_K, _P8_B = 2048, 2048, 4, 8
+_P8_EPS, _P8_DELTA, _P8_VR, _P8_BLOCK = 0.2, 0.05, 4.0, 512
+_P8_SUBDIMS, _P8_CODES = 8, 16
+
+# bytes pulled per sampled (row, coordinate) in the cascade's pull loop:
+# fp32 word, int8 byte, packed nibble, one uint8 code per subdims-wide
+# subspace (the per-(query, block) LUT build reads the codebook once and
+# amortizes across all row tiles, so it is not per-pull traffic)
+_BYTES_PER_COORD = {"fp32": 4.0, "int8": 1.0, "int4": 0.5,
+                    "pq": 1.0 / _P8_SUBDIMS}
+
+
+def _planted_workload(seed: int = 0):
+    """Clustered table with a planted staircase top-K per query.
+
+    Every `_P8_SUBDIMS`-wide subspace chunk is one of 4 dictionary atoms
+    plus small noise — the compressible regime pq exists for.  Each of
+    the B queries is built from its own chunk pattern, and its K true
+    winners are planted rows sharing 100%, 97%, 94%, ... of that pattern
+    (every planted row stays atom-structured, so pq compresses it like
+    any other row).  Background rows match ~25% of chunks, leaving a
+    ~0.5 margin below the K-th winner — far above every tier's widened
+    eps budget, so recall is a sharp pass/fail across tiers rather than
+    a measurement of near-tie shuffling inside the eps contract.
+    """
+    rng = np.random.default_rng(seed)
+    n_chunks = _P8_DIM // _P8_SUBDIMS
+    atoms = rng.normal(size=(4, _P8_SUBDIMS)).astype(np.float32)
+    idx = rng.integers(0, 4, size=(_P8_N, n_chunks))
+    patterns = rng.integers(0, 4, size=(_P8_B, n_chunks))
+    for b in range(_P8_B):
+        for j in range(_P8_K):              # winner j: flip 3%*j chunks
+            row = b * _P8_K + j
+            idx[row] = patterns[b]
+            flips = rng.choice(n_chunks, size=(n_chunks * 3 * j) // 100,
+                               replace=False)
+            idx[row, flips] = (idx[row, flips] + 1
+                               + rng.integers(0, 3, size=flips.size)) % 4
+    V = (atoms[idx] + 0.01 * rng.normal(
+        size=(_P8_N, n_chunks, _P8_SUBDIMS))
+    ).reshape(_P8_N, _P8_DIM).astype(np.float32)
+    Q = (atoms[patterns].reshape(_P8_B, _P8_DIM)
+         + 0.01 * rng.normal(size=(_P8_B, _P8_DIM))).astype(np.float32)
+    return V, Q
+
+
+def run_pr8(csv: bool = True) -> dict:
+    """Run the fp32/int8/int4/pq ladder sweep; returns BENCH_PR8 payload."""
+    V_np, Q_np = _planted_workload()
+    V = jnp.asarray(V_np)
+    Q = jnp.asarray(Q_np)
+    key = jax.random.PRNGKey(0)
+    exact = V_np.astype(np.float64) @ Q_np.astype(np.float64).T / _P8_DIM
+    truth = np.argsort(-exact, axis=0)[:_P8_K].T               # (B, K)
+
+    out = {
+        "geometry": {"n": _P8_N, "N": _P8_DIM, "K": _P8_K, "B": _P8_B,
+                     "eps": _P8_EPS, "delta": _P8_DELTA,
+                     "block": _P8_BLOCK, "pq_subdims": _P8_SUBDIMS,
+                     "pq_codes": _P8_CODES},
+        "tiers": {},
+    }
+    for prec in ("fp32", "int8", "int4", "pq"):
+        qe = (measured_plan_quant_err(V, precision="pq", block=_P8_BLOCK,
+                                      pq_subdims=_P8_SUBDIMS,
+                                      pq_codes=_P8_CODES)
+              if prec == "pq" else None)
+        plan = make_plan(_P8_N, _P8_DIM, K=_P8_K, eps=_P8_EPS,
+                         delta=_P8_DELTA, value_range=_P8_VR, tile=8,
+                         block=_P8_BLOCK, precision=prec, quant_err=qe,
+                         pq_subdims=_P8_SUBDIMS, pq_codes=_P8_CODES)
+        ms = _time_ms(lambda: bounded_me_decode(
+            V, Q, key, plan=plan, final_exact=True, use_pallas=False))
+        ids, _ = bounded_me_decode(V, Q, key, plan=plan, final_exact=True,
+                                   use_pallas=False)
+        ids = np.asarray(ids)
+        recall = float(np.mean([
+            len(set(ids[b]) & set(truth[b])) / _P8_K
+            for b in range(_P8_B)]))
+        bpc = _BYTES_PER_COORD[prec]
+        total_bytes = float(plan.schedule.total_pulls * plan.tile
+                            * plan.block * bpc)
+        out["tiers"][prec] = {
+            "bytes_per_coord": bpc,
+            "bytes_per_pull": bpc * plan.tile * plan.block,
+            "total_sampling_bytes": total_bytes,
+            "total_pulls": plan.schedule.total_pulls,
+            "quant_err": plan.quant_err,
+            "eps_effective": plan.eps_effective,
+            "recall_at_k": recall,
+            "serve_ms": ms,
+        }
+        if csv:
+            print(f"quant_ladder,{prec},recall={recall:.3f}"
+                  f";bytes_per_pull={bpc * plan.tile * plan.block:.0f}"
+                  f";total_MB={total_bytes / 1e6:.2f}"
+                  f";eps_eff={plan.eps_effective:.3f};ms={ms:.0f}")
+    t = out["tiers"]
+    out["acceptance"] = {
+        "int4_vs_int8_bytes_per_pull": (t["int8"]["bytes_per_pull"]
+                                        / t["int4"]["bytes_per_pull"]),
+        "pq_vs_int8_bytes_per_pull": (t["int8"]["bytes_per_pull"]
+                                      / t["pq"]["bytes_per_pull"]),
+        "recall_unchanged": bool(
+            t["int4"]["recall_at_k"] >= t["int8"]["recall_at_k"]
+            and t["pq"]["recall_at_k"] >= t["int8"]["recall_at_k"]),
+    }
+    if csv:
+        a = out["acceptance"]
+        print(f"quant_ladder_accept,,int4_vs_int8="
+              f"{a['int4_vs_int8_bytes_per_pull']:.1f}x"
+              f";pq_vs_int8={a['pq_vs_int8_bytes_per_pull']:.1f}x"
+              f";recall_unchanged={a['recall_unchanged']}")
     return out

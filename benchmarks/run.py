@@ -15,8 +15,10 @@ shed rate under bursty load with and without injected faults, plus the
 overload sweep showing the eps degradation ladder engaging) and
 ``BENCH_PR7.json`` (coordinate-sampling pull mode: certified multiplies
 + wall time per pull mode over the d sweep, hybrid dispatch overhead,
-and the pull-loop roofline's bytes-per-pull cells) so numbers stay
-comparable across PRs.
+and the pull-loop roofline's bytes-per-pull cells) and
+``BENCH_PR8.json`` (the fp32/int8/int4/pq precision ladder on a planted
+compressible workload: bytes per pull, total sampling bytes, recall and
+wall time per tier) so numbers stay comparable across PRs.
 """
 
 from __future__ import annotations
@@ -33,6 +35,7 @@ BENCH4_JSON = os.path.join(_ROOT, "BENCH_PR4.json")
 BENCH5_JSON = os.path.join(_ROOT, "BENCH_PR5.json")
 BENCH6_JSON = os.path.join(_ROOT, "BENCH_PR6.json")
 BENCH7_JSON = os.path.join(_ROOT, "BENCH_PR7.json")
+BENCH8_JSON = os.path.join(_ROOT, "BENCH_PR8.json")
 
 
 def main() -> None:
@@ -79,6 +82,11 @@ def main() -> None:
     with open(BENCH7_JSON, "w") as f:
         json.dump(payload7, f, indent=2)
     print(f"[bench] wrote {BENCH7_JSON}")
+    print("== precision ladder: int4 + pq vs int8/fp32 (PR 8) ==")
+    payload8 = {"meta": meta, "benchmarks": bench_quant.run_pr8()}
+    with open(BENCH8_JSON, "w") as f:
+        json.dump(payload8, f, indent=2)
+    print(f"[bench] wrote {BENCH8_JSON}")
     print("== table1: complexity/guarantees ==")
     table1_complexity.run()
     print("== fig1: guarantee validation (adversarial) ==")

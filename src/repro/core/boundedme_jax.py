@@ -32,9 +32,17 @@ the table is quantized per (tile, block) cell (`repro.core.quantize`),
 pulls run int8 x int8 -> int32 and dequantize into the f32 accumulator,
 and the schedule's confidence radii are widened by the worst-case
 quantization bias (`make_schedule(quant_err=...)`) so the (eps, delta)
-calibration survives.  The final top-K candidates are always rescored in
-fp32 against the unquantized table when ``final_exact=True``, so returned
-scores carry no quantization error at all.
+calibration survives.  ``precision='int4'`` halves the pulled bytes again
+(nibble-packed tiles, W4A8 dots under the 15-level worst-case bias), and
+``precision='pq'`` replaces scalar codes with per-subspace product
+quantization (uint8 codes + LUT tile-dots, `pq_subdims` bytes -> 1): pq
+has no closed-form bias bound, so its plans carry the **measured**
+per-pull error (`measured_plan_quant_err` / `make_measured_plan`),
+inflated by a safety factor, into ``make_schedule(quant_err=...)`` —
+``Schedule.eps_effective`` stays honest either way.  The final top-K
+candidates are always rescored in fp32 against the unquantized table when
+``final_exact=True``, so returned scores carry no quantization error at
+all, on every tier.
 """
 
 from __future__ import annotations
@@ -49,11 +57,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import bounds
-from repro.core.quantize import quantize_blocks, quantize_tiles
+from repro.core.quantize import (measured_quant_err, pq_encode, pq_tile_dot,
+                                 pq_train, quantize_blocks, quantize_tiles,
+                                 quantize_tiles_int4, unpack_int4)
 from repro.core.schedule import (Schedule, cert_coeffs, flatten_schedule,
                                  make_schedule)
 
 __all__ = ["BlockedPlan", "make_plan", "choose_pull_mode",
+           "measured_plan_quant_err", "make_measured_plan",
            "bounded_me_blocked", "bounded_me_batched", "bounded_me_decode"]
 
 
@@ -69,8 +80,11 @@ class BlockedPlan:
     n_tiles: int        # padded arm tiles
     n_blocks: int       # padded coordinate blocks
     schedule: Schedule  # over (n_tiles "arms", n_blocks "rewards", K_tiles)
-    precision: str = "fp32"   # sampling arithmetic: 'fp32' | 'int8' (§10)
+    precision: str = "fp32"   # sampling arithmetic:
+    #                           'fp32' | 'int8' | 'int4' | 'pq' (§10)
     pull_mode: str = "row"    # resolved reward stream: 'row' | 'coord' (§14)
+    pq_subdims: int = 8       # pq subspace width w (codes per row = block/w)
+    pq_codes: int = 16        # pq codebook size (uint8 codes, <= 256)
 
     @property
     def k_tiles(self) -> int:
@@ -155,7 +169,10 @@ def make_plan(n: int, N: int, K: int = 1, eps: float = 0.1, delta: float = 0.05,
               precision: str = "fp32",
               bound: str = "hoeffding",
               pull_mode: str = "row",
-              coord_block: int = 128) -> BlockedPlan:
+              coord_block: int = 128,
+              quant_err: Optional[float] = None,
+              pq_subdims: int = 8,
+              pq_codes: int = 16) -> BlockedPlan:
     """Build the static plan.
 
     pull_mode:
@@ -191,6 +208,23 @@ def make_plan(n: int, N: int, K: int = 1, eps: float = 0.1, delta: float = 0.05,
         value range under ``range_mode``), so the (eps, delta) calibration
         survives quantization (DESIGN.md §10).  Final candidates are
         rescored in fp32 whenever ``final_exact=True``.
+      * 'int4' — nibble-packed tiles (half the int8 bytes per pull) under
+        the 15-level worst-case bias by default; ``block`` must be even.
+      * 'pq' — per-subspace product quantization (``block / pq_subdims``
+        bytes per row per pull).  No closed-form bias exists, so a
+        **measured** ``quant_err`` is REQUIRED — pass the output of
+        `measured_plan_quant_err`, or build the plan with
+        `make_measured_plan` which calibrates it for you.
+
+    quant_err:
+      Explicit per-pull bias bound on the block-mean scale (what
+      `measured_quant_err` returns).  When given it feeds
+      ``make_schedule(quant_err=...)`` as-is — NO ``range_mode`` rescale,
+      the measurement already lives on the block-mean scale — and
+      overrides the tier's worst-case default.  The measured-vs-worst-case
+      trade is DESIGN.md §10: measured bounds are far tighter (so rounds
+      keep their full deviation budget) but only as representative as the
+      calibration queries; the safety factor covers the gap.
 
     bound:
       * 'hoeffding' (default) — the adaptive path certifies early exit
@@ -203,7 +237,9 @@ def make_plan(n: int, N: int, K: int = 1, eps: float = 0.1, delta: float = 0.05,
     if pull_mode == "hybrid":
         kwargs = dict(K=K, eps=eps, delta=delta, value_range=value_range,
                       tile=tile, range_mode=range_mode, precision=precision,
-                      bound=bound, coord_block=coord_block)
+                      bound=bound, coord_block=coord_block,
+                      quant_err=quant_err, pq_subdims=pq_subdims,
+                      pq_codes=pq_codes)
         row_plan = make_plan(n, N, block=block, pull_mode="row", **kwargs)
         coord_plan = make_plan(n, N, block=block, pull_mode="coord", **kwargs)
         winner = choose_pull_mode(row_plan, coord_plan)
@@ -220,17 +256,41 @@ def make_plan(n: int, N: int, K: int = 1, eps: float = 0.1, delta: float = 0.05,
     n_tiles = -(-n // tile)
     n_blocks = -(-N // block)
     k_tiles = min(n_tiles, K)
-    if precision not in ("fp32", "int8"):
+    if precision not in ("fp32", "int8", "int4", "pq"):
         raise ValueError(f"unknown precision {precision!r} "
-                         f"(expected 'fp32' or 'int8')")
-    qerr = (bounds.quantization_error(value_range)
-            if precision == "int8" else 0.0)
+                         f"(expected 'fp32', 'int8', 'int4' or 'pq')")
+    if precision == "int4" and block % 2 != 0:
+        raise ValueError(f"precision='int4' needs an even pull width to "
+                         f"nibble-pack, got block={block}")
+    if precision == "pq":
+        if not 1 <= pq_subdims or block % pq_subdims != 0:
+            raise ValueError(f"precision='pq' needs pull width divisible "
+                             f"by pq_subdims, got block={block}, "
+                             f"pq_subdims={pq_subdims}")
+        if not 1 <= pq_codes <= 256:
+            raise ValueError(f"pq_codes must be in [1, 256], got {pq_codes}")
+        if quant_err is None:
+            raise ValueError(
+                "precision='pq' has no closed-form error bound: pass "
+                "quant_err=measured_plan_quant_err(V, precision='pq', ...) "
+                "or build the plan with make_measured_plan(V, ...)")
+    if quant_err is not None:
+        if quant_err < 0:
+            raise ValueError(f"quant_err must be >= 0, got {quant_err}")
+        qerr = float(quant_err)  # measured, already on the block-mean scale
+    elif precision in ("int8", "int4"):
+        qerr = bounds.quantization_error(value_range,
+                                         bits=8 if precision == "int8" else 4)
+    else:
+        qerr = 0.0
     if range_mode == "clt":
         eff_range = value_range / math.sqrt(block)
-        qerr = qerr / math.sqrt(block)   # the bias concentrates like the
-        # products themselves: rounding errors are weakly dependent across
-        # the block, so the block-mean bias shrinks ~ 1/sqrt(block) under
-        # the same modeling assumption as eff_range
+        if quant_err is None:
+            qerr = qerr / math.sqrt(block)   # the bias concentrates like the
+            # products themselves: rounding errors are weakly dependent across
+            # the block, so the block-mean bias shrinks ~ 1/sqrt(block) under
+            # the same modeling assumption as eff_range.  A measured qerr is
+            # NOT rescaled: it is already a block-mean quantity.
     elif range_mode == "exact":
         eff_range = value_range
     else:
@@ -240,7 +300,8 @@ def make_plan(n: int, N: int, K: int = 1, eps: float = 0.1, delta: float = 0.05,
                           pull_mode=pull_mode, pull_width=block)
     return BlockedPlan(n=n, N=N, K=K, tile=tile, block=block, n_tiles=n_tiles,
                        n_blocks=n_blocks, schedule=sched, precision=precision,
-                       pull_mode=pull_mode)
+                       pull_mode=pull_mode, pq_subdims=pq_subdims,
+                       pq_codes=pq_codes)
 
 
 def _pad_operands(V: jnp.ndarray, q: jnp.ndarray, plan: BlockedPlan
@@ -266,24 +327,135 @@ def _tile_major(V: jnp.ndarray, plan: BlockedPlan) -> jnp.ndarray:
     return V.reshape(plan.n_tiles, R, plan.n_blocks, C).transpose(0, 2, 1, 3)
 
 
+def _quantize_table(V4: jnp.ndarray, plan: BlockedPlan) -> Tuple:
+    """The plan's table artifacts ``(Vq, vaux)`` (DESIGN.md §10).
+
+    ``(V8, vscale)`` for int8, ``(P4 packed, vscale)`` for int4,
+    ``(codes, codebook)`` for pq (codebook trained in-trace — the
+    deterministic `pq_train`, so repeated calls agree bit-for-bit).
+    Jit-traceable; the decode path skips it when a store hands in its
+    incrementally maintained shadow instead.
+    """
+    if plan.precision == "int8":
+        return quantize_tiles(V4)
+    if plan.precision == "int4":
+        return quantize_tiles_int4(V4)
+    if plan.precision == "pq":
+        cb = pq_train(V4, n_codes=plan.pq_codes, subdims=plan.pq_subdims)
+        return pq_encode(V4, cb), cb
+    raise ValueError(f"no table quantizer for precision {plan.precision!r}")
+
+
+def measured_plan_quant_err(V, *, precision: str, tile: int = 8,
+                            block: int = 512, pq_subdims: int = 8,
+                            pq_codes: int = 16, n_queries: int = 32,
+                            seed: int = 0, safety: float = 2.0) -> float:
+    """Calibrate the measured per-pull error bound for a (table, geometry).
+
+    Pads and tiles ``V`` exactly as the cascade will (``block`` is the
+    EFFECTIVE pull width — pass ``coord_block`` when calibrating a coord
+    plan), builds the tier's quantized artifacts, and returns
+    `repro.core.quantize.measured_quant_err` over ``n_queries``
+    calibration draws: the ``quant_err=`` value `make_plan` feeds to
+    ``make_schedule`` (DESIGN.md §10, measured-vs-worst-case).
+
+    Args:
+      V: (n, N) item matrix (host or device array).
+      precision: 'int8' | 'int4' | 'pq'.
+      safety: multiplicative inflation of the observed max error
+        (default 2.0) — the conservativeness margin
+        tests/test_guarantees.py checks empirically.
+    """
+    V = jnp.asarray(V, jnp.float32)
+    n, N = V.shape
+    block = min(block, N)
+    if precision == "int4" and block % 2 != 0:
+        raise ValueError(f"precision='int4' needs an even pull width, "
+                         f"got block={block}")
+    if precision == "pq" and block % pq_subdims != 0:
+        raise ValueError(f"precision='pq' needs pull width divisible by "
+                         f"pq_subdims, got block={block}, "
+                         f"pq_subdims={pq_subdims}")
+    # geometry-only fp32 plan: same padding and tiling as the real one
+    geo = make_plan(n, N, tile=tile, block=block, precision="fp32")
+    Vp, _ = _pad_operands(V, jnp.zeros((N,), jnp.float32), geo)
+    V4 = _tile_major(Vp, geo)
+    if precision == "int8":
+        quant = quantize_tiles(V4)
+    elif precision == "int4":
+        quant = quantize_tiles_int4(V4)
+    elif precision == "pq":
+        cb = pq_train(V4, n_codes=pq_codes, subdims=pq_subdims)
+        quant = (pq_encode(V4, cb), cb)
+    else:
+        raise ValueError(f"no measured error model for precision "
+                         f"{precision!r} (expected 'int8', 'int4' or 'pq')")
+    return measured_quant_err(V4, quant, precision=precision,
+                              n_queries=n_queries, seed=seed, safety=safety)
+
+
+def make_measured_plan(V, K: int = 1, eps: float = 0.1, delta: float = 0.05,
+                       value_range: float = 1.0, tile: int = 8,
+                       block: int = 512, range_mode: str = "clt",
+                       precision: str = "pq", bound: str = "hoeffding",
+                       pull_mode: str = "row", coord_block: int = 128,
+                       pq_subdims: int = 8, pq_codes: int = 16,
+                       n_queries: int = 32, seed: int = 0,
+                       safety: float = 2.0) -> BlockedPlan:
+    """`make_plan` with a measured (not worst-case) quantization bias.
+
+    Calibrates `measured_plan_quant_err` on ``V`` at the plan's actual
+    pull width and passes it as ``quant_err`` — the required entry point
+    for ``precision='pq'`` and the tighter-bounds option for
+    'int8'/'int4' (DESIGN.md §10).  ``pull_mode='hybrid'`` measures the
+    error at EACH candidate width (row pulls see ``block``-wide slices,
+    coord pulls ``coord_block``-wide — different codebooks, different
+    bias), prices both plans with their own measured bound, and keeps the
+    `choose_pull_mode` winner.
+    """
+    n, N = jnp.asarray(V).shape
+    if precision == "fp32":
+        raise ValueError("precision='fp32' has no quantization error to "
+                         "measure; use make_plan")
+    kwargs = dict(K=K, eps=eps, delta=delta, value_range=value_range,
+                  tile=tile, block=block, range_mode=range_mode,
+                  precision=precision, bound=bound, coord_block=coord_block,
+                  pq_subdims=pq_subdims, pq_codes=pq_codes)
+    if pull_mode == "hybrid":
+        mkwargs = dict(kwargs, n_queries=n_queries, seed=seed, safety=safety)
+        row_plan = make_measured_plan(V, pull_mode="row", **mkwargs)
+        coord_plan = make_measured_plan(V, pull_mode="coord", **mkwargs)
+        winner = choose_pull_mode(row_plan, coord_plan)
+        return row_plan if winner == "row" else coord_plan
+    width = coord_block if pull_mode == "coord" else block
+    qerr = measured_plan_quant_err(V, precision=precision, tile=tile,
+                                   block=width, pq_subdims=pq_subdims,
+                                   pq_codes=pq_codes, n_queries=n_queries,
+                                   seed=seed, safety=safety)
+    return make_plan(n, N, pull_mode=pull_mode, quant_err=qerr, **kwargs)
+
+
 def _fused_call(V4, qb_or_Qb, perm_or_perms, *, plan: BlockedPlan,
                 final_exact: bool, batched: bool, k_out: Optional[int] = None,
-                n_valid=None, vscale=None, qscale=None,
+                n_valid=None, vscale=None, qscale=None, codebook=None,
                 adaptive: bool = False):
     """Dispatch the whole cascade as exactly one Pallas kernel launch.
 
-    On the int8 path (``vscale``/``qscale`` given) ``final_exact`` never
-    appends coverage steps: exactness comes from the caller's fp32
-    candidate rescore instead of in-kernel coverage completion, so the
-    flat schedule stays at the sampling pull count (DESIGN.md §10).
-    The adaptive path (DESIGN.md §12) does the same — coverage steps can't
-    be skipped by a mid-flight certification, so exactness always comes
-    from the candidate rescore — and passes the per-round certification
-    coefficients; the kernel then returns a third ``rounds_used`` output.
+    On the quantized tiers (``vscale``/``qscale`` for int8/int4,
+    ``codebook`` for pq) ``final_exact`` never appends coverage steps:
+    exactness comes from the caller's fp32 candidate rescore instead of
+    in-kernel coverage completion, so the flat schedule stays at the
+    sampling pull count (DESIGN.md §10).  The adaptive path (DESIGN.md
+    §12) does the same — coverage steps can't be skipped by a mid-flight
+    certification, so exactness always comes from the candidate rescore —
+    and passes the per-round certification coefficients; the kernel then
+    returns a third ``rounds_used`` output.  ``plan.precision='int4'``
+    ships the table nibble-packed (last dim C/2) with
+    ``packed_int4=True``; the kernel unpacks inside the pull step.
     """
     from repro.kernels import ops as _kops
 
-    quantized = vscale is not None
+    quantized = plan.precision != "fp32"
     flat = flatten_schedule(
         plan.schedule,
         final_coverage=final_exact and not quantized and not adaptive)
@@ -295,12 +467,13 @@ def _fused_call(V4, qb_or_Qb, perm_or_perms, *, plan: BlockedPlan,
     return fn(V4, qb_or_Qb, jnp.asarray(slotcode), jnp.asarray(rmeta), cols,
               n_arms=plan.n, K=plan.K, t_final=flat.t_final,
               n_final=flat.n_final, k_out=k_out, n_valid=n_valid,
-              vscale=vscale, qscale=qscale, cert=cert, k_cert=plan.K,
+              vscale=vscale, qscale=qscale, codebook=codebook,
+              packed_int4=plan.precision == "int4", cert=cert, k_cert=plan.K,
               track_var=adaptive and plan.schedule.bound == "bernstein")
 
 
 def _scan_pulls(sums, V4, qb, idx, cols, vscale=None, qscale=None,
-                sums2=None):
+                sums2=None, codebook=None, packed_int4=False):
     """One round of pulls as a scan over its coordinate blocks.
 
     Gathers a single (T, R, C) slab per block — the (T, dt, R, C) gather of
@@ -308,10 +481,14 @@ def _scan_pulls(sums, V4, qb, idx, cols, vscale=None, qscale=None,
     in permutation order) matches the fused kernel's grid order, which is
     what keeps the two paths bitwise-comparable in interpret mode.
 
-    With ``vscale``/``qscale`` (int8 operands, DESIGN.md §10) each block's
-    tile-dot runs int8 x int8 -> int32 — exact — and is dequantized with
-    the same scalar product and the same two float ops per entry as the
-    fused kernel's pull step, preserving bitwise parity.
+    With ``vscale``/``qscale`` (int8/int4 operands, DESIGN.md §10) each
+    block's tile-dot runs int8 x int8 -> int32 — exact — and is
+    dequantized with the same scalar product and the same two float ops
+    per entry as the fused kernel's pull step, preserving bitwise parity;
+    ``packed_int4`` first sign-extends the nibbles with the SAME
+    `unpack_int4` the kernel calls.  With ``codebook`` (pq) the slab
+    holds uint8 codes, ``qb`` stays f32, and the block-dot is the shared
+    `pq_tile_dot` LUT walk — again literally the kernel's function.
 
     With ``sums2`` (the adaptive 'bernstein' path, DESIGN.md §12) a
     running sum of squared block-dots rides along — the same ``part *
@@ -323,8 +500,13 @@ def _scan_pulls(sums, V4, qb, idx, cols, vscale=None, qscale=None,
 
     def body(carry, col):
         s = carry[0] if track else carry
-        if quantized:
-            raw = jnp.einsum("trc,c->tr", V4[idx, col], qb[col],
+        if codebook is not None:
+            part = pq_tile_dot(V4[idx, col], qb[col], codebook[col])
+        elif quantized:
+            slab = V4[idx, col]
+            if packed_int4:
+                slab = unpack_int4(slab)
+            raw = jnp.einsum("trc,c->tr", slab, qb[col],
                              preferred_element_type=jnp.int32)
             scl = vscale[idx, col] * qscale[col]            # (T,)
             part = raw.astype(jnp.float32) * scl[:, None]
@@ -434,19 +616,23 @@ def _run_blocked(V: jnp.ndarray, q: jnp.ndarray, key: jax.Array, *,
     perm = jax.random.permutation(key, plan.n_blocks)
     # undo the zero-padding rescale so scores estimate (q . v)/N
     scale = (plan.n_blocks * C) / plan.N
-    quantized = plan.precision == "int8"
+    quantized = plan.precision != "fp32"
     track_var = adaptive and plan.schedule.bound == "bernstein"
     if quantized:
-        V8, vscale = quantize_tiles(V4)
-        q8, qscale = quantize_blocks(qb)
+        Vq, vaux = _quantize_table(V4, plan)
+        if plan.precision == "pq":          # pq queries stay f32 (LUT walk)
+            q_in, vscale, qscale, codebook = qb, None, None, vaux
+        else:
+            q_in, qscale = quantize_blocks(qb)
+            vscale, codebook = vaux, None
 
     if use_pallas:
         rounds_used = None
         if quantized:
-            out = _fused_call(V8, q8, perm, plan=plan,
+            out = _fused_call(Vq, q_in, perm, plan=plan,
                               final_exact=final_exact, batched=False,
                               vscale=vscale, qscale=qscale,
-                              adaptive=adaptive)
+                              codebook=codebook, adaptive=adaptive)
         else:
             out = _fused_call(V4, qb, perm, plan=plan,
                               final_exact=final_exact, batched=False,
@@ -482,8 +668,9 @@ def _run_blocked(V: jnp.ndarray, q: jnp.ndarray, key: jax.Array, *,
         if rnd.t_new > 0:
             cols = jax.lax.slice_in_dim(perm, t_prev, rnd.t_cum)  # static
             if quantized:
-                new = _scan_pulls(sums, V8, q8, idx, cols, vscale, qscale,
-                                  sums2=sums2)
+                new = _scan_pulls(sums, Vq, q_in, idx, cols, vscale, qscale,
+                                  sums2=sums2, codebook=codebook,
+                                  packed_int4=plan.precision == "int4")
             else:
                 new = _scan_pulls(sums, V4, qb, idx, cols, sums2=sums2)
             if track_var:
@@ -546,14 +733,19 @@ def bounded_me_blocked(V, q, key, *, K: int = 1, eps: float = 0.1,
                        precision: str = "fp32", adaptive: bool = False,
                        bound: str = "hoeffding",
                        pull_mode: str = "row", coord_block: int = 128,
+                       quant_err: Optional[float] = None,
+                       pq_subdims: int = 8, pq_codes: int = 16,
                        plan: Optional[BlockedPlan] = None):
     """Top-K MIPS over rows of ``V`` for query ``q`` (single query).
 
     Returns ``(ids (K,), scores (K,), plan)`` where scores estimate
     ``(q . v)/N``.  All shapes are static; safe under jit/pjit.  With
     ``use_pallas=True`` the entire cascade is one kernel dispatch.
-    ``precision='int8'`` samples in int8 under quantization-widened bounds
-    (DESIGN.md §10); ``final_exact`` then rescores the winners in fp32.
+    ``precision='int8'``/``'int4'`` sample on a scalar integer grid under
+    quantization-widened bounds; ``'pq'`` samples product-quantized codes
+    — with ``quant_err=None`` the pq plan is auto-calibrated on ``V`` via
+    `make_measured_plan` (DESIGN.md §10).  ``final_exact`` then rescores
+    the winners in fp32 on every quantized tier.
     ``adaptive=True`` certifies early exit at round boundaries under the
     plan's ``bound`` radius family and returns a 4-tuple
     ``(ids, scores, rounds_used, plan)`` (DESIGN.md §12);
@@ -565,10 +757,15 @@ def bounded_me_blocked(V, q, key, *, K: int = 1, eps: float = 0.1,
     """
     n, N = V.shape
     if plan is None:
-        plan = make_plan(n, N, K=K, eps=eps, delta=delta,
-                         value_range=value_range, tile=tile, block=block,
-                         precision=precision, bound=bound,
-                         pull_mode=pull_mode, coord_block=coord_block)
+        kwargs = dict(K=K, eps=eps, delta=delta, value_range=value_range,
+                      tile=tile, block=block, precision=precision,
+                      bound=bound, pull_mode=pull_mode,
+                      coord_block=coord_block, pq_subdims=pq_subdims,
+                      pq_codes=pq_codes)
+        if precision == "pq" and quant_err is None:
+            plan = make_measured_plan(V, **kwargs)
+        else:
+            plan = make_plan(n, N, quant_err=quant_err, **kwargs)
     out = _run_blocked(jnp.asarray(V), jnp.asarray(q), key, plan=plan,
                        final_exact=final_exact, use_pallas=use_pallas,
                        adaptive=adaptive)
@@ -589,12 +786,17 @@ def _run_batched_fused(V, Q, keys, *, plan: BlockedPlan, final_exact: bool,
         lambda k: jax.random.permutation(k, plan.n_blocks))(keys)
     scale = (plan.n_blocks * C) / plan.N
     rounds_used = None
-    if plan.precision == "int8":
-        V8, vscale = quantize_tiles(V4)
-        Q8, qscale = quantize_blocks(Qb)
-        out = _fused_call(V8, Q8, perms, plan=plan,
+    if plan.precision != "fp32":
+        Vq, vaux = _quantize_table(V4, plan)
+        if plan.precision == "pq":
+            Q_in, vscale, qscale, codebook = Qb, None, None, vaux
+        else:
+            Q_in, qscale = quantize_blocks(Qb)
+            vscale, codebook = vaux, None
+        out = _fused_call(Vq, Q_in, perms, plan=plan,
                           final_exact=final_exact, batched=True,
-                          vscale=vscale, qscale=qscale, adaptive=adaptive)
+                          vscale=vscale, qscale=qscale, codebook=codebook,
+                          adaptive=adaptive)
     else:
         out = _fused_call(V4, Qb, perms, plan=plan,
                           final_exact=final_exact, batched=True,
@@ -603,7 +805,7 @@ def _run_batched_fused(V, Q, keys, *, plan: BlockedPlan, final_exact: bool,
         ids, vals, rounds_used = out
     else:
         ids, vals = out
-    if final_exact and (plan.precision == "int8" or adaptive):
+    if final_exact and (plan.precision != "fp32" or adaptive):
         ids, vals = _rescore_rows(V, Q, ids, plan.n, plan=plan, batched=True)
     else:
         vals = vals * jnp.float32(scale)
@@ -636,7 +838,7 @@ def bounded_me_batched(V, Q, keys, *, plan: BlockedPlan,
 @functools.partial(jax.jit, static_argnames=("plan", "final_exact",
                                              "use_pallas", "k_out",
                                              "adaptive"))
-def _run_decode(V, Q, key, n_valid, V8=None, vscale=None, *,
+def _run_decode(V, Q, key, n_valid, Vq=None, vaux=None, *,
                 plan: BlockedPlan, final_exact: bool,
                 use_pallas: bool, k_out: int, adaptive: bool = False):
     R, C = plan.tile, plan.block
@@ -649,22 +851,28 @@ def _run_decode(V, Q, key, n_valid, V8=None, vscale=None, *,
     # (marginally each query still samples uniformly without replacement)
     perm = jax.random.permutation(key, plan.n_blocks)
     scale = (plan.n_blocks * C) / plan.N
-    quantized = plan.precision == "int8"
+    quantized = plan.precision != "fp32"
+    is_pq = plan.precision == "pq"
+    packed4 = plan.precision == "int4"
     track_var = adaptive and plan.schedule.bound == "bernstein"
     if quantized:
-        if V8 is None:
-            V8, vscale = quantize_tiles(V4)
-        Q8, qscale = quantize_blocks(Qb)     # per query: (B, n_blocks)
+        if Vq is None:
+            Vq, vaux = _quantize_table(V4, plan)
+        if is_pq:                    # pq queries stay f32 (LUT walk)
+            vscale, qscale, codebook, Q8 = None, None, vaux, None
+        else:
+            Q8, qscale = quantize_blocks(Qb)     # per query: (B, n_blocks)
+            vscale, codebook = vaux, None
 
     if use_pallas:
         rounds_used = None
         perms = jnp.broadcast_to(perm, (B, plan.n_blocks))
         if quantized:
-            out = _fused_call(V8, Q8, perms, plan=plan,
+            out = _fused_call(Vq, Qb if is_pq else Q8, perms, plan=plan,
                               final_exact=final_exact, batched=True,
                               k_out=k_out, n_valid=n_valid,
                               vscale=vscale, qscale=qscale,
-                              adaptive=adaptive)
+                              codebook=codebook, adaptive=adaptive)
         else:
             out = _fused_call(V4, Qb, perms, plan=plan,
                               final_exact=final_exact, batched=True,
@@ -702,17 +910,32 @@ def _run_decode(V, Q, key, n_valid, V8=None, vscale=None, *,
     for l, rnd in enumerate(plan.schedule.rounds):
         if rnd.t_new > 0:
             cols = jax.lax.slice_in_dim(perm, t_prev, rnd.t_cum)   # (dt,)
-            Qsrc = Q8 if quantized else Qb
+            Qsrc = Q8 if (quantized and not is_pq) else Qb
             qsel = jnp.moveaxis(Qsrc[:, cols], 0, 1)               # (dt,B,C)
             if B * rnd.n_arms >= plan.n_tiles:
                 # early rounds: survivor union ~ every tile, so a dense
                 # (n_tiles*R, C) x (C, B) tile-matmul per block beats any
                 # gather; eliminated tiles accumulate garbage that is never
                 # read back (survivor gathers go through `idx`)
-                if quantized:
+                if is_pq:
+                    def dense(s, xs):
+                        col, qcol = xs           # qcol: (B, C) f32
+                        # vmap of the SHARED per-query LUT walk keeps the
+                        # per-slice arithmetic identical to the kernel's
+                        part = jax.vmap(
+                            lambda qq: pq_tile_dot(Vq[:, col], qq,
+                                                   codebook[col]))(qcol)
+                        if track_var:
+                            return ((s[0] + part, s[1] + part * part),
+                                    None)
+                        return s + part, None
+                elif quantized:
                     def dense(s, xs):
                         col, qcol = xs
-                        raw = jnp.einsum("trc,bc->btr", V8[:, col], qcol,
+                        slab = Vq[:, col]
+                        if packed4:
+                            slab = unpack_int4(slab)
+                        raw = jnp.einsum("trc,bc->btr", slab, qcol,
                                          preferred_element_type=jnp.int32)
                         scl = (vscale[:, col][None, :, None]
                                * qscale[:, col][:, None, None])  # (B, T, 1)
@@ -742,13 +965,22 @@ def _run_decode(V, Q, key, n_valid, V8=None, vscale=None, *,
             else:
                 # late rounds: few survivors per query — per-query gather
                 # scans, sequential over the batch to bound the working set
-                if quantized:
+                if is_pq:
+                    def one(args):
+                        idx_i, Qb_i = args
+                        s0 = jnp.zeros((rnd.n_arms, R), jnp.float32)
+                        s20 = jnp.zeros_like(s0) if track_var else None
+                        return _scan_pulls(s0, Vq, Qb_i, idx_i, cols,
+                                           sums2=s20, codebook=codebook)
+                    parts = jax.lax.map(one, (idx, Qb))        # (B, T, R)
+                elif quantized:
                     def one(args):
                         idx_i, Q8_i, qs_i = args
                         s0 = jnp.zeros((rnd.n_arms, R), jnp.float32)
                         s20 = jnp.zeros_like(s0) if track_var else None
-                        return _scan_pulls(s0, V8, Q8_i, idx_i, cols,
-                                           vscale, qs_i, sums2=s20)
+                        return _scan_pulls(s0, Vq, Q8_i, idx_i, cols,
+                                           vscale, qs_i, sums2=s20,
+                                           packed_int4=packed4)
                     parts = jax.lax.map(one, (idx, Q8, qscale))  # (B, T, R)
                 else:
                     def one(args):
@@ -851,14 +1083,18 @@ def bounded_me_decode(V, Q, key, *, plan: BlockedPlan,
         (DESIGN.md §11) can then never occupy survivor or candidate
         slots.  Accepts a traced scalar (per-shard under shard_map, or a
         live-row count that changes between calls without recompiling).
-      quantized: optional pre-quantized table operands ``(V8, vscale)``
-        in the tile-major layout of `repro.core.quantize.quantize_tiles`
-        (int8-plan only).  When given, the in-jit table quantization is
-        skipped — this is how a `DynamicTableStore`'s incrementally
-        re-quantized shadow reaches the kernel; results are bit-identical
-        to quantizing ``V`` in-jit because per-(tile, block) cells are
-        quantized independently.  Queries are always quantized in-jit
-        (they arrive per request).
+      quantized: optional pre-quantized table operands matching the
+        plan's tier — ``(V8, vscale)`` for int8
+        (`repro.core.quantize.quantize_tiles` layout), ``(P4, vscale)``
+        nibble-packed for int4 (`quantize_tiles_int4`), ``(codes,
+        codebook)`` for pq (`pq_encode`/`pq_train`).  When given, the
+        in-jit table quantization (and pq codebook training) is skipped —
+        this is how a `DynamicTableStore`'s incrementally re-encoded
+        shadow reaches the kernel; results are bit-identical to
+        quantizing ``V`` in-jit because per-(tile, block) cells (and pq
+        code assignments against a frozen codebook) are computed
+        independently.  Queries are always quantized in-jit on the
+        int8/int4 tiers (they arrive per request); pq queries stay f32.
 
       adaptive: certify early exit per query at round boundaries under the
         plan's ``bound`` radius family (DESIGN.md §12): a certified
@@ -887,11 +1123,12 @@ def bounded_me_decode(V, Q, key, *, plan: BlockedPlan,
                          f"k_out_cap={plan.k_out_cap}]")
     if n_valid is None:
         n_valid = plan.n
-    if quantized is not None and plan.precision != "int8":
-        raise ValueError("pre-quantized operands need an int8 plan")
-    V8, vscale = quantized if quantized is not None else (None, None)
+    if quantized is not None and plan.precision == "fp32":
+        raise ValueError("pre-quantized operands need a quantized plan "
+                         "(precision 'int8', 'int4' or 'pq')")
+    Vq, vaux = quantized if quantized is not None else (None, None)
     return _run_decode(jnp.asarray(V), jnp.asarray(Q), key,
-                       jnp.asarray(n_valid, jnp.int32), V8, vscale,
+                       jnp.asarray(n_valid, jnp.int32), Vq, vaux,
                        plan=plan, final_exact=final_exact,
                        use_pallas=use_pallas, k_out=k_out,
                        adaptive=adaptive)

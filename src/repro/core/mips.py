@@ -99,7 +99,9 @@ def mips_topk(V, q, K: int = 1, *, method: str = "boundedme",
               block: int = 512, final_exact: bool = False,
               use_pallas: bool = False, precision: str = "fp32",
               adaptive: bool = False, bound: str = "hoeffding",
-              pull_mode: str = "row", coord_block: int = 128):
+              pull_mode: str = "row", coord_block: int = 128,
+              quant_err: Optional[float] = None,
+              pq_subdims: int = 8, pq_codes: int = 16):
     """Top-K maximum inner product search over the rows of ``V``.
 
     Zero preprocessing: ``V`` can be hot-swapped between calls with no
@@ -126,10 +128,18 @@ def mips_topk(V, q, K: int = 1, *, method: str = "boundedme",
         carry no estimation error.
       use_pallas: run the fused single-dispatch kernel (TPU; interpret
         mode elsewhere — slow, tests only).
-      precision: 'fp32' (default) or 'int8' — int8 runs every sampling
-        round on quantized tiles under quantization-widened confidence
-        bounds (DESIGN.md §10); combine with ``final_exact`` for fp32-exact
-        returned scores.
+      precision: 'fp32' (default), 'int8', 'int4' or 'pq' — the quantized
+        tiers run every sampling round on compressed tiles under
+        quantization-widened confidence bounds (DESIGN.md §10): int8/int4
+        on a scalar integer grid (int4 nibble-packed, half the bytes per
+        pull), 'pq' on per-subspace k-means codes (LUT tile-dots,
+        ``block/pq_subdims`` bytes per pull).  Combine with
+        ``final_exact`` for fp32-exact returned scores.
+      quant_err: measured per-pull error bound on the block-mean scale
+        (see `make_measured_plan`); None selects the worst-case default
+        for int8/int4 and auto-calibration on ``V`` for 'pq'.
+      pq_subdims / pq_codes: product-quantization subspace width and
+        codebook size (precision='pq' only).
       adaptive: certify early exit per query at round boundaries
         (DESIGN.md §12): easy queries stop pulling as soon as their top-K
         is certified inside the same (eps, delta) contract.  The default
@@ -169,7 +179,8 @@ def mips_topk(V, q, K: int = 1, *, method: str = "boundedme",
         V, q, key, K=K, eps=eps, delta=delta, value_range=value_range,
         tile=tile, block=block, final_exact=final_exact,
         use_pallas=use_pallas, precision=precision, adaptive=adaptive,
-        bound=bound, pull_mode=pull_mode, coord_block=coord_block)
+        bound=bound, pull_mode=pull_mode, coord_block=coord_block,
+        quant_err=quant_err, pq_subdims=pq_subdims, pq_codes=pq_codes)
     return out[0], out[1]
 
 
@@ -198,7 +209,9 @@ def sharded_mips_topk(table, queries, keys, K: int, *, mesh,
                       final_exact: bool = True,
                       use_pallas: Optional[bool] = None,
                       precision: str = "fp32",
-                      pull_mode: str = "row", coord_block: int = 128):
+                      pull_mode: str = "row", coord_block: int = 128,
+                      quant_err: Optional[float] = None,
+                      pq_subdims: int = 8, pq_codes: int = 16):
     """Distributed batched MIPS via shard_map: shard-local bandits, K-merge.
 
     ``table`` (n, N) is sharded on rows over ``model_axis``; each shard runs
@@ -222,8 +235,12 @@ def sharded_mips_topk(table, queries, keys, K: int, *, mesh,
         shared-permutation decode engine).
       K / eps / delta / value_range / tile / block / final_exact /
         precision / pull_mode / coord_block: as in `mips_topk`; delta is
-        split across shards by union bound (each shard's int8 plan widens
-        its own bounds).  The pull-mode choice is shard-local — each
+        split across shards by union bound (each quantized shard plan
+        widens its own bounds).  ``precision='int4'``/``'pq'`` work
+        shard-locally too (each shard packs/trains in-trace on its own
+        rows); 'pq' requires an explicit ``quant_err`` — calibrate with
+        `measured_plan_quant_err` on a representative shard, or hand in a
+        pre-built ``plan``.  The pull-mode choice is shard-local — each
         shard prices its own (n_local, N) geometry — while the exact
         cross-shard K-merge is untouched by the pull mode.
       mesh / model_axis / batch_axes: device mesh, arm-sharding axis name,
@@ -249,7 +266,8 @@ def sharded_mips_topk(table, queries, keys, K: int, *, mesh,
         plan = make_plan(n_local, N, K=K, eps=eps, delta=delta / n_shards,
                          value_range=value_range, tile=tile, block=block,
                          precision=precision, pull_mode=pull_mode,
-                         coord_block=coord_block)
+                         coord_block=coord_block, quant_err=quant_err,
+                         pq_subdims=pq_subdims, pq_codes=pq_codes)
 
     def local(table_l, q_l, keys_l):
         ids, scores = bounded_me_batched(table_l, q_l, keys_l, plan=plan,

@@ -1,43 +1,63 @@
-"""Symmetric int8 quantization for the sampling cascade (DESIGN.md §10).
+"""Quantizers for the sampling cascade (DESIGN.md §10): int8, int4, PQ.
 
 The BoundedME sampling rounds only need inner-product *estimates*, so the
-pull arithmetic can run in int8 provided the worst-case quantization error
-is folded into the confidence radii (`repro.core.bounds.quantization_error`
--> `make_schedule(quant_err=...)`).  This module holds the quantizers both
-execution paths share:
+pull arithmetic can run at reduced precision provided the per-pull error
+is folded into the confidence radii (`make_schedule(quant_err=...)`).
+This module holds the codecs every execution path shares:
 
-  * the item matrix is quantized **per (R, C) tile** of its tile-major
-    layout — one f32 scale per (arm-tile, coordinate-block) cell, so a
-    single huge-magnitude row only coarsens its own tile, never the whole
-    table;
-  * queries are quantized **per coordinate block** — one f32 scale per
-    block (per query in the batched case).
+  * **int8** — the item matrix is quantized **per (R, C) tile** of its
+    tile-major layout (one f32 scale per (arm-tile, coordinate-block)
+    cell, so a single huge-magnitude row only coarsens its own tile) and
+    queries **per coordinate block**.  Worst-case error bound:
+    `repro.core.bounds.quantization_error(value_range)`.
+  * **int4** — same per-cell symmetric scheme on a 15-level grid, with
+    two signed nibbles packed per byte (`pack_int4`/`unpack_int4`), so a
+    pulled tile moves HALF the int8 bytes.  Queries stay int8 (W4A8);
+    every pull unpacks the nibbles and runs the same exact integer dot.
+  * **pq** — per-subspace product quantization: each coordinate block is
+    split into ``subdims``-wide slices, a per-(block, subspace) k-means
+    codebook (`pq_train`) maps every slice to one of ``n_codes`` uint8
+    codes (`pq_encode`), and a pull becomes a query-side LUT build plus
+    per-row code lookups (`pq_tile_dot`) — ``C / subdims`` bytes per row
+    per pull instead of ``C``.  There is no closed-form error bound;
+    callers feed the schedule the **measured** bound below.
 
-Each pull then dequantizes its int32 tile-dot with the *scalar*
-``vscale[tile, col] * qscale[col]`` before accumulating in f32; the fused
-kernel and the jnp fallback perform the identical elementary float ops in
-the identical order, which is what keeps the two paths bit-exact in
-interpret mode (tests/test_quantized.py).
+`measured_quant_err` calibrates a per-pull (block-mean scale) error bound
+for ANY tier by replaying the tier's exact pull arithmetic against
+held-out queries and taking the max observed |q·v − q·v̂| / C, inflated by
+a safety factor — the measured-vs-worst-case error model of DESIGN.md §10.
 
-Rounding is deterministic round-half-to-even (`jnp.round`) so repeated
+Each dequantization uses the identical elementary float ops in the
+identical order across the fused kernel and the jnp fallbacks; the shared
+helpers `unpack_int4` and `pq_tile_dot` are *called from both paths*, so
+the arithmetic cannot drift and the paths stay bit-exact in interpret
+mode (tests/test_quantized.py, tests/test_fuzz_cascade.py).
+
+Rounding is deterministic round-half-to-even (`jnp.round`) and k-means
+initialization is strided over data order (no RNG), so repeated
 quantization of the same table is reproducible across calls and hosts.
 """
 
 from __future__ import annotations
 
-from typing import Tuple
+from typing import Optional, Tuple
 
+import jax
 import jax.numpy as jnp
 
-__all__ = ["INT8_LEVELS", "quantize_tiles", "quantize_blocks"]
+__all__ = ["INT8_LEVELS", "INT4_LEVELS", "quantize_tiles", "quantize_blocks",
+           "pack_int4", "unpack_int4", "quantize_tiles_int4",
+           "dequantize_tiles_int4", "pq_train", "pq_encode", "pq_decode",
+           "pq_tile_dot", "measured_quant_err"]
 
-# symmetric signed-int8 quantization grid: 127 levels per sign
+# symmetric signed quantization grids: levels per sign
 INT8_LEVELS = 127
+INT4_LEVELS = 7
 
 
-def _scale_of(amax: jnp.ndarray) -> jnp.ndarray:
-    """Per-cell scale max|x| / 127; all-zero cells get scale 1 (codes 0)."""
-    return jnp.where(amax > 0, amax / INT8_LEVELS, 1.0).astype(jnp.float32)
+def _scale_of(amax: jnp.ndarray, levels: int = INT8_LEVELS) -> jnp.ndarray:
+    """Per-cell scale max|x| / levels; all-zero cells get scale 1 (codes 0)."""
+    return jnp.where(amax > 0, amax / levels, 1.0).astype(jnp.float32)
 
 
 def quantize_tiles(V4: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
@@ -74,10 +94,278 @@ def quantize_blocks(qb: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
       ``(q8 int8, qscale f32)`` with qscale shaped (n_blocks,) or
       (B, n_blocks) — one scale per coordinate block (per query in the
       batched case), computed at dispatch time (queries arrive per
-      request; only the table's scales are precomputed).
+      request; only the table's scales are precomputed).  Shared by the
+      int8 AND int4 table tiers (W4A8: 4-bit weights, 8-bit activations).
     """
     amax = jnp.max(jnp.abs(qb), axis=-1)
     qscale = _scale_of(amax)
     q8 = jnp.round(qb / qscale[..., None])
     q8 = jnp.clip(q8, -INT8_LEVELS, INT8_LEVELS).astype(jnp.int8)
     return q8, qscale
+
+
+# ---------------------------------------------------------------------------
+# int4: two signed nibbles per byte (DESIGN.md §10, the W4A8 tier)
+# ---------------------------------------------------------------------------
+
+
+def pack_int4(x8: jnp.ndarray) -> jnp.ndarray:
+    """Pack int4-valued int8 codes two-per-byte along the last axis.
+
+    Layout is **half-split**, not interleaved: byte ``k`` of the packed
+    array carries column ``k`` of the input in its low nibble and column
+    ``k + C/2`` in its high nibble, so `unpack_int4`'s concatenate
+    restores natural column order with no lane interleave (the
+    TPU-friendly choice — no strided shuffles inside the kernel body).
+
+    Args:
+      x8: (..., C) int8 array with values in [-8, 7] and C even.
+
+    Returns:
+      (..., C // 2) int8 packed bytes; ``unpack_int4(pack_int4(x)) == x``
+      exactly (the round-trip identity tests/test_quantized.py asserts).
+    """
+    x8 = x8.astype(jnp.int8)
+    h = x8.shape[-1] // 2
+    lo, hi = x8[..., :h], x8[..., h:]
+    return jax.lax.bitwise_or(jax.lax.bitwise_and(lo, jnp.int8(0x0F)),
+                              jax.lax.shift_left(hi, jnp.int8(4)))
+
+
+def unpack_int4(packed: jnp.ndarray) -> jnp.ndarray:
+    """Unpack two-per-byte signed nibbles back to (..., C) int8 codes.
+
+    Exact inverse of `pack_int4`.  Sign extension is pure arithmetic shift (``(p << 4) >> 4`` for the
+    low nibble, ``p >> 4`` for the high); this exact function runs inside
+    the fused kernel's pull step AND the jnp fallbacks, which is what
+    keeps the two paths bit-exact (DESIGN.md §10).
+    """
+    p = packed.astype(jnp.int8)
+    four = jnp.int8(4)
+    hi = jax.lax.shift_right_arithmetic(p, four)
+    lo = jax.lax.shift_right_arithmetic(jax.lax.shift_left(p, four), four)
+    return jnp.concatenate([lo, hi], axis=-1)
+
+
+def quantize_tiles_int4(V4: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-tile symmetric int4 quantization, nibble-packed two-per-byte.
+
+    Same per-(arm-tile, coordinate-block) cell scheme as `quantize_tiles`
+    on the 15-level int4 grid (scale = max|x| / 7).
+
+    Args:
+      V4: (n_tiles, n_blocks, R, C) float tile-major table; C must be
+        even (`make_plan` enforces ``block % 2 == 0`` for int4 plans).
+
+    Returns:
+      ``(P4 (n_tiles, n_blocks, R, C // 2) int8 packed nibbles, vscale
+      (n_tiles, n_blocks) f32)`` — half the int8 shadow's bytes, which is
+      the point: per-pull HBM traffic halves again (DESIGN.md §10).
+    """
+    amax = jnp.max(jnp.abs(V4), axis=(2, 3))
+    vscale = _scale_of(amax, INT4_LEVELS)
+    Vq = jnp.round(V4 / vscale[:, :, None, None])
+    Vq = jnp.clip(Vq, -INT4_LEVELS, INT4_LEVELS).astype(jnp.int8)
+    return pack_int4(Vq), vscale
+
+
+def dequantize_tiles_int4(P4: jnp.ndarray, vscale: jnp.ndarray) -> jnp.ndarray:
+    """Reconstruct the f32 tile-major table from a packed int4 shadow."""
+    return unpack_int4(P4).astype(jnp.float32) * vscale[:, :, None, None]
+
+
+# ---------------------------------------------------------------------------
+# Product quantization: per-(block, subspace) k-means codebooks
+# ---------------------------------------------------------------------------
+
+
+def pq_train(V4: jnp.ndarray, *, n_codes: int = 16, subdims: int = 8,
+             iters: int = 8) -> jnp.ndarray:
+    """Train per-(coordinate-block, subspace) k-means codebooks.
+
+    Each coordinate block's C columns split into ``S = C / subdims``
+    slices; for every (block, slice) pair the rows of the whole table
+    (all tiles) form the training set of one ``n_codes``-centroid Lloyd
+    k-means.  Deterministic and jax-traceable: strided data-order
+    initialization (no RNG), a fixed ``iters`` Lloyd iterations, and
+    empty clusters keep their previous centroid — the same input always
+    yields the same codebook, on host or in-jit, which the store's
+    bit-identity contract relies on (DESIGN.md §11).
+
+    Args:
+      V4: (n_tiles, n_blocks, R, C) float tile-major table; C must be a
+        multiple of ``subdims`` (`make_plan` enforces it for pq plans).
+      n_codes: codebook size (1..256; codes are uint8).
+      subdims: subspace width w — smaller w means more subspaces, i.e.
+        tighter reconstruction at more bytes per row (the error
+        monotonicity tests/test_quantized.py asserts).
+      iters: Lloyd iterations (fixed count, so the fn is jit-traceable).
+
+    Returns:
+      ``codebook (n_blocks, S, n_codes, subdims) f32`` — the VMEM-resident
+      kernel operand (`pq_tile_dot` builds a per-query LUT from it).
+    """
+    T, Bn, R, C = V4.shape
+    w = int(subdims)
+    if C % w != 0:
+        raise ValueError(f"block width {C} not divisible by subdims {w}")
+    if not 1 <= int(n_codes) <= 256:
+        raise ValueError(f"n_codes must be in [1, 256], got {n_codes}")
+    S = C // w
+    n = T * R
+    # (Bn, S, n, w): every row-slice of the table, grouped by subspace
+    X = (jnp.asarray(V4, jnp.float32).transpose(1, 0, 2, 3)
+         .reshape(Bn, n, S, w).transpose(0, 2, 1, 3))
+    stride = max(1, n // int(n_codes))
+    idx = (jnp.arange(int(n_codes)) * stride) % n   # strided data-order init
+    cb = X[:, :, idx, :]                            # (Bn, S, n_codes, w)
+    x2 = jnp.sum(X * X, axis=-1)                    # (Bn, S, n)
+    for _ in range(int(iters)):
+        c2 = jnp.sum(cb * cb, axis=-1)              # (Bn, S, n_codes)
+        d = (x2[..., None] - 2.0 * jnp.einsum("bsnw,bskw->bsnk", X, cb)
+             + c2[:, :, None, :])
+        a = jnp.argmin(d, axis=-1)                  # (Bn, S, n)
+        onehot = jax.nn.one_hot(a, int(n_codes), dtype=jnp.float32)
+        counts = jnp.sum(onehot, axis=2)            # (Bn, S, n_codes)
+        sums = jnp.einsum("bsnk,bsnw->bskw", onehot, X)
+        cb = jnp.where(counts[..., None] > 0,
+                       sums / jnp.maximum(counts[..., None], 1.0), cb)
+    return cb
+
+
+def pq_encode(V4: jnp.ndarray, codebook: jnp.ndarray) -> jnp.ndarray:
+    """Assign every (row, block, subspace) slice its nearest codeword.
+
+    Per-cell independent (each code depends only on its own row slice and
+    the codebook), so re-encoding one dirty arm-tile against a *frozen*
+    codebook is bit-identical to encoding the whole updated table — the
+    store's dirty-tile contract (DESIGN.md §11).  Ties break to the
+    lowest code index (`jnp.argmin` semantics), deterministically.
+
+    Args:
+      V4: (n_tiles, n_blocks, R, C) float tile-major table.
+      codebook: (n_blocks, S, n_codes, w) from `pq_train` (frozen).
+
+    Returns:
+      ``codes (n_tiles, n_blocks, R, S) uint8`` — the kernel's streamed
+      table operand: ``S = C / w`` bytes per row per pull.
+    """
+    T, Bn, R, C = V4.shape
+    _, S, n_codes, w = codebook.shape
+    X = jnp.asarray(V4, jnp.float32).reshape(T, Bn, R, S, w)
+    c2 = jnp.sum(codebook * codebook, axis=-1)        # (Bn, S, n_codes)
+    x2 = jnp.sum(X * X, axis=-1)                      # (T, Bn, R, S)
+    d = (x2[..., None]
+         - 2.0 * jnp.einsum("tbrsw,bskw->tbrsk", X, codebook)
+         + c2[None, :, None, :, :])
+    return jnp.argmin(d, axis=-1).astype(jnp.uint8)
+
+
+def pq_decode(codes: jnp.ndarray, codebook: jnp.ndarray) -> jnp.ndarray:
+    """Reconstruct the f32 tile-major table v̂ from codes + codebook."""
+    T, Bn, R, S = codes.shape
+    w = codebook.shape[-1]
+    cb_b = jnp.broadcast_to(codebook[None, :, None],
+                            (T, Bn, R) + codebook.shape[1:])
+    picked = jnp.take_along_axis(
+        cb_b, codes[..., None, None].astype(jnp.int32), axis=-2)[..., 0, :]
+    return picked.reshape(T, Bn, R, S * w)
+
+
+def pq_tile_dot(codes: jnp.ndarray, qcol: jnp.ndarray,
+                cb: jnp.ndarray) -> jnp.ndarray:
+    """The pq pull step: LUT build + per-row code lookups, one block.
+
+    Computes ``out[..., r] = sum_s lut[s, codes[..., r, s]]`` with
+    ``lut[s, k] = <qcol slice s, codeword k>`` — the query-vs-codeword
+    inner products, built once per pull and shared by every row of the
+    tile.  The lookup is a one-hot compare-and-reduce (no gather), so the
+    op set is identical inside the Pallas kernel body and the jnp
+    fallbacks: both paths call THIS function, which is what keeps them
+    bit-exact (DESIGN.md §10).
+
+    Args:
+      codes: (..., R, S) uint8 codes of one (tile, block) cell (leading
+        axes optional — the fallbacks batch over tiles).
+      qcol: (C,) f32 query block, C = S * w.
+      cb: (S, n_codes, w) f32 codebook slice of this coordinate block.
+
+    Returns:
+      (..., R) f32 partial inner products of this pull.
+    """
+    S, n_codes, w = cb.shape
+    lut = jnp.sum(qcol.reshape(S, 1, w).astype(jnp.float32) * cb,
+                  axis=-1)                               # (S, n_codes)
+    ks = jax.lax.broadcasted_iota(jnp.int32, (1, 1, n_codes), 2)
+    onehot = (codes[..., None].astype(jnp.int32) == ks).astype(jnp.float32)
+    return jnp.sum(onehot * lut, axis=(-2, -1))
+
+
+# ---------------------------------------------------------------------------
+# Measured error calibration (DESIGN.md §10, measured-vs-worst-case)
+# ---------------------------------------------------------------------------
+
+
+def measured_quant_err(V4: jnp.ndarray, quantized: Tuple, *, precision: str,
+                       queries: Optional[jnp.ndarray] = None,
+                       n_queries: int = 32, seed: int = 0,
+                       safety: float = 2.0) -> float:
+    """Measured per-pull inner-product error bound for a quantized tier.
+
+    Replays the tier's EXACT pull arithmetic — including query-side int8
+    quantization on the int8/int4 tiers — against calibration queries and
+    returns ``safety * max |q·v − q·v̂| / C`` over every (query, tile,
+    block) cell and row: a block-mean-scale bias bound that feeds
+    ``make_schedule(quant_err=...)`` directly, with NO further CLT
+    rescale (the measurement already lives on the block-mean scale).
+    The safety factor covers calibration-to-serving distribution shift;
+    conservativeness of the inflated bound on fresh query draws is
+    asserted empirically by tests/test_guarantees.py (DESIGN.md §10).
+
+    Args:
+      V4: (n_tiles, n_blocks, R, C) f32 tile-major reference table.
+      quantized: the tier's artifacts — ``(V8, vscale)`` for 'int8',
+        ``(P4, vscale)`` (nibble-packed) for 'int4', ``(codes,
+        codebook)`` for 'pq'.
+      precision: 'int8' | 'int4' | 'pq'.
+      queries: optional (n_q, n_blocks, C) calibration query blocks;
+        defaults to ``n_queries`` standard-normal draws from ``seed``.
+        Pass traffic-shaped queries when you have them — the bound is
+        only as representative as its calibration distribution.
+      safety: multiplicative inflation of the observed max (default 2.0).
+
+    Returns:
+      The inflated bound as a host float (>= 0), on the block-mean scale.
+    """
+    V4 = jnp.asarray(V4, jnp.float32)
+    T, Bn, R, C = V4.shape
+    if queries is None:
+        queries = jax.random.normal(jax.random.PRNGKey(seed),
+                                    (int(n_queries), Bn, C), jnp.float32)
+    Qb = jnp.asarray(queries, jnp.float32)
+    true = jnp.einsum("tbrc,qbc->qtbr", V4, Qb,
+                      preferred_element_type=jnp.float32)
+    if precision in ("int8", "int4"):
+        Vq, vscale = quantized
+        Vi = unpack_int4(Vq) if precision == "int4" else Vq
+        q8, qscale = quantize_blocks(Qb)
+        raw = jnp.einsum("tbrc,qbc->qtbr", Vi.astype(jnp.int32),
+                         q8.astype(jnp.int32))
+        scl = vscale[None, :, :, None] * qscale[:, None, :, None]
+        est = raw.astype(jnp.float32) * scl
+    elif precision == "pq":
+        codes, cb = quantized
+        _, S, n_codes, w = cb.shape
+        lut = jnp.einsum("qbsw,bskw->qbsk",
+                         Qb.reshape(Qb.shape[0], Bn, S, w), cb)
+        lut_b = jnp.broadcast_to(lut[:, None, :, None],
+                                 (Qb.shape[0], T, Bn, R, S, n_codes))
+        picked = jnp.take_along_axis(
+            lut_b, codes[None, ..., None].astype(jnp.int32),
+            axis=-1)[..., 0]
+        est = jnp.sum(picked, axis=-1)                   # (q, T, Bn, R)
+    else:
+        raise ValueError(f"no measured error model for precision "
+                         f"{precision!r} (expected 'int8', 'int4' or 'pq')")
+    err = float(jnp.max(jnp.abs(true - est))) / float(C)
+    return float(safety) * err

@@ -195,7 +195,9 @@ def make_shard_plan(n: int, N: int, n_shards: int, *, K: int = 1,
                     value_range: float = 4.0, tile: int = 8,
                     block: int = 512, precision: str = "fp32",
                     bound: str = "hoeffding", pull_mode: str = "row",
-                    coord_block: int = 128):
+                    coord_block: int = 128,
+                    quant_err: Optional[float] = None,
+                    pq_subdims: int = 8, pq_codes: int = 16):
     """Shard-local BlockedPlan + padding geometry for an arm-sharded table.
 
     Splits an (n, N) item matrix into ``n_shards`` row shards of
@@ -214,9 +216,12 @@ def make_shard_plan(n: int, N: int, n_shards: int, *, K: int = 1,
     * ``k_out`` asks each shard for one candidate beyond its top-K so the
       merge can report per-candidate bound gaps (margin over the best
       non-returned survivor);
-    * ``precision='int8'`` calibrates each shard's plan with
-      quantization-widened bounds (DESIGN.md §10); quantization itself is
-      shard-local (per-tile scales over the shard's own rows);
+    * ``precision='int8'``/``'int4'``/``'pq'`` calibrates each shard's
+      plan with quantization-widened bounds (DESIGN.md §10); quantization
+      itself is shard-local (per-tile scales — or the pq codebook — over
+      the shard's own rows).  ``quant_err`` forwards a *measured* per-pull
+      error bound (`measured_plan_quant_err`); it is required for 'pq',
+      which has no a-priori worst-case model;
     * ``bound`` selects the certification radius family of the adaptive
       early-exit path (DESIGN.md §12) — certification is *shard-local*
       (each shard certifies its own top-K at its own ``delta / n_shards``
@@ -242,7 +247,8 @@ def make_shard_plan(n: int, N: int, n_shards: int, *, K: int = 1,
     plan = make_plan(n_local, N, K=K_local, eps=eps, delta=delta / n_shards,
                      value_range=value_range, tile=tile, block=block,
                      precision=precision, bound=bound, pull_mode=pull_mode,
-                     coord_block=coord_block)
+                     coord_block=coord_block, quant_err=quant_err,
+                     pq_subdims=pq_subdims, pq_codes=pq_codes)
     k_out = max(K_local, min(K_local + 1, plan.k_out_cap, n_local))
     return plan, n_local, n_pad, k_out
 
@@ -259,6 +265,8 @@ def sharded_bounded_me_decode(table, Q, key, *, mesh: Mesh, K: int = 1,
                               bound: str = "hoeffding",
                               pull_mode: str = "row",
                               coord_block: int = 128,
+                              quant_err: Optional[float] = None,
+                              pq_subdims: int = 8, pq_codes: int = 16,
                               return_candidates: bool = False):
     """Multi-device batched-decode MIPS: per-shard fused cascade + exact merge.
 
@@ -307,11 +315,15 @@ def sharded_bounded_me_decode(table, Q, key, *, mesh: Mesh, K: int = 1,
         gather-rescore supplies the exact merge scores instead — cheaper
         per shard when N is huge and the schedule saturates early.
       use_pallas: force/deny the fused kernel (default auto: TPU only).
-      precision: 'fp32' (default) or 'int8' — each shard samples on its
-        own int8-quantized tiles under quantization-widened bounds
+      precision: 'fp32' (default), 'int8', 'int4' or 'pq' — each shard
+        samples on its own quantized tiles (scalar int grids or pq codes
+        trained on the shard's rows) under quantization-widened bounds
         (DESIGN.md §10); candidates entering the merge are still fp32
-        exact (coverage completion at fp32, or the int8 path's fp32
+        exact (coverage completion at fp32, or the quantized path's fp32
         candidate rescore), so the exact-merge argument is untouched.
+        'pq' requires an explicit ``quant_err`` (see
+        `measured_plan_quant_err`); ``pq_subdims``/``pq_codes`` size the
+        per-subspace codebooks.
       adaptive / bound: per-query adaptive early exit (DESIGN.md §12),
         certified *shard-locally*: each shard freezes its own cascade as
         soon as its local top-K is certified under its ``delta / shards``
@@ -355,7 +367,8 @@ def sharded_bounded_me_decode(table, Q, key, *, mesh: Mesh, K: int = 1,
     plan, n_local, n_pad, k_out = make_shard_plan(
         n, N, n_shards, K=K, eps=eps, delta=delta, value_range=value_range,
         tile=tile, block=block, precision=precision, bound=bound,
-        pull_mode=pull_mode, coord_block=coord_block)
+        pull_mode=pull_mode, coord_block=coord_block, quant_err=quant_err,
+        pq_subdims=pq_subdims, pq_codes=pq_codes)
     if n_pad:
         table = jnp.pad(table, ((0, n_pad), (0, 0)))
     key = jnp.asarray(key)

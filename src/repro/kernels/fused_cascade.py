@@ -46,6 +46,26 @@ accumulator; elimination, survivor bookkeeping and extraction are unchanged.
 The widened confidence radii that absorb the quantization bias live in the
 schedule, not here (`make_schedule(quant_err=...)`).
 
+Two further tiers ride the same pull pipeline (DESIGN.md §10):
+
+  * ``packed_int4=True`` — ``V4``'s last dim holds nibble-packed int4
+    codes (C/2 bytes per row per pull, half the int8 traffic); the pull
+    step sign-extends with the shared `repro.core.quantize.unpack_int4`
+    (pure shifts, no gather) and then runs the SAME int8-style exact
+    integer dot + scalar dequantize.  Queries stay int8 (W4A8), so
+    ``vscale``/``qscale`` are required exactly as for int8.
+  * ``codebook`` given — product-quantized tiles: ``V4`` holds uint8
+    codes (n_tiles, n_blocks, R, S) with S = C / subdims bytes per row
+    per pull, the f32 ``codebook (n_blocks, S, n_codes, subdims)`` sits
+    fully VMEM-resident, queries stay f32, and each pull is the shared
+    `repro.core.quantize.pq_tile_dot`: a per-(pull, block) LUT of
+    query-vs-codeword products plus a one-hot compare-and-reduce per row
+    (gather-free, so it lowers on TPU and stays bit-exact with the jnp
+    fallbacks that call the same function).
+
+In every tier the *stored* last dim of ``V4`` (C, C/2 or S) is what the
+DMA moves — the bytes-per-pull reduction is physical, not notational.
+
 Adaptive early exit (DESIGN.md §12): with ``cert`` the kernel keeps a
 per-query ``active`` lane in SMEM next to the existing ``n_valid``
 plumbing.  After every round-end step it evaluates the certification
@@ -86,6 +106,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.quantize import pq_tile_dot, unpack_int4
 from repro.core.schedule import END_BIT, PULL_BIT, SLOT_MASK
 
 __all__ = ["fused_cascade_pallas", "fused_cascade_batched_pallas"]
@@ -96,12 +117,18 @@ def _round_up(x: int, m: int) -> int:
 
 
 def _make_kernel(*, n_arms, R, C, K, n_tiles, t_final, n_final, S, Pw, B,
-                 quantized=False, adaptive=False, track_var=False,
+                 qkind="none", adaptive=False, track_var=False,
                  k_cert=1, n_rounds=0, Pc=0):
     """Build the kernel body.  B is None for the single-query variant.
 
-    With ``quantized`` the tensor-operand list grows by (vscale, qscale)
-    and every pull dequantizes its int32 tile-dot before accumulating.
+    ``qkind`` selects the pull arithmetic (DESIGN.md §10): 'none' (f32
+    tile-dot), 'int8'/'int4' (the tensor-operand list grows by (vscale,
+    qscale) and every pull dequantizes its exact int32 tile-dot — int4
+    first sign-extends the nibble-packed tile with `unpack_int4`), or
+    'pq' (the operand list grows by the f32 ``codebook`` instead and the
+    pull is the `pq_tile_dot` LUT walk; queries stay f32).  ``C`` is the
+    TRUE block width (denominators) — the DMA'd tile's last dim is
+    whatever the stored operand carries (C, C/2 or S).
     With ``adaptive`` the scalar-prefetch list grows by the per-round
     ``cert`` coefficients, the outputs by ``rounds_used``, and the scratch
     by the active/t_stop lanes plus the certification work buffers
@@ -117,10 +144,14 @@ def _make_kernel(*, n_arms, R, C, K, n_tiles, t_final, n_final, S, Pw, B,
         else:
             cols_ref, nv_ref, V_ref, q_ref, *rest = more
             cert_ref = None
-        if quantized:
+        if qkind in ("int8", "int4"):
             vs_ref, qs_ref, *rest = rest
-        else:
+            cb_ref = None
+        elif qkind == "pq":
+            cb_ref, *rest = rest
             vs_ref = qs_ref = None
+        else:
+            vs_ref = qs_ref = cb_ref = None
         ids_ref, vals_ref, *rest = rest
         if adaptive:
             rused_ref, *rest = rest
@@ -189,12 +220,23 @@ def _make_kernel(*, n_arms, R, C, K, n_tiles, t_final, n_final, S, Pw, B,
                                   sem.at[dslot]).wait()
             qcol = (q_ref[0, pl.ds(col, 1), :] if batched
                     else q_ref[pl.ds(col, 1), :])          # (1, C)
-            if quantized:
+            if qkind == "pq":
+                # per-pull LUT of query-vs-codeword products + one-hot
+                # lookups per row — the SHARED `pq_tile_dot`, so the jnp
+                # fallbacks run literally the same f32 ops (bit-exact)
+                cb = cb_ref[pl.ds(col, 1)][0]      # (S, n_codes, w)
+                part = pq_tile_dot(vbuf[dslot], qcol[0], cb)       # (R,)
+            elif qkind in ("int8", "int4"):
                 # int8 x int8 -> int32 on the MXU, then dequantize with the
                 # scalar tile/block scale product.  The jnp fallback does
                 # the identical (exact) integer dot and the identical two
-                # float ops per entry, so the paths stay bit-exact.
-                raw = jnp.dot(vbuf[dslot], qcol[0],
+                # float ops per entry, so the paths stay bit-exact.  int4
+                # tiles arrive nibble-packed and sign-extend in-register
+                # with the same shared `unpack_int4` (pure shifts).
+                tilebuf = vbuf[dslot]
+                if qkind == "int4":
+                    tilebuf = unpack_int4(tilebuf)
+                raw = jnp.dot(tilebuf, qcol[0],
                               preferred_element_type=jnp.int32)    # (R,)
                 s = vs_ref[tile, col] * qs_ref[0, col]
                 part = raw.astype(jnp.float32) * s
@@ -381,20 +423,46 @@ def _scratch(n_tiles, R, C, Pw, vdtype, *, adaptive=False, track_var=False,
     return base + [pltpu.SemaphoreType.DMA((2,))]
 
 
+def _resolve_qkind(Cs, vscale, qscale, codebook, packed_int4):
+    """Classify the tier from the wrapper operands; returns (qkind, C).
+
+    ``Cs`` is the stored operand's last dim; ``C`` the true block width
+    the kernel's denominators use — 2*Cs for nibble-packed int4,
+    S*subdims from the codebook shape for pq, Cs otherwise.
+    """
+    if codebook is not None:
+        if vscale is not None or qscale is not None or packed_int4:
+            raise ValueError("codebook (pq) excludes vscale/qscale/"
+                             "packed_int4")
+        return "pq", codebook.shape[1] * codebook.shape[3]
+    if (vscale is not None) != (qscale is not None):
+        raise ValueError("vscale and qscale must be passed together")
+    if packed_int4:
+        if vscale is None:
+            raise ValueError("packed_int4 needs vscale/qscale (W4A8)")
+        return "int4", 2 * Cs
+    return ("int8" if vscale is not None else "none"), Cs
+
+
 @functools.partial(jax.jit, static_argnames=("n_arms", "K", "t_final",
                                              "n_final", "k_out", "k_cert",
-                                             "track_var", "interpret"))
+                                             "track_var", "packed_int4",
+                                             "interpret"))
 def fused_cascade_pallas(V4, qb, slotcode, rounds_meta, cols, *, n_arms: int,
                          K: int, t_final: int, n_final: int,
                          k_out: int = None, n_valid=None,
-                         vscale=None, qscale=None, cert=None,
+                         vscale=None, qscale=None, codebook=None,
+                         packed_int4: bool = False, cert=None,
                          k_cert: int = 1, track_var: bool = False,
                          interpret: bool = False):
     """Single-query fused cascade: ONE pallas_call for all rounds.
 
     V4:  (n_tiles, n_blocks, R, C) tile-major data (stays in HBM);
-    float for the fp32 path, int8 for the quantized path.
-    qb:  (n_blocks, C) blocked query (VMEM-resident), same dtype family.
+    float for the fp32 path, int8 for the quantized path, nibble-packed
+    int8 (last dim C/2) with ``packed_int4=True``, uint8 codes (last dim
+    S) with ``codebook``.
+    qb:  (n_blocks, C) blocked query (VMEM-resident) — f32 on the fp32
+    AND pq paths, int8 on the int8/int4 (W4A8) paths.
     slotcode/rounds_meta/cols: see `FlatSchedule.packed`
     k_out: number of final candidates extracted in-kernel (default K).
     Shard-local callers ask for k_out > K so the K winners come back with a
@@ -405,8 +473,11 @@ def fused_cascade_pallas(V4, qb, slotcode, rounds_meta, cols, *, n_arms: int,
     accepts a traced scalar, so shards can mask their own slice of a
     caller-padded table in-cascade (DESIGN.md §7).
     vscale/qscale: per-tile table scales (n_tiles, n_blocks) and per-block
-    query scales (n_blocks,) for int8 operands (`repro.core.quantize`,
+    query scales (n_blocks,) for int8/int4 operands (`repro.core.quantize`,
     DESIGN.md §10); both or neither must be given.
+    codebook: (n_blocks, S, n_codes, subdims) f32 pq codebook
+    (`repro.core.quantize.pq_train`), fully VMEM-resident; excludes
+    vscale/qscale/packed_int4.
     cert: (rounds+1, 2) f32 per-round certification coefficients
     (`repro.core.schedule.cert_coeffs`) — enables adaptive early exit
     (DESIGN.md §12); ``k_cert`` is the contract top-K the predicate
@@ -417,10 +488,8 @@ def fused_cascade_pallas(V4, qb, slotcode, rounds_meta, cols, *, n_arms: int,
     With ``cert`` a third output ``rounds_used`` (int32 scalar) reports
     how many elimination rounds actually pulled before certification.
     """
-    n_tiles, n_blocks, R, C = V4.shape
-    quantized = vscale is not None
-    if quantized != (qscale is not None):
-        raise ValueError("vscale and qscale must be passed together")
+    n_tiles, n_blocks, R, Cs = V4.shape
+    qkind, C = _resolve_qkind(Cs, vscale, qscale, codebook, packed_int4)
     adaptive = cert is not None
     if k_out is None:
         k_out = K
@@ -436,13 +505,16 @@ def fused_cascade_pallas(V4, qb, slotcode, rounds_meta, cols, *, n_arms: int,
         pl.BlockSpec(memory_space=pltpu.VMEM),    # qb: fully resident
     ]
     operands = [V4, qb]
-    if quantized:
+    if qkind in ("int8", "int4"):
         in_specs += [
             pl.BlockSpec(memory_space=pltpu.VMEM),    # vscale
             pl.BlockSpec(memory_space=pltpu.VMEM),    # qscale (1, n_blocks)
         ]
         operands += [jnp.asarray(vscale, jnp.float32),
                      jnp.asarray(qscale, jnp.float32).reshape(1, n_blocks)]
+    elif qkind == "pq":
+        in_specs.append(pl.BlockSpec(memory_space=pltpu.VMEM))  # codebook
+        operands.append(jnp.asarray(codebook, jnp.float32))
     out_specs = [
         pl.BlockSpec((1, K), lambda i, *_: (0, 0)),
         pl.BlockSpec((1, K), lambda i, *_: (0, 0)),
@@ -462,13 +534,13 @@ def fused_cascade_pallas(V4, qb, slotcode, rounds_meta, cols, *, n_arms: int,
         grid=(S,),
         in_specs=in_specs,
         out_specs=tuple(out_specs),
-        scratch_shapes=_scratch(n_tiles, R, C, Pw, V4.dtype,
+        scratch_shapes=_scratch(n_tiles, R, Cs, Pw, V4.dtype,
                                 adaptive=adaptive, track_var=track_var,
                                 Pc=Pc),
     )
     kernel = _make_kernel(n_arms=n_arms, R=R, C=C, K=K, n_tiles=n_tiles,
                           t_final=t_final, n_final=n_final, S=S, Pw=Pw,
-                          B=None, quantized=quantized, adaptive=adaptive,
+                          B=None, qkind=qkind, adaptive=adaptive,
                           track_var=track_var, k_cert=k_cert,
                           n_rounds=n_rounds, Pc=Pc)
     out = pl.pallas_call(
@@ -486,11 +558,13 @@ def fused_cascade_pallas(V4, qb, slotcode, rounds_meta, cols, *, n_arms: int,
 
 @functools.partial(jax.jit, static_argnames=("n_arms", "K", "t_final",
                                              "n_final", "k_out", "k_cert",
-                                             "track_var", "interpret"))
+                                             "track_var", "packed_int4",
+                                             "interpret"))
 def fused_cascade_batched_pallas(V4, Qb, slotcode, rounds_meta, cols, *,
                                  n_arms: int, K: int, t_final: int,
                                  n_final: int, k_out: int = None,
                                  n_valid=None, vscale=None, qscale=None,
+                                 codebook=None, packed_int4: bool = False,
                                  cert=None, k_cert: int = 1,
                                  track_var: bool = False,
                                  interpret: bool = False):
@@ -502,7 +576,10 @@ def fused_cascade_batched_pallas(V4, Qb, slotcode, rounds_meta, cols, *,
     widens the in-kernel final extraction and ``n_valid`` (default
     ``n_arms``, may be traced) masks caller-padding rows exactly as in
     `fused_cascade_pallas`.  For int8 operands pass ``vscale`` (n_tiles,
-    n_blocks) and per-query ``qscale`` (B, n_blocks) (DESIGN.md §10).
+    n_blocks) and per-query ``qscale`` (B, n_blocks) (DESIGN.md §10); for
+    nibble-packed int4 tiles additionally set ``packed_int4=True``; for
+    product-quantized tiles pass ``codebook`` instead (uint8 code table,
+    f32 queries) — tiers resolve exactly as in `fused_cascade_pallas`.
     ``cert``/``k_cert``/``track_var`` enable per-query adaptive early exit
     exactly as in `fused_cascade_pallas` — each query carries its own
     ``active`` lane, so one certified query's no-op steps never disturb
@@ -510,10 +587,8 @@ def fused_cascade_batched_pallas(V4, Qb, slotcode, rounds_meta, cols, *,
     Returns (ids (B, k_out) int32, vals (B, k_out) f32), unscaled; with
     ``cert`` also ``rounds_used (B,) int32``.
     """
-    n_tiles, n_blocks, R, C = V4.shape
-    quantized = vscale is not None
-    if quantized != (qscale is not None):
-        raise ValueError("vscale and qscale must be passed together")
+    n_tiles, n_blocks, R, Cs = V4.shape
+    qkind, C = _resolve_qkind(Cs, vscale, qscale, codebook, packed_int4)
     adaptive = cert is not None
     if k_out is None:
         k_out = K
@@ -529,13 +604,16 @@ def fused_cascade_batched_pallas(V4, Qb, slotcode, rounds_meta, cols, *,
         pl.BlockSpec((1, n_blocks, C), lambda b, i, *_: (b, 0, 0)),
     ]
     operands = [V4, Qb]
-    if quantized:
+    if qkind in ("int8", "int4"):
         in_specs += [
             pl.BlockSpec(memory_space=pltpu.VMEM),                # vscale
             pl.BlockSpec((1, n_blocks), lambda b, i, *_: (b, 0)),  # qscale
         ]
         operands += [jnp.asarray(vscale, jnp.float32),
                      jnp.asarray(qscale, jnp.float32)]
+    elif qkind == "pq":
+        in_specs.append(pl.BlockSpec(memory_space=pltpu.VMEM))  # codebook
+        operands.append(jnp.asarray(codebook, jnp.float32))
     out_specs = [
         pl.BlockSpec((1, K), lambda b, i, *_: (b, 0)),
         pl.BlockSpec((1, K), lambda b, i, *_: (b, 0)),
@@ -555,13 +633,13 @@ def fused_cascade_batched_pallas(V4, Qb, slotcode, rounds_meta, cols, *,
         grid=(B, S),
         in_specs=in_specs,
         out_specs=tuple(out_specs),
-        scratch_shapes=_scratch(n_tiles, R, C, Pw, V4.dtype,
+        scratch_shapes=_scratch(n_tiles, R, Cs, Pw, V4.dtype,
                                 adaptive=adaptive, track_var=track_var,
                                 Pc=Pc),
     )
     kernel = _make_kernel(n_arms=n_arms, R=R, C=C, K=K, n_tiles=n_tiles,
                           t_final=t_final, n_final=n_final, S=S, Pw=Pw, B=B,
-                          quantized=quantized, adaptive=adaptive,
+                          qkind=qkind, adaptive=adaptive,
                           track_var=track_var, k_cert=k_cert,
                           n_rounds=n_rounds, Pc=Pc)
     out = pl.pallas_call(

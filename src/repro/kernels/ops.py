@@ -68,7 +68,8 @@ def gather_block_dot(V4, idx, cols, qsel):
 
 def fused_cascade(V4, qb, slotcode, rounds_meta, cols, *, n_arms, K,
                   t_final, n_final, k_out=None, n_valid=None,
-                  vscale=None, qscale=None, cert=None, k_cert=1,
+                  vscale=None, qscale=None, codebook=None,
+                  packed_int4=False, cert=None, k_cert=1,
                   track_var=False):
     """Whole-cascade single dispatch: see `repro.kernels.fused_cascade`.
 
@@ -78,8 +79,11 @@ def fused_cascade(V4, qb, slotcode, rounds_meta, cols, *, n_arms, K,
     ``K <= k_out <= n_final * tile``); ``n_valid`` (default ``n_arms``,
     may be a traced scalar) masks rows >= n_valid out of every tile-max
     and extraction so caller padding can never win (DESIGN.md §7);
-    ``vscale``/``qscale`` are the int8 dequantization scales of the
-    quantized sampling path (DESIGN.md §10, `repro.core.quantize`);
+    ``vscale``/``qscale`` are the int8/int4 dequantization scales of the
+    quantized sampling path (DESIGN.md §10, `repro.core.quantize`) —
+    ``packed_int4=True`` marks the table nibble-packed (last dim C/2) —
+    and ``codebook`` selects the product-quantized tier instead (uint8
+    code table, f32 queries, LUT tile-dots);
     ``cert``/``k_cert``/``track_var`` (per-round radius coefficients from
     `repro.core.schedule.cert_coeffs`, the certified top-K, and the
     M2-accumulator switch) enable adaptive early exit and append a
@@ -89,26 +93,30 @@ def fused_cascade(V4, qb, slotcode, rounds_meta, cols, *, n_arms, K,
                                 n_arms=n_arms, K=K, t_final=t_final,
                                 n_final=n_final, k_out=k_out,
                                 n_valid=n_valid, vscale=vscale,
-                                qscale=qscale, cert=cert, k_cert=k_cert,
-                                track_var=track_var,
+                                qscale=qscale, codebook=codebook,
+                                packed_int4=packed_int4, cert=cert,
+                                k_cert=k_cert, track_var=track_var,
                                 interpret=not on_tpu())
 
 
 def fused_cascade_batched(V4, Qb, slotcode, rounds_meta, cols, *, n_arms, K,
                           t_final, n_final, k_out=None, n_valid=None,
-                          vscale=None, qscale=None, cert=None, k_cert=1,
+                          vscale=None, qscale=None, codebook=None,
+                          packed_int4=False, cert=None, k_cert=1,
                           track_var=False):
     """Batched whole-cascade dispatch: query axis in the kernel grid.
 
-    ``k_out``/``n_valid``/``vscale``/``qscale``/``cert`` behave exactly as
-    in :func:`fused_cascade` (``qscale`` is per query here, (B, n_blocks),
-    and the adaptive ``rounds_used`` output is per query, (B,)).
+    ``k_out``/``n_valid``/``vscale``/``qscale``/``codebook``/
+    ``packed_int4``/``cert`` behave exactly as in :func:`fused_cascade`
+    (``qscale`` is per query here, (B, n_blocks), and the adaptive
+    ``rounds_used`` output is per query, (B,)).
     """
     return fused_cascade_batched_pallas(V4, Qb, slotcode, rounds_meta, cols,
                                         n_arms=n_arms, K=K, t_final=t_final,
                                         n_final=n_final, k_out=k_out,
                                         n_valid=n_valid, vscale=vscale,
-                                        qscale=qscale, cert=cert,
+                                        qscale=qscale, codebook=codebook,
+                                        packed_int4=packed_int4, cert=cert,
                                         k_cert=k_cert, track_var=track_var,
                                         interpret=not on_tpu())
 

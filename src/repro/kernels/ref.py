@@ -29,7 +29,8 @@ def blocked_matvec_ref(W: jnp.ndarray, q: jnp.ndarray) -> jnp.ndarray:
 
 
 def fused_cascade_ref(V4, qb, flat, cols, *, n_arms: int, K: int,
-                      vscale=None, qscale=None, n_valid=None,
+                      vscale=None, qscale=None, codebook=None,
+                      packed_int4=False, n_valid=None,
                       cert=None, k_cert=1):
     """Step-accurate numpy simulation of the fused cascade kernel.
 
@@ -43,7 +44,13 @@ def fused_cascade_ref(V4, qb, flat, cols, *, n_arms: int, K: int,
     cols: (S,) column-block id per step (i.e. perm[flat.bpos]).
     With ``vscale (n_tiles, n_blocks)`` / ``qscale (n_blocks,)`` the
     operands are int8 and each pull is an exact integer dot dequantized by
-    the scalar scale product (the quantized path, DESIGN.md §10).
+    the scalar scale product (the quantized path, DESIGN.md §10);
+    ``packed_int4=True`` marks the table nibble-packed (stored last dim
+    C/2, half-split layout) and the oracle unpacks it with independent
+    numpy bit arithmetic before the same exact integer dot.  ``codebook``
+    ((n_blocks, S, n_codes, w) f32) selects the product-quantized tier
+    instead: ``V4`` holds uint8 codes (last dim S), ``qb`` stays f32, and
+    each pull is an independent numpy LUT walk.
     ``n_valid`` (default ``n_arms``) masks rows at or past it out of every
     ranking, like the kernel's scalar-prefetch bound.  With ``cert``
     (the (rounds+1, 2) coefficient array of
@@ -55,9 +62,24 @@ def fused_cascade_ref(V4, qb, flat, cols, *, n_arms: int, K: int,
     Returns (ids (K,), vals (K,)) — vals unscaled, like the kernel.
     """
     quantized = vscale is not None
+    is_pq = codebook is not None
     adaptive = cert is not None
-    if quantized:
-        V4 = np.asarray(V4, np.int32)   # exact integer tile-dots
+    if is_pq:
+        V4 = np.asarray(V4, np.uint8)    # per-subspace code table
+        qb = np.asarray(qb, np.float32)
+        codebook = np.asarray(codebook, np.float32)
+    elif quantized:
+        if packed_int4:
+            # Independent nibble unpack (half-split layout): byte k holds
+            # column k in its low nibble and column k + C/2 in its high.
+            pu = np.asarray(V4).astype(np.uint8)
+            lo = (pu & 0x0F).astype(np.int32)
+            lo = np.where(lo >= 8, lo - 16, lo)
+            hi = (pu >> 4).astype(np.int32)
+            hi = np.where(hi >= 8, hi - 16, hi)
+            V4 = np.concatenate([lo, hi], axis=-1)
+        else:
+            V4 = np.asarray(V4, np.int32)   # exact integer tile-dots
         qb = np.asarray(qb, np.int32)
         vscale = np.asarray(vscale, np.float32)
         qscale = np.asarray(qscale, np.float32)
@@ -66,6 +88,9 @@ def fused_cascade_ref(V4, qb, flat, cols, *, n_arms: int, K: int,
         qb = np.asarray(qb, np.float32)
     cols = np.asarray(cols)
     n_tiles, n_blocks, R, C = V4.shape
+    if is_pq:
+        S, w = codebook.shape[1], codebook.shape[3]
+        C = S * w                       # true pull width (denominators)
     if n_valid is None:
         n_valid = n_arms
     acc = np.zeros((n_tiles, R), np.float32)
@@ -92,7 +117,14 @@ def fused_cascade_ref(V4, qb, flat, cols, *, n_arms: int, K: int,
         if flat.is_pull[i] and (not adaptive or active):
             tile = surv[flat.slot[i]]
             col = int(cols[i])
-            if quantized:
+            if is_pq:
+                cb = codebook[col]                          # (S, n_codes, w)
+                lut = (qb[col].reshape(S, 1, w) * cb).sum(-1)
+                codes = V4[tile, col]                       # (R, S) uint8
+                part = np.stack([
+                    lut[np.arange(S), codes[r]].sum()
+                    for r in range(R)]).astype(np.float32)
+            elif quantized:
                 raw = V4[tile, col] @ qb[col]               # exact int32
                 s = np.float32(vscale[tile, col]) * np.float32(qscale[col])
                 part = raw.astype(np.float32) * s

@@ -156,7 +156,9 @@ class CascadeExecutor:
                  use_pallas: Optional[bool] = None,
                  precision: str = "fp32", range_slack: float = 1.0,
                  adaptive: bool = False, bound: str = "hoeffding",
-                 pull_mode: str = "row", coord_block: int = 128):
+                 pull_mode: str = "row", coord_block: int = 128,
+                 quant_err: Optional[float] = None,
+                 pq_subdims: int = 8, pq_codes: int = 16):
         from repro.core.mips import table_abs_max
         from repro.store import DynamicTableStore, ShardedTableStore
 
@@ -177,11 +179,14 @@ class CascadeExecutor:
                     "serving a mesh needs a ShardedTableStore")
             if n_valid is not None:
                 raise ValueError("n_valid is store-managed")
-            # the store owns the kernel geometry (its int8 shadow and the
-            # executor's plan must agree tile-for-tile)
+            # the store owns the kernel geometry (its quantized shadow and
+            # the executor's plan must agree tile-for-tile)
             tile, block = store.tile, store.block
-            if store.precision == "int8":
-                precision = "int8"
+            if store.precision != "fp32":
+                precision = store.precision
+                if store.precision == "pq":
+                    pq_subdims = store.pq_subdims
+                    pq_codes = store.pq_codes
             n, N = store.capacity_rows, store.N
             # clamp to the store's observed range exactly as sync_store
             # would on growth: a churned executor and a fresh executor on
@@ -209,20 +214,25 @@ class CascadeExecutor:
         self.pull_mode = pull_mode
         self._coord_block = int(coord_block)
         self._n_valid = n_valid
+        self._quant_err = quant_err
+        self._pq_subdims = int(pq_subdims)
+        self._pq_codes = int(pq_codes)
         self._use_shadow = (self.store is not None and mesh is None
-                            and self.store.precision == "int8")
+                            and self.store.precision != "fp32")
         if self._use_shadow and pull_mode != "row":
-            # the store's incrementally maintained int8 shadow is quantized
-            # at the store's own (tile, block) cells; a coord (or
-            # coord-resolvable hybrid) plan re-blocks the feature axis at
-            # coord_block width, which the shadow cannot serve.  fp32
-            # stores and sharded int8 stores (which quantize in-jit at the
-            # plan's geometry) support every pull mode.
+            # the store's incrementally maintained quantized shadow
+            # (int8/int4 scales, pq codes) is encoded at the store's own
+            # (tile, block) cells; a coord (or coord-resolvable hybrid)
+            # plan re-blocks the feature axis at coord_block width, which
+            # the shadow cannot serve.  fp32 stores and sharded stores
+            # (which quantize in-jit at the plan's geometry) support
+            # every pull mode.
             raise ValueError(
                 f"pull_mode={pull_mode!r} is incompatible with a "
-                f"single-device int8 store shadow (its quantization cells "
-                f"are fixed at the store's block width); use pull_mode="
-                f"'row', an fp32 store, or a ShardedTableStore")
+                f"single-device {self.store.precision} store shadow "
+                f"(its quantization cells are fixed at the store's block "
+                f"width); use pull_mode='row', an fp32 store, or a "
+                f"ShardedTableStore")
         self.n_recalibrations = 0
         self._seen_version = (0 if self.store is None
                               else self.store.version)
@@ -264,6 +274,23 @@ class CascadeExecutor:
         precision, use_pallas = self.precision, self._use_pallas
         adaptive, bound = self.adaptive, self._bound
         pull_mode, coord_block = self.pull_mode, self._coord_block
+        pq_subdims, pq_codes = self._pq_subdims, self._pq_codes
+        quant_err = self._quant_err
+        if precision == "pq" and quant_err is None:
+            # pq has no a-priori worst-case model: calibrate a measured
+            # per-pull bound on the served table (re-measured at every
+            # rebuild event, so growth/refresh re-anchor it).  Hybrid
+            # plans price two pull widths with different codebooks; take
+            # the conservative max across candidate widths.
+            from repro.core.boundedme_jax import measured_plan_quant_err
+            V_cal = (self.store.host_table() if self.store is not None
+                     else self._table)
+            widths = {"row": (block,), "coord": (coord_block,),
+                      "hybrid": (block, coord_block)}[pull_mode]
+            quant_err = max(measured_plan_quant_err(
+                V_cal, precision="pq", tile=tile, block=w,
+                pq_subdims=pq_subdims, pq_codes=pq_codes)
+                for w in widths)
         if mesh is not None:
             from repro.distributed.sharding import (make_shard_plan,
                                                     sharded_bounded_me_decode)
@@ -271,7 +298,8 @@ class CascadeExecutor:
                 self.n, self.N, mesh.shape[model_axis], K=K, eps=eps,
                 delta=delta, value_range=value_range, tile=tile, block=block,
                 precision=precision, bound=bound, pull_mode=pull_mode,
-                coord_block=coord_block)
+                coord_block=coord_block, quant_err=quant_err,
+                pq_subdims=pq_subdims, pq_codes=pq_codes)
 
             def _flush_fn(tbl, Qbuf, key, nv):
                 out = sharded_bounded_me_decode(
@@ -280,7 +308,9 @@ class CascadeExecutor:
                     value_range=value_range, tile=tile, block=block,
                     final_exact=True, use_pallas=use_pallas,
                     precision=precision, adaptive=adaptive, bound=bound,
-                    pull_mode=pull_mode, coord_block=coord_block)
+                    pull_mode=pull_mode, coord_block=coord_block,
+                    quant_err=quant_err, pq_subdims=pq_subdims,
+                    pq_codes=pq_codes)
                 # rounds_used is (B, shards) when adaptive, else absent
                 return out[0], out[1], (out[3] if adaptive else None)
 
@@ -289,16 +319,19 @@ class CascadeExecutor:
             plan = make_plan(self.n, self.N, K=K, eps=eps, delta=delta,
                              value_range=value_range, tile=tile,
                              block=block, precision=precision, bound=bound,
-                             pull_mode=pull_mode, coord_block=coord_block)
+                             pull_mode=pull_mode, coord_block=coord_block,
+                             quant_err=quant_err, pq_subdims=pq_subdims,
+                             pq_codes=pq_codes)
             self.plan = plan
             if self._use_shadow:
-                # the store maintains the int8 shadow incrementally; the
-                # flush consumes it instead of re-quantizing the table
-                def _flush_fn(tbl, V8, vscale, Qbuf, key, nv):
+                # the store maintains the quantized shadow incrementally
+                # (int8/int4 codes + scales, or pq codes + codebook); the
+                # flush consumes it instead of re-encoding the table
+                def _flush_fn(tbl, Vq, vaux, Qbuf, key, nv):
                     out = bounded_me_decode(
                         tbl, Qbuf, key, plan=plan, final_exact=True,
                         use_pallas=use_pallas, n_valid=nv,
-                        quantized=(V8, vscale), adaptive=adaptive)
+                        quantized=(Vq, vaux), adaptive=adaptive)
                     return (out if adaptive else (*out, None))
 
                 donate = 3
@@ -362,8 +395,8 @@ class CascadeExecutor:
         else:
             nv = np.int32(store.n_live)
         if self._use_shadow:
-            V8, vscale = store.quantized()
-            return (tbl, V8, vscale, Qbuf, key, nv)
+            Vq, vaux = store.quantized()
+            return (tbl, Vq, vaux, Qbuf, key, nv)
         return (tbl, Qbuf, key, nv)
 
     def dispatch(self, Qbuf: np.ndarray, key) -> Tuple[
@@ -468,9 +501,9 @@ class MIPSServeEngine:
     sublinear in d; best for high-dimensional embedding tables) or
     'hybrid' (the executor prices both candidate plans and serves the
     cheaper, row-preferred within a 10% multiply margin).  One
-    incompatibility, rejected at construction: a single-device int8
-    store shadow fixes the quantization-block geometry, so it serves
-    ``pull_mode='row'`` only.
+    incompatibility, rejected at construction: a single-device quantized
+    store shadow (int8/int4/pq) fixes the quantization-block geometry,
+    so it serves ``pull_mode='row'`` only.
 
     **Live corpora** (DESIGN.md §11): ``table`` may be a
     `repro.store.DynamicTableStore` (or `ShardedTableStore` for
@@ -486,7 +519,10 @@ class MIPSServeEngine:
     store's monotonic value range grows past the calibrated bound.
     Returned ids are the store's stable *external* ids.  The engine
     adopts the store's ``tile``/``block`` geometry and (for a
-    `DynamicTableStore` int8 shadow) its ``precision``.
+    `DynamicTableStore` quantized shadow — int8, int4 or pq) its
+    ``precision`` and pq codebook geometry; a pq plan's measured
+    ``quant_err`` is auto-calibrated on the served table unless passed
+    explicitly.
 
     Failure modes: queries must be (N,) float and finite — NaN/inf
     propagate into scores and poison the LRU line; `submit` raises on a
@@ -507,6 +543,8 @@ class MIPSServeEngine:
                  precision: str = "fp32", range_slack: float = 1.0,
                  adaptive: bool = False, bound: str = "hoeffding",
                  pull_mode: str = "row", coord_block: int = 128,
+                 quant_err: Optional[float] = None,
+                 pq_subdims: int = 8, pq_codes: int = 16,
                  seed: int = 0):
         self._exec = CascadeExecutor(
             table, K=K, eps=eps, delta=delta, value_range=value_range,
@@ -514,7 +552,8 @@ class MIPSServeEngine:
             mesh=mesh, model_axis=model_axis, n_valid=n_valid,
             use_pallas=use_pallas, precision=precision,
             range_slack=range_slack, adaptive=adaptive, bound=bound,
-            pull_mode=pull_mode, coord_block=coord_block)
+            pull_mode=pull_mode, coord_block=coord_block,
+            quant_err=quant_err, pq_subdims=pq_subdims, pq_codes=pq_codes)
         self.K = K
         self.batch_size = int(batch_size)
         self.deadline_s = float(deadline_ms) * 1e-3
@@ -873,6 +912,8 @@ class ServeRuntime:
                  precision: str = "fp32", range_slack: float = 1.0,
                  adaptive: bool = False, bound: str = "hoeffding",
                  pull_mode: str = "row", coord_block: int = 128,
+                 quant_err: Optional[float] = None,
+                 pq_subdims: int = 8, pq_codes: int = 16,
                  seed: int = 0):
         if batch_wait_ms <= 0:
             raise ValueError(f"batch_wait_ms must be > 0, "
@@ -893,7 +934,8 @@ class ServeRuntime:
             mesh=mesh, model_axis=model_axis, n_valid=n_valid,
             use_pallas=use_pallas, precision=precision,
             range_slack=range_slack, adaptive=adaptive, bound=bound,
-            pull_mode=pull_mode, coord_block=coord_block)
+            pull_mode=pull_mode, coord_block=coord_block,
+            quant_err=quant_err, pq_subdims=pq_subdims, pq_codes=pq_codes)
             for e in self.ladder.eps_values]
         ex0 = self._rung_execs[0]
         self.K = K

@@ -250,7 +250,7 @@ def _run_loop(args) -> None:
         else:
             store = DynamicTableStore(
                 table, block=block, capacity_slack=args.capacity_slack,
-                precision=args.precision)
+                precision=args.precision, pq_subdims=args.pq_subdims)
         table, n_valid = store, None
         if args.churn_rate > 0:
             churn = _make_churn(store, args.churn_rate,
@@ -260,7 +260,8 @@ def _run_loop(args) -> None:
                   mesh=mesh, recall_sample_rate=args.recall_rate,
                   cache_entries=args.cache_entries,
                   precision=args.precision, adaptive=args.adaptive,
-                  bound=args.bound, pull_mode=args.pull_mode)
+                  bound=args.bound, pull_mode=args.pull_mode,
+                  pq_subdims=args.pq_subdims)
     if not args.dynamic:
         common.update(block=block, n_valid=n_valid)
 
@@ -486,12 +487,21 @@ def _validate_args(ap: argparse.ArgumentParser, args) -> None:
     if not 0.0 <= args.repeat_rate <= 1.0:
         ap.error(f"--repeat-rate must be in [0, 1], got {args.repeat_rate}")
     if (args.pull_mode != "row" and args.dynamic
-            and args.precision == "int8" and args.shards <= 1):
+            and args.precision != "fp32" and args.shards <= 1):
         ap.error(f"--pull-mode {args.pull_mode} is incompatible with a "
-                 f"single-device int8 store (--dynamic --precision int8): "
-                 f"the store's incrementally maintained int8 shadow fixes "
-                 f"the quantization-block geometry, which only the 'row' "
-                 f"plan matches (use --pull-mode row, fp32, or --shards 2+)")
+                 f"single-device quantized store (--dynamic --precision "
+                 f"{args.precision}): the store's incrementally maintained "
+                 f"{args.precision} shadow fixes the quantization-block "
+                 f"geometry, which only the 'row' plan matches (use "
+                 f"--pull-mode row, fp32, or --shards 2+)")
+    if args.pq_subdims < 1:
+        ap.error(f"--pq-subdims must be >= 1, got {args.pq_subdims}")
+    if args.precision == "pq" and not (args.loop or args.runtime):
+        ap.error("--precision pq requires --loop or --runtime: pq plans "
+                 "need a measured quantization-error bound calibrated on "
+                 "the served table (DESIGN.md §10), which the serving "
+                 "engines perform at build time; the decode demo's "
+                 "trace-time plan has no table to calibrate on")
 
 
 def _build_parser() -> argparse.ArgumentParser:
@@ -505,9 +515,15 @@ def _build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--eps", type=float, default=0.1)
     ap.add_argument("--delta", type=float, default=0.1)
     ap.add_argument("--precision", default="fp32",
-                    choices=["fp32", "int8"],
-                    help="sampling arithmetic of the cascade "
-                         "(int8 = quantized pulls, widened bounds)")
+                    choices=["fp32", "int8", "int4", "pq"],
+                    help="sampling arithmetic of the cascade: int8/int4 "
+                         "quantized pulls under widened bounds (int4 "
+                         "nibble-packed, half the bytes), pq per-subspace "
+                         "codebook pulls under a measured error bound "
+                         "(DESIGN.md §10)")
+    ap.add_argument("--pq-subdims", type=int, default=8,
+                    help="product-quantization subspace width "
+                         "(--precision pq; must divide the block width)")
     ap.add_argument("--adaptive", action="store_true",
                     help="certify per-query early exit at round "
                          "boundaries (DESIGN.md §12); easy queries stop "

@@ -67,9 +67,12 @@ def prefill_step(params, cfg: ArchConfig, tokens, cache_len: int,
 def make_mips_plan(cfg: ArchConfig, K: int = 1):
     """Static BoundedME plan for the unembedding MIPS (trace-time).
 
-    ``cfg.mips_precision`` selects the sampling arithmetic: 'int8' runs
-    the cascade's pull rounds on quantized tiles under quantization-
-    widened bounds (DESIGN.md §10), with final scores rescored in fp32.
+    ``cfg.mips_precision`` selects the sampling arithmetic: 'int8' or
+    'int4' run the cascade's pull rounds on quantized tiles under
+    quantization-widened worst-case bounds (DESIGN.md §10), with final
+    scores rescored in fp32.  'pq' is not servable from this trace-time
+    helper — its measured error bound needs a table to calibrate on
+    (use the serving engines or `make_measured_plan`).
     """
     return make_plan(cfg.padded_vocab, cfg.d_model, K=K, eps=cfg.mips_eps,
                      delta=cfg.mips_delta, value_range=4.0,

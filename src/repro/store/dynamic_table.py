@@ -32,13 +32,16 @@ The contract that makes this work (normative in DESIGN.md §11):
     it.  ``value_abs_max`` is likewise monotonic — it only grows, so a
     schedule calibrated on it stays a valid bound until growth is
     observed (DESIGN.md §11 value-range monotonicity).
-  * **Dirty-tile re-quantization** (``precision='int8'``).  The store
-    maintains the tile-major int8 shadow (`repro.core.quantize`) the
-    fused kernel consumes; a mutation marks only its arm-tile dirty and
-    `flush_updates` re-quantizes just those (1, n_blocks, R, C) slabs.
-    Per-(tile, block) cells are quantized independently, so incremental
-    re-quantization is bit-identical to quantizing the whole updated
-    table from scratch.
+  * **Dirty-tile shadow maintenance** (``precision='int8'``/``'int4'``/
+    ``'pq'``).  The store maintains the tile-major quantized shadow
+    (`repro.core.quantize`) the fused kernel consumes; a mutation marks
+    only its arm-tile dirty and `flush_updates` re-encodes just those
+    (1, n_blocks, R, C) slabs.  Per-(tile, block) cells are quantized
+    independently — and pq code assignments are per-cell argmins against
+    a *frozen* table-level codebook — so incremental maintenance is
+    bit-identical to rebuilding the whole updated table's shadow from
+    scratch.  `refresh_codebook` is the one recalibrating pq mutation
+    (retrain + full re-encode, like `grow`).
 
 Mutations are *staged* host-side (`upsert` / `delete` / `append`) and
 applied in submission order by `flush_updates` — the engine drains them
@@ -62,7 +65,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.quantize import quantize_tiles
+from repro.core.quantize import (pq_encode, pq_train, quantize_tiles,
+                                 quantize_tiles_int4)
 
 __all__ = ["DynamicTableStore", "StoreFlushError"]
 
@@ -103,10 +107,58 @@ def _requant_tile(V8, vscale, slab, t):
     return V8, vscale
 
 
+@functools.partial(jax.jit, donate_argnums=(0, 1))
+def _requant_tile_int4(P4, vscale, slab, t):
+    """Donated re-quantization of one dirty arm-tile of the int4 shadow.
+
+    Same contract as `_requant_tile`, on the nibble-packed tier: the
+    spliced codes slab has stored width C/2 (`quantize_tiles_int4`).
+    Per-(tile, block) cells are independent, so the splice is
+    bit-identical to re-packing the whole updated table.
+    """
+    q4, scl = quantize_tiles_int4(slab)
+    P4 = jax.lax.dynamic_update_slice(P4, q4, (t, 0, 0, 0))
+    vscale = jax.lax.dynamic_update_slice(vscale, scl, (t, 0))
+    return P4, vscale
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _reencode_tile_pq(codes, slab, t, codebook):
+    """Donated re-encode of one dirty arm-tile against the FROZEN codebook.
+
+    pq assignments are per-cell independent argmins against table-level
+    codebook state (`pq_encode`), so splicing one tile's codes is
+    bit-identical to re-encoding the whole updated table against the same
+    codebook — the store-tier analogue of the int8 dirty-tile rule.  The
+    codebook itself never changes here; `refresh_codebook` is the one
+    recalibrating mutation (DESIGN.md §11).
+    """
+    c = pq_encode(slab, codebook)
+    return jax.lax.dynamic_update_slice(codes, c, (t, 0, 0, 0))
+
+
 @jax.jit
 def _quantize_full(V4):
     """Full-table tile quantization (store construction / `grow` only)."""
     return quantize_tiles(V4)
+
+
+@jax.jit
+def _quantize_full_int4(V4):
+    """Full-table int4 pack (store construction / `grow` only)."""
+    return quantize_tiles_int4(V4)
+
+
+@functools.partial(jax.jit, static_argnames=("n_codes", "subdims"))
+def _pq_train_full(V4, *, n_codes, subdims):
+    """Codebook training (construction / `refresh_codebook` only)."""
+    return pq_train(V4, n_codes=n_codes, subdims=subdims)
+
+
+@jax.jit
+def _pq_encode_full(V4, codebook):
+    """Full-table pq assignment (construction / `grow` / refresh only)."""
+    return pq_encode(V4, codebook)
 
 
 def _call_donated(fn, *args):
@@ -127,9 +179,15 @@ class DynamicTableStore:
     never change a compiled shape.  Deletes swap-fill from the tail
     (stable external ids via slot <-> id maps); writes are jit-donated
     `dynamic_update_slice` ops; every applied mutation bumps the
-    monotonic ``version``.  With ``precision='int8'`` the store also
-    maintains the tile-major int8 shadow with dirty-tile incremental
-    re-quantization (DESIGN.md §11).
+    monotonic ``version``.  On the quantized tiers the store also
+    maintains the tile-major shadow the fused kernel consumes, with
+    dirty-tile incremental maintenance (DESIGN.md §11): per-tile
+    (codes, scale) cells for 'int8', nibble-packed cells for 'int4', and
+    per-cell code assignments against a frozen table-level codebook for
+    'pq' — dirty tiles re-encode against that frozen codebook, so
+    incremental maintenance stays bit-identical to a fresh build;
+    `refresh_codebook` is the one recalibrating pq mutation (analogous
+    to `grow`).
 
     Args:
       table: optional (n0, N) initial rows (any float dtype); row i gets
@@ -140,8 +198,15 @@ class DynamicTableStore:
       capacity_slack: headroom factor used when ``capacity`` is omitted.
       tile / block: cascade geometry this store serves (must match the
         engine's plan; the engine adopts the store's values).
-      precision: 'fp32' or 'int8' — whether to maintain the quantized
-        shadow the int8 serving path consumes.
+      precision: 'fp32', 'int8', 'int4' or 'pq' — which quantized shadow
+        (if any) to maintain for the serving path.  'int4' needs an even
+        ``block``; 'pq' needs ``block`` divisible by ``pq_subdims``.
+      pq_subdims / pq_codes: pq codebook geometry (precision='pq' only).
+      codebook: optional pre-trained pq codebook
+        ((n_blocks, block/pq_subdims, pq_codes, pq_subdims) f32) to adopt
+        instead of training on the initial rows — how a fresh store
+        reproduces an existing store's shadow byte-for-byte (see
+        `snapshot`); ignored unless precision='pq'.
       ids: optional explicit external ids for the initial rows.
 
     Mutations stage host-side and apply on `flush_updates` in submission
@@ -152,9 +217,11 @@ class DynamicTableStore:
     def __init__(self, table=None, *, dim: Optional[int] = None,
                  capacity: Optional[int] = None, capacity_slack: float = 1.5,
                  tile: int = 8, block: int = 512, precision: str = "fp32",
+                 pq_subdims: int = 8, pq_codes: int = 16, codebook=None,
                  ids=None):
-        if precision not in ("fp32", "int8"):
-            raise ValueError(f"unknown precision {precision!r}")
+        if precision not in ("fp32", "int8", "int4", "pq"):
+            raise ValueError(f"unknown precision {precision!r} "
+                             f"(expected 'fp32', 'int8', 'int4' or 'pq')")
         if table is None:
             if dim is None:
                 raise ValueError("need `table` or `dim`")
@@ -175,6 +242,19 @@ class DynamicTableStore:
         self.n_blocks = -(-N // self.block)
         self._col_pad = self.n_blocks * self.block - N
         self.precision = precision
+        self.pq_subdims = int(pq_subdims)
+        self.pq_codes = int(pq_codes)
+        if precision == "int4" and self.block % 2 != 0:
+            raise ValueError(f"precision='int4' needs an even block, "
+                             f"got block={self.block}")
+        if precision == "pq":
+            if self.block % self.pq_subdims != 0:
+                raise ValueError(
+                    f"precision='pq' needs block divisible by pq_subdims, "
+                    f"got block={self.block}, pq_subdims={self.pq_subdims}")
+            if not 1 <= self.pq_codes <= 256:
+                raise ValueError(f"pq_codes must be in [1, 256], "
+                                 f"got {self.pq_codes}")
 
         self._host = np.zeros((self.capacity_rows, N), np.float32)
         self._host[:n0] = init
@@ -206,11 +286,30 @@ class DynamicTableStore:
         self.n_deletes = 0
         self.rows_written = 0
         self.tiles_requantized = 0
+        self.codebook_refreshes = 0
 
-        self._V8 = self._vscale = None
+        self._V8 = self._vscale = self._codebook = None
         if precision == "int8":
             self._V8, self._vscale = _quantize_full(self._tile_major_dev())
             jax.block_until_ready(self._vscale)
+        elif precision == "int4":
+            self._V8, self._vscale = _quantize_full_int4(
+                self._tile_major_dev())
+            jax.block_until_ready(self._vscale)
+        elif precision == "pq":
+            V4 = self._tile_major_dev()
+            S = self.block // self.pq_subdims
+            if codebook is not None:
+                cb = jnp.asarray(codebook, jnp.float32)
+                want = (self.n_blocks, S, self.pq_codes, self.pq_subdims)
+                if cb.shape != want:
+                    raise ValueError(f"codebook shape {cb.shape} != {want}")
+                self._codebook = cb
+            else:
+                self._codebook = _pq_train_full(V4, n_codes=self.pq_codes,
+                                                subdims=self.pq_subdims)
+            self._V8 = _pq_encode_full(V4, self._codebook)
+            jax.block_until_ready(self._V8)
 
     # ---- geometry helpers -----------------------------------------------
 
@@ -258,10 +357,56 @@ class DynamicTableStore:
         return self._dev
 
     def quantized(self):
-        """The int8 shadow ``(V8, vscale)``, or None on the fp32 path."""
-        if self.precision != "int8":
+        """The tier's shadow artifacts, or None on the fp32 path.
+
+        The 2-tuple `bounded_me_decode` takes as ``quantized=``:
+        ``(V8, vscale)`` for 'int8', ``(P4 packed, vscale)`` for 'int4',
+        ``(codes, codebook)`` for 'pq' (DESIGN.md §10/§11).
+        """
+        if self.precision == "fp32":
             return None
+        if self.precision == "pq":
+            return self._V8, self._codebook
         return self._V8, self._vscale
+
+    def codebook(self):
+        """The frozen pq codebook (table-level state), or None off-pq.
+
+        Inject it into a fresh store built from `snapshot()` rows
+        (``codebook=``) to reproduce this store's code shadow
+        byte-for-byte without retraining.
+        """
+        return self._codebook
+
+    def refresh_codebook(self) -> dict:
+        """Retrain the pq codebook on the current live table and re-encode.
+
+        The one *recalibrating* pq mutation (DESIGN.md §11): ordinary row
+        churn re-encodes dirty tiles against the frozen codebook (cheap,
+        bit-identical to a fresh build), which slowly degrades code
+        fidelity as the data distribution drifts; this O(n N) refresh
+        re-anchors it — analogous to `grow` in cost and in bumping
+        ``version`` so every consumer cache invalidates.  Engines serving
+        measured-error pq plans must re-measure ``quant_err`` afterwards
+        (the bound was calibrated against the old codebook).
+
+        Raises RuntimeError unless ``precision='pq'``.
+        """
+        if self.precision != "pq":
+            raise RuntimeError(
+                f"refresh_codebook() needs precision='pq', "
+                f"got {self.precision!r}")
+        t0 = time.perf_counter()
+        V4 = self._tile_major_dev()
+        self._codebook = _pq_train_full(V4, n_codes=self.pq_codes,
+                                        subdims=self.pq_subdims)
+        self._V8 = _pq_encode_full(V4, self._codebook)
+        jax.block_until_ready(self._V8)
+        self.codebook_refreshes += 1
+        self.version += 1
+        return {"version": self.version,
+                "refreshes": self.codebook_refreshes,
+                "seconds": time.perf_counter() - t0}
 
     def host_table(self) -> np.ndarray:
         """Host mirror of the device buffer (read-only view; always fresh)."""
@@ -288,6 +433,10 @@ class DynamicTableStore:
         A fresh store built as ``DynamicTableStore(rows, ids=ids,
         capacity=capacity_rows)`` reproduces this store's buffers
         byte-for-byte — the equivalence the bit-identity tests assert.
+        On the pq tier also pass ``codebook=self.codebook()``: codes are
+        assignments against table-level codebook state, so the fresh
+        store must adopt the same frozen codebook rather than retrain on
+        its (possibly churned) initial rows.
         """
         return self._host[:self.n_live].copy(), self.live_ids()
 
@@ -371,16 +520,18 @@ class DynamicTableStore:
         """Apply every staged mutation in submission order; returns stats.
 
         O(rows touched) device work: one donated row write per upsert,
-        two per interior delete, plus — on the int8 path — one dirty-tile
-        re-quantization per touched arm-tile (bit-identical to a full
-        re-quantization of the updated table).  Bumps ``version`` once
-        per applied mutation.  Returns ``{"applied", "version",
-        "requantized_tiles", "seconds"}``.
+        two per interior delete, plus — on the quantized tiers — one
+        dirty-tile shadow update per touched arm-tile (int8/int4
+        re-quantization, or pq re-encode against the frozen codebook;
+        each bit-identical to a full rebuild of the updated table).
+        Bumps ``version`` once per applied mutation.  Returns
+        ``{"applied", "version", "requantized_tiles", "seconds"}``.
 
         On a failing mutation (unknown delete, capacity exhausted) the
         failing op is dropped, the ops staged after it stay staged, and
-        the int8 shadow is still re-synchronized to everything already
-        applied before the error re-raises — the store is never torn.
+        the quantized shadow is still re-synchronized to everything
+        already applied before the error re-raises — the store is never
+        torn.
 
         If a ``fault_hook`` is installed it runs first and may raise
         `StoreFlushError` *before* anything is applied: the staged queue
@@ -412,17 +563,27 @@ class DynamicTableStore:
             self._staged = staged[applied + 1:] + self._staged
             raise
         finally:
-            if self.precision == "int8" and dirty:
+            if self.precision != "fp32" and dirty:
                 for t in sorted(dirty):
-                    self._V8, self._vscale = _call_donated(
-                        _requant_tile, self._V8, self._vscale,
-                        self._tile_slab(t), np.int32(t))
+                    if self.precision == "int8":
+                        self._V8, self._vscale = _call_donated(
+                            _requant_tile, self._V8, self._vscale,
+                            self._tile_slab(t), np.int32(t))
+                    elif self.precision == "int4":
+                        self._V8, self._vscale = _call_donated(
+                            _requant_tile_int4, self._V8, self._vscale,
+                            self._tile_slab(t), np.int32(t))
+                    else:   # pq: re-encode against the frozen codebook
+                        self._V8 = _call_donated(
+                            _reencode_tile_pq, self._V8,
+                            self._tile_slab(t), np.int32(t),
+                            self._codebook)
                 self.tiles_requantized += len(dirty)
             if applied:
                 jax.block_until_ready(self._dev)
         return {"applied": applied, "version": self.version,
-                "requantized_tiles": len(dirty) if self.precision == "int8"
-                else 0,
+                "requantized_tiles": len(dirty)
+                if self.precision != "fp32" else 0,
                 "seconds": time.perf_counter() - t0}
 
     def grow(self, capacity: int) -> None:
@@ -448,6 +609,14 @@ class DynamicTableStore:
         self._dev = jnp.asarray(self._host)
         if self.precision == "int8":
             self._V8, self._vscale = _quantize_full(self._tile_major_dev())
+        elif self.precision == "int4":
+            self._V8, self._vscale = _quantize_full_int4(
+                self._tile_major_dev())
+        elif self.precision == "pq":
+            # the codebook is frozen table-level state: growth re-encodes
+            # against it (only `refresh_codebook` ever retrains)
+            self._V8 = _pq_encode_full(self._tile_major_dev(),
+                                       self._codebook)
         self.version += 1
 
     # ---- observability ---------------------------------------------------
@@ -460,7 +629,12 @@ class DynamicTableStore:
         mutation stream.
         """
         return int(_write_row._cache_size() + _requant_tile._cache_size()
-                   + _quantize_full._cache_size())
+                   + _quantize_full._cache_size()
+                   + _requant_tile_int4._cache_size()
+                   + _quantize_full_int4._cache_size()
+                   + _reencode_tile_pq._cache_size()
+                   + _pq_train_full._cache_size()
+                   + _pq_encode_full._cache_size())
 
     def stats(self) -> dict:
         """Counters: live/capacity rows, version, churn totals."""
@@ -469,6 +643,7 @@ class DynamicTableStore:
                 "version": self.version, "upserts": self.n_upserts,
                 "deletes": self.n_deletes, "rows_written": self.rows_written,
                 "tiles_requantized": self.tiles_requantized,
+                "codebook_refreshes": self.codebook_refreshes,
                 "value_abs_max": self._vmax,
                 "flush_failures": self.n_flush_failures,
                 "pending": len(self._staged)}

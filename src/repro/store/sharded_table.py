@@ -24,9 +24,13 @@ never re-shards the table.  Zero-recompilation holds exactly as in the
 single-device store: compiled shapes depend only on the (static) capacity
 geometry, live counts ride in as a traced (shards,) vector.
 
-The int8 shadow is not maintained here — the sharded int8 path quantizes
-shard-locally in-jit per flush (DESIGN.md §10), which keeps quantization
-consistent with each shard's own rows at any live count.
+No quantized shadow (int8/int4/pq) is maintained here — the sharded
+quantized paths pack, train and encode shard-locally in-jit per flush
+(DESIGN.md §10), which keeps quantization consistent with each shard's
+own rows at any live count; the store therefore always reports
+``precision='fp32'`` and engines pass their own precision knob through
+`sharded_bounded_me_decode` instead (pq additionally needs a measured
+``quant_err`` calibrated via `measured_plan_quant_err`).
 """
 
 from __future__ import annotations

@@ -1,14 +1,16 @@
-"""Property-based differential fuzzer for the fused cascade (ISSUE 5 + 7).
+"""Property-based differential fuzzer for the fused cascade (ISSUE 5+7+8).
 
 Three independent implementations of the same flat-schedule program —
 the Pallas kernel (interpret mode), the `lax.scan`/dense jnp fallback,
 and the deliberately naive numpy oracle (`repro.kernels.ref`) — must
 agree across randomized geometry: ragged n and N, K > tile, caller
-padding via ``n_valid``, fp32/int8 precision, hoeffding/bernstein bound
-families, adaptive on/off, widened ``k_out``, and (ISSUE 7) the pull
-mode — 'row', 'coord' (narrow coordinate tiles, including d not a
-multiple of the feature-tile width) and 'hybrid' (whichever concrete
-mode the dispatcher resolves must itself pass the trio check).
+padding via ``n_valid``, the full fp32/int8/int4/pq precision ladder
+(ISSUE 8 — the oracle unpacks nibbles and walks pq LUTs with its own
+independent numpy arithmetic), hoeffding/bernstein bound families,
+adaptive on/off, widened ``k_out``, and (ISSUE 7) the pull mode —
+'row', 'coord' (narrow coordinate tiles, including d not a multiple of
+the feature-tile width) and 'hybrid' (whichever concrete mode the
+dispatcher resolves must itself pass the trio check).
 
 Agreement contract (the same one the PR-1/PR-3 suites pin):
 
@@ -35,9 +37,10 @@ from conftest import optional_hypothesis
 
 given, settings, st = optional_hypothesis()
 
-from repro.core.boundedme_jax import (_pad_operands, _tile_major,
-                                      bounded_me_decode, make_plan)
-from repro.core.quantize import quantize_blocks, quantize_tiles
+from repro.core.boundedme_jax import (_pad_operands, _quantize_table,
+                                      _tile_major, bounded_me_decode,
+                                      make_plan)
+from repro.core.quantize import quantize_blocks
 from repro.core.schedule import cert_coeffs, flatten_schedule
 from repro.kernels.ref import fused_cascade_ref
 
@@ -56,12 +59,19 @@ def _oracle_decode(V, Q, key, plan, *, k_out, n_valid, adaptive):
     cols = perm[flat.bpos]
     scale = np.float32((plan.n_blocks * C) / plan.N)
     cert = cert_coeffs(plan.schedule) if adaptive else None
-    vscale = qscale = None
-    if plan.precision == "int8":
-        V8, vscale = quantize_tiles(V4)
+    vscale = qscale = codebook = None
+    packed_int4 = False
+    if plan.precision in ("int8", "int4"):
+        Vq, vscale = _quantize_table(V4, plan)
         Q8, qscale = quantize_blocks(jnp.asarray(Qb))
-        V4, Qb = np.asarray(V8), np.asarray(Q8)
+        V4, Qb = np.asarray(Vq), np.asarray(Q8)
         vscale, qscale = np.asarray(vscale), np.asarray(qscale)
+        packed_int4 = plan.precision == "int4"
+    elif plan.precision == "pq":
+        # same deterministic trainer/encoder the kernel path uses — the
+        # oracle sees the identical codes + codebook, queries stay fp32
+        codes, cb = _quantize_table(V4, plan)
+        V4, codebook = np.asarray(codes), np.asarray(cb)
     else:
         V4 = np.asarray(V4)
     ids, vals, rounds = [], [], []
@@ -69,6 +79,7 @@ def _oracle_decode(V, Q, key, plan, *, k_out, n_valid, adaptive):
         out = fused_cascade_ref(
             V4, Qb[b], flat, cols, n_arms=plan.n, K=k_out,
             vscale=vscale, qscale=None if qscale is None else qscale[b],
+            codebook=codebook, packed_int4=packed_int4,
             n_valid=n_valid, cert=cert, k_cert=plan.K)
         ids.append(out[0])
         vals.append(out[1] * scale)
@@ -83,10 +94,14 @@ def _check_trio(n, N, K, tile, block, n_valid, precision, bound, adaptive,
     rng = np.random.default_rng(seed)
     V = rng.normal(size=(n, N)).astype(np.float32)
     Q = rng.normal(size=(B, N)).astype(np.float32)
+    # pq refuses to guess a worst-case bound (DESIGN.md §10); the trio
+    # contract only needs the *same* schedule on all three paths, so any
+    # fixed value works — honesty of the bound is the guarantee suite's job
+    quant_err = 0.05 if precision == "pq" else None
     plan = make_plan(n, N, K=K, eps=eps, delta=0.1, value_range=8.0,
                      tile=tile, block=block, precision=precision,
                      bound=bound, pull_mode=pull_mode,
-                     coord_block=coord_block)
+                     coord_block=coord_block, quant_err=quant_err)
     assert plan.pull_mode in ("row", "coord")   # hybrid resolves concrete
     k_out = min(plan.K + 2, plan.k_out_cap) if widen_k_out else plan.K
     key = jax.random.PRNGKey(seed)
@@ -128,6 +143,13 @@ GRID = [
     (77,   300,  4, 8,    32,  60,      "int8",    "bernstein", True,  3),
     (33,   257,  1, 8,    64,  33,      "fp32",    "bernstein", True,  1),
     (96,   512,  5, 8,    64,  3,       "fp32",    "hoeffding", True,  1),
+    # ISSUE 8: sub-byte tiers through the identical trio contract —
+    # nibble-packed int4 and LUT-walking pq, incl. ragged d (700, 257
+    # are not multiples of the block, exercising the zero-padded tail)
+    (96,   512,  2, 8,    64,  96,      "int4",    "hoeffding", True,  2),
+    (100,  700,  3, 8,    128, 87,      "int4",    "bernstein", True,  1),
+    (96,   512,  2, 8,    64,  96,      "pq",      "hoeffding", True,  2),
+    (33,   257,  1, 8,    64,  33,      "pq",      "bernstein", True,  1),
 ]
 
 
@@ -151,6 +173,12 @@ COORD_GRID = [
     (33,  257, 1, 8,    64,  33,  "fp32", "hoeffding", True,  1, "coord"),
     (96,  512, 2, 8,    128, 96,  "fp32", "hoeffding", False, 2, "hybrid"),
     (100, 700, 3, 8,    128, 87,  "int8", "hoeffding", True,  2, "hybrid"),
+    # ISSUE 8: int4/pq under narrow coordinate tiles (coord_block is the
+    # effective pull width — 96 % pq_subdims == 0, 64 even for nibbles)
+    (96,  512, 2, 8,    128, 96,  "int4", "hoeffding", True,  2, "coord"),
+    (77,  300, 4, 8,    96,  60,  "pq",   "bernstein", True,  3, "coord"),
+    (100, 700, 3, 8,    128, 87,  "int4", "hoeffding", True,  2, "hybrid"),
+    (96,  512, 2, 8,    64,  96,  "pq",   "hoeffding", True,  1, "hybrid"),
 ]
 
 
@@ -208,7 +236,7 @@ def test_fuzz_kernel_fallback_oracle_bitwise(data):
     tile = data.draw(st.sampled_from([4, 8]), label="tile")
     block = data.draw(st.sampled_from([32, 64, 128]), label="block")
     n_valid = data.draw(st.integers(1, n), label="n_valid")
-    precision = data.draw(st.sampled_from(["fp32", "int8"]),
+    precision = data.draw(st.sampled_from(["fp32", "int8", "int4", "pq"]),
                           label="precision")
     bound = data.draw(st.sampled_from(["hoeffding", "bernstein"]),
                       label="bound")

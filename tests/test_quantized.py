@@ -22,7 +22,10 @@ import pytest
 from repro.core import bounds
 from repro.core.boundedme_jax import (bounded_me_blocked, bounded_me_decode,
                                       make_plan)
-from repro.core.quantize import INT8_LEVELS, quantize_blocks, quantize_tiles
+from repro.core.quantize import (INT4_LEVELS, INT8_LEVELS, pack_int4,
+                                 pq_decode, pq_encode, pq_train,
+                                 quantize_blocks, quantize_tiles,
+                                 quantize_tiles_int4, unpack_int4)
 from repro.core.schedule import make_schedule
 
 
@@ -97,13 +100,83 @@ class TestQuantizationErrorBound:
 
     def test_plan_precision_validation(self):
         with pytest.raises(ValueError):
-            make_plan(64, 256, precision="int4")
+            make_plan(64, 256, precision="int2")
         plan = make_plan(64, 256, K=1, eps=0.2, value_range=8.0, block=64,
                          precision="int8")
         assert plan.precision == "int8" and plan.quant_err > 0
         assert plan.eps_effective >= plan.schedule.eps
         fp = make_plan(64, 256, K=1, eps=0.2, value_range=8.0, block=64)
         assert fp.quant_err == 0.0 and fp.eps_effective == fp.schedule.eps
+
+
+class TestCodecs:
+    """Property tests for the PR-8 int4/pq codecs (ISSUE 8 satellite)."""
+
+    def test_int4_pack_unpack_roundtrip_identity(self):
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.integers(-INT4_LEVELS, INT4_LEVELS + 1,
+                                     size=(3, 4, 8, 64)), jnp.int8)
+        np.testing.assert_array_equal(np.asarray(unpack_int4(pack_int4(x))),
+                                      np.asarray(x))
+        # packed layout: half the stored width, one byte per value pair
+        assert pack_int4(x).shape == (3, 4, 8, 32)
+
+    def test_int4_quantize_tiles_bounds_and_reconstruction(self):
+        rng = np.random.default_rng(1)
+        V4 = jnp.asarray(rng.normal(size=(4, 3, 8, 64)), jnp.float32)
+        P4, vscale = quantize_tiles_int4(V4)
+        assert P4.shape == (4, 3, 8, 32) and vscale.shape == (4, 3)
+        codes = np.asarray(unpack_int4(P4))
+        assert np.abs(codes).max() <= INT4_LEVELS
+        recon = codes.astype(np.float32) * np.asarray(vscale)[:, :, None,
+                                                              None]
+        err = np.abs(recon - np.asarray(V4))
+        # round-to-nearest on the 15-level grid: error <= scale / 2
+        assert np.all(err <= np.asarray(vscale)[:, :, None, None] / 2 + 1e-6)
+
+    def test_pq_assignment_is_argmin_distance(self):
+        rng = np.random.default_rng(2)
+        V4 = jnp.asarray(rng.normal(size=(2, 3, 8, 32)), jnp.float32)
+        cb = pq_train(V4, n_codes=8, subdims=8)
+        codes = np.asarray(pq_encode(V4, cb))
+        X = np.asarray(V4).reshape(2, 3, 8, 4, 8)        # (T, Bn, R, S, w)
+        C = np.asarray(cb)                                # (Bn, S, K, w)
+        for t in range(2):
+            for b in range(3):
+                for r in range(8):
+                    for s in range(4):
+                        d = ((X[t, b, r, s][None] - C[b, s]) ** 2).sum(-1)
+                        assert d[codes[t, b, r, s]] <= d.min() + 1e-5
+
+    def test_pq_codebook_determinism(self):
+        rng = np.random.default_rng(3)
+        V4 = jnp.asarray(rng.normal(size=(2, 2, 8, 64)), jnp.float32)
+        cb1 = pq_train(V4, n_codes=16, subdims=8)
+        cb2 = pq_train(V4, n_codes=16, subdims=8)
+        np.testing.assert_array_equal(np.asarray(cb1), np.asarray(cb2))
+        np.testing.assert_array_equal(np.asarray(pq_encode(V4, cb1)),
+                                      np.asarray(pq_encode(V4, cb2)))
+
+    def test_pq_reconstruction_error_monotone_in_subdims(self):
+        """Wider subspaces = fewer codebook cells per coordinate = coarser
+        reconstruction; mean-squared error must not improve as subdims
+        grows (same code budget spread over more dimensions)."""
+        rng = np.random.default_rng(4)
+        V4 = jnp.asarray(rng.normal(size=(3, 2, 8, 64)), jnp.float32)
+        errs = []
+        for w in (4, 8, 16):
+            cb = pq_train(V4, n_codes=16, subdims=w)
+            recon = pq_decode(pq_encode(V4, cb), cb)
+            errs.append(float(jnp.mean((recon - V4) ** 2)))
+        assert errs[0] <= errs[1] <= errs[2], errs
+
+    def test_pq_shape_validation(self):
+        V4 = jnp.zeros((1, 1, 8, 30), jnp.float32)
+        with pytest.raises(ValueError):
+            pq_train(V4, n_codes=8, subdims=8)    # 30 % 8 != 0
+        with pytest.raises(ValueError):
+            pq_train(jnp.zeros((1, 1, 8, 32), jnp.float32), n_codes=300,
+                     subdims=8)                   # codes don't fit uint8
 
 
 class TestBitExactness:

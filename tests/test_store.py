@@ -6,8 +6,9 @@ The store contract under test (DESIGN.md §11):
   table where a zeroed tombstone row would out-score every live arm;
 * an engine after an arbitrary upsert/delete burst is equivalent to a
   freshly built engine on the store's snapshot — byte-equal buffers
-  (incl. the int8 shadow) and bit-identical decode output under the same
-  key, in fp32 and int8;
+  (incl. the quantized shadow: int8/int4 codes+scales, pq codes against
+  the frozen codebook) and bit-identical decode output under the same
+  key, across the full fp32/int8/int4/pq precision ladder (ISSUE 8);
 * a mutation stream compiles **zero** new executables (the jit-cache
   assertion): live counts ride through the traced ``n_valid``, writes
   reuse one donated `dynamic_update_slice` executable.
@@ -163,6 +164,49 @@ class TestStoreSemantics:
         with pytest.raises(ValueError, match="row shape"):
             st.upsert(0, np.zeros(_DIM + 1, np.float32))
 
+    def test_pq_shadow_rejects_non_row_pull_mode(self):
+        """Mirror of the PR-7 int8 shadow rule for the pq tier: the
+        store's codes are encoded at the store's (tile, block) cells, so
+        a coord/hybrid plan (re-blocked feature axis) cannot be served
+        from the shadow — and the refusal must be actionable."""
+        st = DynamicTableStore(_table(), block=_BLOCK, precision="pq")
+        for mode in ("coord", "hybrid"):
+            with pytest.raises(ValueError, match="store shadow"):
+                _engine(st, pull_mode=mode)
+        eng = _engine(st)                  # row mode serves fine
+        ids, _ = _query(st, eng, np.ones(_DIM, np.float32))
+        assert ids.shape == (_K,)
+
+    def test_refresh_codebook_is_the_one_recalibrating_mutation(self):
+        """Dirty tiles re-encode against the *frozen* codebook;
+        `refresh_codebook` is the only mutation that retrains it — and
+        afterwards the store equals a fresh build (which trains on the
+        same bytes) without needing codebook injection."""
+        rng = np.random.default_rng(8)
+        st = DynamicTableStore(_table(), block=_BLOCK, precision="pq")
+        cb0 = np.asarray(st.codebook()).copy()
+        for i in range(6):                 # drift the row distribution
+            st.upsert(i, (3.0 * rng.normal(size=_DIM)).astype(np.float32))
+        st.flush_updates()
+        np.testing.assert_array_equal(np.asarray(st.codebook()), cb0)
+        v0 = st.version
+        info = st.refresh_codebook()
+        assert info["refreshes"] == st.codebook_refreshes == 1
+        assert st.version == v0 + 1        # engines recalibrate on this
+        assert not np.array_equal(np.asarray(st.codebook()), cb0)
+        rows, ids = st.snapshot()
+        fresh = DynamicTableStore(rows, ids=ids, capacity=st.capacity_rows,
+                                  block=_BLOCK, precision="pq")
+        ca, cba = st.quantized()
+        cf, cbf = fresh.quantized()
+        np.testing.assert_array_equal(np.asarray(ca), np.asarray(cf))
+        np.testing.assert_array_equal(np.asarray(cba), np.asarray(cbf))
+
+    def test_refresh_codebook_requires_pq(self):
+        st = DynamicTableStore(_table(n=8), block=_BLOCK, precision="int8")
+        with pytest.raises(RuntimeError, match="pq"):
+            st.refresh_codebook()
+
 
 class TestDeletedNeverReturned:
     """Property-style: across random interleavings, a dead id never comes
@@ -216,31 +260,37 @@ class TestBitIdentity:
             st.append(row)
         st.flush_updates()
 
-    @pytest.mark.parametrize("precision", ["fp32", "int8"])
+    @pytest.mark.parametrize("precision", ["fp32", "int8", "int4", "pq"])
     def test_decode_bit_identical_to_fresh_every_step(self, precision):
         rng = np.random.default_rng(3)
         st = DynamicTableStore(_table(), block=_BLOCK, capacity_slack=1.6,
                                precision=precision)
         plan = make_plan(st.capacity_rows, _DIM, K=_K, eps=1e-3, delta=0.05,
-                         value_range=16.0, block=_BLOCK, precision=precision)
+                         value_range=16.0, block=_BLOCK, precision=precision,
+                         quant_err=0.05 if precision == "pq" else None)
         key = jax.random.PRNGKey(9)
         Q = rng.normal(size=(2, _DIM)).astype(np.float32)
         for step in range(6):
             self._script(st, rng, step)
             rows, ids = st.snapshot()
-            fresh = DynamicTableStore(rows, ids=ids,
-                                      capacity=st.capacity_rows,
-                                      block=_BLOCK, precision=precision)
+            # the documented snapshot recipe: a pq rebuild must inherit
+            # the frozen codebook or its codes are a different encoding
+            fresh = DynamicTableStore(
+                rows, ids=ids, capacity=st.capacity_rows, block=_BLOCK,
+                precision=precision,
+                codebook=st.codebook() if precision == "pq" else None)
             np.testing.assert_array_equal(st.host_table(),
                                           fresh.host_table())
-            if precision == "int8":
-                # dirty-tile incremental requant == full requant, bytewise
-                V8a, va = st.quantized()
-                V8b, vb = fresh.quantized()
-                np.testing.assert_array_equal(np.asarray(V8a),
-                                              np.asarray(V8b))
-                np.testing.assert_array_equal(np.asarray(va),
-                                              np.asarray(vb))
+            if precision != "fp32":
+                # dirty-tile incremental re-encode == full rebuild,
+                # bytewise — int8/int4 (codes, scales) and pq (codes,
+                # codebook) alike
+                Vqa, auxa = st.quantized()
+                Vqb, auxb = fresh.quantized()
+                np.testing.assert_array_equal(np.asarray(Vqa),
+                                              np.asarray(Vqb))
+                np.testing.assert_array_equal(np.asarray(auxa),
+                                              np.asarray(auxb))
             kw = dict(plan=plan, final_exact=True, use_pallas=False,
                       n_valid=np.int32(st.n_live))
             ia, sa = bounded_me_decode(st.device_table(), Q, key,
@@ -250,12 +300,15 @@ class TestBitIdentity:
             np.testing.assert_array_equal(np.asarray(ia), np.asarray(ib))
             np.testing.assert_array_equal(np.asarray(sa), np.asarray(sb))
 
-    @pytest.mark.parametrize("precision", ["fp32", "int8"])
+    @pytest.mark.parametrize("precision", ["fp32", "int8", "int4", "pq"])
     def test_engine_matches_fresh_engine_after_burst(self, precision):
         rng = np.random.default_rng(4)
         st = DynamicTableStore(_table(scale=0.2), block=_BLOCK,
                                capacity_slack=1.6, precision=precision)
-        eng = _engine(st, eps=1e-3)
+        # pq: pin quant_err so the fresh engine (which would otherwise
+        # re-measure on the post-burst table) builds the identical plan
+        ekw = {"quant_err": 0.05} if precision == "pq" else {}
+        eng = _engine(st, eps=1e-3, **ekw)
         qs = rng.normal(size=(3, _DIM)).astype(np.float32)
         planted = []
         for b, q in enumerate(qs):       # planted winners: margins >> the
@@ -267,11 +320,11 @@ class TestBitIdentity:
         for step in range(4):
             self._script(st, rng, step, protect=planted, scale=0.2)
             rows, ids = st.snapshot()
-            fresh_store = DynamicTableStore(rows, ids=ids,
-                                            capacity=st.capacity_rows,
-                                            block=_BLOCK,
-                                            precision=precision)
-            fresh = _engine(fresh_store, eps=1e-3)
+            fresh_store = DynamicTableStore(
+                rows, ids=ids, capacity=st.capacity_rows, block=_BLOCK,
+                precision=precision,
+                codebook=st.codebook() if precision == "pq" else None)
+            fresh = _engine(fresh_store, eps=1e-3, **ekw)
             for q in qs:
                 ia, sa = _query(st, eng, q)
                 ib, sb = _query(fresh_store, fresh, q)
@@ -280,7 +333,7 @@ class TestBitIdentity:
 
 
 class TestZeroRecompilation:
-    @pytest.mark.parametrize("precision", ["fp32", "int8"])
+    @pytest.mark.parametrize("precision", ["fp32", "int8", "int4", "pq"])
     def test_mutation_stream_compiles_nothing_new(self, precision):
         rng = np.random.default_rng(5)
         st = DynamicTableStore(_table(), block=_BLOCK, capacity_slack=2.0,

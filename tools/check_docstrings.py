@@ -69,6 +69,14 @@ API_CONTRACTS = {
     "core/quantize.py": {
         "quantize_tiles": ["(n_tiles, n_blocks", "int8", "scale"],
         "quantize_blocks": ["int8", "block"],
+        "quantize_tiles_int4": ["nibble", "pack", "even", "scale"],
+        "pack_int4": ["low nibble", "high nibble", "C/2"],
+        "unpack_int4": ["sign", "inverse"],
+        "pq_train": ["codebook", "deterministic", "subdims", "lloyd"],
+        "pq_encode": ["codes", "uint8", "argmin", "codebook"],
+        "pq_tile_dot": ["lut", "kernel", "fallback"],
+        "measured_quant_err": ["safety", "max", "calibration",
+                               "block-mean"],
     },
     "core/schedule.py": {
         "flatten_schedule": ["FlatSchedule"],
@@ -91,11 +99,15 @@ API_CONTRACTS = {
     },
     "store/dynamic_table.py": {
         "DynamicTableStore": ["capacity", "version", "n_valid",
-                              "swap", "int8"],
+                              "swap", "int8", "int4", "pq"],
         "DynamicTableStore.flush_updates": ["rows touched", "version",
                                             "dirty"],
         "DynamicTableStore.delete": ["swap", "prefix"],
         "DynamicTableStore.grow": ["recompil"],
+        "DynamicTableStore.refresh_codebook": ["frozen", "retrain",
+                                               "version",
+                                               "recalibrat"],
+        "DynamicTableStore.codebook": ["frozen", "snapshot"],
     },
     "store/sharded_table.py": {
         "ShardedTableStore": ["shard", "n_valid", "capacity", "merge"],
