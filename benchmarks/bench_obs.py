@@ -1,0 +1,119 @@
+"""PR-9 observability overhead benchmark: off vs metrics vs metrics+trace.
+
+Emits the rows for ``BENCH_PR9.json`` (via `benchmarks.run`): the
+BENCH_PR6 bursty sustained workload served three times —
+
+  * ``off``           — ``metrics=null_registry()``, no tracer, no
+    flight recorder: every instrumentation call hits a shared no-op
+    stub (the hard-off baseline);
+  * ``metrics``       — the real `MetricsRegistry` (the default);
+  * ``metrics_trace`` — registry + `SpanTracer` + an armed (path-less)
+    `FlightRecorder`: the full observability surface.
+
+Each mode runs ``_REPEATS`` times on identical seeds; the medians of
+sustained throughput and answered p99 are compared against ``off`` as
+``overhead_pct`` — the ISSUE-9 acceptance gate is <= 3% on both.  A
+``micro`` table prices the raw instrumentation ops (labeled counter
+inc, histogram observe, null-stub inc) in ns/op for context: per
+dispatch the runtime makes tens of such calls against a multi-ms jitted
+kernel launch, so the end-to-end overhead should be noise.
+
+Geometry is CPU-feasible on purpose (see bench_runtime); the *ratio*
+between modes is the tracked quantity, not absolute rps.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.bench_runtime import (_DEADLINE_MS, _DIM, _EPS,
+                                      _EPS_FLOOR, _K, _LANES, _N_ARMS,
+                                      _QUEUE, _REQUESTS, _make_runtime)
+from repro.launch.serve import simulate_stream
+from repro.obs import (FlightRecorder, MetricsRegistry, SpanTracer,
+                       null_registry)
+
+_REPEATS = 3
+
+
+def _serve_once(table, queries, mode: str) -> dict:
+    tracer = flight = None
+    metrics = None                      # ServeRuntime builds its own
+    if mode == "off":
+        metrics = null_registry()
+    elif mode == "metrics_trace":
+        tracer = SpanTracer(max_requests=512, seed=0)
+        flight = FlightRecorder(capacity=256)      # armed, path-less
+    elif mode != "metrics":
+        raise ValueError(mode)
+    rt = _make_runtime(table, eps_floor=_EPS_FLOOR, metrics=metrics,
+                       tracer=tracer, flight=flight)
+    stats = simulate_stream(rt, queries, pattern="bursty", seed=1,
+                            open_loop=True, interarrival_ms=4.0)
+    return {"rps": float(stats["throughput_rps"]),
+            "p99_ms": float(stats["latency_ms"]["p99"])}
+
+
+def _micro() -> dict:
+    """ns/op of the raw instrumentation calls (hot-path price list)."""
+    reg = MetricsRegistry()
+    c = reg.counter("bench_total", labels=("outcome",))
+    h = reg.histogram("bench_ms")
+    nc = null_registry().counter("bench_total", labels=("outcome",))
+    n = 100_000
+    out = {}
+    for name, fn in (("counter_inc_labeled", lambda: c.inc(outcome="ok")),
+                     ("histogram_observe", lambda: h.observe(3.7)),
+                     ("null_inc", lambda: nc.inc(outcome="ok"))):
+        t0 = time.perf_counter()
+        for _ in range(n):
+            fn()
+        out[name + "_ns"] = (time.perf_counter() - t0) / n * 1e9
+    return out
+
+
+def run(csv: bool = True) -> dict:
+    """Run the three modes; returns the BENCH_PR9 payload dict."""
+    rng = np.random.default_rng(0)
+    table = rng.normal(size=(_N_ARMS, _DIM)).astype(np.float32)
+    queries = rng.normal(size=(_REQUESTS, _DIM)).astype(np.float32)
+
+    out = {"geometry": {"n": _N_ARMS, "N": _DIM, "K": _K,
+                        "requests": _REQUESTS, "lanes": _LANES,
+                        "queue_capacity": _QUEUE, "eps": _EPS,
+                        "eps_floor": _EPS_FLOOR,
+                        "deadline_ms": _DEADLINE_MS,
+                        "repeats": _REPEATS},
+           "modes": [], "micro": _micro()}
+
+    base_rps = base_p99 = None
+    for mode in ("off", "metrics", "metrics_trace"):
+        runs = [_serve_once(table, queries, mode)
+                for _ in range(_REPEATS)]
+        rps = float(np.median([r["rps"] for r in runs]))
+        p99 = float(np.median([r["p99_ms"] for r in runs]))
+        row = {"mode": mode, "sustained_rps": rps, "p99_ms": p99,
+               "runs": runs}
+        if mode == "off":
+            base_rps, base_p99 = rps, p99
+        else:
+            row["throughput_overhead_pct"] = \
+                (base_rps - rps) / base_rps * 100.0
+            row["p99_overhead_pct"] = (p99 - base_p99) / base_p99 * 100.0
+        out["modes"].append(row)
+        if csv:
+            extra = ("" if mode == "off" else
+                     f",tput_ovh={row['throughput_overhead_pct']:+.2f}%,"
+                     f"p99_ovh={row['p99_overhead_pct']:+.2f}%")
+            print(f"obs_{mode},{rps:.0f}rps,p99={p99:.2f}ms{extra}")
+    if csv:
+        m = out["micro"]
+        print("micro," + ",".join(f"{k}={v:.0f}" for k, v in m.items()))
+    return out
+
+
+if __name__ == "__main__":
+    import json
+    print(json.dumps(run(), indent=2))

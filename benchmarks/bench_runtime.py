@@ -49,7 +49,8 @@ _DEADLINE_MS = 200.0
 
 
 def _make_runtime(table, *, eps_floor=None, injector=None,
-                  queue_capacity=_QUEUE) -> ServeRuntime:
+                  queue_capacity=_QUEUE, metrics=None, tracer=None,
+                  flight=None) -> ServeRuntime:
     rt = ServeRuntime(
         table, K=_K, eps=_EPS, delta=0.1, eps_floor=eps_floor,
         degrade_rungs=4, lanes=_LANES, batch_wait_ms=1.0,
@@ -57,7 +58,8 @@ def _make_runtime(table, *, eps_floor=None, injector=None,
         max_retries=2, retry_backoff_ms=0.5, fault_injector=injector,
         classes={"default": PriorityClass("default", priority=1,
                                           deadline_ms=_DEADLINE_MS)},
-        cache_entries=0, recall_sample_rate=0.05)
+        cache_entries=0, recall_sample_rate=0.05,
+        metrics=metrics, tracer=tracer, flight=flight)
     rt.warmup()                # compile off the virtual clock
     return rt
 

@@ -38,6 +38,8 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.obs.metrics import MetricsRegistry
+
 __all__ = [
     "STATUSES", "PriorityClass", "ServeResult", "Ticket",
     "AdmissionController", "DegradationLadder",
@@ -141,7 +143,8 @@ class AdmissionController:
     def __init__(self, dim: int, *, queue_capacity: int = 64,
                  classes: Optional[Dict[str, PriorityClass]] = None,
                  default_class: str = "default",
-                 quarantine_capacity: int = 256):
+                 quarantine_capacity: int = 256,
+                 metrics: Optional[MetricsRegistry] = None):
         if queue_capacity < 1:
             raise ValueError(f"queue_capacity must be >= 1, "
                              f"got {queue_capacity}")
@@ -155,15 +158,79 @@ class AdmissionController:
         self._seq = 0
         self._quarantine: "OrderedDict[bytes, str]" = OrderedDict()
         self.quarantine_capacity = int(quarantine_capacity)
-        self.n_admitted = 0
-        self.n_rejected_poison = 0
-        self.n_rejected_quarantined = 0
-        self.n_overloaded = 0
-        self.n_displaced = 0
-        self.n_expired = 0
         self.peak_depth = 0
         self._depth_sum = 0.0
         self._depth_samples = 0
+        # counters live on the obs registry (shared with the runtime when
+        # it passes its own); the legacy n_* attributes read through
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        m = self.metrics
+        self._c_admitted = m.counter(
+            "admission_admitted_total", "Tickets enqueued.")
+        self._c_rejected = m.counter(
+            "admission_rejected_total",
+            "Requests refused at the door, by reason.", ("reason",))
+        self._c_rejected.seed(reason="poison")
+        self._c_rejected.seed(reason="quarantined")
+        self._c_overloaded = m.counter(
+            "admission_overloaded_total",
+            "Requests refused because the queue was full.")
+        self._c_displaced = m.counter(
+            "admission_displaced_total",
+            "Queued sheddable tickets evicted for higher-priority work.")
+        self._c_expired = m.counter(
+            "admission_expired_total",
+            "Tickets shed at batch assembly past their class deadline.")
+        g = m.gauge("admission_queue_depth",
+                    "Tickets currently queued.")
+        g.set_fn(lambda: len(self._heap))
+        g = m.gauge("admission_peak_depth",
+                    "High-water mark of the queue depth.")
+        g.set_fn(lambda: self.peak_depth)
+        g = m.gauge("admission_quarantine_entries",
+                    "Fingerprints currently quarantined.")
+        g.set_fn(lambda: len(self._quarantine))
+
+    # ---- legacy counter surface (registry-backed) ------------------------
+
+    @property
+    def n_admitted(self) -> int:
+        """Tickets enqueued."""
+        return int(self._c_admitted.total())
+
+    @property
+    def n_rejected_poison(self) -> int:
+        """Poison (NaN/Inf/shape) rejections (see `count_poison`)."""
+        return int(self._c_rejected.get(reason="poison"))
+
+    @property
+    def n_rejected_quarantined(self) -> int:
+        """Quarantine-hit rejections."""
+        return int(self._c_rejected.get(reason="quarantined"))
+
+    @property
+    def n_overloaded(self) -> int:
+        """Full-queue refusals (no displaceable victim)."""
+        return int(self._c_overloaded.total())
+
+    @property
+    def n_displaced(self) -> int:
+        """Queued tickets evicted by higher-priority arrivals."""
+        return int(self._c_displaced.total())
+
+    @property
+    def n_expired(self) -> int:
+        """Tickets shed past their deadline at batch assembly."""
+        return int(self._c_expired.total())
+
+    def count_poison(self) -> None:
+        """Count one poison rejection.
+
+        `validate` classifies but doesn't count — the runtime decides
+        what a failed validation *means* (it may not even be a request),
+        so it calls this when it actually refuses one.
+        """
+        self._c_rejected.inc(reason="poison")
 
     # ---- validation / quarantine ----------------------------------------
 
@@ -236,7 +303,7 @@ class AdmissionController:
         """
         reason = self.quarantined(ticket.fingerprint)
         if reason is not None:
-            self.n_rejected_quarantined += 1
+            self._c_rejected.inc(reason="quarantined")
             return ServeResult(status="rejected", cls=ticket.cls.name,
                                reason=f"quarantined: {reason}"), []
         displaced: List[Tuple[Ticket, ServeResult]] = []
@@ -252,20 +319,20 @@ class AdmissionController:
                 if (pri, t_sub, seq) > (vp, vt, vs):
                     victim_i = i
             if victim_i is None:
-                self.n_overloaded += 1
+                self._c_overloaded.inc()
                 return ServeResult(
                     status="overloaded", cls=ticket.cls.name,
                     reason=f"queue full ({self.queue_capacity})"), []
             _, _, _, victim = self._heap.pop(victim_i)
             heapq.heapify(self._heap)
-            self.n_displaced += 1
+            self._c_displaced.inc()
             displaced.append((victim, ServeResult(
                 status="overloaded", cls=victim.cls.name,
                 reason="displaced by higher-priority request")))
         heapq.heappush(self._heap, (ticket.cls.priority, ticket.t_submit,
                                     self._seq, ticket))
         self._seq += 1
-        self.n_admitted += 1
+        self._c_admitted.inc()
         self.peak_depth = max(self.peak_depth, len(self._heap))
         return None, displaced
 
@@ -290,7 +357,7 @@ class AdmissionController:
         while self._heap and len(batch) < max_n:
             _, _, _, tk = heapq.heappop(self._heap)
             if expire and now > tk.t_deadline:
-                self.n_expired += 1
+                self._c_expired.inc()
                 expired.append((tk, ServeResult(
                     status="overloaded", cls=tk.cls.name,
                     reason="deadline",

@@ -48,6 +48,8 @@ import numpy as np
 
 from repro.launch.admission import (AdmissionController, DegradationLadder,
                                     PriorityClass, ServeResult, Ticket)
+from repro.obs.metrics import (PULL_FRAC_BUCKETS, MetricsRegistry,
+                               summarize_latencies)
 
 __all__ = ["QuantizedLRU", "CascadeExecutor", "MIPSServeEngine",
            "ServeRuntime"]
@@ -158,7 +160,9 @@ class CascadeExecutor:
                  adaptive: bool = False, bound: str = "hoeffding",
                  pull_mode: str = "row", coord_block: int = 128,
                  quant_err: Optional[float] = None,
-                 pq_subdims: int = 8, pq_codes: int = 16):
+                 pq_subdims: int = 8, pq_codes: int = 16,
+                 metrics: Optional[MetricsRegistry] = None,
+                 metrics_labels: Optional[Dict[str, str]] = None):
         from repro.core.mips import table_abs_max
         from repro.store import DynamicTableStore, ShardedTableStore
 
@@ -233,7 +237,28 @@ class CascadeExecutor:
                 f"(its quantization cells are fixed at the store's block "
                 f"width); use pull_mode='row', an fp32 store, or a "
                 f"ShardedTableStore")
-        self.n_recalibrations = 0
+        # cascade_* metrics: one labeled row per executor identity so a
+        # ladder of rung executors shares metric families without
+        # colliding (the runtime adds a "rung" label via metrics_labels)
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        lbl = {"precision": str(self.precision),
+               "pull_mode": str(self.pull_mode),
+               "eps": f"{self.eps:.6g}"}
+        for k, v in (metrics_labels or {}).items():
+            lbl[str(k)] = str(v)
+        self._mlabels = lbl
+        keys = tuple(lbl)
+        self._c_dispatch = self.metrics.counter(
+            "cascade_dispatches_total",
+            "Fused-cascade kernel launches (includes warmup).", keys)
+        self._c_recal = self.metrics.counter(
+            "cascade_recalibrations_total",
+            "Plan re-derivations triggered by store growth.", keys)
+        self._h_dispatch = self.metrics.histogram(
+            "cascade_dispatch_ms",
+            "Measured blocking compute time per dispatch (ms).", keys)
+        self._c_dispatch.seed(**lbl)
+        self._c_recal.seed(**lbl)
         self._seen_version = (0 if self.store is None
                               else self.store.version)
         self._table_np = None   # host copy, materialized only for recall
@@ -256,6 +281,11 @@ class CascadeExecutor:
         elif mesh is None:
             nv = n if n_valid is None else n_valid
             self._nv_static = np.int32(nv)
+
+    @property
+    def n_recalibrations(self) -> int:
+        """Schedule re-derivations observed (registry-backed)."""
+        return int(self._c_recal.get(**self._mlabels))
 
     def _build(self, value_range: float) -> None:
         """(Re)build the static plan + jitted flush fn for a value range.
@@ -381,7 +411,8 @@ class CascadeExecutor:
             # corpus recalibrates O(log growth) times, not per update
             self._build(needed * self._range_slack)
             rebuilt += 1
-        self.n_recalibrations += rebuilt
+        if rebuilt:
+            self._c_recal.inc(rebuilt, **self._mlabels)
         return rebuilt
 
     def _flush_args(self, Qbuf, key):
@@ -418,6 +449,8 @@ class CascadeExecutor:
                 *self._flush_args(jnp.asarray(Qbuf), key))
             jax.block_until_ready(scores)
         dt = time.perf_counter() - t0
+        self._c_dispatch.inc(**self._mlabels)
+        self._h_dispatch.observe(dt * 1e3, **self._mlabels)
         return (np.asarray(ids), np.asarray(scores),
                 None if rounds is None else np.asarray(rounds), dt)
 
@@ -443,18 +476,6 @@ class CascadeExecutor:
         if self.store is not None:
             return self.store.external_ids(slots)
         return slots.copy()
-
-
-def _percentiles(lat_s: List[float]) -> dict:
-    """mean/p50/p95/p99/max of a latency list, in milliseconds."""
-    lat = np.asarray(lat_s, np.float64) * 1e3
-    if not lat.size:
-        return {"mean": 0.0, "p50": 0.0, "p95": 0.0, "p99": 0.0, "max": 0.0}
-    return {"mean": float(lat.mean()),
-            "p50": float(np.percentile(lat, 50)),
-            "p95": float(np.percentile(lat, 95)),
-            "p99": float(np.percentile(lat, 99)),
-            "max": float(lat.max())}
 
 
 class MIPSServeEngine:
@@ -545,7 +566,9 @@ class MIPSServeEngine:
                  pull_mode: str = "row", coord_block: int = 128,
                  quant_err: Optional[float] = None,
                  pq_subdims: int = 8, pq_codes: int = 16,
-                 seed: int = 0):
+                 seed: int = 0,
+                 metrics: Optional[MetricsRegistry] = None):
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
         self._exec = CascadeExecutor(
             table, K=K, eps=eps, delta=delta, value_range=value_range,
             qmax_hint=qmax_hint, tile=tile, block=block, lanes=batch_size,
@@ -553,7 +576,8 @@ class MIPSServeEngine:
             use_pallas=use_pallas, precision=precision,
             range_slack=range_slack, adaptive=adaptive, bound=bound,
             pull_mode=pull_mode, coord_block=coord_block,
-            quant_err=quant_err, pq_subdims=pq_subdims, pq_codes=pq_codes)
+            quant_err=quant_err, pq_subdims=pq_subdims, pq_codes=pq_codes,
+            metrics=self.metrics)
         self.K = K
         self.batch_size = int(batch_size)
         self.deadline_s = float(deadline_ms) * 1e-3
@@ -572,15 +596,75 @@ class MIPSServeEngine:
         self._lat: List[float] = []
         self._recalls: List[float] = []
         self._rounds: List[int] = []   # adaptive: per-query exit rounds
-        self.n_requests = 0
-        self.n_cache_hits = 0
-        self.n_batches = 0
-        self.n_deadline_flushes = 0
-        self.n_full_flushes = 0
-        self.n_updates = 0
-        self.n_update_flushes = 0
+        if self._store is not None:
+            self.metrics.adopt(self._store.metrics)
+        self._c_requests = self.metrics.counter(
+            "serve_requests_total", "Requests submitted.")
+        self._c_cache_hits = self.metrics.counter(
+            "serve_cache_hits_total", "Requests answered from the LRU.")
+        self._c_batches = self.metrics.counter(
+            "serve_batches_total", "Micro-batch flushes by trigger.",
+            ("trigger",))
+        self._c_batches.seed(trigger="full")
+        self._c_batches.seed(trigger="deadline")
+        self._c_update_rows = self.metrics.counter(
+            "serve_update_rows_total", "Store mutations applied.")
+        self._c_update_flushes = self.metrics.counter(
+            "serve_update_flushes_total", "Store flush_updates calls.")
+        self._h_latency = self.metrics.histogram(
+            "serve_latency_ms", "Per-request latency (ms), cache hits at 0.")
+        self._h_occupancy = self.metrics.histogram(
+            "serve_batch_occupancy", "Filled lanes per micro-batch flush.",
+            buckets=(1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0))
+        self.metrics.gauge(
+            "serve_pending", "Requests accepted but not yet served.",
+        ).set_fn(lambda: len(self._pending))
+        self.metrics.gauge(
+            "serve_cache_entries", "Live LRU cache entries.",
+        ).set_fn(lambda: len(self.cache))
+        #: plain dispatch sequence for PRNG fold keys — deliberately NOT
+        #: registry-backed so metric wiring (or the NullRegistry hard-off
+        #: switch) can never perturb sampling keys
+        self._batch_seq = 0
         self._update_time_s = 0.0
         self._occupancy: List[int] = []
+
+    # ---- legacy counter surface (registry-backed) ------------------------
+
+    @property
+    def n_requests(self) -> int:
+        """Requests submitted (registry-backed)."""
+        return int(self._c_requests.total())
+
+    @property
+    def n_cache_hits(self) -> int:
+        """Cache-answered requests (registry-backed)."""
+        return int(self._c_cache_hits.total())
+
+    @property
+    def n_batches(self) -> int:
+        """Micro-batch flushes, all triggers (registry-backed)."""
+        return int(self._c_batches.total())
+
+    @property
+    def n_full_flushes(self) -> int:
+        """Flushes triggered by a full batch (registry-backed)."""
+        return int(self._c_batches.get(trigger="full"))
+
+    @property
+    def n_deadline_flushes(self) -> int:
+        """Flushes triggered by the batch deadline (registry-backed)."""
+        return int(self._c_batches.get(trigger="deadline"))
+
+    @property
+    def n_updates(self) -> int:
+        """Store mutations applied (registry-backed)."""
+        return int(self._c_update_rows.total())
+
+    @property
+    def n_update_flushes(self) -> int:
+        """Store flush_updates calls (registry-backed)."""
+        return int(self._c_update_flushes.total())
 
     # ---- executor delegation (back-compat surface) -----------------------
 
@@ -635,7 +719,7 @@ class MIPSServeEngine:
         now = time.perf_counter() if now is None else now
         rid = self._next_id
         self._next_id += 1
-        self.n_requests += 1
+        self._c_requests.inc()
         # lookups are salted with the *current* (table version, K): a
         # result cached before an update can never answer a post-update
         # query, even if an invalidation were missed
@@ -644,8 +728,9 @@ class MIPSServeEngine:
             hit = self.cache.get(self._salted(ck))
             if hit is not None:
                 self._results[rid] = hit
-                self.n_cache_hits += 1
+                self._c_cache_hits.inc()
                 self._lat.append(0.0)
+                self._h_latency.observe(0.0)
                 return rid
         self._pending.append(_Pending(rid, q, now, ck))
         return rid
@@ -674,10 +759,7 @@ class MIPSServeEngine:
             aged = now - self._pending[0].t_submit >= self.deadline_s
             if not (full or aged):
                 break
-            if full:
-                self.n_full_flushes += 1
-            else:
-                self.n_deadline_flushes += 1
+            self._c_batches.inc(trigger="full" if full else "deadline")
             ids, dt = self._flush(now + busy)
             done.extend(ids)
             busy += dt
@@ -693,7 +775,7 @@ class MIPSServeEngine:
         done: List[int] = []
         busy = 0.0
         while self._pending:
-            self.n_deadline_flushes += 1
+            self._c_batches.inc(trigger="deadline")
             ids, dt = self._flush(now + busy)
             done.extend(ids)
             busy += dt
@@ -727,8 +809,8 @@ class MIPSServeEngine:
             t0 = time.perf_counter()
             info = store.flush_updates()
             applied = info["applied"]
-            self.n_updates += applied
-            self.n_update_flushes += 1
+            self._c_update_rows.inc(applied)
+            self._c_update_flushes.inc()
             self._update_time_s += time.perf_counter() - t0
         if store.version != self._version:
             # covers staged mutations AND out-of-band ones (grow())
@@ -745,7 +827,9 @@ class MIPSServeEngine:
         Qbuf = np.zeros((self.batch_size, self.N), np.float32)
         for i, p in enumerate(batch):
             Qbuf[i] = p.q
-        key = jax.random.fold_in(self._key, self.n_batches)
+        # fold on the plain dispatch sequence, NOT a registry counter:
+        # sampling keys must be invariant to observability wiring
+        key = jax.random.fold_in(self._key, self._batch_seq)
         ids, scores, rounds, dt = self._exec.dispatch(Qbuf, key)
         ids = ids[:len(batch)]
         scores = scores[:len(batch)]
@@ -754,8 +838,9 @@ class MIPSServeEngine:
             # shard's exit round for the real (non-padding) batch rows
             self._rounds.extend(
                 rounds[:len(batch)].reshape(-1).tolist())
-        self.n_batches += 1
+        self._batch_seq += 1
         self._occupancy.append(len(batch))
+        self._h_occupancy.observe(len(batch))
         done = []
         for i, p in enumerate(batch):
             # store-backed engines answer with stable external ids, never
@@ -768,6 +853,7 @@ class MIPSServeEngine:
                 # version (not a dead pre-update key)
                 self.cache.put(self._salted(p.cache_key), res)
             self._lat.append((now - p.t_submit) + dt)
+            self._h_latency.observe(((now - p.t_submit) + dt) * 1e3)
             if (self._recall_rate > 0.0
                     and self._recall_rng.random() < self._recall_rate):
                 self._recalls.append(self._exec.recall_of(p.q, ids[i]))
@@ -813,7 +899,6 @@ class MIPSServeEngine:
         latency_ms percentiles include cache hits (latency 0); recall is
         over the sampled fraction only (``nan`` when nothing was sampled).
         """
-        lat = np.asarray(self._lat, np.float64) * 1e3
         occ = np.asarray(self._occupancy, np.float64)
         return {
             "requests": self.n_requests,
@@ -828,11 +913,8 @@ class MIPSServeEngine:
                       "hit_rate": (self.cache.hits
                                    / max(1, self.cache.hits
                                          + self.cache.misses))},
-            "latency_ms": {
-                "mean": float(lat.mean()) if lat.size else 0.0,
-                "p50": float(np.percentile(lat, 50)) if lat.size else 0.0,
-                "p95": float(np.percentile(lat, 95)) if lat.size else 0.0,
-                "max": float(lat.max()) if lat.size else 0.0},
+            "latency_ms": summarize_latencies(
+                self._lat, keys=("mean", "p50", "p95", "max")),
             "recall": {"samples": len(self._recalls),
                        "mean": (float(np.mean(self._recalls))
                                 if self._recalls else float("nan"))},
@@ -914,7 +996,9 @@ class ServeRuntime:
                  pull_mode: str = "row", coord_block: int = 128,
                  quant_err: Optional[float] = None,
                  pq_subdims: int = 8, pq_codes: int = 16,
-                 seed: int = 0):
+                 seed: int = 0,
+                 metrics: Optional[MetricsRegistry] = None,
+                 tracer=None, flight=None):
         if batch_wait_ms <= 0:
             raise ValueError(f"batch_wait_ms must be > 0, "
                              f"got {batch_wait_ms}")
@@ -922,6 +1006,11 @@ class ServeRuntime:
             raise ValueError(f"lanes must be >= 1, got {lanes}")
         if max_retries < 0:
             raise ValueError(f"max_retries must be >= 0, got {max_retries}")
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        #: optional `repro.obs.trace.SpanTracer` / `repro.obs.flight.
+        #: FlightRecorder`; None disables that pillar entirely
+        self.tracer = tracer
+        self.flight = flight
         self.ladder = DegradationLadder(eps, eps_floor, rungs=degrade_rungs,
                                         start=degrade_start)
         # pull_mode='hybrid' resolves per rung: relaxed-eps rungs have
@@ -935,8 +1024,9 @@ class ServeRuntime:
             use_pallas=use_pallas, precision=precision,
             range_slack=range_slack, adaptive=adaptive, bound=bound,
             pull_mode=pull_mode, coord_block=coord_block,
-            quant_err=quant_err, pq_subdims=pq_subdims, pq_codes=pq_codes)
-            for e in self.ladder.eps_values]
+            quant_err=quant_err, pq_subdims=pq_subdims, pq_codes=pq_codes,
+            metrics=self.metrics, metrics_labels={"rung": str(i)})
+            for i, e in enumerate(self.ladder.eps_values)]
         ex0 = self._rung_execs[0]
         self.K = K
         self.lanes = int(lanes)
@@ -948,11 +1038,15 @@ class ServeRuntime:
                                    else float(dispatch_timeout_ms) * 1e-3)
         self.admission = AdmissionController(
             ex0.N, queue_capacity=queue_capacity, classes=classes,
-            default_class=default_class)
+            default_class=default_class, metrics=self.metrics)
         self.injector = fault_injector
         self._store = ex0.store
+        if fault_injector is not None:
+            self.metrics.adopt(fault_injector.metrics)
         if fault_injector is not None and self._store is not None:
             fault_injector.attach(self._store)
+        if self._store is not None:
+            self.metrics.adopt(self._store.metrics)
         self._version = 0 if self._store is None else self._store.version
         self._key = jax.random.PRNGKey(seed)
         self.cache = QuantizedLRU(cache_entries, cache_resolution)
@@ -964,22 +1058,152 @@ class ServeRuntime:
         self._occupancy: List[int] = []
         self._pull_fracs: List[float] = []
         self._recalls: List[float] = []
-        self.outcomes = {s: 0 for s in
-                         ("ok", "degraded", "rejected", "overloaded",
+        self._c_requests = self.metrics.counter(
+            "serve_requests_total", "Requests submitted, by class.",
+            ("priority_class",))
+        self._c_outcomes = self.metrics.counter(
+            "serve_outcomes_total",
+            "Terminal request outcomes (the typed ServeResult statuses).",
+            ("outcome",))
+        for s in ("ok", "degraded", "rejected", "overloaded", "failed"):
+            self._c_outcomes.seed(outcome=s)
+        self._c_class = self.metrics.counter(
+            "serve_class_events_total",
+            "Per-priority-class accounting events.",
+            ("priority_class", "event"))
+        self._c_rung = self.metrics.counter(
+            "serve_rung_served_total",
+            "Requests answered per degradation-ladder rung.", ("rung",))
+        for i in range(self.ladder.n_rungs):
+            self._c_rung.seed(rung=str(i))
+        self._c_cache_hits = self.metrics.counter(
+            "serve_cache_hits_total", "Requests answered from the LRU.")
+        self._c_dispatches = self.metrics.counter(
+            "serve_dispatches_total",
+            "Batch dispatches, by lane occupancy.", ("filled",))
+        self._c_dispatches.seed(filled="full")
+        self._c_dispatches.seed(filled="partial")
+        self._c_retries = self.metrics.counter(
+            "serve_retries_total", "Dispatch retry attempts.")
+        self._c_dispatch_errors = self.metrics.counter(
+            "serve_dispatch_errors_total",
+            "Dispatch attempts that raised (injected or real).")
+        self._c_failed_batches = self.metrics.counter(
+            "serve_failed_batches_total",
+            "Micro-batches failed past the retry budget.")
+        self._c_slow = self.metrics.counter(
+            "serve_slow_dispatches_total",
+            "Dispatches exceeding dispatch_timeout_ms.")
+        self._c_flush_failures = self.metrics.counter(
+            "serve_store_flush_failures_total",
+            "Store flushes failed by StoreFlushError (retried later).")
+        self._c_update_errors = self.metrics.counter(
+            "serve_update_errors_total",
+            "Store flushes that raised a non-flush error.")
+        self._c_update_rows = self.metrics.counter(
+            "serve_update_rows_total", "Store mutations applied.")
+        self._h_latency = self.metrics.histogram(
+            "serve_latency_ms",
+            "Answered-request latency (ms), by outcome.", ("outcome",))
+        self._h_queue_wait = self.metrics.histogram(
+            "serve_queue_wait_ms",
+            "Submit-to-dispatch queue wait (ms) of dispatched requests.")
+        self._h_occupancy = self.metrics.histogram(
+            "serve_batch_occupancy", "Filled lanes per dispatch.",
+            buckets=(1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0))
+        self._h_pull_frac = self.metrics.histogram(
+            "serve_pull_frac",
+            "Executed pull fraction per dispatch (pulls / budget).",
+            buckets=PULL_FRAC_BUCKETS)
+        self.metrics.gauge(
+            "serve_cache_entries", "Live LRU cache entries.",
+        ).set_fn(lambda: len(self.cache))
+        #: plain dispatch sequence for PRNG fold keys — deliberately NOT
+        #: registry-backed so metric wiring (or the NullRegistry hard-off
+        #: switch) can never perturb sampling keys
+        self._dispatch_seq = 0
+        self._seen_refreshes = (getattr(self._store, "codebook_refreshes", 0)
+                                if self._store is not None else 0)
+
+    # ---- legacy counter surface (registry-backed) ------------------------
+
+    @property
+    def outcomes(self) -> Dict[str, int]:
+        """Terminal outcome counts keyed by status (registry-backed)."""
+        return {s: int(self._c_outcomes.get(outcome=s))
+                for s in ("ok", "degraded", "rejected", "overloaded",
                           "failed")}
-        self.rung_served = [0] * self.ladder.n_rungs
-        self.per_class: Dict[str, Dict[str, int]] = {}
-        self.n_requests = 0
-        self.n_cache_hits = 0
-        self.n_dispatches = 0
-        self.n_full_dispatches = 0
-        self.n_retries = 0
-        self.n_dispatch_errors = 0
-        self.n_failed_batches = 0
-        self.n_slow_dispatches = 0
-        self.n_flush_failures = 0
-        self.n_update_errors = 0
-        self.n_updates = 0
+
+    @property
+    def rung_served(self) -> List[int]:
+        """Requests answered per ladder rung (registry-backed)."""
+        return [int(self._c_rung.get(rung=str(i)))
+                for i in range(self.ladder.n_rungs)]
+
+    @property
+    def per_class(self) -> Dict[str, Dict[str, int]]:
+        """Per-class event counts, classes in first-seen order
+        (registry-backed)."""
+        out: Dict[str, Dict[str, int]] = {}
+        for labels, value in self._c_class.rows():
+            cls = labels["priority_class"]
+            out.setdefault(cls, {})[labels["event"]] = int(value)
+        return out
+
+    @property
+    def n_requests(self) -> int:
+        """Requests submitted (registry-backed)."""
+        return int(self._c_requests.total())
+
+    @property
+    def n_cache_hits(self) -> int:
+        """Cache-answered requests (registry-backed)."""
+        return int(self._c_cache_hits.total())
+
+    @property
+    def n_dispatches(self) -> int:
+        """Batch dispatches issued (registry-backed)."""
+        return int(self._c_dispatches.total())
+
+    @property
+    def n_full_dispatches(self) -> int:
+        """Dispatches with every lane filled (registry-backed)."""
+        return int(self._c_dispatches.get(filled="full"))
+
+    @property
+    def n_retries(self) -> int:
+        """Dispatch retry attempts (registry-backed)."""
+        return int(self._c_retries.total())
+
+    @property
+    def n_dispatch_errors(self) -> int:
+        """Dispatch attempts that raised (registry-backed)."""
+        return int(self._c_dispatch_errors.total())
+
+    @property
+    def n_failed_batches(self) -> int:
+        """Micro-batches failed past retries (registry-backed)."""
+        return int(self._c_failed_batches.total())
+
+    @property
+    def n_slow_dispatches(self) -> int:
+        """Dispatches past the timeout (registry-backed)."""
+        return int(self._c_slow.total())
+
+    @property
+    def n_flush_failures(self) -> int:
+        """StoreFlushError flush failures (registry-backed)."""
+        return int(self._c_flush_failures.total())
+
+    @property
+    def n_update_errors(self) -> int:
+        """Non-flush store update errors (registry-backed)."""
+        return int(self._c_update_errors.total())
+
+    @property
+    def n_updates(self) -> int:
+        """Store mutations applied (registry-backed)."""
+        return int(self._c_update_rows.total())
 
     # ---- compat surface for simulate_stream ------------------------------
 
@@ -1011,22 +1235,34 @@ class ServeRuntime:
     # ---- request path -----------------------------------------------------
 
     def _class_counter(self, cls: str, key: str) -> None:
-        c = self.per_class.setdefault(
-            cls, {"requests": 0, "answered": 0, "degraded": 0, "shed": 0})
-        c[key] += 1
+        # seed the full event set on a class's first touch so the
+        # legacy per-class dict keeps its fixed key order
+        for ev in ("requests", "answered", "degraded", "shed"):
+            self._c_class.seed(priority_class=cls, event=ev)
+        self._c_class.inc(priority_class=cls, event=key)
 
-    def _finish(self, rid: int, res: ServeResult) -> None:
+    def _finish(self, rid: int, res: ServeResult,
+                t: Optional[float] = None) -> None:
         self._results[rid] = res
-        self.outcomes[res.status] += 1
+        self._c_outcomes.inc(outcome=res.status)
         if res.answered:
             self._class_counter(res.cls, "answered")
             if res.status == "degraded":
                 self._class_counter(res.cls, "degraded")
             self._lat.append(res.latency_s)
+            self._h_latency.observe(res.latency_s * 1e3,
+                                    outcome=res.status)
             if len(self._lat) > 100_000:
                 self._lat = self._lat[-10_000:]
         elif res.status in ("overloaded", "failed"):
             self._class_counter(res.cls, "shed")
+        if self.tracer is not None and t is not None:
+            self.tracer.request_end(
+                rid, t, res.status,
+                **({"reason": res.reason} if res.reason else {}))
+        if self.flight is not None and res.status == "failed":
+            self.flight.record("request_failed", t, rid=rid,
+                               cls=res.cls, reason=res.reason)
 
     def _salted(self, base_key: bytes) -> bytes:
         """Prefix an LRU base key with the live (version, K) salt."""
@@ -1046,35 +1282,66 @@ class ServeRuntime:
         now = time.perf_counter() if now is None else now
         rid = self._next_id
         self._next_id += 1
-        self.n_requests += 1
         pcls = self.admission.resolve_class(cls)
+        self._c_requests.inc(priority_class=pcls.name)
         self._class_counter(pcls.name, "requests")
-        self.apply_updates()
+        if self.tracer is not None:
+            self.tracer.request_begin(rid, now, priority_class=pcls.name)
+        self.apply_updates(now)
         arr, reason = self.admission.validate(q)
         if arr is None:
-            self.admission.n_rejected_poison += 1
+            self.admission.count_poison()
+            if self.tracer is not None:
+                self.tracer.instant(rid, "rejected", now, reason=reason)
+            if self.flight is not None:
+                self.flight.record("rejected_poison", now, rid=rid,
+                                   reason=reason)
             self._finish(rid, ServeResult(status="rejected", cls=pcls.name,
-                                          reason=reason))
+                                          reason=reason), t=now)
             return rid
         ck = self.cache.key(arr) if self.cache.capacity > 0 else None
         if ck is not None:
             hit = self.cache.get(self._salted(ck))
             if hit is not None:
                 ids, scores = hit
-                self.n_cache_hits += 1
+                self._c_cache_hits.inc()
+                if self.tracer is not None:
+                    self.tracer.instant(rid, "cache_hit", now)
                 self._finish(rid, ServeResult(
                     status="ok", ids=ids, scores=scores,
                     eps_served=self._eps, delta_served=self._delta,
-                    cls=pcls.name, cached=True))
+                    cls=pcls.name, cached=True), t=now)
                 return rid
         ticket = Ticket(rid, arr, pcls, now, now + pcls.deadline_s, ck,
                         self.admission.fingerprint(arr))
         verdict, displaced = self.admission.admit(ticket)
         for victim, vres in displaced:
             vres.latency_s = now - victim.t_submit
-            self._finish(victim.req_id, vres)
+            if self.tracer is not None:
+                self.tracer.instant(victim.req_id, "displaced", now,
+                                    by=rid)
+            if self.flight is not None:
+                self.flight.record("displacement", now,
+                                   rid=victim.req_id, by=rid,
+                                   cls=victim.cls.name)
+            self._finish(victim.req_id, vres, t=now)
         if verdict is not None:
-            self._finish(rid, verdict)
+            if self.tracer is not None:
+                self.tracer.instant(rid, verdict.status, now,
+                                    reason=verdict.reason or "")
+            if self.flight is not None:
+                self.flight.record("refused", now, rid=rid,
+                                   status=verdict.status,
+                                   reason=verdict.reason)
+            self._finish(rid, verdict, t=now)
+        else:
+            if self.tracer is not None:
+                self.tracer.instant(rid, "admitted", now,
+                                    depth=self.admission.depth)
+            if self.flight is not None:
+                self.flight.record("admitted", now, rid=rid,
+                                   cls=pcls.name,
+                                   depth=self.admission.depth)
         return rid
 
     def result(self, req_id: int) -> Optional[ServeResult]:
@@ -1088,7 +1355,9 @@ class ServeRuntime:
         jit compilation happens *before* traffic: on a virtual-clock
         driver an un-warmed runtime charges its first dispatch the whole
         compile time, which expires every queued deadline and reads as a
-        (spurious) overload.  Counters and stats are untouched.
+        (spurious) overload.  Legacy counters and stats are untouched
+        (the executor-level ``cascade_*`` metrics do count warmup
+        dispatches — by design, so compile cost is visible).
         """
         t0 = time.perf_counter()
         Qbuf = np.zeros((self.lanes, self.N), np.float32)
@@ -1098,7 +1367,7 @@ class ServeRuntime:
 
     # ---- updates ----------------------------------------------------------
 
-    def apply_updates(self) -> int:
+    def apply_updates(self, now: Optional[float] = None) -> int:
         """Drain staged store mutations fault-tolerantly; returns applied.
 
         Like `MIPSServeEngine.apply_updates` (version bump invalidates +
@@ -1109,7 +1378,8 @@ class ServeRuntime:
         (``stats()["faults"]["store_flush_failures"]`` /
         ``update_errors``), the staged mutations stay staged, and serving
         continues on the current table; the flush retries at the next
-        poll.  No-op without a store.
+        poll.  ``now`` (optional virtual-clock time) only timestamps the
+        flight-recorder events.  No-op without a store.
         """
         from repro.store import StoreFlushError
         store = self._store
@@ -1120,21 +1390,40 @@ class ServeRuntime:
             try:
                 info = store.flush_updates()
                 applied = info["applied"]
-                self.n_updates += applied
-            except StoreFlushError:
+                self._c_update_rows.inc(applied)
+            except StoreFlushError as e:
                 # staged ops intact: keep serving the current table and
                 # retry the flush at the next poll
-                self.n_flush_failures += 1
-            except Exception:
+                self._c_flush_failures.inc()
+                if self.flight is not None:
+                    self.flight.record("store_flush_error", now,
+                                       error=str(e),
+                                       pending=store.pending_updates)
+                    self.flight.dump("store_flush_error", now)
+            except Exception as e:
                 # a genuinely bad mutation (unknown delete, capacity
                 # exhausted): the store dropped the bad op and kept its
                 # successors — count it and keep the engine alive
-                self.n_update_errors += 1
+                self._c_update_errors.inc()
+                if self.flight is not None:
+                    self.flight.record("store_update_error", now,
+                                       error=str(e))
         if store.version != self._version:
             self._version = store.version
             self.cache.invalidate()
+        rebuilt = 0
         for ex in self._rung_execs:
-            ex.sync_store()
+            rebuilt += ex.sync_store()
+        if rebuilt and self.flight is not None:
+            self.flight.record("recalibration", now, rebuilds=rebuilt,
+                               version=store.version)
+        refreshes = getattr(store, "codebook_refreshes", 0)
+        if refreshes != self._seen_refreshes:
+            self._seen_refreshes = refreshes
+            if self.flight is not None:
+                self.flight.record("codebook_refresh", now,
+                                   refreshes=refreshes,
+                                   version=store.version)
         return applied
 
     # ---- scheduler ---------------------------------------------------------
@@ -1152,7 +1441,7 @@ class ServeRuntime:
         (measured + injected + retry backoff) for virtual-clock drivers.
         """
         now = time.perf_counter() if now is None else now
-        self.apply_updates()
+        self.apply_updates(now)
         done: List[int] = []
         busy = 0.0
         while self.admission.depth:
@@ -1165,7 +1454,10 @@ class ServeRuntime:
                 break
             batch, expired = self.admission.take(t, self.lanes)
             for tk, res in expired:
-                self._finish(tk.req_id, res)
+                if self.flight is not None:
+                    self.flight.record("deadline_expired", t,
+                                       rid=tk.req_id, cls=tk.cls.name)
+                self._finish(tk.req_id, res, t=t)
                 done.append(tk.req_id)
             if not batch:
                 continue
@@ -1177,7 +1469,7 @@ class ServeRuntime:
     def drain(self, now: Optional[float] = None) -> Tuple[List[int], float]:
         """Serve everything queued regardless of triggers or deadlines."""
         now = time.perf_counter() if now is None else now
-        self.apply_updates()
+        self.apply_updates(now)
         done: List[int] = []
         busy = 0.0
         while self.admission.depth:
@@ -1202,14 +1494,23 @@ class ServeRuntime:
         dispatches.  The engine itself is untouched — the next poll
         dispatches the next batch normally.
         """
-        self.n_failed_batches += 1
+        self._c_failed_batches.inc()
         reason = f"dispatch failed after {retries} retries: {exc}"
         for tk in batch:
             self.admission.add_quarantine(tk.fingerprint,
                                           "dispatch failure")
+            if self.flight is not None:
+                self.flight.record("quarantine_add", t + backoff,
+                                   rid=tk.req_id,
+                                   fingerprint=repr(tk.fingerprint))
             self._finish(tk.req_id, ServeResult(
                 status="failed", cls=tk.cls.name, reason=reason,
-                latency_s=(t + backoff) - tk.t_submit, retries=retries))
+                latency_s=(t + backoff) - tk.t_submit, retries=retries),
+                t=t + backoff)
+        if self.flight is not None:
+            # one dump per failed batch: the ring now holds the whole
+            # failure context (injections, retries, quarantines)
+            self.flight.dump("request_failed", t + backoff)
         return [tk.req_id for tk in batch]
 
     def _dispatch(self, batch: List[Ticket],
@@ -1233,11 +1534,13 @@ class ServeRuntime:
         Qbuf = np.zeros((self.lanes, self.N), np.float32)
         for i, tk in enumerate(batch):
             Qbuf[i] = tk.q
-        key = jax.random.fold_in(self._key, self.n_dispatches)
-        didx = self.n_dispatches
-        self.n_dispatches += 1
-        if len(batch) == self.lanes:
-            self.n_full_dispatches += 1
+        # fold on the plain dispatch sequence, NOT a registry counter:
+        # sampling keys must be invariant to observability wiring
+        key = jax.random.fold_in(self._key, self._dispatch_seq)
+        didx = self._dispatch_seq
+        self._dispatch_seq += 1
+        self._c_dispatches.inc(
+            filled="full" if len(batch) == self.lanes else "partial")
         attempt = 0
         backoff = 0.0
         while True:
@@ -1249,40 +1552,74 @@ class ServeRuntime:
                 ids, scores, rounds, dt = ex.dispatch(Qbuf, key)
                 break
             except Exception as e:
-                self.n_dispatch_errors += 1
+                self._c_dispatch_errors.inc()
+                if self.flight is not None:
+                    self.flight.record(
+                        "fault_dispatch_error", t, didx=didx,
+                        attempt=attempt, injected=injected is not None,
+                        error=str(e))
                 if attempt >= self.max_retries:
                     return self._fail_batch(batch, t, e, attempt,
                                             backoff), backoff
-                self.n_retries += 1
+                self._c_retries.inc()
+                if self.tracer is not None:
+                    for tk in batch:
+                        self.tracer.instant(tk.req_id, "retry",
+                                            t + backoff, attempt=attempt,
+                                            didx=didx)
                 backoff += self.retry_backoff_s * (2.0 ** attempt)
                 attempt += 1
+        spike = 0.0
         if self.injector is not None:
-            dt += self.injector.latency_s(didx)
+            spike = self.injector.latency_s(didx)
+            dt += spike
+            if spike > 0.0 and self.flight is not None:
+                self.flight.record("fault_latency", t, didx=didx,
+                                   spike_ms=spike * 1e3)
         dt += backoff
         if (self.dispatch_timeout_s is not None
                 and dt > self.dispatch_timeout_s):
-            self.n_slow_dispatches += 1
+            self._c_slow.inc()
         ids = ids[:len(batch)]
         scores = scores[:len(batch)]
         self._occupancy.append(len(batch))
+        self._h_occupancy.observe(len(batch))
         from repro.distributed.sharding import dispatch_lane_stats
         lane = dispatch_lane_stats(
             None if rounds is None else rounds[:len(batch)],
             schedule=ex.plan.schedule, lanes=self.lanes,
             filled=len(batch))
         self._pull_fracs.append(lane["executed_pull_frac"])
+        self._h_pull_frac.observe(lane["executed_pull_frac"])
         eps_r = self.ladder.eps_values[rung]
-        self.rung_served[rung] += len(batch)
+        self._c_rung.inc(len(batch), rung=str(rung))
+        if self.tracer is not None:
+            args = {"didx": didx, "rung": rung, "eps_served": eps_r,
+                    "occupancy": len(batch), "retries": attempt,
+                    "pull_frac": lane["executed_pull_frac"]}
+            if spike > 0.0:
+                args["injected_ms"] = spike * 1e3
+            if rounds is not None:
+                args["rounds_used"] = float(
+                    np.mean(rounds[:len(batch)]))
+            self.tracer.global_span(f"dispatch {didx}", t, t + dt, **args)
         done = []
         for i, tk in enumerate(batch):
             out_ids = ex.external_ids(ids[i])
+            self._h_queue_wait.observe((t - tk.t_submit) * 1e3)
+            if self.tracer is not None:
+                self.tracer.span(tk.req_id, "queued", tk.t_submit, t,
+                                 didx=didx)
+                self.tracer.span(tk.req_id, "serve", t, t + dt,
+                                 rung=rung, eps_served=eps_r,
+                                 retries=attempt, didx=didx)
             res = ServeResult(
                 status="ok" if rung == 0 else "degraded",
                 ids=out_ids, scores=scores[i].copy(),
                 eps_served=eps_r, delta_served=self._delta,
                 cls=tk.cls.name, latency_s=(t + dt) - tk.t_submit,
                 retries=attempt)
-            self._finish(tk.req_id, res)
+            self._finish(tk.req_id, res, t=t + dt)
             # only full-quality answers are cacheable: a degraded
             # (eps_served > eps) result must never be replayed to a
             # later query as if it met the contract eps
@@ -1329,7 +1666,7 @@ class ServeRuntime:
                       "hit_rate": (self.cache.hits
                                    / max(1, self.cache.hits
                                          + self.cache.misses))},
-            "latency_ms": _percentiles(self._lat),
+            "latency_ms": summarize_latencies(self._lat),
             "queue": self.admission.stats(),
             "outcomes": dict(self.outcomes),
             "classes": {k: dict(v) for k, v in self.per_class.items()},

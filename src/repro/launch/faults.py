@@ -24,8 +24,13 @@ Three fault surfaces, matching the runtime's three failure domains:
 
 Attach with ``FaultInjector(...).attach(store)`` for the flush surface
 and pass the injector to `repro.launch.engine.ServeRuntime` for the
-dispatch surfaces.  `stats()` exports exactly what was injected so tests
-can reconcile observed behaviour against the schedule.
+dispatch surfaces.  `stats()` exports exactly what was injected — plus,
+per kind, how many decision points the schedule *saw* and the resulting
+injection rates (``injected / seen``), so tests can reconcile observed
+behaviour against the configured rates.  The same counters live on the
+injector's `repro.obs.metrics` registry (``faults_*``), which
+`ServeRuntime` adopts into its own registry when the injector is
+attached (docs/OBSERVABILITY.md).
 """
 
 from __future__ import annotations
@@ -33,6 +38,8 @@ from __future__ import annotations
 from typing import Optional
 
 import numpy as np
+
+from repro.obs.metrics import MetricsRegistry
 
 __all__ = ["InjectedDispatchError", "FaultInjector"]
 
@@ -71,6 +78,9 @@ class FaultInjector:
         stop failing (conditional on an error firing at all).
       flush_failure_rate: probability a store `flush_updates` call is
         failed (via the hook installed by `attach`).
+      metrics: an existing `repro.obs.metrics.MetricsRegistry` to file
+        the ``faults_*`` metrics under (default: a private registry on
+        ``self.metrics``, adopted by the runtime).
 
     Every decision method is pure in its index arguments; counters track
     what was actually *queried and fired* so `stats()` reconciles with
@@ -80,7 +90,8 @@ class FaultInjector:
     def __init__(self, seed: int = 0, *, latency_rate: float = 0.0,
                  latency_ms: float = 25.0, latency_tail: float = 1.5,
                  error_rate: float = 0.0, persistent_rate: float = 0.25,
-                 flush_failure_rate: float = 0.0):
+                 flush_failure_rate: float = 0.0,
+                 metrics: Optional[MetricsRegistry] = None):
         for name, rate in (("latency_rate", latency_rate),
                            ("error_rate", error_rate),
                            ("persistent_rate", persistent_rate),
@@ -95,11 +106,56 @@ class FaultInjector:
         self.persistent_rate = float(persistent_rate)
         self.flush_failure_rate = float(flush_failure_rate)
         self._flush_idx = 0
-        self.n_latency_injected = 0
-        self.injected_latency_s = 0.0
-        self.n_errors_injected = 0
-        self.n_persistent_errors = 0
-        self.n_flush_failures = 0
+        # exact seconds accumulator for the legacy latency stats — the
+        # histogram buckets the same spikes in ms, but the stat contract
+        # is the exact schedule sum in the schedule's own unit
+        self._injected_latency_s = 0.0
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self._c_injected = self.metrics.counter(
+            "faults_injected_total", "Faults actually fired, by kind.",
+            ("kind",))
+        self._c_seen = self.metrics.counter(
+            "faults_seen_total",
+            "Injection decision points evaluated, by kind.", ("kind",))
+        for k in ("latency", "error", "flush"):
+            self._c_injected.seed(kind=k)
+            self._c_seen.seed(kind=k)
+        self._c_persistent = self.metrics.counter(
+            "faults_persistent_errors_total",
+            "Injected dispatch errors that outlast any retry budget.")
+        self._c_error_dispatches = self.metrics.counter(
+            "faults_error_dispatches_total",
+            "Dispatches with at least one injected error attempt.")
+        self._h_latency = self.metrics.histogram(
+            "faults_injected_latency_ms",
+            "Injected latency spike sizes (ms).")
+
+    # ---- legacy counter surface (registry-backed) ------------------------
+
+    @property
+    def n_latency_injected(self) -> int:
+        """Latency spikes fired by the schedule."""
+        return int(self._c_injected.get(kind="latency"))
+
+    @property
+    def injected_latency_s(self) -> float:
+        """Total injected spike seconds (exact schedule sum)."""
+        return self._injected_latency_s
+
+    @property
+    def n_errors_injected(self) -> int:
+        """Fired (dispatch, attempt) error injections."""
+        return int(self._c_injected.get(kind="error"))
+
+    @property
+    def n_persistent_errors(self) -> int:
+        """Dispatches given a persistent (retry-proof) error."""
+        return int(self._c_persistent.total())
+
+    @property
+    def n_flush_failures(self) -> int:
+        """Store flush_updates calls failed by the hook."""
+        return int(self._c_injected.get(kind="flush"))
 
     def _rng(self, kind: int, index: int) -> np.random.Generator:
         """The stateless per-(kind, index) generator of the schedule."""
@@ -111,6 +167,7 @@ class FaultInjector:
     def latency_s(self, dispatch_idx: int) -> float:
         """Extra virtual seconds injected into dispatch ``dispatch_idx``
         (0.0 when the schedule doesn't spike it)."""
+        self._c_seen.inc(kind="latency")
         if self.latency_rate <= 0.0:
             return 0.0
         rng = self._rng(_KIND_LATENCY, dispatch_idx)
@@ -118,8 +175,9 @@ class FaultInjector:
             return 0.0
         spike = self.latency_ms * 1e-3 * (1.0 + rng.pareto(
             self.latency_tail))
-        self.n_latency_injected += 1
-        self.injected_latency_s += spike
+        self._c_injected.inc(kind="latency")
+        self._injected_latency_s += spike
+        self._h_latency.observe(spike * 1e3)
         return float(spike)
 
     def fail_attempts(self, dispatch_idx: int) -> int:
@@ -143,14 +201,19 @@ class FaultInjector:
         """The error to raise for (dispatch, attempt), or None.
 
         Counts each fired (dispatch, attempt) injection once; the
-        persistent counter increments on the first attempt only.
+        persistent counter increments on the first attempt only, and the
+        per-kind ``seen`` counter counts each *dispatch* once (attempt 0).
         """
+        if attempt == 0:
+            self._c_seen.inc(kind="error")
         fails = self.fail_attempts(dispatch_idx)
+        if attempt == 0 and fails > 0:
+            self._c_error_dispatches.inc()
         if attempt >= fails:
             return None
-        self.n_errors_injected += 1
+        self._c_injected.inc(kind="error")
         if fails > 2 and attempt == 0:
-            self.n_persistent_errors += 1
+            self._c_persistent.inc()
         kind = "persistent" if fails > 2 else "transient"
         return InjectedDispatchError(
             f"injected {kind} dispatch fault "
@@ -171,23 +234,44 @@ class FaultInjector:
     def _flush_hook(self) -> None:
         from repro.store import StoreFlushError
         idx, self._flush_idx = self._flush_idx, self._flush_idx + 1
+        self._c_seen.inc(kind="flush")
         if self.flush_failure_rate <= 0.0:
             return
         rng = self._rng(_KIND_FLUSH, idx)
         if rng.random() < self.flush_failure_rate:
-            self.n_flush_failures += 1
+            self._c_injected.inc(kind="flush")
             raise StoreFlushError(
                 f"injected store flush failure (flush={idx})")
 
     # ---- observability ---------------------------------------------------
 
     def stats(self) -> dict:
-        """What the schedule actually injected, as a plain dict."""
+        """What the schedule injected, saw, and the realized rates.
+
+        The legacy keys are unchanged (``injected_latency_ms`` is
+        milliseconds — the same unit as the
+        `repro.obs.metrics.LATENCY_BUCKETS_MS` histogram buckets);
+        ``seen`` counts decision points per kind (dispatches for
+        latency/error, flush calls for flush) and ``rates`` is
+        ``injected / seen`` — the *realized* per-kind injection rate to
+        reconcile against the configured probabilities.
+        """
+        seen = {k: int(self._c_seen.get(kind=k))
+                for k in ("latency", "error", "flush")}
+        fired = {"latency": self.n_latency_injected,
+                 # rate denominators are dispatches/flushes, so the error
+                 # numerator counts dispatches with >= 1 injected attempt
+                 # (n_errors_injected counts per-attempt firings)
+                 "error": int(self._c_error_dispatches.total()),
+                 "flush": self.n_flush_failures}
         return {
             "seed": self.seed,
             "latency_spikes": self.n_latency_injected,
-            "injected_latency_ms": self.injected_latency_s * 1e3,
+            "injected_latency_ms": self._injected_latency_s * 1e3,
             "dispatch_errors": self.n_errors_injected,
             "persistent_errors": self.n_persistent_errors,
             "flush_failures": self.n_flush_failures,
+            "seen": seen,
+            "rates": {k: (fired[k] / seen[k] if seen[k] else 0.0)
+                      for k in ("latency", "error", "flush")},
         }

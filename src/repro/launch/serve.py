@@ -119,7 +119,7 @@ def simulate_stream(engine, queries, *, interarrival_ms: float = 0.1,
                     churn=None, pattern: str = "uniform", seed: int = 0,
                     open_loop: bool = False, classes=None,
                     burst_factor: float = 8.0, burst_len: int = 16,
-                    trace=None) -> dict:
+                    trace=None, metrics_out=None, trace_out=None) -> dict:
     """Drive a query stream through an engine/runtime on a virtual clock.
 
     Arrivals follow a reproducible `arrival_trace` (``pattern`` /
@@ -143,6 +143,13 @@ def simulate_stream(engine, queries, *, interarrival_ms: float = 0.1,
     ``i``.  Returns the engine stats dict plus ``virtual_s``,
     ``throughput_rps`` and the ``trace`` metadata block (pattern, seed,
     span, offered rate) that makes the run reproducible.
+
+    ``metrics_out`` / ``trace_out`` (optional paths) export the engine's
+    observability artifacts after the drain: the metrics registry
+    snapshot (Prometheus text for ``.prom``/``.txt``, JSON otherwise)
+    and the Chrome trace-event JSON of the span tracer
+    (docs/OBSERVABILITY.md).  Paths actually written are echoed in an
+    ``artifacts`` block of the returned dict.
     """
     n = len(queries)
     if trace is None:
@@ -184,6 +191,13 @@ def simulate_stream(engine, queries, *, interarrival_ms: float = 0.1,
         _, busy = engine.poll(now=now)
         now += busy
     span = float(trace[-1]) if n else 0.0
+    artifacts = {}
+    if metrics_out is not None and getattr(engine, "metrics", None) is not None:
+        engine.metrics.write(metrics_out)
+        artifacts["metrics"] = str(metrics_out)
+    if trace_out is not None and getattr(engine, "tracer", None) is not None:
+        engine.tracer.write(trace_out)
+        artifacts["trace"] = str(trace_out)
     return {"virtual_s": now,
             "throughput_rps": max(1, n) / max(now, 1e-9),
             "trace": {"pattern": pattern, "seed": int(seed),
@@ -191,6 +205,7 @@ def simulate_stream(engine, queries, *, interarrival_ms: float = 0.1,
                       "open_loop": bool(open_loop),
                       "span_s": span,
                       "offered_rps": n / max(span, 1e-9) if n else 0.0},
+            **({"artifacts": artifacts} if artifacts else {}),
             **engine.stats()}
 
 
@@ -265,7 +280,16 @@ def _run_loop(args) -> None:
     if not args.dynamic:
         common.update(block=block, n_valid=n_valid)
 
+    tracer = None
+    flight = None
     if args.runtime:
+        if args.trace_out:
+            from repro.obs import SpanTracer
+            tracer = SpanTracer(seed=args.stream_seed)
+        if args.flight_recorder_path:
+            from repro.obs import FlightRecorder
+            flight = FlightRecorder(capacity=args.flight_capacity,
+                                    path=args.flight_recorder_path)
         injector = None
         if (args.inject_latency_rate > 0 or args.inject_error_rate > 0
                 or args.inject_flush_rate > 0):
@@ -292,7 +316,7 @@ def _run_loop(args) -> None:
             batch_wait_ms=args.deadline_ms,
             queue_capacity=args.queue_capacity, classes=classes,
             max_retries=args.max_retries, fault_injector=injector,
-            **common)
+            tracer=tracer, flight=flight, **common)
         print(f"[serve] runtime: table=({engine.n},{engine.N}) "
               f"K={args.topk} eps={args.eps} "
               f"eps_floor={engine.ladder.eps_floor} "
@@ -334,7 +358,15 @@ def _run_loop(args) -> None:
     stats = simulate_stream(
         engine, qs, interarrival_ms=args.interarrival_ms, churn=churn,
         pattern=args.pattern, seed=args.stream_seed,
-        open_loop=args.runtime, classes=cls_fn)
+        open_loop=args.runtime, classes=cls_fn,
+        metrics_out=args.metrics_out, trace_out=args.trace_out)
+    if flight is not None:
+        # always leave a final snapshot on disk so CI can validate the
+        # artifact even on a fault-free run (failure dumps, if any,
+        # already happened mid-stream and this one supersedes them)
+        dumped = flight.dump("end_of_run", stats["virtual_s"])
+        if dumped:
+            stats.setdefault("artifacts", {})["flight"] = dumped
     print(json.dumps(stats, indent=2))
     if args.runtime and args.check_outcomes:
         _check_outcomes(args, stats)
@@ -494,6 +526,19 @@ def _validate_args(ap: argparse.ArgumentParser, args) -> None:
                  f"{args.precision} shadow fixes the quantization-block "
                  f"geometry, which only the 'row' plan matches (use "
                  f"--pull-mode row, fp32, or --shards 2+)")
+    if args.trace_out and not args.runtime:
+        ap.error("--trace-out requires --runtime: span tracing hooks "
+                 "live in the continuous-batching ServeRuntime")
+    if args.flight_recorder_path and not args.runtime:
+        ap.error("--flight-recorder-path requires --runtime: the flight "
+                 "recorder records ServeRuntime lifecycle events")
+    if args.flight_capacity < 1:
+        ap.error(f"--flight-capacity must be >= 1, "
+                 f"got {args.flight_capacity}")
+    if args.metrics_out and not (args.loop or args.runtime):
+        ap.error("--metrics-out requires --loop or --runtime: the "
+                 "decode demo does not run a metrics-instrumented "
+                 "serving engine")
     if args.pq_subdims < 1:
         ap.error(f"--pq-subdims must be >= 1, got {args.pq_subdims}")
     if args.precision == "pq" and not (args.loop or args.runtime):
@@ -607,6 +652,22 @@ def _build_parser() -> argparse.ArgumentParser:
                          "got a typed status from the closed set and "
                          "p99 stayed inside 8x the request deadline "
                          "(CI smoke contract; --runtime)")
+    # observability artifacts (docs/OBSERVABILITY.md)
+    ap.add_argument("--metrics-out", default=None,
+                    help="write the metrics-registry snapshot here after "
+                         "the stream (.prom/.txt = Prometheus text "
+                         "exposition, anything else = JSON)")
+    ap.add_argument("--trace-out", default=None,
+                    help="write per-request span traces here as Chrome "
+                         "trace-event JSON — load in Perfetto / "
+                         "chrome://tracing (--runtime)")
+    ap.add_argument("--flight-recorder-path", default=None,
+                    help="arm the crash flight recorder: a bounded ring "
+                         "of structured serving events dumped here on "
+                         "request failure / store-flush error, plus a "
+                         "final end-of-run snapshot (--runtime)")
+    ap.add_argument("--flight-capacity", type=int, default=256,
+                    help="flight-recorder ring size in events")
     return ap
 
 

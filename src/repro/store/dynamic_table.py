@@ -67,6 +67,7 @@ import numpy as np
 
 from repro.core.quantize import (pq_encode, pq_train, quantize_tiles,
                                  quantize_tiles_int4)
+from repro.obs.metrics import MetricsRegistry
 
 __all__ = ["DynamicTableStore", "StoreFlushError"]
 
@@ -281,12 +282,42 @@ class DynamicTableStore:
         #: `flush_updates`; may raise `StoreFlushError` to fail the
         #: flush before anything is applied (fault injection surface)
         self.fault_hook = None
-        self.n_flush_failures = 0
-        self.n_upserts = 0
-        self.n_deletes = 0
-        self.rows_written = 0
-        self.tiles_requantized = 0
-        self.codebook_refreshes = 0
+        #: private `repro.obs.metrics` registry; the serving runtime
+        #: adopts it so `store_*` metrics appear in its exports.  The
+        #: legacy counter attributes below are registry-backed
+        #: properties — same names, same values, read-only.
+        self.metrics = MetricsRegistry()
+        self._c_upserts = self.metrics.counter(
+            "store_upserts_total", "Applied row upserts.")
+        self._c_deletes = self.metrics.counter(
+            "store_deletes_total", "Applied row deletes.")
+        self._c_rows_written = self.metrics.counter(
+            "store_rows_written_total", "Donated device row writes.")
+        self._c_flush_failures = self.metrics.counter(
+            "store_flush_failures_total",
+            "flush_updates calls failed by the fault hook.")
+        self._c_tiles_requant = self.metrics.counter(
+            "store_tiles_requantized_total",
+            "Dirty arm-tiles re-encoded into the quantized shadow.")
+        self._c_refreshes = self.metrics.counter(
+            "store_codebook_refreshes_total",
+            "Full pq codebook retrain + re-encode passes.")
+        self.metrics.gauge(
+            "store_live_rows", "Live rows (dense prefix length).",
+        ).set_fn(lambda: self.n_live)
+        self.metrics.gauge(
+            "store_capacity_rows", "Preallocated row capacity.",
+        ).set_fn(lambda: self.capacity_rows)
+        self.metrics.gauge(
+            "store_version", "Monotonic mutation version.",
+        ).set_fn(lambda: self.version)
+        self.metrics.gauge(
+            "store_pending_updates", "Staged, not yet flushed mutations.",
+        ).set_fn(lambda: len(self._staged))
+        self.metrics.gauge(
+            "store_value_abs_max",
+            "Monotone max |v| over all applied rows.",
+        ).set_fn(lambda: self._vmax)
 
         self._V8 = self._vscale = self._codebook = None
         if precision == "int8":
@@ -310,6 +341,38 @@ class DynamicTableStore:
                                                 subdims=self.pq_subdims)
             self._V8 = _pq_encode_full(V4, self._codebook)
             jax.block_until_ready(self._V8)
+
+    # ---- legacy counter surface (registry-backed) ------------------------
+
+    @property
+    def n_upserts(self) -> int:
+        """Applied row upserts (registry-backed)."""
+        return int(self._c_upserts.total())
+
+    @property
+    def n_deletes(self) -> int:
+        """Applied row deletes (registry-backed)."""
+        return int(self._c_deletes.total())
+
+    @property
+    def rows_written(self) -> int:
+        """Donated device row writes (registry-backed)."""
+        return int(self._c_rows_written.total())
+
+    @property
+    def n_flush_failures(self) -> int:
+        """Flushes failed by the fault hook (registry-backed)."""
+        return int(self._c_flush_failures.total())
+
+    @property
+    def tiles_requantized(self) -> int:
+        """Dirty tiles re-encoded into the shadow (registry-backed)."""
+        return int(self._c_tiles_requant.total())
+
+    @property
+    def codebook_refreshes(self) -> int:
+        """Full pq codebook retrain passes (registry-backed)."""
+        return int(self._c_refreshes.total())
 
     # ---- geometry helpers -----------------------------------------------
 
@@ -402,7 +465,7 @@ class DynamicTableStore:
                                         subdims=self.pq_subdims)
         self._V8 = _pq_encode_full(V4, self._codebook)
         jax.block_until_ready(self._V8)
-        self.codebook_refreshes += 1
+        self._c_refreshes.inc()
         self.version += 1
         return {"version": self.version,
                 "refreshes": self.codebook_refreshes,
@@ -474,7 +537,7 @@ class DynamicTableStore:
     def _dev_write(self, row_dev, slot: int) -> None:
         self._dev = _call_donated(_write_row, self._dev, row_dev,
                                   np.int32(slot))
-        self.rows_written += 1
+        self._c_rows_written.inc()
 
     def _apply_upsert(self, ext_id: int, row: np.ndarray, dirty: set) -> None:
         slot = self._id2slot.get(ext_id)
@@ -492,7 +555,7 @@ class DynamicTableStore:
         self._dev_write(jnp.asarray(row), slot)
         dirty.add(slot // self.tile)
         self._vmax = max(self._vmax, float(np.abs(row).max(initial=0.0)))
-        self.n_upserts += 1
+        self._c_upserts.inc()
         self.version += 1
 
     def _apply_delete(self, ext_id: int, dirty: set) -> None:
@@ -513,7 +576,7 @@ class DynamicTableStore:
         self._slot_ids[last] = -1
         dirty.add(last // self.tile)
         self.n_live -= 1
-        self.n_deletes += 1
+        self._c_deletes.inc()
         self.version += 1
 
     def flush_updates(self) -> dict:
@@ -544,7 +607,7 @@ class DynamicTableStore:
                 self.fault_hook()
             except Exception:
                 # nothing taken yet: every staged op survives for retry
-                self.n_flush_failures += 1
+                self._c_flush_failures.inc()
                 raise
         dirty: set = set()
         applied = 0
@@ -578,7 +641,7 @@ class DynamicTableStore:
                             _reencode_tile_pq, self._V8,
                             self._tile_slab(t), np.int32(t),
                             self._codebook)
-                self.tiles_requantized += len(dirty)
+                self._c_tiles_requant.inc(len(dirty))
             if applied:
                 jax.block_until_ready(self._dev)
         return {"applied": applied, "version": self.version,

@@ -43,6 +43,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.distributed.specs import serving_table_sharding
+from repro.obs.metrics import MetricsRegistry
 from repro.store.dynamic_table import _call_donated
 
 __all__ = ["ShardedTableStore"]
@@ -141,10 +142,57 @@ class ShardedTableStore:
         #: may raise `StoreFlushError` to fail the flush with every
         #: staged op intact (fault injection surface, DESIGN.md §13)
         self.fault_hook = None
-        self.n_flush_failures = 0
-        self.n_upserts = 0
-        self.n_deletes = 0
-        self.rows_written = 0
+        #: private `repro.obs.metrics` registry (same `store_*` families
+        #: as `DynamicTableStore`); the legacy counters below are
+        #: registry-backed read-only properties.
+        self.metrics = MetricsRegistry()
+        self._c_upserts = self.metrics.counter(
+            "store_upserts_total", "Applied row upserts.")
+        self._c_deletes = self.metrics.counter(
+            "store_deletes_total", "Applied row deletes.")
+        self._c_rows_written = self.metrics.counter(
+            "store_rows_written_total", "Donated device row writes.")
+        self._c_flush_failures = self.metrics.counter(
+            "store_flush_failures_total",
+            "flush_updates calls failed by the fault hook.")
+        self.metrics.gauge(
+            "store_live_rows", "Live rows summed over shards.",
+        ).set_fn(lambda: self.n_live)
+        self.metrics.gauge(
+            "store_capacity_rows", "Preallocated row capacity (global).",
+        ).set_fn(lambda: self.capacity_rows)
+        self.metrics.gauge(
+            "store_version", "Monotonic mutation version.",
+        ).set_fn(lambda: self.version)
+        self.metrics.gauge(
+            "store_pending_updates", "Staged, not yet flushed mutations.",
+        ).set_fn(lambda: len(self._staged))
+        self.metrics.gauge(
+            "store_value_abs_max",
+            "Monotone max |v| over all applied rows.",
+        ).set_fn(lambda: self._vmax)
+
+    # ---- legacy counter surface (registry-backed) ------------------------
+
+    @property
+    def n_upserts(self) -> int:
+        """Applied row upserts (registry-backed)."""
+        return int(self._c_upserts.total())
+
+    @property
+    def n_deletes(self) -> int:
+        """Applied row deletes (registry-backed)."""
+        return int(self._c_deletes.total())
+
+    @property
+    def rows_written(self) -> int:
+        """Donated device row writes (registry-backed)."""
+        return int(self._c_rows_written.total())
+
+    @property
+    def n_flush_failures(self) -> int:
+        """Flushes failed by the fault hook (registry-backed)."""
+        return int(self._c_flush_failures.total())
 
     # ---- read side -------------------------------------------------------
 
@@ -223,7 +271,7 @@ class ShardedTableStore:
     def _dev_write(self, row_dev, slot: int) -> None:
         self._dev = _call_donated(self._write, self._dev, row_dev,
                                   np.int32(slot))
-        self.rows_written += 1
+        self._c_rows_written.inc()
 
     def _route(self) -> int:
         free = self.cap_local - self._n_live
@@ -245,7 +293,7 @@ class ShardedTableStore:
         self._host[slot] = row
         self._dev_write(jnp.asarray(row), slot)
         self._vmax = max(self._vmax, float(np.abs(row).max(initial=0.0)))
-        self.n_upserts += 1
+        self._c_upserts.inc()
         self.version += 1
 
     def _apply_delete(self, ext_id: int) -> None:
@@ -264,7 +312,7 @@ class ShardedTableStore:
         self._dev_write(self._zero_row, last)
         self._slot_ids[last] = -1
         self._n_live[s] -= 1
-        self.n_deletes += 1
+        self._c_deletes.inc()
         self.version += 1
 
     def flush_updates(self) -> dict:
@@ -280,7 +328,7 @@ class ShardedTableStore:
             try:
                 self.fault_hook()
             except Exception:
-                self.n_flush_failures += 1
+                self._c_flush_failures.inc()
                 raise
         applied = 0
         staged, self._staged = self._staged, []

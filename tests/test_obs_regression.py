@@ -1,0 +1,214 @@
+"""`stats()` byte-compat regression suite for the PR-9 observability layer.
+
+The observability tentpole migrates every serving-stack counter onto the
+`repro.obs.metrics` registry with the hard constraint that every existing
+``stats()`` dict stays *byte-compatible*: same keys, same order, same
+deterministic values.  This suite pins that contract against a golden
+snapshot (``tests/data/golden_stats_pr9.json``) captured from the
+pre-observability code on fixed seeds and an explicit virtual clock.
+
+Timing-derived leaves (latency percentiles, rows/s throughput) are
+scrubbed to a type marker before comparison — their *keys and key order*
+are still pinned, only the wall-clock-dependent values are not.
+
+Regenerate (only when a PR intentionally extends a stats surface) with::
+
+    PYTHONPATH=src python tests/test_obs_regression.py --write
+"""
+
+import json
+import os
+
+import numpy as np
+
+from repro.launch.admission import PriorityClass
+from repro.launch.faults import FaultInjector
+from repro.launch.serve import MIPSServeEngine, ServeRuntime
+from repro.store import DynamicTableStore
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "data",
+                      "golden_stats_pr9.json")
+
+DIM = 16
+
+#: keys whose values are wall-clock measurements (scrubbed to a type
+#: marker; key presence and order still compared)
+_TIMING_SUBTREES = ("latency_ms",)
+_TIMING_LEAVES = ("rows_per_s",)
+#: float leaves that depend on served scores (platform-sensitive at the
+#: ulp level); presence pinned, value scrubbed
+_SCORE_LEAVES = ("mean",)          # recall.mean only (see _scrub)
+#: keys PR 9 *added* to FaultInjector.stats() (the per-kind seen/rates
+#: satellite); dropped from `got` before comparing with the pre-PR
+#: golden — everything else must still match byte-for-byte
+_ADDITIVE_KEYS = ("seen", "rates")
+
+
+def _drop_additive(obj):
+    """Recursively remove the PR-9 additive stats keys from a payload."""
+    if isinstance(obj, dict):
+        return {k: _drop_additive(v) for k, v in obj.items()
+                if k not in _ADDITIVE_KEYS}
+    if isinstance(obj, list):
+        return [_drop_additive(v) for v in obj]
+    return obj
+
+
+def _scrub(obj, path=()):
+    """Replace timing-derived leaves with a type marker, keep structure."""
+    if isinstance(obj, dict):
+        out = {}
+        for k, v in obj.items():
+            if k in _TIMING_SUBTREES and isinstance(v, dict):
+                out[k] = {kk: "<float>" for kk in v}
+            elif k in _TIMING_LEAVES:
+                out[k] = "<float>"
+            elif path and path[-1] == "recall" and k in _SCORE_LEAVES:
+                out[k] = "<float>"
+            else:
+                out[k] = _scrub(v, path + (k,))
+        return out
+    if isinstance(obj, list):
+        return [_scrub(v, path) for v in obj]
+    if isinstance(obj, float) and not np.isfinite(obj):
+        return "<nonfinite>"
+    if isinstance(obj, float):
+        return round(obj, 9)
+    return obj
+
+
+# ---- deterministic scenarios -------------------------------------------
+
+def engine_scenario() -> dict:
+    """Micro-batching engine: full + deadline flushes, a cache hit."""
+    rng = np.random.default_rng(0)
+    table = rng.normal(size=(64, DIM)).astype(np.float32)
+    eng = MIPSServeEngine(table, K=2, eps=0.3, delta=0.2, batch_size=4,
+                          deadline_ms=5.0, cache_entries=8,
+                          recall_sample_rate=0.5, seed=0)
+    qs = rng.normal(size=(10, DIM)).astype(np.float32)
+    qs[7] = qs[0]                                   # exact-repeat: LRU hit
+    for i in range(10):
+        eng.submit(qs[i], now=i * 1e-3)
+        eng.poll(now=i * 1e-3)
+    eng.drain(now=1.0)
+    return eng.stats()
+
+
+def store_engine_scenario() -> dict:
+    """Store-backed engine: staged churn, int8 shadow, recalibration."""
+    rng = np.random.default_rng(1)
+    st = DynamicTableStore(rng.normal(size=(24, DIM)).astype(np.float32),
+                           tile=8, block=DIM, precision="int8",
+                           capacity_slack=2.0)
+    eng = MIPSServeEngine(st, K=2, eps=0.3, delta=0.2, batch_size=2,
+                          deadline_ms=1.0, cache_entries=4,
+                          recall_sample_rate=0.0, seed=0)
+    qs = rng.normal(size=(8, DIM)).astype(np.float32)
+    for i in range(8):
+        if i % 2 == 0:
+            st.upsert(i, rng.normal(size=DIM).astype(np.float32))
+        if i == 5:
+            st.delete(0)
+        eng.submit(qs[i], now=i * 1e-3)
+        eng.poll(now=i * 1e-3 + 5e-4)
+    eng.drain(now=1.0)
+    return {"engine": eng.stats(), "store": st.stats()}
+
+
+def runtime_scenario() -> dict:
+    """Runtime under everything at once: poison, displacement, faults,
+    degradation, deadline expiry, store flush failures, quarantine."""
+    rng = np.random.default_rng(2)
+    table = rng.normal(size=(96, DIM)).astype(np.float32)
+    store = DynamicTableStore(table, tile=8, block=DIM,
+                              capacity_slack=1.5)
+    inj = FaultInjector(7, latency_rate=0.3, latency_ms=2.0,
+                        error_rate=0.3, persistent_rate=0.5,
+                        flush_failure_rate=0.5)
+    classes = {
+        "interactive": PriorityClass("interactive", priority=0,
+                                     deadline_ms=5000.0, sheddable=False),
+        "default": PriorityClass("default", priority=1,
+                                 deadline_ms=5000.0),
+        "batch": PriorityClass("batch", priority=2, deadline_ms=100.0),
+    }
+    rt = ServeRuntime(store, K=2, eps=0.3, delta=0.2, eps_floor=1.2,
+                      degrade_rungs=3, lanes=2, batch_wait_ms=0.1,
+                      queue_capacity=4, classes=classes, max_retries=1,
+                      retry_backoff_ms=0.1, fault_injector=inj,
+                      cache_entries=4, recall_sample_rate=0.25, seed=0)
+    rt.warmup()
+    qs = rng.normal(size=(32, DIM)).astype(np.float32)
+    rt.submit(np.full(DIM, np.nan, np.float32), now=0.0)     # poison
+    names = ("default", "batch", "interactive")
+    t = 0.0
+    for i in range(20):
+        if i % 3 == 0:
+            store.upsert(i, qs[i])          # churn -> flush-fault surface
+        rt.submit(qs[i], now=t, cls=names[i % 3])
+        rt.poll(now=t + 1e-3)
+        t += 2e-3
+    # displacement: fill the queue with sheddable batch work, then an
+    # interactive arrival displaces the youngest batch victim
+    for i in range(20, 25):
+        rt.submit(qs[i], now=t, cls="batch")
+    rt.submit(qs[25], now=t, cls="interactive")
+    rt.drain(now=t + 1e-3)
+    # deadline expiry: queue batch-class work, poll far past its deadline
+    t += 1.0
+    for i in range(26, 29):
+        rt.submit(qs[i], now=t, cls="batch")
+    rt.poll(now=t + 10.0)
+    rt.drain(now=t + 10.0)
+    return {"runtime": rt.stats(), "injector": inj.stats()}
+
+
+def all_scenarios() -> dict:
+    """The full scrubbed golden payload."""
+    return _scrub({
+        "engine": engine_scenario(),
+        "store_engine": store_engine_scenario(),
+        "runtime": runtime_scenario(),
+    })
+
+
+# ---- the regression test ------------------------------------------------
+
+def test_stats_byte_compatible_with_golden():
+    with open(GOLDEN) as f:
+        golden = json.load(f)
+    got = json.loads(json.dumps(_drop_additive(all_scenarios())))
+    assert list(got) == list(golden)
+    for name in golden:
+        assert got[name] == golden[name], (
+            f"stats() drifted from the pre-PR golden in scenario "
+            f"{name!r}:\n got: {json.dumps(got[name], indent=1)}\n "
+            f"want: {json.dumps(golden[name], indent=1)}")
+
+
+def test_key_order_pinned():
+    """json round-trip preserves insertion order: pin it explicitly."""
+    with open(GOLDEN) as f:
+        golden = json.load(f)
+    got = json.loads(json.dumps(_drop_additive(all_scenarios())))
+
+    def walk(a, b, path=""):
+        assert list(a) == list(b), f"key order drift at {path or '/'}"
+        for k in a:
+            if isinstance(a[k], dict) and isinstance(b.get(k), dict):
+                walk(a[k], b[k], f"{path}/{k}")
+
+    for name in golden:
+        walk(golden[name], got[name], name)
+
+
+if __name__ == "__main__":
+    import sys
+    if "--write" in sys.argv:
+        payload = all_scenarios()
+        with open(GOLDEN, "w") as f:
+            json.dump(payload, f, indent=1, sort_keys=False)
+        print(f"wrote {GOLDEN}")
+    else:
+        print(json.dumps(all_scenarios(), indent=1))

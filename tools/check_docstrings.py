@@ -39,6 +39,10 @@ AUDITED_MODULES = [
     "launch/faults.py",
     "launch/mesh.py",
     "models/steps.py",
+    "obs/__init__.py",
+    "obs/metrics.py",
+    "obs/trace.py",
+    "obs/flight.py",
     "store/__init__.py",
     "store/dynamic_table.py",
     "store/sharded_table.py",
@@ -139,6 +143,26 @@ API_CONTRACTS = {
     "launch/faults.py": {
         "FaultInjector": ["seed", "latency", "persistent", "flush"],
         "FaultInjector.attach": ["fault_hook", "staged", "intact"],
+        "FaultInjector.stats": ["seen", "rates", "milliseconds",
+                                "legacy"],
+    },
+    "obs/metrics.py": {
+        "MetricsRegistry": ["adopt", "get-or-create", "snapshot"],
+        "MetricsRegistry.adopt": ["reference", "collision", "no-op"],
+        "Counter.seed": ["row order", "0"],
+        "Histogram": ["bucket", "upper bound", "+Inf"],
+        "summarize_latencies": ["percentile", "milliseconds", "empty",
+                                "keys"],
+        "null_registry": ["no-op", "off"],
+    },
+    "obs/trace.py": {
+        "SpanTracer": ["chrome", "perfetto", "reservoir", "virtual"],
+        "SpanTracer.request_begin": ["reservoir", "sampled", "no-op"],
+        "SpanTracer.export": ["unclosed", "enclosing"],
+    },
+    "obs/flight.py": {
+        "FlightRecorder": ["ring", "dump", "overwrites", "path"],
+        "FlightRecorder.dump": ["reason", "none"],
     },
 }
 

@@ -36,6 +36,7 @@ AUDITED_DOCS = [
     "ROADMAP.md",
     "docs/KERNEL.md",
     "docs/TUNING.md",
+    "docs/OBSERVABILITY.md",
 ]
 
 _MD_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")

@@ -1,0 +1,238 @@
+#!/usr/bin/env python
+"""Validate serve-CLI observability artifacts (ISSUE 9 satellite).
+
+Pure stdlib (no jax), so CI can validate the files emitted by the
+fault-injection smoke run in milliseconds::
+
+    python tools/check_obs_artifacts.py \
+        --metrics out/metrics.prom --trace out/trace.json \
+        --flight out/flight.json
+
+Checks, per artifact (schemas in docs/OBSERVABILITY.md):
+
+* ``--metrics`` — Prometheus text exposition (``.prom``/``.txt``): every
+  sample line parses, every family has HELP/TYPE headers, histogram
+  ``_bucket`` series are cumulative, end at ``le="+Inf"`` and agree with
+  ``_count``; when the runtime's ``serve_outcomes_total`` family is
+  present, its outcome labels must come from the closed `STATUSES` set
+  and sum to ``serve_requests_total`` (every request got exactly one
+  typed outcome — the --check-outcomes contract, re-verified from the
+  exported counters).  JSON snapshots: the ``{"metrics": [...]}`` shape
+  with per-row values/cells.
+* ``--trace`` — Chrome trace-event JSON: a ``traceEvents`` list where
+  every event carries ``ph``/``name``/``pid``/``tid``, complete (``X``)
+  spans carry ``ts``/``dur >= 0``, and every per-request track's events
+  nest inside that request's enclosing ``request rid=N`` span.
+* ``--flight`` — flight-recorder dump: required payload keys, event
+  ``seq`` strictly increasing, ring size within ``capacity``.
+
+Exit 0 = all provided artifacts valid; any problem prints and exits 1.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import re
+import sys
+from typing import List
+
+_SAMPLE_RE = re.compile(
+    r'^(?P<name>[a-zA-Z_:][a-zA-Z0-9_:]*)'
+    r'(?:\{(?P<labels>.*)\})?\s+(?P<value>\S+)$')
+
+#: the runtime's closed typed-outcome set (launch/admission.STATUSES,
+#: duplicated here so the check stays stdlib-only)
+_STATUSES = ("ok", "degraded", "rejected", "overloaded", "failed")
+
+
+def check_metrics(path: str) -> List[str]:
+    """Problems in a metrics artifact (Prometheus text or JSON)."""
+    problems: List[str] = []
+    with open(path) as f:
+        text = f.read()
+    if not path.endswith((".prom", ".txt")):
+        try:
+            snap = json.loads(text)
+        except ValueError as e:
+            return [f"{path}: not JSON: {e}"]
+        if not isinstance(snap.get("metrics"), list):
+            return [f"{path}: missing top-level 'metrics' list"]
+        for m in snap["metrics"]:
+            for key in ("name", "kind", "help", "labels", "values"):
+                if key not in m:
+                    problems.append(f"{path}: metric entry missing "
+                                    f"{key!r}: {m.get('name', '?')}")
+        return problems
+
+    helped, typed = set(), set()
+    series: dict = {}
+    outcomes: dict = {}
+    requests_total = 0.0
+    for ln, line in enumerate(text.splitlines(), 1):
+        if not line.strip():
+            continue
+        if line.startswith("# HELP "):
+            helped.add(line.split()[2])
+            continue
+        if line.startswith("# TYPE "):
+            typed.add(line.split()[2])
+            continue
+        if line.startswith("#"):
+            continue
+        m = _SAMPLE_RE.match(line)
+        if not m:
+            problems.append(f"{path}:{ln}: unparseable sample: {line!r}")
+            continue
+        try:
+            float(m.group("value").replace("+Inf", "inf")
+                  .replace("-Inf", "-inf"))
+        except ValueError:
+            problems.append(f"{path}:{ln}: non-numeric value: {line!r}")
+        name = m.group("name")
+        base = re.sub(r"_(bucket|sum|count)$", "", name)
+        if base not in helped and name not in helped:
+            problems.append(f"{path}:{ln}: {name} has no # HELP header")
+        if name == "serve_outcomes_total":
+            om = re.search(r'outcome="([^"]*)"', m.group("labels") or "")
+            if om:
+                outcomes[om.group(1)] = (outcomes.get(om.group(1), 0.0)
+                                         + float(m.group("value")))
+        elif name == "serve_requests_total":
+            requests_total += float(m.group("value"))
+        if name.endswith("_bucket"):
+            labels = m.group("labels") or ""
+            key = re.sub(r'le="[^"]*",?', "", labels)
+            series.setdefault((base, key), []).append(
+                (ln, labels, float(m.group("value"))))
+    for (base, key), rows in series.items():
+        vals = [v for _, _, v in rows]
+        if vals != sorted(vals):
+            problems.append(f"{path}: {base}{{{key}}} buckets are not "
+                            f"cumulative: {vals}")
+        if 'le="+Inf"' not in rows[-1][1]:
+            problems.append(f"{path}: {base}{{{key}}} does not end at "
+                            f'le="+Inf"')
+    if not series and "_bucket" in text:
+        problems.append(f"{path}: bucket lines present but none parsed")
+    if not helped:
+        problems.append(f"{path}: no # HELP headers (not exposition "
+                        f"format?)")
+    if outcomes:
+        bad = sorted(set(outcomes) - set(_STATUSES))
+        if bad:
+            problems.append(f"{path}: serve_outcomes_total has outcomes "
+                            f"outside the closed set: {bad}")
+        if abs(sum(outcomes.values()) - requests_total) > 1e-9:
+            problems.append(
+                f"{path}: outcome counters sum to "
+                f"{sum(outcomes.values()):g} but serve_requests_total is "
+                f"{requests_total:g} (every request must get exactly one "
+                f"typed outcome)")
+    return problems
+
+
+def check_trace(path: str) -> List[str]:
+    """Problems in a Chrome trace-event JSON artifact."""
+    problems: List[str] = []
+    with open(path) as f:
+        try:
+            tr = json.load(f)
+        except ValueError as e:
+            return [f"{path}: not JSON: {e}"]
+    evs = tr.get("traceEvents")
+    if not isinstance(evs, list):
+        return [f"{path}: missing 'traceEvents' list"]
+    if not evs:
+        problems.append(f"{path}: empty traceEvents")
+    enclosing: dict = {}
+    for i, ev in enumerate(evs):
+        for key in ("ph", "name", "pid", "tid"):
+            if key not in ev:
+                problems.append(f"{path}: event {i} missing {key!r}")
+        if ev.get("ph") == "X":
+            if "ts" not in ev or "dur" not in ev:
+                problems.append(f"{path}: X event {i} "
+                                f"({ev.get('name')}) missing ts/dur")
+            elif ev["dur"] < 0:
+                problems.append(f"{path}: X event {i} has dur < 0")
+            if str(ev.get("name", "")).startswith("request rid="):
+                enclosing[ev["tid"]] = (ev["ts"], ev["ts"] + ev["dur"])
+        elif ev.get("ph") == "i" and "ts" not in ev:
+            problems.append(f"{path}: instant event {i} missing ts")
+    for i, ev in enumerate(evs):
+        if ev.get("ph") not in ("X", "i"):
+            continue
+        span = enclosing.get(ev.get("tid"))
+        if span is None or str(ev.get("name", "")).startswith("request "):
+            continue
+        t0, t1 = span
+        if ev["ts"] < t0 - 1e-6 or ev["ts"] + ev.get("dur", 0) > t1 + 1e-6:
+            problems.append(
+                f"{path}: event {i} ({ev['name']}) escapes its "
+                f"enclosing request span on tid {ev['tid']}")
+    od = tr.get("otherData", {})
+    for key in ("n_requests_seen", "n_requests_sampled"):
+        if key not in od:
+            problems.append(f"{path}: otherData missing {key!r}")
+    return problems
+
+
+def check_flight(path: str) -> List[str]:
+    """Problems in a flight-recorder dump."""
+    problems: List[str] = []
+    with open(path) as f:
+        try:
+            fl = json.load(f)
+        except ValueError as e:
+            return [f"{path}: not JSON: {e}"]
+    for key in ("reason", "seq", "capacity", "n_recorded", "n_dumps",
+                "events"):
+        if key not in fl:
+            problems.append(f"{path}: payload missing {key!r}")
+    evs = fl.get("events", [])
+    if len(evs) > fl.get("capacity", 0):
+        problems.append(f"{path}: {len(evs)} events exceed capacity "
+                        f"{fl.get('capacity')}")
+    seqs = [e.get("seq") for e in evs]
+    if any(s is None for s in seqs):
+        problems.append(f"{path}: event missing 'seq'")
+    elif seqs != sorted(seqs) or len(set(seqs)) != len(seqs):
+        problems.append(f"{path}: event seqs not strictly increasing: "
+                        f"{seqs}")
+    for i, e in enumerate(evs):
+        if "kind" not in e or "t" not in e:
+            problems.append(f"{path}: event {i} missing kind/t")
+    return problems
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--metrics", default=None,
+                    help="metrics snapshot (.prom/.txt exposition or JSON)")
+    ap.add_argument("--trace", default=None,
+                    help="Chrome trace-event JSON")
+    ap.add_argument("--flight", default=None,
+                    help="flight-recorder dump JSON")
+    args = ap.parse_args()
+    if not (args.metrics or args.trace or args.flight):
+        ap.error("nothing to check: pass --metrics / --trace / --flight")
+    problems: List[str] = []
+    checked = []
+    for path, fn in ((args.metrics, check_metrics),
+                     (args.trace, check_trace),
+                     (args.flight, check_flight)):
+        if path:
+            problems.extend(fn(path))
+            checked.append(path)
+    if problems:
+        print(f"obs artifacts: {len(problems)} problem(s)")
+        for p in problems:
+            print(f"  {p}")
+        return 1
+    print(f"obs artifacts OK: {', '.join(checked)}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
