@@ -1,0 +1,192 @@
+"""PR-10 multi-tenant serving benchmark: fairness, paging, isolation.
+
+Emits the rows for ``BENCH_PR10.json`` (via `benchmarks.run`), the three
+acceptance quantities of the tenancy layer:
+
+* ``fairness`` — three tenants behind one `MultiTenantRuntime`, the hot
+  one submitting 8x the cold rate into a bounded private queue.  Per
+  tenant: answered fraction, shed count, answered p99.  The gate shape:
+  cold tenants answer everything while the hot tenant is throttled (its
+  queue bound sheds the excess) but never starved.
+* ``paging`` — a byte budget that holds only two of three tables, served
+  round-robin so every acquire evicts the LRU table and pages the
+  victim's successor back in.  Reports eviction/page-in counts, page-in
+  milliseconds (store rebuild from the page image) and the off-clock
+  executor warm cost (jit retrace) — the price of oversubscribing device
+  memory.
+* ``isolation`` — a cold tenant's answered p99 served next to the hot
+  tenant, divided by the same tenant/stream served on a *dedicated*
+  single-tenant `ServeRuntime` (the isolated baseline).  The acceptance
+  gate tracks ``p99_ratio <= 2.0``.
+
+Geometry is CPU-feasible on purpose (same philosophy as bench_runtime);
+ratios between runs are the tracked quantities, not absolute rps.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.launch.admission import PriorityClass
+from repro.launch.engine import ServeRuntime
+from repro.launch.tenancy import (MultiTenantRuntime, TableRegistry,
+                                  TenantConfig)
+from repro.store import DynamicTableStore
+
+_DIM = 192
+_ROWS = 384
+_LANES = 8
+_K = 4
+_EPS = 1.6
+_DELTA = 0.2
+_DEADLINE_MS = 50.0
+_QUEUE = 32
+_ITERS = 40
+_HOT_RATE = 12           # per-iteration burst, > hot queue capacity
+_HOT_QUEUE = 8           # hot queue bound: the throttle
+_STEP_S = 0.004          # virtual inter-arrival per iteration
+
+
+def _table(seed):
+    rng = np.random.default_rng(seed)
+    return (rng.normal(size=(_ROWS, _DIM)) / np.sqrt(_DIM)
+            ).astype(np.float32)
+
+
+def _cfg(seed, **over):
+    kw = dict(K=_K, eps=_EPS, delta=_DELTA, deadline_ms=_DEADLINE_MS,
+              queue_capacity=_QUEUE, seed=seed)
+    kw.update(over)
+    return TenantConfig(**kw)
+
+
+def _skewed_run():
+    """Hot tenant at 8x + two cold tenants through one runtime."""
+    reg = TableRegistry(lanes=_LANES)
+    reg.register("hot", _table(0), _cfg(0, queue_capacity=_HOT_QUEUE))
+    for name, seed in (("c1", 1), ("c2", 2)):
+        reg.register(name, _table(seed), _cfg(seed))
+    mt = MultiTenantRuntime(reg, batch_wait_ms=2.0)
+    mt.warmup()
+    rng = np.random.default_rng(7)
+    t = 0.0
+    for _ in range(_ITERS):
+        for _ in range(_HOT_RATE):
+            mt.submit(rng.normal(size=_DIM).astype(np.float32),
+                      tenant="hot", now=t)
+        for name in ("c1", "c2"):
+            mt.submit(rng.normal(size=_DIM).astype(np.float32),
+                      tenant=name, now=t)
+        _, busy = mt.poll(now=t + 0.002)
+        t += _STEP_S + busy
+    mt.drain(now=t + 1.0)
+    return mt.stats()
+
+
+def _isolated_p99(seed):
+    """The same cold stream on a dedicated single-tenant runtime."""
+    cfg = _cfg(seed)
+    rt = ServeRuntime(
+        _table(seed), K=cfg.K, eps=cfg.eps, delta=cfg.delta,
+        lanes=_LANES, batch_wait_ms=2.0, queue_capacity=cfg.queue_capacity,
+        classes={"default": PriorityClass("default", priority=cfg.priority,
+                                          deadline_ms=cfg.deadline_ms)},
+        seed=cfg.seed)
+    rt.warmup()
+    rng = np.random.default_rng(7)
+    t = 0.0
+    for _ in range(_ITERS):
+        # reproduce the arrival cadence, minus the co-tenants
+        rng.normal(size=(_HOT_RATE, _DIM))          # burn the hot draws
+        rt.submit(rng.normal(size=_DIM).astype(np.float32), now=t)
+        rng.normal(size=_DIM)                       # burn the c2 draw
+        _, busy = rt.poll(now=t + 0.002)
+        t += _STEP_S + busy
+    rt.drain(now=t + 1.0)
+    return float(rt.stats()["latency_ms"]["p99"])
+
+
+def _paging_run():
+    """Budget for two of three tables: round-robin serve = LRU thrash."""
+    unit = DynamicTableStore(_table(0)).resident_bytes()
+    reg = TableRegistry(byte_budget=int(2.2 * unit), lanes=_LANES)
+    for name, seed in (("a", 10), ("b", 11), ("c", 12)):
+        reg.register(name, _table(seed), _cfg(seed))
+    page_ms = []
+    for i in range(9):
+        name = ("a", "b", "c")[i % 3]
+        _, page_s = reg.executors(name)
+        page_ms.append(page_s * 1e3)
+    snap = {m["name"]: m for m in reg.metrics.snapshot()["metrics"]}
+    cells = snap["tenancy_warm_ms"]["values"]
+    warm = {"sum": sum(c["sum"] for c in cells),
+            "count": sum(c["count"] for c in cells)}
+    stats = reg.stats()
+    paged = [ms for ms in page_ms if ms > 0.0]
+    return {
+        "byte_budget": stats["byte_budget"],
+        "table_bytes": int(unit),
+        "acquires": len(page_ms),
+        "evictions": stats["evictions"],
+        "page_ins": stats["page_ins"],
+        "page_in_ms_mean": float(np.mean(paged)) if paged else 0.0,
+        "page_in_ms_max": float(np.max(paged)) if paged else 0.0,
+        "warm_ms_mean": float(warm["sum"] / max(1, warm["count"])),
+        "executor_cache_entries": stats["executor_cache_entries"],
+    }
+
+
+def run(csv: bool = True) -> dict:
+    """Run all three sections; returns the BENCH_PR10 payload dict."""
+    out = {"geometry": {"n": _ROWS, "N": _DIM, "K": _K, "eps": _EPS,
+                        "delta": _DELTA, "lanes": _LANES,
+                        "queue_capacity": _QUEUE,
+                        "hot_queue_capacity": _HOT_QUEUE,
+                        "deadline_ms": _DEADLINE_MS, "iters": _ITERS,
+                        "hot_rate": _HOT_RATE}}
+
+    s = _skewed_run()
+    fairness = {}
+    for name, ts in s["tenants"].items():
+        o = ts["outcomes"]
+        answered = o["ok"] + o["degraded"]
+        fairness[name] = {
+            "requests": ts["requests"],
+            "answered": answered,
+            "answered_frac": answered / max(1, ts["requests"]),
+            "shed": o["overloaded"] + o["rejected"],
+            "p99_ms": float(ts["latency_ms"]["p99"]),
+        }
+    out["fairness"] = fairness
+
+    iso = {}
+    for name in ("c1", "c2"):
+        base = _isolated_p99({"c1": 1, "c2": 2}[name])
+        multi = fairness[name]["p99_ms"]
+        iso[name] = {"isolated_p99_ms": base, "multi_p99_ms": multi,
+                     "p99_ratio": multi / max(1e-9, base)}
+    out["isolation"] = iso
+
+    out["paging"] = _paging_run()
+
+    if csv:
+        for name, f in fairness.items():
+            print(f"tenancy_fair_{name},answered={f['answered']}/"
+                  f"{f['requests']},shed={f['shed']},"
+                  f"p99={f['p99_ms']:.2f}ms")
+        for name, r in iso.items():
+            print(f"tenancy_iso_{name},"
+                  f"isolated_p99={r['isolated_p99_ms']:.2f}ms,"
+                  f"multi_p99={r['multi_p99_ms']:.2f}ms,"
+                  f"ratio={r['p99_ratio']:.2f}")
+        p = out["paging"]
+        print(f"tenancy_paging,evictions={p['evictions']},"
+              f"page_ins={p['page_ins']},"
+              f"page_in_mean={p['page_in_ms_mean']:.2f}ms,"
+              f"warm_mean={p['warm_ms_mean']:.1f}ms")
+    return out
+
+
+if __name__ == "__main__":
+    import json
+    print(json.dumps(run(), indent=2))

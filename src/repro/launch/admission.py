@@ -42,7 +42,7 @@ from repro.obs.metrics import MetricsRegistry
 
 __all__ = [
     "STATUSES", "PriorityClass", "ServeResult", "Ticket",
-    "AdmissionController", "DegradationLadder",
+    "AdmissionController", "DegradationLadder", "DeficitRoundRobin",
 ]
 
 #: The closed set of terminal request outcomes.  ``ok`` and ``degraded``
@@ -97,6 +97,9 @@ class ServeResult:
     latency_s: float = 0.0
     retries: int = 0
     cached: bool = False
+    #: which tenant's table served this request ("" on the
+    #: single-table runtimes; set by `repro.launch.tenancy`)
+    tenant: str = ""
 
     @property
     def answered(self) -> bool:
@@ -445,3 +448,84 @@ class DegradationLadder:
             return self.n_rungs - 1
         frac = (load - self.start) / (1.0 - self.start)
         return min(self.n_rungs - 1, 1 + int(frac * (self.n_rungs - 1)))
+
+
+class DeficitRoundRobin:
+    """Deficit-round-robin service allocator for cross-tenant fairness.
+
+    Classic DRR (Shreedhar & Varghese) over named flows: each round, a
+    *backlogged* flow's deficit grows by ``quantum * weight`` (capped at
+    ``cap_rounds`` rounds' worth so an intermittently-backlogged flow
+    cannot hoard service credit), and the flow may serve work costing up
+    to its current deficit.  A flow whose queue empties forfeits its
+    remaining deficit (`reset`) — credit never survives idleness, which is
+    what bounds any flow's burst to O(quantum) over fair share.  The
+    service order rotates one flow per round so ties break fairly.
+
+    The multi-tenant runtime uses request count as the cost unit with
+    ``quantum = lanes``: with every tenant backlogged, each gets about
+    one full dispatch per round regardless of arrival-rate skew — an
+    8x-hot tenant is throttled to its share instead of starving the
+    rest, and an idle tenant costs nothing (work-conserving).
+
+    Host-side policy only; no clock, no jax.
+    """
+
+    def __init__(self, quantum: float, *, cap_rounds: float = 2.0):
+        if quantum <= 0:
+            raise ValueError(f"quantum must be > 0, got {quantum}")
+        if cap_rounds < 1.0:
+            raise ValueError(f"cap_rounds must be >= 1, got {cap_rounds}")
+        self.quantum = float(quantum)
+        self.cap_rounds = float(cap_rounds)
+        self._order: List[str] = []
+        self._weight: Dict[str, float] = {}
+        self._deficit: Dict[str, float] = {}
+
+    def add_flow(self, name: str, weight: float = 1.0) -> None:
+        """Register a flow at ``weight`` x the base quantum (idempotent;
+        re-adding updates the weight, keeps the deficit)."""
+        if weight <= 0:
+            raise ValueError(f"weight must be > 0, got {weight}")
+        if name not in self._weight:
+            self._order.append(name)
+            self._deficit[name] = 0.0
+        self._weight[name] = float(weight)
+
+    def remove_flow(self, name: str) -> None:
+        """Drop a flow and its deficit (no-op if unknown)."""
+        if name in self._weight:
+            self._order.remove(name)
+            del self._weight[name]
+            del self._deficit[name]
+
+    def flows(self) -> List[str]:
+        """Current service order (rotates one step per `rotate`)."""
+        return list(self._order)
+
+    def start_round(self, backlogged: Dict[str, bool]) -> None:
+        """Grant each backlogged flow its per-round quantum (capped)."""
+        for name in self._order:
+            if backlogged.get(name, False):
+                w = self._weight[name]
+                self._deficit[name] = min(
+                    self._deficit[name] + self.quantum * w,
+                    self.cap_rounds * self.quantum * w)
+
+    def allowance(self, name: str) -> int:
+        """Whole service units the flow may consume right now."""
+        return int(self._deficit[name])
+
+    def consume(self, name: str, cost: float) -> None:
+        """Charge served work against the flow's deficit."""
+        self._deficit[name] = max(0.0, self._deficit[name] - float(cost))
+
+    def reset(self, name: str) -> None:
+        """Forfeit a now-idle flow's deficit (credit never survives
+        idleness — the DRR burst bound depends on this)."""
+        self._deficit[name] = 0.0
+
+    def rotate(self) -> None:
+        """Advance the service order by one flow (fair tie-breaking)."""
+        if len(self._order) > 1:
+            self._order.append(self._order.pop(0))

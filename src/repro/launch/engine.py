@@ -52,7 +52,63 @@ from repro.obs.metrics import (PULL_FRAC_BUCKETS, MetricsRegistry,
                                summarize_latencies)
 
 __all__ = ["QuantizedLRU", "CascadeExecutor", "MIPSServeEngine",
-           "ServeRuntime"]
+           "ServeRuntime", "DispatchFailed", "dispatch_with_retries"]
+
+
+class DispatchFailed(RuntimeError):
+    """A dispatch exhausted its retry budget (`dispatch_with_retries`).
+
+    Carries the last ``cause`` exception, the number of ``retries``
+    burned and the accumulated virtual ``backoff`` seconds so the
+    caller can fail the batch with honest accounting.
+    """
+
+    def __init__(self, cause: Exception, retries: int, backoff: float):
+        super().__init__(f"dispatch failed after {retries} retries: {cause}")
+        self.cause = cause
+        self.retries = retries
+        self.backoff = backoff
+
+
+def dispatch_with_retries(ex, Qbuf, key, *, didx: int, injector=None,
+                          max_retries: int = 2,
+                          retry_backoff_s: float = 1e-3,
+                          on_error=None, on_retry=None):
+    """One executor dispatch under the runtime's fault contract.
+
+    Runs ``ex.dispatch(Qbuf, key)`` with exponential-backoff retries,
+    consulting the deterministic fault ``injector`` (attempt-level
+    injected errors, post-success latency spikes) exactly like
+    `ServeRuntime` always has; extracted so the multi-tenant runtime
+    (`repro.launch.tenancy`) shares one implementation instead of
+    drifting.  ``on_error(exc, attempt, injected)`` fires per failing
+    attempt, ``on_retry(attempt, backoff)`` per retry decision — both
+    before the backoff grows.  Returns ``(ids, scores, rounds, dt,
+    retries, backoff, spike)`` where ``dt`` already includes the
+    injected ``spike`` and accumulated ``backoff`` (virtual seconds);
+    raises `DispatchFailed` past ``max_retries``.
+    """
+    attempt = 0
+    backoff = 0.0
+    while True:
+        injected = (injector.dispatch_error(didx, attempt)
+                    if injector is not None else None)
+        try:
+            if injected is not None:
+                raise injected
+            ids, scores, rounds, dt = ex.dispatch(Qbuf, key)
+            break
+        except Exception as e:
+            if on_error is not None:
+                on_error(e, attempt, injected is not None)
+            if attempt >= max_retries:
+                raise DispatchFailed(e, attempt, backoff) from e
+            if on_retry is not None:
+                on_retry(attempt, backoff)
+            backoff += retry_backoff_s * (2.0 ** attempt)
+            attempt += 1
+    spike = injector.latency_s(didx) if injector is not None else 0.0
+    return ids, scores, rounds, dt + spike + backoff, attempt, backoff, spike
 
 
 class QuantizedLRU:
@@ -476,6 +532,22 @@ class CascadeExecutor:
         if self.store is not None:
             return self.store.external_ids(slots)
         return slots.copy()
+
+    @property
+    def plan_value_range(self) -> float:
+        """The value range the current plan was calibrated at.
+
+        The registry's executor cache (`repro.launch.tenancy`) compares
+        ``2 * qmax_hint * store.value_abs_max`` against this to decide
+        whether a cached ladder is still a valid bound or must be
+        rebuilt (the range-recalibration salt of the cache key).
+        """
+        return self._plan_value_range
+
+    @property
+    def qmax_hint(self) -> float:
+        """The |q| bound the value-range calibration assumes."""
+        return self._qmax_hint
 
 
 class MIPSServeEngine:
@@ -1541,42 +1613,34 @@ class ServeRuntime:
         self._dispatch_seq += 1
         self._c_dispatches.inc(
             filled="full" if len(batch) == self.lanes else "partial")
-        attempt = 0
-        backoff = 0.0
-        while True:
-            injected = (self.injector.dispatch_error(didx, attempt)
-                        if self.injector is not None else None)
-            try:
-                if injected is not None:
-                    raise injected
-                ids, scores, rounds, dt = ex.dispatch(Qbuf, key)
-                break
-            except Exception as e:
-                self._c_dispatch_errors.inc()
-                if self.flight is not None:
-                    self.flight.record(
-                        "fault_dispatch_error", t, didx=didx,
-                        attempt=attempt, injected=injected is not None,
-                        error=str(e))
-                if attempt >= self.max_retries:
-                    return self._fail_batch(batch, t, e, attempt,
-                                            backoff), backoff
-                self._c_retries.inc()
-                if self.tracer is not None:
-                    for tk in batch:
-                        self.tracer.instant(tk.req_id, "retry",
-                                            t + backoff, attempt=attempt,
-                                            didx=didx)
-                backoff += self.retry_backoff_s * (2.0 ** attempt)
-                attempt += 1
-        spike = 0.0
-        if self.injector is not None:
-            spike = self.injector.latency_s(didx)
-            dt += spike
-            if spike > 0.0 and self.flight is not None:
-                self.flight.record("fault_latency", t, didx=didx,
-                                   spike_ms=spike * 1e3)
-        dt += backoff
+        def on_error(e, attempt, injected):
+            self._c_dispatch_errors.inc()
+            if self.flight is not None:
+                self.flight.record(
+                    "fault_dispatch_error", t, didx=didx,
+                    attempt=attempt, injected=injected, error=str(e))
+
+        def on_retry(attempt, backoff):
+            self._c_retries.inc()
+            if self.tracer is not None:
+                for tk in batch:
+                    self.tracer.instant(tk.req_id, "retry",
+                                        t + backoff, attempt=attempt,
+                                        didx=didx)
+
+        try:
+            ids, scores, rounds, dt, attempt, backoff, spike = \
+                dispatch_with_retries(
+                    ex, Qbuf, key, didx=didx, injector=self.injector,
+                    max_retries=self.max_retries,
+                    retry_backoff_s=self.retry_backoff_s,
+                    on_error=on_error, on_retry=on_retry)
+        except DispatchFailed as df:
+            return self._fail_batch(batch, t, df.cause, df.retries,
+                                    df.backoff), df.backoff
+        if spike > 0.0 and self.flight is not None:
+            self.flight.record("fault_latency", t, didx=didx,
+                               spike_ms=spike * 1e3)
         if (self.dispatch_timeout_s is not None
                 and dt > self.dispatch_timeout_s):
             self._c_slow.inc()

@@ -117,7 +117,7 @@ def arrival_trace(n: int, *, interarrival_ms: float = 0.1,
 
 def simulate_stream(engine, queries, *, interarrival_ms: float = 0.1,
                     churn=None, pattern: str = "uniform", seed: int = 0,
-                    open_loop: bool = False, classes=None,
+                    open_loop: bool = False, classes=None, tenants=None,
                     burst_factor: float = 8.0, burst_len: int = 16,
                     trace=None, metrics_out=None, trace_out=None) -> dict:
     """Drive a query stream through an engine/runtime on a virtual clock.
@@ -140,7 +140,11 @@ def simulate_stream(engine, queries, *, interarrival_ms: float = 0.1,
     ``churn(engine, i)`` (optional) runs before each arrival — stage
     store mutations there to simulate a live corpus.  ``classes(i)``
     (optional, `ServeRuntime` only) names the priority class of arrival
-    ``i``.  Returns the engine stats dict plus ``virtual_s``,
+    ``i``.  ``tenants(i)`` (optional, `repro.launch.tenancy.
+    MultiTenantRuntime` only) names the tenant whose table serves
+    arrival ``i`` — a multi-tenant trace is just a merged arrival trace
+    plus this routing function.  Returns the engine stats dict plus
+    ``virtual_s``,
     ``throughput_rps`` and the ``trace`` metadata block (pattern, seed,
     span, offered rate) that makes the run reproducible.
 
@@ -170,6 +174,8 @@ def simulate_stream(engine, queries, *, interarrival_ms: float = 0.1,
             if churn is not None:
                 churn(engine, i)
             kw = {} if classes is None else {"cls": classes(i)}
+            if tenants is not None:
+                kw["tenant"] = tenants(i)
             engine.submit(queries[i],
                           now=(float(trace[i]) if open_loop else now), **kw)
             i += 1
@@ -372,6 +378,160 @@ def _run_loop(args) -> None:
         _check_outcomes(args, stats)
 
 
+def _load_tenant_spec(path: str) -> dict:
+    """Parse a ``--tenants`` spec file into {name: spec-dict}.
+
+    The file is JSON: either a mapping of tenant name -> spec, or
+    ``{"tenants": {...}}``.  Each spec holds driver keys — ``rows``
+    (synthetic table rows, required) and ``rate_factor`` (arrival-rate
+    multiplier vs ``--interarrival-ms``, default 1.0; the hot-tenant
+    skew knob) — plus any `repro.launch.tenancy.TenantConfig` field
+    (``eps``, ``precision``, ``weight``, ``pinned``, ...).  Unknown
+    keys are rejected so a typo'd knob cannot silently serve defaults.
+    """
+    with open(path) as f:
+        spec = json.load(f)
+    if isinstance(spec, dict) and isinstance(spec.get("tenants"), dict):
+        spec = spec["tenants"]
+    if not isinstance(spec, dict) or not spec:
+        raise ValueError(f"{path}: expected a non-empty JSON object of "
+                         f"tenant name -> spec")
+    from repro.launch.tenancy import TenantConfig
+    cfg_fields = {f.name for f in dataclasses.fields(TenantConfig)}
+    driver_keys = {"rows", "rate_factor"}
+    for name, s in spec.items():
+        if not isinstance(s, dict) or "rows" not in s:
+            raise ValueError(f"{path}: tenant {name!r} needs at least "
+                             f"{{\"rows\": <n>}}")
+        unknown = set(s) - cfg_fields - driver_keys
+        if unknown:
+            raise ValueError(f"{path}: tenant {name!r} has unknown keys "
+                             f"{sorted(unknown)}")
+        if float(s.get("rate_factor", 1.0)) <= 0:
+            raise ValueError(f"{path}: tenant {name!r} rate_factor must "
+                             f"be > 0")
+    return spec
+
+
+def _run_tenants(args) -> None:
+    """--tenants mode: one multi-tenant runtime, one merged stream.
+
+    Builds a synthetic table per tenant from the spec (seeded per
+    tenant, dim = the arch's d_model), registers all of them in a
+    `repro.launch.tenancy.TableRegistry` under ``--table-budget-mb``,
+    and drives one merged open-loop arrival trace — each tenant
+    arrives at ``rate_factor`` times the base ``--interarrival-ms``
+    rate under its own ``--pattern`` stream — through a
+    `MultiTenantRuntime` (deficit-round-robin fairness, per-tenant
+    admission, LRU residency).  Stats keep the single-runtime top-level
+    shape, so ``--check-outcomes`` gates the run unchanged; per-tenant
+    and registry breakdowns ride in ``tenants`` / ``registry``.
+    """
+    from repro.launch.tenancy import (MultiTenantRuntime, TableRegistry,
+                                      TenantConfig)
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = cfg.smoke()
+    dim = cfg.d_model
+    spec = _load_tenant_spec(args.tenants)
+    tracer = None
+    flight = None
+    if args.trace_out:
+        from repro.obs import SpanTracer
+        tracer = SpanTracer(seed=args.stream_seed)
+    if args.flight_recorder_path:
+        from repro.obs import FlightRecorder
+        flight = FlightRecorder(capacity=args.flight_capacity,
+                                path=args.flight_recorder_path)
+    injector = None
+    if (args.inject_latency_rate > 0 or args.inject_error_rate > 0
+            or args.inject_flush_rate > 0):
+        from repro.launch.faults import FaultInjector
+        injector = FaultInjector(
+            args.fault_seed,
+            latency_rate=args.inject_latency_rate,
+            error_rate=args.inject_error_rate,
+            flush_failure_rate=args.inject_flush_rate)
+    budget = (None if args.table_budget_mb is None
+              else int(args.table_budget_mb * 2**20))
+    registry = TableRegistry(byte_budget=budget, lanes=args.batch,
+                             flight=flight)
+    rates = {}
+    for idx, (name, s) in enumerate(sorted(spec.items())):
+        s = dict(s)
+        rows = int(s.pop("rows"))
+        rates[name] = float(s.pop("rate_factor", 1.0))
+        defaults = dict(K=args.topk, eps=args.eps, delta=args.delta,
+                        eps_floor=args.eps_floor,
+                        degrade_rungs=args.degrade_rungs,
+                        precision=args.precision,
+                        pull_mode=args.pull_mode,
+                        pq_subdims=args.pq_subdims,
+                        adaptive=args.adaptive, bound=args.bound,
+                        cache_entries=args.cache_entries,
+                        deadline_ms=args.request_deadline_ms,
+                        queue_capacity=args.queue_capacity,
+                        seed=args.stream_seed + idx)
+        defaults.update(s)
+        tcfg = TenantConfig(**defaults)
+        trng = np.random.default_rng(
+            np.random.SeedSequence([_TRACE_ROOT, args.stream_seed, idx]))
+        table = (trng.normal(size=(rows, dim)) / np.sqrt(dim)
+                 ).astype(np.float32)
+        registry.register(name, table, tcfg)
+    engine = MultiTenantRuntime(
+        registry, batch_wait_ms=args.deadline_ms,
+        max_retries=args.max_retries, fault_injector=injector,
+        recall_sample_rate=args.recall_rate, seed=args.stream_seed,
+        tracer=tracer, flight=flight)
+    names = sorted(spec)
+    print(f"[serve] tenants: {len(names)} tables dim={dim} "
+          f"budget={'none' if budget is None else f'{budget}B'} "
+          f"lanes={args.batch} pattern={args.pattern} "
+          f"rates={ {n: rates[n] for n in names} } "
+          f"faults={'on' if injector else 'off'}")
+    engine.warmup()
+    # merged arrival trace: each tenant gets its own seeded stream at
+    # rate_factor x the base rate; the merge is sorted by arrival time
+    total_rate = sum(rates.values())
+    per_tenant_n = {n: max(1, int(round(args.requests * rates[n]
+                                        / total_rate)))
+                    for n in names}
+    times, labels = [], []
+    for idx, name in enumerate(names):
+        tr = arrival_trace(per_tenant_n[name],
+                           interarrival_ms=(args.interarrival_ms
+                                            / rates[name]),
+                           pattern=args.pattern,
+                           seed=args.stream_seed + 1000 * (idx + 1),
+                           burst_factor=8.0, burst_len=16)
+        times.append(tr)
+        labels.extend([name] * len(tr))
+    times = np.concatenate(times) if times else np.zeros(0)
+    order = np.argsort(times, kind="stable")
+    trace = times[order]
+    labels = [labels[int(j)] for j in order]
+    qrng = np.random.default_rng(args.stream_seed)
+    qs = qrng.normal(size=(len(trace), dim)).astype(np.float32)
+    if args.repeat_rate > 0:
+        n_dup = int(len(trace) * args.repeat_rate)
+        if n_dup:
+            idxs = qrng.integers(0, max(1, len(trace) - n_dup), n_dup)
+            qs[len(trace) - n_dup:] = qs[idxs]
+    stats = simulate_stream(
+        engine, qs, interarrival_ms=args.interarrival_ms,
+        pattern=args.pattern, seed=args.stream_seed, open_loop=True,
+        tenants=lambda i: labels[i], trace=trace,
+        metrics_out=args.metrics_out, trace_out=args.trace_out)
+    if flight is not None:
+        dumped = flight.dump("end_of_run", stats["virtual_s"])
+        if dumped:
+            stats.setdefault("artifacts", {})["flight"] = dumped
+    print(json.dumps(stats, indent=2))
+    if args.check_outcomes:
+        _check_outcomes(args, stats)
+
+
 def _check_outcomes(args, stats: dict) -> None:
     """--check-outcomes: fail the process unless the runtime held its
     serving contract over the stream — reaching this line at all proves
@@ -485,10 +645,11 @@ def _validate_args(ap: argparse.ArgumentParser, args) -> None:
                  f"single-request batch at every poll (for per-request "
                  f"completion deadlines use --request-deadline-ms)")
     if args.eps_floor is not None:
-        if not args.runtime:
-            ap.error("--eps-floor requires --runtime: the degradation "
-                     "ladder lives in the continuous-batching runtime "
-                     "(add --runtime, or drop --eps-floor)")
+        if not (args.runtime or args.tenants):
+            ap.error("--eps-floor requires --runtime or --tenants: the "
+                     "degradation ladder lives in the continuous-"
+                     "batching runtimes (add --runtime, or drop "
+                     "--eps-floor)")
         if args.eps_floor < args.eps:
             ap.error(f"--eps-floor {args.eps_floor} must be >= --eps "
                      f"{args.eps}: overload *relaxes* eps toward the "
@@ -499,14 +660,34 @@ def _validate_args(ap: argparse.ArgumentParser, args) -> None:
                       ("--inject-flush-rate", args.inject_flush_rate)):
         if not 0.0 <= val <= 1.0:
             ap.error(f"{name} must be in [0, 1], got {val}")
-        if val > 0 and not args.runtime:
-            ap.error(f"{name} requires --runtime: fault injection is "
-                     f"wired through the runtime's retry/quarantine "
-                     f"machinery (add --runtime)")
-    if args.inject_flush_rate > 0 and not args.dynamic:
-        ap.error("--inject-flush-rate requires --dynamic: flush faults "
-                 "fire inside a store's flush_updates, and without "
-                 "--dynamic there is no store")
+        if val > 0 and not (args.runtime or args.tenants):
+            ap.error(f"{name} requires --runtime or --tenants: fault "
+                     f"injection is wired through the runtimes' "
+                     f"retry/quarantine machinery (add --runtime)")
+    if args.inject_flush_rate > 0 and not (args.dynamic or args.tenants):
+        ap.error("--inject-flush-rate requires --dynamic or --tenants: "
+                 "flush faults fire inside a store's flush_updates, and "
+                 "without either there is no store")
+    if args.tenants is not None:
+        if not args.loop:
+            ap.error("--tenants requires --loop: the multi-tenant "
+                     "registry serves the request stream, not the "
+                     "decode demo")
+        if args.runtime:
+            ap.error("--tenants is its own runtime mode; drop --runtime "
+                     "(the MultiTenantRuntime is always continuous-"
+                     "batching)")
+        if args.dynamic or args.shards > 1:
+            ap.error("--tenants builds its own stores per tenant; drop "
+                     "--dynamic/--shards (per-tenant precision and "
+                     "placement live in the spec file)")
+    if args.table_budget_mb is not None:
+        if args.tenants is None:
+            ap.error("--table-budget-mb requires --tenants: the byte "
+                     "budget governs the multi-tenant table registry")
+        if args.table_budget_mb <= 0:
+            ap.error(f"--table-budget-mb must be > 0, got "
+                     f"{args.table_budget_mb}")
     if args.queue_capacity < 1:
         ap.error(f"--queue-capacity must be >= 1, "
                  f"got {args.queue_capacity}")
@@ -526,12 +707,14 @@ def _validate_args(ap: argparse.ArgumentParser, args) -> None:
                  f"{args.precision} shadow fixes the quantization-block "
                  f"geometry, which only the 'row' plan matches (use "
                  f"--pull-mode row, fp32, or --shards 2+)")
-    if args.trace_out and not args.runtime:
-        ap.error("--trace-out requires --runtime: span tracing hooks "
-                 "live in the continuous-batching ServeRuntime")
-    if args.flight_recorder_path and not args.runtime:
-        ap.error("--flight-recorder-path requires --runtime: the flight "
-                 "recorder records ServeRuntime lifecycle events")
+    if args.trace_out and not (args.runtime or args.tenants):
+        ap.error("--trace-out requires --runtime or --tenants: span "
+                 "tracing hooks live in the continuous-batching "
+                 "runtimes")
+    if args.flight_recorder_path and not (args.runtime or args.tenants):
+        ap.error("--flight-recorder-path requires --runtime or "
+                 "--tenants: the flight recorder records runtime "
+                 "lifecycle events")
     if args.flight_capacity < 1:
         ap.error(f"--flight-capacity must be >= 1, "
                  f"got {args.flight_capacity}")
@@ -668,6 +851,18 @@ def _build_parser() -> argparse.ArgumentParser:
                          "final end-of-run snapshot (--runtime)")
     ap.add_argument("--flight-capacity", type=int, default=256,
                     help="flight-recorder ring size in events")
+    # multi-tenant mode (DESIGN.md §16)
+    ap.add_argument("--tenants", default=None, metavar="SPEC.json",
+                    help="serve a multi-tenant registry instead of one "
+                         "table: JSON mapping tenant name -> spec "
+                         "({'rows': n, 'rate_factor': r, plus any "
+                         "TenantConfig field}); drives one merged "
+                         "arrival trace through the deficit-round-robin "
+                         "MultiTenantRuntime (--loop)")
+    ap.add_argument("--table-budget-mb", type=float, default=None,
+                    help="device-memory budget for resident tenant "
+                         "tables (MB); cold tables are paged out LRU "
+                         "(--tenants; default: unbounded)")
     return ap
 
 
@@ -676,7 +871,9 @@ def main():
     ap = _build_parser()
     args = ap.parse_args()
     _validate_args(ap, args)
-    if args.loop:
+    if args.tenants is not None:
+        _run_tenants(args)
+    elif args.loop:
         _run_loop(args)
     else:
         _run_decode_demo(args)

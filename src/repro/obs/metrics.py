@@ -309,6 +309,25 @@ class MetricsRegistry:
                     f"adopt(): metric {name!r} exists in both registries "
                     f"as distinct objects")
 
+    def label_values(self, name: str, label: str) -> List[str]:
+        """Distinct values a label key has taken on one metric family.
+
+        First-seen row order, empty when the metric is absent or the
+        family has no such label key.  The tenancy layer uses this to
+        assert per-tenant coverage of its labeled families (e.g. every
+        registered tenant appears in ``tenancy_serve_requests_total``)
+        without parsing an exposition dump.
+        """
+        m = self._metrics.get(name)
+        if m is None or label not in m.labels:
+            return []
+        seen: List[str] = []
+        for labels, _ in m.rows():
+            v = labels[label]
+            if v not in seen:
+                seen.append(v)
+        return seen
+
     # ---- export ---------------------------------------------------------
 
     def snapshot(self) -> dict:

@@ -503,6 +503,73 @@ class DynamicTableStore:
         """
         return self._host[:self.n_live].copy(), self.live_ids()
 
+    def page_state(self) -> dict:
+        """Complete host-side page-out image of this store.
+
+        Everything `from_page` needs to rebuild a store whose device
+        buffers, quantized shadow, external-id maps, ``version``,
+        ``value_abs_max`` and id allocator are bit-identical to this
+        one: the `snapshot` rows/ids plus geometry, precision, the
+        frozen pq codebook, and the monotonic scalars that a plain
+        snapshot-rebuild would reset.  The tenancy layer's table
+        registry (`repro.launch.tenancy.TableRegistry`) uses this to
+        evict cold tables from device memory and page them back in on
+        the next serve without violating bit-identity.  Staged (not yet
+        flushed) mutations are carried along verbatim.  Churn *counters*
+        (upserts/deletes/...) are observability, not table state, and
+        restart at zero after a page round-trip.
+        """
+        rows, ids = self.snapshot()
+        cb = (None if self._codebook is None
+              else np.asarray(self._codebook).copy())
+        return {"rows": rows, "ids": ids,
+                "capacity_rows": self.capacity_rows,
+                "tile": self.tile, "block": self.block,
+                "precision": self.precision,
+                "pq_subdims": self.pq_subdims, "pq_codes": self.pq_codes,
+                "codebook": cb, "dim": self.N,
+                "version": self.version, "value_abs_max": self._vmax,
+                "next_id": self._next_id,
+                "staged": list(self._staged)}
+
+    @classmethod
+    def from_page(cls, state: dict) -> "DynamicTableStore":
+        """Rebuild a store from a `page_state` image (page-in).
+
+        The returned store's device buffer, quantized shadow, id maps,
+        ``version``, ``value_abs_max``, id allocator and staged-mutation
+        queue all match the paged-out store exactly — serving through it
+        is indistinguishable from never having evicted the table.
+        """
+        st = cls(state["rows"], dim=state["dim"],
+                 capacity=state["capacity_rows"], tile=state["tile"],
+                 block=state["block"], precision=state["precision"],
+                 pq_subdims=state["pq_subdims"],
+                 pq_codes=state["pq_codes"],
+                 codebook=state["codebook"], ids=state["ids"])
+        if st.capacity_rows != state["capacity_rows"]:
+            raise ValueError(
+                f"page-in capacity mismatch: rebuilt {st.capacity_rows} "
+                f"rows != paged {state['capacity_rows']}")
+        st.version = int(state["version"])
+        st._vmax = max(st._vmax, float(state["value_abs_max"]))
+        st._next_id = max(st._next_id, int(state["next_id"]))
+        st._staged = list(state["staged"])
+        return st
+
+    def resident_bytes(self) -> int:
+        """Device bytes this table pins while resident.
+
+        The fp32 capacity buffer plus (on quantized tiers) the shadow:
+        codes, scales, and the pq codebook.  This is the unit the
+        tenancy registry's byte budget accounts in.
+        """
+        total = int(self._dev.nbytes)
+        for arr in (self._V8, self._vscale, self._codebook):
+            if arr is not None:
+                total += int(arr.nbytes)
+        return total
+
     # ---- write side (staged) --------------------------------------------
 
     def upsert(self, ext_id: int, row) -> None:

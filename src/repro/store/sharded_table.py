@@ -355,6 +355,18 @@ class ShardedTableStore:
         zero-recompilation assertions)."""
         return int(self._write._cache_size())
 
+    def resident_bytes(self) -> int:
+        """Device bytes this table pins across the pool while resident.
+
+        The sharded store is fp32-only (quantization happens in-jit per
+        flush), so this is just the preallocated capacity buffer summed
+        over shards.  The tenancy registry counts these bytes against
+        its budget but never pages a sharded table (no `page_state`:
+        per-shard slot pools are device-pool state, so sharded tenants
+        are auto-pinned).
+        """
+        return int(self._dev.nbytes)
+
     def stats(self) -> dict:
         """Counters: per-shard occupancy, version, churn totals."""
         return {"n_live": self.n_live, "capacity_rows": self.capacity_rows,

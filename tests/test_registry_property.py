@@ -1,0 +1,148 @@
+"""Property test: TableRegistry invariants under random interleavings.
+
+Hypothesis (via the `optional_hypothesis` shim in conftest — skips
+gracefully when the package is absent) drives random sequences of
+register / evict / pin / unpin / serve / mutate+flush / grow across
+four tenants against a byte-budgeted registry and asserts, after every
+single operation:
+
+* accounting is truthful — the registry's ``resident_bytes()`` equals
+  the sum of the resident stores' actual ``resident_bytes()``;
+* the budget holds — resident bytes never exceed the budget, with the
+  single documented exception of *pinned* tables growing past it (the
+  operator override);
+* eviction candidates are exactly the unpinned, resident, not-in-flight
+  tables, ordered least-recently-served first;
+* a tenant marked in-flight (serving) is never an eviction candidate;
+* paging out and back in is content-preserving — a tenant served after
+  eviction sees exactly the rows it had when evicted.
+
+No executors are built here (that jit cost belongs to the isolation
+suite); the invariants are pure registry state machine properties.
+"""
+
+import numpy as np
+import pytest
+
+from conftest import optional_hypothesis
+from repro.launch.tenancy import TableRegistry, TenancyError, TenantConfig
+from repro.store import DynamicTableStore
+
+given, settings, st = optional_hypothesis()
+
+DIM = 32
+ROWS = 32
+GROWN = ROWS * 2
+NAMES = ("t0", "t1", "t2", "t3")
+OPS = ("register", "evict", "pin", "unpin", "serve", "mutate", "grow")
+
+
+def _rows(i):
+    rng = np.random.default_rng(100 + i)
+    return rng.normal(size=(ROWS, DIM)).astype(np.float32)
+
+
+def _unit_bytes():
+    return DynamicTableStore(_rows(0)).resident_bytes()
+
+
+@given(st.lists(st.tuples(st.sampled_from(OPS),
+                          st.integers(min_value=0, max_value=3)),
+                min_size=1, max_size=60))
+@settings(max_examples=25, deadline=None)
+def test_registry_invariants_under_random_interleavings(ops):
+    unit = _unit_bytes()
+    # two plain tables fit, a third forces eviction, and one grown
+    # table still needs a rebalance next to a plain one
+    budget = int(2.2 * unit)
+    reg = TableRegistry(byte_budget=budget, lanes=2)
+    registered = set()
+    pinned = set()
+    stashed = {}          # name -> host rows captured at eviction
+
+    for kind, i in ops:
+        name = NAMES[i]
+        if kind == "register":
+            if name in registered:
+                with pytest.raises(TenancyError):
+                    reg.register(name, _rows(i))
+            else:
+                try:
+                    reg.register(name, _rows(i),
+                                 TenantConfig(deadline_ms=0.0))
+                    registered.add(name)
+                except TenancyError:
+                    # no room and nothing evictable: refused, unchanged
+                    assert name not in reg.tenants()
+        elif name not in registered:
+            # every other op on an unknown tenant is a typed refusal
+            with pytest.raises(TenancyError):
+                if kind == "evict":
+                    reg.evict(name)
+                elif kind == "pin":
+                    reg.pin(name)
+                elif kind == "unpin":
+                    reg.unpin(name)
+                else:
+                    reg.store(name)
+        elif kind == "evict":
+            if reg.is_resident(name):
+                expected = np.array(reg.store(name).host_table(),
+                                    copy=True)
+                if name in pinned:
+                    with pytest.raises(TenancyError):
+                        reg.evict(name)
+                else:
+                    reg.evict(name)
+                    stashed[name] = expected
+            else:
+                reg.evict(name)            # idempotent no-op
+        elif kind == "pin":
+            reg.pin(name)
+            pinned.add(name)
+        elif kind == "unpin":
+            reg.unpin(name)
+            pinned.discard(name)
+        elif kind == "serve":
+            try:
+                with reg.serving(name):
+                    reg.ensure_resident(name)
+                    reg.touch(name)
+                    # in-flight tables are never eviction candidates
+                    assert name not in reg.lru_order()
+            except TenancyError:
+                continue    # no room to page in (everything pinned)
+            got = reg.store(name).host_table()
+            if name in stashed:
+                np.testing.assert_array_equal(got, stashed.pop(name))
+        elif kind == "mutate":
+            store = reg.store(name)
+            if store is not None:
+                store.upsert(0, _rows(i)[1])
+                store.flush_updates()
+                stashed.pop(name, None)
+        elif kind == "grow":
+            store = reg.store(name)
+            if store is not None and store.capacity_rows < GROWN:
+                store.grow(GROWN)
+                try:
+                    reg.ensure_resident(name)   # re-account + rebalance
+                except TenancyError:
+                    # grown table itself was paged back out
+                    assert not reg.is_resident(name)
+                stashed.pop(name, None)
+
+        # ---- invariants, after every operation ------------------------
+        assert set(reg.tenants()) == registered
+        resident = [n for n in reg.tenants() if reg.is_resident(n)]
+        actual = sum(reg.store(n).resident_bytes() for n in resident)
+        assert actual == reg.resident_bytes(), "untruthful accounting"
+        assert (reg.resident_bytes() <= budget
+                or all(reg.is_pinned(n) for n in resident)), \
+            "budget exceeded by evictable tables"
+        order = reg.lru_order()
+        assert order == [n for n in sorted(
+            resident, key=lambda n: reg.stats()["tenants"][n]["last_serve"])
+            if not reg.is_pinned(n)]
+        for n in pinned & set(resident):
+            assert reg.is_pinned(n)

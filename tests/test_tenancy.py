@@ -1,0 +1,489 @@
+"""Tenant-isolation suite for the multi-tenant serving stack (ISSUE 10).
+
+The contracts under test (DESIGN.md §16):
+
+* **bit-identity** — a tenant served through `MultiTenantRuntime` gets
+  answers bit-identical to a dedicated single-tenant `ServeRuntime`
+  built from the same `TenantConfig` and seed;
+* **flood isolation** — poison storms and overload from one tenant can
+  only fill that tenant's private queue: a well-behaved tenant's
+  answers stay bit-identical to a quiet run and its latency bounded;
+* **residency round-trip** — evicting a table and paging it back in is
+  bit-identical (rows, ids, version, value range, pq codebook, staged
+  mutations) and never exceeds the byte budget;
+* **fairness** — deficit-round-robin throttles a hot tenant to its
+  weighted share instead of letting arrival skew starve cold tenants;
+* **executor-cache coherence** — the regression this PR fixes:
+  `grow()`, `refresh_codebook()` and page-in must each invalidate the
+  per-table executor cache (the cache key is salted on store identity,
+  capacity and codebook refreshes), so no request is ever answered by
+  an executor calibrated against a dead table image.
+
+The 2-device sharded case runs in a subprocess (same isolation rule as
+tests/test_sharded_serve.py).
+"""
+
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.launch.admission import DeficitRoundRobin, PriorityClass
+from repro.launch.engine import CascadeExecutor, ServeRuntime
+from repro.launch.tenancy import (MultiTenantRuntime, TableRegistry,
+                                  TenancyError, TenantConfig)
+from repro.store import DynamicTableStore
+
+DIM = 96
+LANES = 4
+
+
+def _table(rows, seed, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return (scale * rng.normal(size=(rows, DIM)) / np.sqrt(DIM)
+            ).astype(np.float32)
+
+
+def _queries(n, seed):
+    rng = np.random.default_rng(1000 + seed)
+    return rng.normal(size=(n, DIM)).astype(np.float32)
+
+
+def _dedicated(table, cfg: TenantConfig, queries, *, batch_wait_ms=1.0):
+    """A dedicated single-tenant runtime serving the same contract."""
+    rt = ServeRuntime(
+        table, K=cfg.K, eps=cfg.eps, delta=cfg.delta,
+        eps_floor=cfg.eps_floor, degrade_rungs=cfg.degrade_rungs,
+        degrade_start=cfg.degrade_start, lanes=LANES,
+        batch_wait_ms=batch_wait_ms, queue_capacity=cfg.queue_capacity,
+        classes={"default": PriorityClass("default",
+                                          priority=cfg.priority,
+                                          deadline_ms=cfg.deadline_ms)},
+        precision=cfg.precision, pull_mode=cfg.pull_mode,
+        pq_subdims=cfg.pq_subdims, pq_codes=cfg.pq_codes,
+        cache_entries=cfg.cache_entries,
+        cache_resolution=cfg.cache_resolution, seed=cfg.seed)
+    rt.warmup()
+    rids = [rt.submit(q, now=float(i) * 0.01)
+            for i, q in enumerate(queries)]
+    rt.drain(now=10.0)
+    return [rt.result(r) for r in rids]
+
+
+class TestBitIdentity:
+    def test_answers_match_dedicated_engines(self):
+        """Two tenants with different contracts/precision through one
+        MultiTenantRuntime == two dedicated ServeRuntimes, bitwise."""
+        cfg_a = TenantConfig(K=3, eps=1.2, delta=0.2, deadline_ms=0.0,
+                             seed=11)
+        cfg_b = TenantConfig(K=2, eps=2.0, delta=0.2, precision="int8",
+                             deadline_ms=0.0, seed=22)
+        TA, TB = _table(96, 0), _table(80, 1)
+        QA, QB = _queries(10, 0), _queries(10, 1)
+        ref_a = _dedicated(TA, cfg_a, QA)
+        ref_b = _dedicated(TB, cfg_b, QB)
+
+        reg = TableRegistry(lanes=LANES)
+        reg.register("a", TA, cfg_a)
+        reg.register("b", TB, cfg_b)
+        mt = MultiTenantRuntime(reg, batch_wait_ms=1.0)
+        mt.warmup()
+        rids = []
+        for i in range(10):
+            rids.append((mt.submit(QA[i], tenant="a", now=i * 0.01),
+                         ref_a[i], "a"))
+            rids.append((mt.submit(QB[i], tenant="b", now=i * 0.01),
+                         ref_b[i], "b"))
+        mt.drain(now=10.0)
+        for rid, ref, name in rids:
+            got = mt.result(rid)
+            assert got.tenant == name
+            assert got.status == ref.status
+            np.testing.assert_array_equal(got.ids, ref.ids)
+            np.testing.assert_array_equal(got.scores, ref.scores)
+
+    def test_cache_hits_are_tenant_private(self):
+        """The same query to two tenants must not cross-serve from the
+        other tenant's LRU (per-tenant caches, per-tenant answers)."""
+        cfg = TenantConfig(K=2, eps=1.5, delta=0.2, deadline_ms=0.0)
+        reg = TableRegistry(lanes=LANES)
+        reg.register("a", _table(64, 3), cfg)
+        reg.register("b", _table(64, 4), cfg)
+        mt = MultiTenantRuntime(reg, batch_wait_ms=1.0)
+        mt.warmup()
+        q = _queries(1, 9)[0]
+        ra1 = mt.submit(q, tenant="a", now=0.0)
+        mt.drain(now=1.0)
+        first = mt.result(ra1)
+        # same bytes again: a-hit must replay a's answer, b must compute
+        # its own from its own table
+        ra2 = mt.submit(q, tenant="a", now=2.0)
+        rb = mt.submit(q, tenant="b", now=2.0)
+        mt.drain(now=3.0)
+        hit, fresh = mt.result(ra2), mt.result(rb)
+        assert hit.cached and not fresh.cached
+        np.testing.assert_array_equal(hit.ids, first.ids)
+        assert not np.array_equal(np.sort(fresh.scores),
+                                  np.sort(first.scores))
+
+
+class TestFloodIsolation:
+    def _serve_b(self, flood: bool):
+        cfg_a = TenantConfig(K=2, eps=1.5, delta=0.2, deadline_ms=5.0,
+                             queue_capacity=8, seed=1)
+        cfg_b = TenantConfig(K=2, eps=1.5, delta=0.2, deadline_ms=0.0,
+                             seed=2)
+        reg = TableRegistry(lanes=LANES)
+        reg.register("a", _table(64, 5), cfg_a)
+        reg.register("b", _table(64, 6), cfg_b)
+        mt = MultiTenantRuntime(reg, batch_wait_ms=1.0)
+        mt.warmup()
+        QB = _queries(12, 2)
+        flood_q = _queries(1, 3)[0]
+        poison = np.full(DIM, np.nan, np.float32)
+        b_rids, t = [], 0.0
+        for i in range(12):
+            if flood:
+                # tenant a: a poison storm plus a burst past its private
+                # queue's capacity, all at once
+                for j in range(12):
+                    if j < 6:
+                        mt.submit(poison, tenant="a", now=t)
+                    mt.submit(flood_q + np.float32(i + j), tenant="a",
+                              now=t)
+            b_rids.append(mt.submit(QB[i], tenant="b", now=t))
+            # poll past batch_wait so b's fresh request dispatches alone
+            # in BOTH runs (identical batch composition, the bit-identity
+            # precondition)
+            done, busy = mt.poll(now=t + 0.0015)
+            t += 0.004 + busy
+        mt.drain(now=t + 1.0)
+        results = [mt.result(r) for r in b_rids]
+        return results, mt.stats()
+
+    def test_poison_overload_flood_leaves_b_bit_identical(self):
+        quiet, _ = self._serve_b(flood=False)
+        flooded, stats = self._serve_b(flood=True)
+        # the flood really stressed tenant a...
+        a = stats["tenants"]["a"]["outcomes"]
+        assert a["rejected"] > 0            # poison refused at admission
+        assert a["overloaded"] > 0          # queue bound displaced/shed
+        # ...while every b answer is the same bits as the quiet run
+        for q, f in zip(quiet, flooded):
+            assert q.answered and f.answered
+            np.testing.assert_array_equal(q.ids, f.ids)
+            np.testing.assert_array_equal(q.scores, f.scores)
+        b = stats["tenants"]["b"]
+        assert b["outcomes"]["ok"] + b["outcomes"]["degraded"] == 12
+        # b's tail latency stays bounded on the virtual clock: the flood
+        # can cost b at most its DRR-share of batch waits + dispatches,
+        # not a queue collapse
+        assert b["latency_ms"]["p99"] < 250.0
+
+
+class TestResidency:
+    def test_eviction_pagein_roundtrip_bit_identical(self):
+        """Evict + page-in preserves rows, ids, version, codebook and
+        staged mutations; answers before == answers after, bitwise."""
+        rows = _table(64, 7)
+        store = DynamicTableStore(rows, precision="pq", pq_subdims=8)
+        store.upsert(3, rows[5])            # mutate: version bump
+        store.flush_updates()
+        store.refresh_codebook()
+        store.append(rows[0] * 0.5)         # staged, NOT flushed: must
+        store.upsert(7, rows[9])            # survive the page round-trip
+        cfg = TenantConfig(K=2, eps=2.0, delta=0.2, precision="pq",
+                           deadline_ms=0.0)
+        reg = TableRegistry(lanes=LANES)
+        reg.register("t", store, cfg)
+        execs, _ = reg.executors("t")
+        key = jax.random.PRNGKey(0)
+        Qb = np.zeros((LANES, DIM), np.float32)
+        Qb[0] = _queries(1, 4)[0]
+        ids0, sc0, _, _ = execs[0].dispatch(Qb, key)
+
+        before = dict(version=store.version, staged=store.pending_updates,
+                      host=store.host_table().copy(),
+                      codebook=np.array(store.codebook()),
+                      snap=store.snapshot())
+        reg.evict("t")
+        assert not reg.is_resident("t") and reg.store("t") is None
+        dt = reg.ensure_resident("t")
+        assert dt >= 0.0
+        st2 = reg.store("t")
+        assert st2 is not store
+        assert st2.version == before["version"]
+        assert st2.pending_updates == before["staged"]
+        np.testing.assert_array_equal(st2.host_table(), before["host"])
+        np.testing.assert_array_equal(np.array(st2.codebook()),
+                                      before["codebook"])
+        r2, i2 = st2.snapshot()
+        np.testing.assert_array_equal(r2, before["snap"][0])
+        np.testing.assert_array_equal(i2, before["snap"][1])
+        # a fresh executor ladder (page-in salted the cache) must serve
+        # the same bits
+        execs2, _ = reg.executors("t")
+        assert execs2[0] is not execs[0]
+        ids1, sc1, _, _ = execs2[0].dispatch(Qb, key)
+        np.testing.assert_array_equal(np.asarray(ids0), np.asarray(ids1))
+        np.testing.assert_array_equal(np.asarray(sc0), np.asarray(sc1))
+        assert reg.executor_builds("t").get("page_in") == 1
+
+    def test_budget_never_exceeded_and_typed_refusal(self):
+        one = DynamicTableStore(_table(64, 8)).resident_bytes()
+        reg = TableRegistry(byte_budget=int(2.4 * one), lanes=LANES)
+        reg.register("a", _table(64, 8))
+        reg.register("b", _table(64, 9))
+        reg.register("c", _table(64, 10))   # must evict, not OOM
+        assert reg.resident_bytes() <= reg.byte_budget
+        assert [reg.is_resident(n) for n in ("a", "b", "c")] \
+            == [False, True, True]
+        # pinned + in-flight tables are not eviction candidates
+        reg.pin("b")
+        with pytest.raises(TenancyError):
+            reg.evict("b")
+        with reg.serving("c"):
+            with pytest.raises(TenancyError):
+                reg.evict("c")
+            # nothing evictable: a new table must be refused, pool intact
+            with pytest.raises(TenancyError):
+                reg.register("d", _table(64, 11))
+        assert reg.tenants() == ["a", "b", "c"]
+        assert reg.resident_bytes() <= reg.byte_budget
+        # a table bigger than the whole budget is refused up front
+        with pytest.raises(TenancyError):
+            reg.register("huge", _table(4096, 12))
+
+
+class TestFairness:
+    def test_drr_unit_weighted_shares(self):
+        drr = DeficitRoundRobin(4)
+        for n, w in (("a", 1.0), ("b", 1.0), ("c", 2.0)):
+            drr.add_flow(n, w)
+        served = {n: 0 for n in "abc"}
+        backlog = {n: 10_000 for n in "abc"}
+        for _ in range(100):
+            drr.start_round({n: backlog[n] > 0 for n in "abc"})
+            for n in drr.flows():
+                while drr.allowance(n) >= 1 and backlog[n] > 0:
+                    take = min(4, drr.allowance(n), backlog[n])
+                    drr.consume(n, take)
+                    served[n] += take
+                    backlog[n] -= take
+            drr.rotate()
+        assert served["a"] == served["b"]
+        assert abs(served["c"] / served["a"] - 2.0) < 0.05
+
+    def test_drr_idle_flow_cannot_hoard_deficit(self):
+        """cap_rounds bounds the burst an idle-then-flooding flow gets."""
+        drr = DeficitRoundRobin(4, cap_rounds=2.0)
+        drr.add_flow("idle")
+        for _ in range(50):
+            drr.start_round({"idle": True})
+        assert drr.allowance("idle") <= 8   # 2 rounds' worth, not 50
+        drr.reset("idle")
+        assert drr.allowance("idle") == 0
+
+    def test_hot_tenant_throttled_not_starving(self):
+        """12x arrival skew past the hot tenant's queue bound: cold
+        tenants keep answering everything, the hot tenant is shed down
+        to what its private queue holds but never starved."""
+        reg = TableRegistry(lanes=LANES)
+        for name, seed in (("hot", 20), ("c1", 21), ("c2", 22)):
+            reg.register(name, _table(64, seed),
+                         TenantConfig(K=2, eps=1.5, delta=0.2,
+                                      deadline_ms=100.0,
+                                      queue_capacity=8, seed=seed))
+        mt = MultiTenantRuntime(reg, batch_wait_ms=1.0)
+        mt.warmup()
+        rng = np.random.default_rng(42)
+        t = 0.0
+        for i in range(15):
+            for _ in range(12):
+                mt.submit(rng.normal(size=DIM).astype(np.float32),
+                          tenant="hot", now=t)
+            mt.submit(rng.normal(size=DIM).astype(np.float32),
+                      tenant="c1", now=t)
+            mt.submit(rng.normal(size=DIM).astype(np.float32),
+                      tenant="c2", now=t)
+            _, busy = mt.poll(now=t + 0.0015)
+            t += 0.004 + busy
+        mt.drain(now=t + 1.0)
+        s = mt.stats()["tenants"]
+
+        def answered(n):
+            return s[n]["outcomes"]["ok"] + s[n]["outcomes"]["degraded"]
+
+        assert answered("c1") == 15 and answered("c2") == 15
+        assert answered("hot") >= 30            # throttled, not starved
+        assert s["hot"]["outcomes"]["overloaded"] > 0   # skew was shed
+        assert s["c1"]["outcomes"]["overloaded"] == 0
+        assert s["c2"]["outcomes"]["overloaded"] == 0
+        # closed outcome set per tenant: every request typed exactly once
+        for n in ("hot", "c1", "c2"):
+            assert sum(s[n]["outcomes"].values()) == s[n]["requests"]
+
+
+class TestExecutorCacheCoherence:
+    """The stale-executor regression: every store transition that
+    invalidates a compiled plan must miss the executor cache."""
+
+    def _fresh_answer(self, store, cfg, q):
+        ex = CascadeExecutor(store, K=cfg.K, eps=cfg.eps, delta=cfg.delta,
+                             lanes=LANES, precision=cfg.precision,
+                             pq_subdims=cfg.pq_subdims,
+                             pq_codes=cfg.pq_codes)
+        Qb = np.zeros((LANES, DIM), np.float32)
+        Qb[0] = q
+        key = jax.random.PRNGKey(0)
+        ids, sc, _, _ = ex.dispatch(Qb, key)
+        return np.asarray(ids[0]), np.asarray(sc[0])
+
+    def test_refresh_codebook_invalidates(self):
+        """refresh_codebook() must rebuild (re-measuring pq quant_err
+        against the new codebook) — the pre-PR-10 cache would keep the
+        old executor because capacity and value range are unchanged."""
+        rows = _table(64, 30)
+        store = DynamicTableStore(rows, precision="pq", pq_subdims=8)
+        cfg = TenantConfig(K=2, eps=2.0, delta=0.2, precision="pq",
+                           deadline_ms=0.0)
+        reg = TableRegistry(lanes=LANES)
+        reg.register("t", store, cfg)
+        e0 = reg.executors("t")[0][0]
+        # shift the corpus then retrain: the frozen codebook (and the
+        # quant_err measured against it) is now for a different table
+        for i in range(32):
+            store.upsert(i, (rows[i] * 3.0).astype(np.float32))
+        store.flush_updates()
+        store.refresh_codebook()
+        execs, _ = reg.executors("t")
+        assert execs[0] is not e0, "stale executor served after retrain"
+        assert reg.executor_builds("t").get("codebook_refresh") == 1
+        # zero stale answers: cached path == freshly built executor
+        q = _queries(1, 31)[0]
+        Qb = np.zeros((LANES, DIM), np.float32)
+        Qb[0] = q
+        key = jax.random.PRNGKey(0)
+        got_ids, got_sc, _, _ = execs[0].dispatch(Qb, key)
+        ref_ids, ref_sc = self._fresh_answer(store, cfg, q)
+        np.testing.assert_array_equal(np.asarray(got_ids)[0], ref_ids)
+        np.testing.assert_array_equal(np.asarray(got_sc)[0], ref_sc)
+
+    def test_grow_invalidates(self):
+        store = DynamicTableStore(_table(64, 32), capacity=72)
+        reg = TableRegistry(lanes=LANES)
+        reg.register("t", store, TenantConfig(K=2, eps=1.5, delta=0.2,
+                                              deadline_ms=0.0))
+        e0 = reg.executors("t")[0][0]
+        store.grow(256)
+        execs, _ = reg.executors("t")
+        assert execs[0] is not e0
+        assert execs[0].n == store.capacity_rows
+        assert reg.executor_builds("t").get("grow") == 1
+
+    def test_cache_bounded_and_rebuilds_after_lru_eviction(self):
+        reg = TableRegistry(lanes=LANES, max_executors=2)
+        for name, seed in (("a", 40), ("b", 41), ("c", 42)):
+            reg.register(name, _table(48, seed),
+                         TenantConfig(K=1, eps=2.0, delta=0.3,
+                                      deadline_ms=0.0))
+        for name in ("a", "b", "c"):
+            reg.executors(name)
+            assert reg.executor_cache_size() <= 2
+        # "a" was LRU-evicted from the cache; re-acquiring rebuilds and
+        # still serves (bounded jit cache is the only cost)
+        execs, _ = reg.executors("a")
+        assert reg.executor_builds("a").get("cache_evicted") == 1
+        assert reg.executor_cache_size() <= 2
+
+    def test_runtime_serves_fresh_answers_across_grow(self):
+        """End-to-end: a runtime tenant whose store grows mid-stream
+        must serve post-grow queries against the grown capacity."""
+        store = DynamicTableStore(_table(48, 50), capacity=56)
+        reg = TableRegistry(lanes=LANES)
+        reg.register("t", store, TenantConfig(K=2, eps=1.5, delta=0.2,
+                                              deadline_ms=0.0, seed=5))
+        mt = MultiTenantRuntime(reg, batch_wait_ms=1.0)
+        mt.warmup()
+        r1 = mt.submit(_queries(1, 51)[0], tenant="t", now=0.0)
+        mt.drain(now=1.0)
+        assert mt.result(r1).answered
+        store.grow(128)
+        big = _table(1, 52)[0] * 10.0       # new row that should win
+        store.append(big)
+        r2 = mt.submit(big, tenant="t", now=2.0)
+        mt.drain(now=3.0)
+        res = mt.result(r2)
+        assert res.answered
+        new_id = int(store.live_ids().max())
+        assert new_id in np.asarray(res.ids), \
+            "post-grow row invisible: stale executor answered"
+
+
+_ENV_CODE_PREAMBLE = r"""
+import os
+_flags = os.environ.get("XLA_FLAGS", "")
+if "xla_force_host_platform_device_count" not in _flags:
+    os.environ["XLA_FLAGS"] = (
+        _flags + " --xla_force_host_platform_device_count=2").strip()
+import jax, jax.numpy as jnp, numpy as np
+"""
+
+
+def _run(code: str, timeout=480):
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    r = subprocess.run([sys.executable, "-c", _ENV_CODE_PREAMBLE + code],
+                       env=env, capture_output=True, text=True,
+                       timeout=timeout)
+    assert "OK" in r.stdout, r.stdout + "\n" + r.stderr
+
+
+@pytest.mark.slow
+def test_sharded_tenant_two_devices():
+    """A 2-device sharded tenant + a single-device tenant in one
+    registry: the sharded tenant is auto-pinned (never evicted), both
+    serve exact answers at tiny eps through the same runtime."""
+    _run(r"""
+from repro.launch.tenancy import (MultiTenantRuntime, TableRegistry,
+                                  TenancyError, TenantConfig)
+from repro.store import ShardedTableStore
+mesh = jax.make_mesh((2,), ("model",))
+rng = np.random.default_rng(0)
+dim = 128
+VS = rng.normal(size=(256, dim)).astype(np.float32)
+VD = rng.normal(size=(96, dim)).astype(np.float32)
+store = ShardedTableStore(VS, mesh=mesh)
+reg = TableRegistry(lanes=2)
+reg.register("sharded", store, TenantConfig(
+    K=3, eps=1e-4, delta=0.05, deadline_ms=0.0, seed=1), mesh=mesh)
+reg.register("local", VD, TenantConfig(
+    K=3, eps=1e-4, delta=0.05, deadline_ms=0.0, seed=2))
+assert reg.is_pinned("sharded") and not reg.is_pinned("local")
+try:
+    reg.evict("sharded")
+    raise SystemExit("sharded table must refuse eviction")
+except TenancyError:
+    pass
+mt = MultiTenantRuntime(reg, batch_wait_ms=1.0)
+mt.warmup()
+Q = rng.normal(size=(4, dim)).astype(np.float32)
+rids = [(mt.submit(q, tenant=("sharded" if i % 2 == 0 else "local"),
+                   now=i * 0.01), i) for i, q in enumerate(Q)]
+mt.drain(now=1.0)
+for rid, i in rids:
+    res = mt.result(rid)
+    assert res.answered, res.status
+    V = VS if i % 2 == 0 else VD
+    truth = np.argsort(-(V @ Q[i]))[:3]
+    np.testing.assert_array_equal(np.sort(res.ids), np.sort(truth))
+s = mt.stats()
+assert s["outcomes"]["ok"] == 4
+assert s["registry"]["tenants"]["sharded"]["sharded"] is True
+print("OK")
+""")

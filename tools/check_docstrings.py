@@ -36,6 +36,7 @@ AUDITED_MODULES = [
     "launch/serve.py",
     "launch/engine.py",
     "launch/admission.py",
+    "launch/tenancy.py",
     "launch/faults.py",
     "launch/mesh.py",
     "models/steps.py",
@@ -139,6 +140,22 @@ API_CONTRACTS = {
         "AdmissionController.take": ["deadline", "expire", "priority"],
         "DegradationLadder": ["eps_floor", "rung", "eps_served"],
         "ServeResult": ["eps_served", "degraded", "never"],
+    },
+    "launch/tenancy.py": {
+        "TableRegistry": ["byte", "budget", "lru", "pinned", "evict",
+                          "salt"],
+        "TableRegistry.register": ["budget", "evict", "never ooms"],
+        "TableRegistry.evict": ["page", "bit-identical", "pinned"],
+        "TableRegistry.executors": ["salt", "grow", "refresh_codebook",
+                                    "page-in", "sync_store", "rebuild"],
+        "TenantConfig": ["bit-identical", "weight", "deadline",
+                         "pinned"],
+        "MultiTenantRuntime": ["deficit", "round-robin", "tenant",
+                               "isolation", "bit-identical", "starv"],
+        "MultiTenantRuntime.submit": ["tenant", "admission", "poison",
+                                      "never raises"],
+        "MultiTenantRuntime.poll": ["deficit", "backlogged", "skew"],
+        "MultiTenantRuntime.stats": ["tenants", "registry", "outcomes"],
     },
     "launch/faults.py": {
         "FaultInjector": ["seed", "latency", "persistent", "flush"],

@@ -46,9 +46,19 @@ _SAMPLE_RE = re.compile(
 _STATUSES = ("ok", "degraded", "rejected", "overloaded", "failed")
 
 
-def check_metrics(path: str) -> List[str]:
-    """Problems in a metrics artifact (Prometheus text or JSON)."""
+def check_metrics(path: str, expect_tenants=None) -> List[str]:
+    """Problems in a metrics artifact (Prometheus text or JSON).
+
+    ``expect_tenants`` (optional list of tenant names) additionally
+    requires the multi-tenant runtime's tenant labeling: every expected
+    tenant must appear as a ``tenant`` label value on
+    ``serve_requests_total``, and no serve counter may carry a tenant
+    outside the expected set (a tenant the registry never registered
+    would mean requests were routed to a ghost table).
+    """
     problems: List[str] = []
+    expect_tenants = list(expect_tenants or [])
+    seen_tenants: set = set()
     with open(path) as f:
         text = f.read()
     if not path.endswith((".prom", ".txt")):
@@ -63,6 +73,14 @@ def check_metrics(path: str) -> List[str]:
                 if key not in m:
                     problems.append(f"{path}: metric entry missing "
                                     f"{key!r}: {m.get('name', '?')}")
+            if (expect_tenants and m.get("name") == "serve_requests_total"
+                    and "tenant" in m.get("labels", [])):
+                for row in m.get("values", []):
+                    tn = row.get("labels", {}).get("tenant")
+                    if tn is not None:
+                        seen_tenants.add(tn)
+        problems.extend(_tenant_coverage(path, expect_tenants,
+                                         seen_tenants))
         return problems
 
     helped, typed = set(), set()
@@ -100,6 +118,9 @@ def check_metrics(path: str) -> List[str]:
                                          + float(m.group("value")))
         elif name == "serve_requests_total":
             requests_total += float(m.group("value"))
+            tm = re.search(r'tenant="([^"]*)"', m.group("labels") or "")
+            if tm:
+                seen_tenants.add(tm.group(1))
         if name.endswith("_bucket"):
             labels = m.group("labels") or ""
             key = re.sub(r'le="[^"]*",?', "", labels)
@@ -129,6 +150,29 @@ def check_metrics(path: str) -> List[str]:
                 f"{sum(outcomes.values()):g} but serve_requests_total is "
                 f"{requests_total:g} (every request must get exactly one "
                 f"typed outcome)")
+    problems.extend(_tenant_coverage(path, expect_tenants, seen_tenants))
+    return problems
+
+
+def _tenant_coverage(path: str, expected: List[str],
+                     seen: set) -> List[str]:
+    """Both directions of the --expect-tenants check (no-op when the
+    expectation is empty)."""
+    problems: List[str] = []
+    if not expected:
+        return problems
+    missing = sorted(set(expected) - seen)
+    if missing:
+        problems.append(
+            f"{path}: serve_requests_total has no tenant label rows for "
+            f"{missing} (expected tenants {sorted(expected)}, saw "
+            f"{sorted(seen)})")
+    extra = sorted(seen - set(expected))
+    if extra:
+        problems.append(
+            f"{path}: serve_requests_total has unexpected tenants "
+            f"{extra} — requests were routed to a table the spec never "
+            f"declared")
     return problems
 
 
@@ -214,13 +258,25 @@ def main() -> int:
                     help="Chrome trace-event JSON")
     ap.add_argument("--flight", default=None,
                     help="flight-recorder dump JSON")
+    ap.add_argument("--expect-tenants", default=None,
+                    help="comma-separated tenant names the --metrics "
+                         "artifact must carry as tenant label values on "
+                         "serve_requests_total (multi-tenant runs)")
     args = ap.parse_args()
     if not (args.metrics or args.trace or args.flight):
         ap.error("nothing to check: pass --metrics / --trace / --flight")
+    if args.expect_tenants and not args.metrics:
+        ap.error("--expect-tenants requires --metrics: tenant labels "
+                 "live in the metrics snapshot")
+    expected = ([t.strip() for t in args.expect_tenants.split(",")
+                 if t.strip()] if args.expect_tenants else None)
     problems: List[str] = []
     checked = []
-    for path, fn in ((args.metrics, check_metrics),
-                     (args.trace, check_trace),
+    if args.metrics:
+        problems.extend(check_metrics(args.metrics,
+                                      expect_tenants=expected))
+        checked.append(args.metrics)
+    for path, fn in ((args.trace, check_trace),
                      (args.flight, check_flight)):
         if path:
             problems.extend(fn(path))
